@@ -1,0 +1,128 @@
+//! END-TO-END DRIVER (DESIGN.md §6): proves every layer composes on a
+//! real workload.
+//!
+//!   Generator -> artifact selection (router) -> coordinator serving a
+//!   Poisson request stream with real PJRT inference per request ->
+//!   latency/throughput metrics -> strategy-level energy ledger replayed
+//!   through the discrete-event node simulation on the *observed* trace.
+//!
+//! Defaults to 2000 requests across two models; results are recorded in
+//! EXPERIMENTS.md.
+//!
+//! Run with: `cargo run --release --example e2e_serve [-- --requests N]`
+
+use elastic_gen::coordinator::router::Policy;
+use elastic_gen::coordinator::{Coordinator, CoordinatorConfig, Router};
+use elastic_gen::elastic_node::Platform;
+use elastic_gen::fpga::{device, ConfigController};
+use elastic_gen::models::Topology;
+use elastic_gen::rtl::composition::{build, BuildOpts};
+use elastic_gen::rtl::fixed_point::Q16_8;
+use elastic_gen::runtime::Manifest;
+use elastic_gen::sim::{cost_model, NodeSim};
+use elastic_gen::strategy::IdleWait;
+use elastic_gen::util::cli::Args;
+use elastic_gen::util::rng::Rng;
+use elastic_gen::util::table::{num, Table};
+use elastic_gen::util::units::{Hertz, Secs};
+use elastic_gen::workload::Workload;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let n_requests = args.get_usize("requests", 2000);
+
+    let dir = elastic_gen::artifacts_dir();
+    anyhow::ensure!(
+        dir.join("manifest.json").exists(),
+        "artifacts not built — run `make artifacts` first"
+    );
+
+    // --- route model requests to artifact variants ----------------------
+    let manifest = Manifest::load(&dir)?;
+    let router = Router::new(&manifest);
+    let mlp = router
+        .route("mlp_fluid", Policy::CheapestWithin { max_error_lsb: 16 })?
+        .name
+        .clone();
+    let lstm = router
+        .route("lstm_har", Policy::CheapestWithin { max_error_lsb: 16 })?
+        .name
+        .clone();
+    println!("routed: mlp_fluid -> {mlp}, lstm_har -> {lstm}");
+
+    // --- start the coordinator (engine thread compiles both artifacts) --
+    let t0 = Instant::now();
+    let coord = Coordinator::start(CoordinatorConfig {
+        artifacts_dir: dir.clone(),
+        artifacts: vec![mlp.clone(), lstm.clone()],
+        batch_max: 16,
+    })?;
+    println!("engine up in {:.2}s\n", t0.elapsed().as_secs_f64());
+
+    // --- generate the request stream (Poisson, 2 models interleaved) ----
+    let workload = Workload::Poisson { mean_gap: Secs::from_ms(2.0) };
+    let mut rng = Rng::new(2024);
+    let arrivals = workload.arrivals(n_requests, &mut rng);
+
+    let mlp_len = manifest.get(&mlp).unwrap().input_len();
+    let lstm_len = manifest.get(&lstm).unwrap().input_len();
+
+    // --- serve: paced submission following the arrival trace ------------
+    let serve_start = Instant::now();
+    let mut pending = Vec::with_capacity(n_requests);
+    // compress the trace 10x so the demo finishes quickly while still
+    // exercising queueing (PJRT inference ~100us vs 200us mean gap)
+    let pace = 0.1;
+    for (i, t_arr) in arrivals.iter().enumerate() {
+        let target = t_arr.value() * pace;
+        let now = serve_start.elapsed().as_secs_f64();
+        if target > now {
+            std::thread::sleep(std::time::Duration::from_secs_f64(target - now));
+        }
+        let (name, len) = if i % 2 == 0 { (&mlp, mlp_len) } else { (&lstm, lstm_len) };
+        let input: Vec<f32> = (0..len)
+            .map(|_| (rng.range(-1.0, 1.0) * 256.0).floor() as f32 / 256.0)
+            .collect();
+        pending.push(coord.submit(name, input));
+    }
+    let mut ok = 0u64;
+    for rx in pending {
+        if rx.recv()?.is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = serve_start.elapsed().as_secs_f64();
+
+    println!("{}", coord.metrics().snapshot().render());
+    println!(
+        "served {ok}/{n_requests} requests in {wall:.2}s ({:.0} req/s sustained)\n",
+        ok as f64 / wall
+    );
+
+    // --- energy accounting: replay the observed trace through the DES ---
+    let dev = device("xc7s15").unwrap();
+    let acc = build(Topology::LstmHar, &BuildOpts::optimised(Q16_8));
+    let cost = cost_model(
+        &acc,
+        dev,
+        Hertz::from_mhz(100.0),
+        &Platform::default(),
+        &ConfigController::raw(dev),
+    );
+    let sim = NodeSim::new(cost);
+    let report = sim.run(&arrivals, &mut IdleWait);
+    let mut t = Table::new(&["metric", "value"]).with_title(
+        "Virtual-FPGA energy ledger (idle-waiting, observed arrival trace)",
+    );
+    t.row(&["served".into(), report.served.to_string()]);
+    t.row(&["config energy (mJ)".into(), num(report.energy.config.mj(), 3)]);
+    t.row(&["busy energy (mJ)".into(), num(report.energy.busy.mj(), 3)]);
+    t.row(&["idle energy (mJ)".into(), num(report.energy.idle.mj(), 3)]);
+    t.row(&["total energy (mJ)".into(), num(report.energy.total().mj(), 3)]);
+    t.row(&["energy/item (mJ)".into(), num(report.energy_per_item().mj(), 4)]);
+    println!("{}", t.render());
+
+    anyhow::ensure!(ok == n_requests as u64, "not all requests served");
+    Ok(())
+}

@@ -1,0 +1,122 @@
+//! Human-activity recognition with the LSTM accelerator ([2,20]) under an
+//! irregular, phase-switching workload — the adaptive strategy-switching
+//! scenario of [7].
+//!
+//! Shows the learnable threshold converging: prints the played threshold
+//! trajectory across workload phases and the energy scoreboard against
+//! the fixed strategies.
+//!
+//! Run with: `cargo run --release --example har_lstm`
+
+use elastic_gen::elastic_node::Platform;
+use elastic_gen::fpga::{device, ConfigController};
+use elastic_gen::models::Topology;
+use elastic_gen::rtl::composition::{build, BuildOpts};
+use elastic_gen::rtl::fixed_point::Q16_8;
+use elastic_gen::runtime::Engine;
+use elastic_gen::sim::{cost_model, NodeSim};
+use elastic_gen::strategy::learnable::LearnableThreshold;
+use elastic_gen::strategy::{
+    datasheet_breakeven, IdleWait, OnOff, PredefinedThreshold, Strategy,
+};
+use elastic_gen::util::rng::Rng;
+use elastic_gen::util::table::{num, Table};
+use elastic_gen::util::units::{Hertz, Secs};
+use elastic_gen::workload::Workload;
+
+fn main() -> anyhow::Result<()> {
+    let dev = device("xc7s15").unwrap();
+    let acc = build(Topology::LstmHar, &BuildOpts::optimised(Q16_8));
+    let cost = cost_model(
+        &acc,
+        dev,
+        Hertz::from_mhz(100.0),
+        &Platform::default(),
+        &ConfigController::raw(dev),
+    );
+    println!(
+        "LSTM accelerator: {} cycles/inference, cold start {:.1} ms / {:.2} mJ, \
+         system break-even gap {:.0} ms\n",
+        acc.cycles(),
+        cost.cold_time.ms(),
+        cost.cold_energy.mj(),
+        cost.breakeven_gap().ms()
+    );
+
+    // activity bursts (walking: windows every 30 ms) alternating with
+    // quiet periods (sitting: one window every 3 s)
+    let workload = Workload::Phased {
+        fast_gap: Secs::from_ms(30.0),
+        slow_gap: Secs(3.0),
+        phase_len: 40,
+    };
+    let arrivals = workload.arrivals(2400, &mut Rng::new(11));
+    let sim = NodeSim::new(cost);
+
+    // learnable threshold trajectory: sample the played threshold while
+    // replaying the decision stream manually
+    let mut learner = LearnableThreshold::default_grid();
+    println!("learnable threshold trajectory (sampled every 200 requests):");
+    {
+        let mut probe = LearnableThreshold::default_grid();
+        for (i, pair) in arrivals.windows(2).enumerate() {
+            let gap = Secs(pair[1].value() - pair[0].value());
+            let _ = probe.decide(&cost, gap);
+            probe.observe(gap);
+            if i % 200 == 0 {
+                println!("  after {:>4} gaps: threshold {:.0} ms", i, probe.threshold().ms());
+            }
+        }
+    }
+    println!();
+
+    let mut t = Table::new(&["strategy", "E total (mJ)", "E/item (mJ)", "vs best fixed"])
+        .with_title("Energy scoreboard (2400 activity windows)");
+    let pre_ds = datasheet_breakeven(dev);
+    let mut entries: Vec<(Box<dyn Strategy>, &str)> = vec![
+        (Box::new(OnOff), "fixed"),
+        (Box::new(IdleWait), "fixed"),
+        (Box::new(PredefinedThreshold::at(pre_ds)), "datasheet threshold"),
+        (Box::new(PredefinedThreshold::breakeven()), "system threshold"),
+    ];
+    let mut results = Vec::new();
+    for (s, kind) in entries.iter_mut() {
+        let r = sim.run(&arrivals, s.as_mut());
+        results.push((r.strategy.to_string(), *kind, r.energy.total(), r.energy_per_item()));
+    }
+    let learn_r = sim.run(&arrivals, &mut learner);
+    results.push((
+        "learnable-threshold".into(),
+        "learned",
+        learn_r.energy.total(),
+        learn_r.energy_per_item(),
+    ));
+
+    let best_fixed = results
+        .iter()
+        .filter(|(_, k, ..)| *k != "learned")
+        .map(|(_, _, e, _)| e.value())
+        .fold(f64::INFINITY, f64::min);
+    for (name, _, total, per_item) in &results {
+        t.row(&[
+            name.clone(),
+            num(total.mj(), 1),
+            num(per_item.mj(), 3),
+            format!("{:+.1}%", (total.value() / best_fixed - 1.0) * 100.0),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // classify one activity window through the real artifact
+    let dir = elastic_gen::artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        let engine = Engine::load(&dir, &["lstm_har.opt"])?;
+        let mut rng = Rng::new(3);
+        let window: Vec<f32> = (0..24 * 6)
+            .map(|_| ((rng.normal_ms(0.0, 0.5) * 256.0).floor() / 256.0) as f32)
+            .collect();
+        let logits = engine.infer("lstm_har.opt", &window)?;
+        println!("sample HAR window logits: {logits:?}");
+    }
+    Ok(())
+}

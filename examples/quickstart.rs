@@ -1,0 +1,69 @@
+//! Quickstart: the Fig. 1 pipeline in ~60 lines.
+//!
+//! 1. Describe the application (model + workload + constraints).
+//! 2. Run the Generator (design-space exploration with analytical models).
+//! 3. Inspect the winning configuration's EDA-style report.
+//! 4. Execute one real inference through the compiled HLO artifact.
+//!
+//! Run with: `cargo run --release --example quickstart`
+//! (build `make artifacts` first for step 4; steps 1-3 work without).
+
+use elastic_gen::eda;
+use elastic_gen::generator::design_space::enumerate;
+use elastic_gen::generator::search::exhaustive::Exhaustive;
+use elastic_gen::generator::{AppSpec, Searcher};
+use elastic_gen::rtl::composition::build;
+use elastic_gen::runtime::Engine;
+use elastic_gen::util::units::Hertz;
+
+fn main() -> anyhow::Result<()> {
+    // 1. application-specific knowledge: the fluid-flow soft sensor
+    let spec = AppSpec::soft_sensor();
+    println!(
+        "application: {} ({}), goal {:?}\n",
+        spec.name,
+        spec.workload.describe(),
+        spec.goal
+    );
+
+    // 2. the Generator
+    let space = enumerate(&[]);
+    let result = Exhaustive.search(&spec, &space);
+    let best = result.best.expect("no feasible configuration");
+    println!(
+        "explored {} candidates -> best: {}",
+        result.evaluations,
+        best.candidate.describe()
+    );
+    println!(
+        "  energy/item {:.3} mJ | inference {:.1} us | {:.2} GOPS/s/W\n",
+        best.energy_per_item.mj(),
+        best.latency.us(),
+        best.gops_per_watt
+    );
+
+    // 3. EDA-style report of the winning design
+    let acc = build(spec.topology, &best.candidate.build_opts());
+    let report = eda::report(
+        &acc,
+        best.candidate.device,
+        Hertz::from_mhz(best.candidate.clock_mhz),
+    );
+    println!("{}", report.render());
+
+    // 4. run a real inference through the compiled artifact
+    let dir = elastic_gen::artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        let engine = Engine::load(&dir, &["mlp_fluid.hard"])?;
+        let reading = vec![0.50, 0.25, -0.125, 0.75, 0.0, -0.5, 0.375, 0.125];
+        let flow = engine.infer("mlp_fluid.hard", &reading)?;
+        println!(
+            "PJRT inference on {}: sensor {reading:?} -> flow estimate {:.4}",
+            engine.platform(),
+            flow[0]
+        );
+    } else {
+        println!("(artifacts not built; run `make artifacts` to enable the PJRT demo)");
+    }
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Soft sensor scenario ([4,11]): fluid-flow estimation from level-sensor
+//! windows on a periodic 50 ms loop.
+//!
+//! Walks the full deployment story: Generator output for the scenario,
+//! strategy comparison under the application's real workload via the
+//! discrete-event node simulation, and live inference over PJRT with the
+//! chosen variant.
+//!
+//! Run with: `cargo run --release --example soft_sensor`
+
+use elastic_gen::elastic_node::Platform;
+use elastic_gen::fpga::ConfigController;
+use elastic_gen::generator::design_space::enumerate;
+use elastic_gen::generator::search::exhaustive::Exhaustive;
+use elastic_gen::generator::{AppSpec, Searcher};
+use elastic_gen::rtl::composition::build;
+use elastic_gen::runtime::Engine;
+use elastic_gen::sim::{cost_model, NodeSim};
+use elastic_gen::strategy::learnable::LearnableThreshold;
+use elastic_gen::strategy::{ClockScale, IdleWait, OnOff, PredefinedThreshold, Strategy};
+use elastic_gen::util::rng::Rng;
+use elastic_gen::util::stats::Summary;
+use elastic_gen::util::table::{num, Table};
+use elastic_gen::util::units::Hertz;
+
+fn main() -> anyhow::Result<()> {
+    let spec = AppSpec::soft_sensor();
+    let space = enumerate(&[]);
+    let best = Exhaustive.search(&spec, &space).best.expect("feasible config");
+    println!("generated configuration: {}\n", best.candidate.describe());
+
+    // --- strategy comparison under the application workload -------------
+    let acc = build(spec.topology, &best.candidate.build_opts());
+    let cost = cost_model(
+        &acc,
+        best.candidate.device,
+        Hertz::from_mhz(best.candidate.clock_mhz),
+        &Platform::default(),
+        &ConfigController::raw(best.candidate.device),
+    );
+    let arrivals = spec.workload.arrivals(2000, &mut Rng::new(404));
+    let sim = NodeSim::new(cost);
+
+    let mut strategies: Vec<Box<dyn Strategy>> = vec![
+        Box::new(OnOff),
+        Box::new(IdleWait),
+        Box::new(ClockScale),
+        Box::new(PredefinedThreshold::breakeven()),
+        Box::new(LearnableThreshold::default_grid()),
+    ];
+    let mut t = Table::new(&["strategy", "E/item (mJ)", "p50 latency (ms)", "served"])
+        .with_title("Strategy comparison on the 50 ms sensor loop (2000 requests)");
+    for s in strategies.iter_mut() {
+        let r = sim.run(&arrivals, s.as_mut());
+        let lat = Summary::of(&r.latencies);
+        t.row(&[
+            r.strategy.to_string(),
+            num(r.energy_per_item().mj(), 4),
+            num(lat.p50 * 1e3, 3),
+            r.served.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // --- live inference over PJRT ---------------------------------------
+    let dir = elastic_gen::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("(run `make artifacts` for the live-inference part)");
+        return Ok(());
+    }
+    let engine = Engine::load(&dir, &["mlp_fluid.hard"])?;
+    let mut rng = Rng::new(7);
+    println!("live flow estimates (simulated level-sensor windows):");
+    for i in 0..5 {
+        // a level-sensor window: 8 readings on the Q8.8 grid
+        let window: Vec<f32> = (0..8)
+            .map(|_| (rng.range(-1.0, 1.0) * 256.0).floor() as f32 / 256.0)
+            .collect();
+        let flow = engine.infer("mlp_fluid.hard", &window)?;
+        println!("  window {i}: flow = {:+.4}", flow[0]);
+    }
+    Ok(())
+}

@@ -1,0 +1,188 @@
+"""AOT driver: lower every accelerator configuration to an HLO-text
+artifact + manifest + golden vectors + exported weights.
+
+Interchange format is **HLO text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the Rust ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (all under ``artifacts/``):
+
+* ``<name>.hlo.txt``       — one per AccelConfig + activation micro-kernel
+* ``manifest.json``        — artifact index consumed by the Rust runtime
+* ``weights/<model>.json`` — float64 weights for the Rust behavioural sim
+* ``golden/<name>.json``   — sample input/output pairs for cross-checking
+
+Run via ``make artifacts`` (no-op when inputs are unchanged).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs, model
+from .kernels.activations import make_activation_kernel
+from .quant import FORMATS, Q16_8
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True: the Rust
+    side unwraps with to_tuple1).
+
+    CRITICAL: print with ``print_large_constants=True``.  The default
+    printer elides big literals as ``{...}``, which xla_extension 0.5.1's
+    text parser accepts *silently* and turns into garbage weights — the
+    compiled module then runs with a corrupted network."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # the 0.5.1-era parser rejects the newer source-span metadata attrs
+    opts.print_metadata = False
+    text = comp.as_hlo_module().to_string(opts)
+    if "{...}" in text:
+        raise RuntimeError("HLO printer elided a constant; artifact unusable")
+    return text
+
+
+def _np_to_list(a: np.ndarray):
+    return np.asarray(a, dtype=np.float64).reshape(-1).tolist()
+
+
+def lower_config(cfg: configs.AccelConfig, out_dir: str) -> dict:
+    fn, in_shape, out_shape = model.build_from_config(cfg)
+    fmt = FORMATS[cfg.fmt]
+    spec = jax.ShapeDtypeStruct(in_shape, jnp.float32)
+    jitted = jax.jit(fn)
+    text = to_hlo_text(jitted.lower(spec))
+    path = os.path.join(out_dir, cfg.artifact_file())
+    with open(path, "w") as f:
+        f.write(text)
+
+    # golden vectors: 3 seeds per artifact
+    golden = []
+    for seed in range(3):
+        x = model.sample_input(cfg.model, fmt, seed=seed)
+        y = np.asarray(jitted(x))
+        golden.append({"input": _np_to_list(x), "output": _np_to_list(y)})
+    with open(os.path.join(out_dir, "golden", f"{cfg.name}.json"), "w") as f:
+        json.dump({
+            "name": cfg.name,
+            "input_shape": list(in_shape),
+            "output_shape": list(out_shape),
+            "cases": golden,
+        }, f)
+
+    entry = cfg.to_dict()
+    entry.update({
+        "file": cfg.artifact_file(),
+        "kind": "model",
+        "input_shape": list(in_shape),
+        "output_shape": list(out_shape),
+        "total_bits": fmt.total_bits,
+        "frac_bits": fmt.frac_bits,
+    })
+    print(f"  lowered {cfg.name:<20} ({len(text)} chars)")
+    return entry
+
+
+def lower_act_micro(act: str, impl: str, out_dir: str) -> dict:
+    """E2 micro-artifacts: int32 Q16.8 vector in/out through one activation
+    variant. The runtime feeds f32 and receives f32 (quantise/dequantise at
+    the graph boundary, like the model artifacts)."""
+    fmt = Q16_8
+    n = configs.ACT_MICRO_N
+    kern = make_activation_kernel(act, impl, fmt, n)
+
+    from .quant import dequantize, quantize
+
+    def fn(x):
+        return dequantize(kern(quantize(x, fmt)), fmt)
+
+    name = configs.act_micro_name(act, impl)
+    spec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    jitted = jax.jit(fn)
+    text = to_hlo_text(jitted.lower(spec))
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+
+    # golden: a deterministic ramp over [-8, 8) plus random grid points
+    ramp = np.linspace(-8.0, 8.0, n, endpoint=False)
+    ramp_q = np.floor(ramp * fmt.scale + 0.5) / fmt.scale  # snap to grid
+    y = np.asarray(jitted(ramp_q.astype(np.float32)))
+    with open(os.path.join(out_dir, "golden", f"{name}.json"), "w") as f:
+        json.dump({
+            "name": name,
+            "input_shape": [n],
+            "output_shape": [n],
+            "cases": [{"input": _np_to_list(ramp_q), "output": _np_to_list(y)}],
+        }, f)
+
+    print(f"  lowered {name:<20} ({len(text)} chars)")
+    return {
+        "name": name, "file": fname, "kind": "activation",
+        "model": "activation", "fmt": fmt.name(),
+        "act": act, "act_impl": impl, "tanh_impl": "",
+        "pipelined": False, "alus": 1, "note": "E2 micro-kernel",
+        "input_shape": [n], "output_shape": [n],
+        "total_bits": fmt.total_bits, "frac_bits": fmt.frac_bits,
+    }
+
+
+def export_weights(out_dir: str) -> None:
+    wdir = os.path.join(out_dir, "weights")
+    os.makedirs(wdir, exist_ok=True)
+
+    def conv(obj):
+        if isinstance(obj, np.ndarray):
+            return {"shape": list(obj.shape), "data": _np_to_list(obj)}
+        if isinstance(obj, dict):
+            return {k: conv(v) for k, v in obj.items()}
+        if isinstance(obj, list):
+            return [conv(v) for v in obj]
+        return obj
+
+    for mname, builder in model.WEIGHTS.items():
+        with open(os.path.join(wdir, f"{mname}.json"), "w") as f:
+            json.dump(conv(builder()), f)
+        print(f"  exported weights/{mname}.json")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts", help="artifacts directory")
+    p.add_argument("--only", default=None, help="lower only this artifact name")
+    args = p.parse_args()
+
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+    os.makedirs(os.path.join(out_dir, "golden"), exist_ok=True)
+
+    entries = []
+    for cfg in configs.CONFIGS:
+        if args.only and cfg.name != args.only:
+            continue
+        entries.append(lower_config(cfg, out_dir))
+    for act, impl in configs.ACT_MICRO:
+        name = configs.act_micro_name(act, impl)
+        if args.only and name != args.only:
+            continue
+        entries.append(lower_act_micro(act, impl, out_dir))
+
+    if not args.only:
+        export_weights(out_dir)
+        with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+            json.dump({"version": 1, "artifacts": entries}, f, indent=1)
+        print(f"wrote manifest.json ({len(entries)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

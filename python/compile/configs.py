@@ -1,0 +1,91 @@
+"""The accelerator-variant grid lowered by aot.py.
+
+Every entry is one *generated accelerator* in the paper's sense: a model
+topology + an activation-implementation choice + a Q-format.  RTL schedule
+attributes (pipelined / ALU count) do **not** change the functional graph —
+they live in the Rust analytical models — but are recorded here so the
+manifest ties each artifact to its L3 design point (DESIGN.md §5, E1/E7).
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class AccelConfig:
+    name: str           # artifact name, e.g. "lstm_har.opt"
+    model: str          # model topology key in model.BUILDERS
+    fmt: str            # Q-format name, e.g. "q16_8"
+    act: str = "sigmoid"       # primary activation function
+    act_impl: str = "exact"    # its implementation variant
+    tanh_impl: str = "exact"   # tanh variant (LSTM gates)
+    # L3-side RTL schedule attributes (no HLO effect):
+    pipelined: bool = False
+    alus: int = 1
+    #: L2 lowering ablation: inline the T LSTM cells instead of lax.scan.
+    unroll: bool = False
+    note: str = ""
+
+    def artifact_file(self) -> str:
+        return f"{self.name}.hlo.txt"
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+CONFIGS = [
+    # --- MLP soft sensor (fluid flow [4,11]; E8) -------------------------
+    AccelConfig("mlp_fluid.base", "mlp_fluid", "q16_8", "sigmoid", "exact",
+                note="baseline: exact sigmoid"),
+    AccelConfig("mlp_fluid.pla", "mlp_fluid", "q16_8", "sigmoid", "pla",
+                note="PLAN piecewise-linear sigmoid"),
+    AccelConfig("mlp_fluid.lut", "mlp_fluid", "q16_8", "sigmoid", "lut",
+                note="256-entry BRAM LUT sigmoid"),
+    AccelConfig("mlp_fluid.hard", "mlp_fluid", "q16_8", "hardsigmoid", "hard",
+                pipelined=True, note="QAT-friendly hard sigmoid, pipelined"),
+    AccelConfig("mlp_fluid.q8", "mlp_fluid", "q8_4", "hardsigmoid", "hard",
+                pipelined=True, note="8-bit datapath exploration point"),
+    # --- LSTM HAR (flagship accelerator [2,20]; E1) ----------------------
+    AccelConfig("lstm_har.base", "lstm_har", "q16_8", "sigmoid", "exact",
+                tanh_impl="exact", pipelined=False, alus=1,
+                note="E1 baseline: sequential schedule, exact activations"),
+    AccelConfig("lstm_har.pla", "lstm_har", "q16_8", "sigmoid", "pla",
+                tanh_impl="pla", pipelined=False, alus=1,
+                note="PLA activations, sequential"),
+    AccelConfig("lstm_har.opt", "lstm_har", "q16_8", "sigmoid", "hard",
+                tanh_impl="hard", pipelined=True, alus=4,
+                note="E1 optimised: pipelined, hard activations"),
+    AccelConfig("lstm_har.q12", "lstm_har", "q12_6", "sigmoid", "hard",
+                tanh_impl="hard", pipelined=True, alus=4,
+                note="reduced precision exploration point"),
+    AccelConfig("lstm_har.unroll", "lstm_har", "q16_8", "sigmoid", "hard",
+                tanh_impl="hard", pipelined=True, alus=4, unroll=True,
+                note="L2 perf ablation: unrolled timesteps vs lax.scan"),
+    # --- CNN ECG ([3]) ---------------------------------------------------
+    AccelConfig("cnn_ecg.base", "cnn_ecg", "q16_8", "tanh", "exact",
+                note="baseline: exact tanh"),
+    AccelConfig("cnn_ecg.hard", "cnn_ecg", "q16_8", "hardtanh", "hard",
+                pipelined=True, note="hard tanh, pipelined"),
+    # --- attention (§3.1) -------------------------------------------------
+    AccelConfig("attn_tiny.base", "attn_tiny", "q16_8",
+                note="single-head attention block"),
+]
+
+#: E2 standalone activation micro-kernels: one artifact per variant,
+#: int32[256] -> int32[256] on the Q16.8 grid.
+ACT_MICRO_N = 256
+ACT_MICRO = [
+    ("sigmoid", "exact"), ("sigmoid", "pla"), ("sigmoid", "lut"),
+    ("tanh", "exact"), ("tanh", "pla"), ("tanh", "lut"),
+    ("hardsigmoid", "hard"), ("hardtanh", "hard"),
+]
+
+
+def act_micro_name(act: str, impl: str) -> str:
+    return f"act.{act}.{impl}"
+
+
+def by_name(name: str) -> AccelConfig:
+    for c in CONFIGS:
+        if c.name == name:
+            return c
+    raise KeyError(name)

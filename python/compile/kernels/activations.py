@@ -1,0 +1,223 @@
+"""Activation-function implementation variants (the paper's RQ1 templates).
+
+Each activation (Sigmoid, Tanh, HardSigmoid, HardTanh) exists in up to three
+implementation styles, mirroring the RTL template library of [2,5]:
+
+* ``exact``  — high-precision evaluation (dequant -> f32 transcendental ->
+  requant).  Models an iterative/CORDIC-style RTL unit: best precision,
+  highest resource cost and latency.
+* ``pla``    — piecewise-linear approximation with power-of-two
+  coefficients (the classic PLAN scheme for sigmoid), pure integer
+  shift/add datapath.  Mid precision, tiny resource cost.
+* ``lut``    — 256-entry lookup table over the input range [-8, 8),
+  pure integer index computation + table read (one BRAM in RTL).
+* ``hard``   — HardSigmoid ``clip(x/4 + 1/2, 0, 1)`` and HardTanh
+  ``clip(x, -1, 1)``: shift/clamp only, the cheapest variant, exactly
+  representable in fixed point (zero software/hardware mismatch, §5.1).
+
+All functions map int32 Q-values to int32 Q-values in the same format and
+are plain jnp computations, so they can be inlined inside larger Pallas
+kernels (fc / lstm / conv) *and* wrapped standalone by
+:func:`make_activation_kernel` for the E2 micro-benchmarks.
+
+The pure-integer variants (pla / lut / hard) are bit-exact with the Rust
+behavioural simulator (``rust/src/rtl/activation.rs``); ``exact`` agrees
+within 1 LSB (f32 vs f64 transcendentals).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from ..quant import QFormat, dequantize, quantize, saturate, sra_round
+
+#: Input range covered by the LUT variants.  [-8, 8) is sufficient for both
+#: sigmoid and tanh to saturate at Q16.8 resolution.
+LUT_LO = -8.0
+LUT_HI = 8.0
+LUT_SIZE = 256
+
+ACTIVATIONS = ("sigmoid", "tanh", "hardsigmoid", "hardtanh")
+IMPLS = {
+    "sigmoid": ("exact", "pla", "lut"),
+    "tanh": ("exact", "pla", "lut"),
+    "hardsigmoid": ("hard",),
+    "hardtanh": ("hard",),
+}
+
+
+# ---------------------------------------------------------------------------
+# exact variants
+# ---------------------------------------------------------------------------
+
+def sigmoid_exact(q, fmt: QFormat):
+    return quantize(jax.nn.sigmoid(dequantize(q, fmt)), fmt)
+
+
+def tanh_exact(q, fmt: QFormat):
+    return quantize(jnp.tanh(dequantize(q, fmt)), fmt)
+
+
+# ---------------------------------------------------------------------------
+# PLA variants (PLAN: Amin/Curtis/Hayes-Gill, all coefficients are powers of
+# two so the RTL datapath is shift+add only).
+#
+#   x >= 5.0          : y = 1
+#   2.375 <= x < 5.0  : y = x/32 + 27/32
+#   1.0   <= x < 2.375: y = x/8  + 5/8
+#   0     <= x < 1.0  : y = x/4  + 1/2
+#   x < 0             : y = 1 - y(-x)
+# ---------------------------------------------------------------------------
+
+def _plan_positive(q, fmt: QFormat):
+    """PLAN sigmoid for q >= 0 (int32 Q-values)."""
+    one = fmt.scale  # 1.0 in Q
+    # Breakpoints in Q.  2.375 = 19/8 and 5.0 are exactly representable for
+    # frac_bits >= 3 (all supported formats).
+    b1 = one  # 1.0
+    b2 = (19 * one) >> 3  # 2.375
+    b3 = 5 * one  # 5.0
+    seg1 = sra_round(q, 2) + (one >> 1)           # x/4 + 1/2
+    seg2 = sra_round(q, 3) + ((5 * one) >> 3)     # x/8 + 5/8
+    seg3 = sra_round(q, 5) + ((27 * one) >> 5)    # x/32 + 27/32
+    y = jnp.where(q < b1, seg1, jnp.where(q < b2, seg2, jnp.where(q < b3, seg3, one)))
+    return y
+
+
+def sigmoid_pla(q, fmt: QFormat):
+    one = fmt.scale
+    qa = jnp.abs(q)
+    pos = _plan_positive(qa, fmt)
+    y = jnp.where(q < 0, one - pos, pos)
+    return saturate(y, fmt)
+
+
+def tanh_pla(q, fmt: QFormat):
+    """tanh(x) = 2*sigmoid(2x) - 1, with the doubling done pre-saturation in
+    int32 (no overflow: |q| <= 2^15 -> |2q| <= 2^16)."""
+    one = fmt.scale
+    q2 = 2 * q
+    s = sigmoid_pla(q2, fmt)
+    return saturate(2 * s - one, fmt)
+
+
+# ---------------------------------------------------------------------------
+# LUT variants: 256 entries over [-8, 8).  Index = (q - lo_q) >> shift with
+# shift = frac_bits - 4 (the range spans 16 * 2^f Q-units; 16*2^f / 256 =
+# 2^(f-4)).  Table contents are precomputed at build time from the f64
+# reference, exactly as an RTL generator would initialise a BRAM.
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def lut_table(kind: str, fmt: QFormat) -> np.ndarray:
+    """BRAM init contents for the LUT variant.  Entry i covers q in
+    [lo_q + i*step, lo_q + (i+1)*step); stores f(midpoint) quantised,
+    like the generated BRAM init of [5]."""
+    step = (LUT_HI - LUT_LO) / LUT_SIZE
+    mid = np.arange(LUT_SIZE, dtype=np.float64) * step + LUT_LO + step / 2.0
+    f = 1.0 / (1.0 + np.exp(-mid)) if kind == "sigmoid" else np.tanh(mid)
+    q = np.floor(f * fmt.scale + 0.5).astype(np.int64)
+    return np.clip(q, fmt.qmin, fmt.qmax).astype(np.int32)
+
+
+def lut_apply(q, table, fmt: QFormat):
+    """Pure-integer table read.  ``table`` must be an int32[LUT_SIZE] value
+    (passed as an explicit kernel input inside Pallas kernels — Pallas
+    forbids captured constants)."""
+    if fmt.frac_bits < 4:
+        raise ValueError("LUT variant requires frac_bits >= 4")
+    shift = fmt.frac_bits - 4
+    lo_q = int(LUT_LO * fmt.scale)
+    idx = jnp.right_shift(q - lo_q, shift)
+    idx = jnp.clip(idx, 0, LUT_SIZE - 1)
+    return table[idx]
+
+
+def sigmoid_lut(q, fmt: QFormat, table=None):
+    if table is None:  # non-Pallas contexts can use the module constant
+        table = jnp.asarray(lut_table("sigmoid", fmt))
+    return lut_apply(q, table, fmt)
+
+
+def tanh_lut(q, fmt: QFormat, table=None):
+    if table is None:
+        table = jnp.asarray(lut_table("tanh", fmt))
+    return lut_apply(q, table, fmt)
+
+
+# ---------------------------------------------------------------------------
+# hard variants (quantisation-aware-training friendly, zero mismatch [14,20])
+# ---------------------------------------------------------------------------
+
+def hardsigmoid(q, fmt: QFormat):
+    """clip(x/4 + 1/2, 0, 1) — one shift, one add, one clamp."""
+    one = fmt.scale
+    y = sra_round(q, 2) + (one >> 1)
+    return jnp.clip(y, 0, one)
+
+
+def hardtanh(q, fmt: QFormat):
+    one = fmt.scale
+    return jnp.clip(q, -one, one)
+
+
+# ---------------------------------------------------------------------------
+# registry + Pallas wrappers
+# ---------------------------------------------------------------------------
+
+_FUNCS = {
+    ("sigmoid", "exact"): sigmoid_exact,
+    ("sigmoid", "pla"): sigmoid_pla,
+    ("sigmoid", "lut"): sigmoid_lut,
+    ("tanh", "exact"): tanh_exact,
+    ("tanh", "pla"): tanh_pla,
+    ("tanh", "lut"): tanh_lut,
+    ("hardsigmoid", "hard"): hardsigmoid,
+    ("hardtanh", "hard"): hardtanh,
+}
+
+
+def get_activation(name: str, impl: str):
+    """Return the int32->int32 activation function ``f(q, fmt)``."""
+    try:
+        return _FUNCS[(name, impl)]
+    except KeyError:
+        raise KeyError(f"unknown activation variant {name}/{impl}") from None
+
+
+def gate_pair(sigmoid_impl: str, tanh_impl: str):
+    """(sigmoid_fn, tanh_fn) pair used by LSTM gates. ``hard`` selects the
+    Hard* functions (the paper's QAT-friendly configuration [20])."""
+    sig = hardsigmoid if sigmoid_impl == "hard" else get_activation("sigmoid", sigmoid_impl)
+    tan = hardtanh if tanh_impl == "hard" else get_activation("tanh", tanh_impl)
+    return sig, tan
+
+
+def make_activation_kernel(name: str, impl: str, fmt: QFormat, n: int):
+    """Standalone elementwise Pallas kernel ``int32[n] -> int32[n]`` for the
+    E2 activation micro-artifacts (interpret mode; see DESIGN.md §2).
+
+    LUT variants take their BRAM table as an explicit kernel input
+    (Pallas forbids captured constants)."""
+    fn = get_activation(name, impl)
+    out_shape = jax.ShapeDtypeStruct((n,), jnp.int32)
+
+    if impl == "lut":
+        table = jnp.asarray(lut_table(name, fmt))
+
+        def kernel(x_ref, t_ref, o_ref):
+            o_ref[...] = lut_apply(x_ref[...], t_ref[...], fmt)
+
+        def apply(q):
+            return pl.pallas_call(kernel, out_shape=out_shape, interpret=True)(q, table)
+    else:
+        def kernel(x_ref, o_ref):
+            o_ref[...] = fn(x_ref[...], fmt)
+
+        def apply(q):
+            return pl.pallas_call(kernel, out_shape=out_shape, interpret=True)(q)
+
+    return apply

@@ -1,0 +1,40 @@
+"""Single-head attention as a mixed fixed/float Pallas kernel.
+
+The paper's template library includes "attention modules in Transformer
+models" (§3.1) without publishing an RTL datapath.  We model the common
+embedded design point: Q/K/V projections and the two matmuls run in fixed
+point (MAC arrays), while the softmax is an "exact" unit evaluated at high
+precision (dequant -> f32 softmax -> requant), like the exact activation
+variants.  The score scaling 1/sqrt(d) folds into the softmax unit.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..quant import QFormat, dequantize, quantize, saturate, sra_round
+
+
+def attention_int(qq, kq, vq, fmt: QFormat):
+    """qq, kq, vq: int32[T, d] -> int32[T, d]."""
+    d = qq.shape[-1]
+    scores_acc = jnp.dot(qq, kq.T, preferred_element_type=jnp.int32)  # 2f scale
+    scores_q = saturate(sra_round(scores_acc, fmt.frac_bits), fmt)
+    scores_f = dequantize(scores_q, fmt) / jnp.sqrt(jnp.float32(d))
+    w_q = quantize(jax.nn.softmax(scores_f, axis=-1), fmt)
+    out_acc = jnp.dot(w_q, vq, preferred_element_type=jnp.int32)
+    return saturate(sra_round(out_acc, fmt.frac_bits), fmt)
+
+
+def make_attention_kernel(t: int, d: int, fmt: QFormat):
+    def kernel(q_ref, k_ref, v_ref, o_ref):
+        o_ref[...] = attention_int(q_ref[...], k_ref[...], v_ref[...], fmt)
+
+    def apply(qq, kq, vq):
+        return pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct((t, d), jnp.int32),
+            interpret=True,
+        )(qq, kq, vq)
+
+    return apply

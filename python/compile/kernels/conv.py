@@ -1,0 +1,78 @@
+"""1-D convolution as a fixed-point Pallas kernel (the CNN template of [3]).
+
+The RTL template streams the input through a shift-register window and one
+MAC column per output channel; here the whole (small) feature map fits in a
+single VMEM block, so the kernel materialises the im2col windows and runs
+one fused integer contraction — same arithmetic, TPU-shaped schedule
+(DESIGN.md §2, Hardware Adaptation).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..quant import QFormat, saturate, sra_round
+from .activations import get_activation, lut_apply, lut_table
+
+
+def conv1d_int(xq, kq, bq, fmt: QFormat, stride: int = 1, act=None,
+               act_table=None):
+    """xq: int32[T, c_in]; kq: int32[kw, c_in, c_out]; bq: int32[c_out].
+    Valid padding. Returns int32[T_out, c_out]."""
+    kw = kq.shape[0]
+    t_out = (xq.shape[0] - kw) // stride + 1
+    windows = jnp.stack([
+        jax.lax.dynamic_slice_in_dim(xq, t * stride, kw, axis=0)
+        for t in range(t_out)
+    ])  # [T_out, kw, c_in]
+    acc = jnp.einsum(
+        "twc,wcd->td", windows, kq, preferred_element_type=jnp.int32
+    )
+    acc = acc + (bq.astype(jnp.int32) << fmt.frac_bits)
+    y = saturate(sra_round(acc, fmt.frac_bits), fmt)
+    if act is not None:
+        name, impl = act
+        if impl == "lut":
+            y = lut_apply(y, act_table, fmt) if act_table is not None \
+                else get_activation(name, impl)(y, fmt)
+        else:
+            y = get_activation(name, impl)(y, fmt)
+    return y
+
+
+def make_conv1d_kernel(t_in: int, c_in: int, kw: int, c_out: int,
+                       fmt: QFormat, stride: int = 1, act=None):
+    t_out = (t_in - kw) // stride + 1
+    out_shape = jax.ShapeDtypeStruct((t_out, c_out), jnp.int32)
+    use_lut = act is not None and act[1] == "lut"
+
+    if use_lut:
+        table = jnp.asarray(lut_table(act[0], fmt))
+
+        def kernel(x_ref, k_ref, b_ref, t_ref, o_ref):
+            o_ref[...] = conv1d_int(x_ref[...], k_ref[...], b_ref[...], fmt,
+                                    stride, act, act_table=t_ref[...])
+
+        def apply(xq, kq, bq):
+            return pl.pallas_call(kernel, out_shape=out_shape, interpret=True)(
+                xq, kq, bq, table)
+    else:
+        def kernel(x_ref, k_ref, b_ref, o_ref):
+            o_ref[...] = conv1d_int(x_ref[...], k_ref[...], b_ref[...], fmt,
+                                    stride, act)
+
+        def apply(xq, kq, bq):
+            return pl.pallas_call(kernel, out_shape=out_shape, interpret=True)(
+                xq, kq, bq)
+
+    return apply
+
+
+def global_avg_pool_int(xq, fmt: QFormat):
+    """Mean over time in fixed point: sum then divide by T with rounding.
+    T is static so the RTL uses a constant divider (or shift when T is a
+    power of two)."""
+    t = xq.shape[0]
+    s = jnp.sum(xq.astype(jnp.int32), axis=0)
+    # round-half-up division by constant T
+    return (s + t // 2) // t

@@ -1,0 +1,68 @@
+"""Fully-connected layer as a fixed-point Pallas kernel.
+
+Mirrors the FC RTL template of [4,10,11]: a MAC array accumulates
+``x @ W`` at 2f scale (int32), adds the bias (stored at f scale, shifted up
+to 2f before the add, exactly like the RTL accumulator register), rescales
+with the DSP rounding idiom and saturates, then applies the selected
+activation variant in the same datapath.
+
+The Pallas grid is a single block — layer widths on resource-constrained
+FPGAs (< 64) fit comfortably in one VMEM tile; the TPU-adaptation notes in
+DESIGN.md §2 explain the mapping from the paper's ALU time-multiplexing to
+block shapes.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..quant import QFormat, saturate, sra_round
+from .activations import get_activation, lut_apply, lut_table
+
+
+def fc_int(xq, wq, bq, fmt: QFormat, act=None, act_table=None):
+    """Plain-jnp fixed-point FC (inlineable inside other kernels).
+
+    xq: int32[n_in]; wq: int32[n_in, n_out]; bq: int32[n_out] (f scale).
+    Returns int32[n_out] at f scale.  For LUT activations inside Pallas,
+    pass the table value via ``act_table``.
+    """
+    acc = jnp.dot(xq, wq, preferred_element_type=jnp.int32)
+    acc = acc + (bq.astype(jnp.int32) << fmt.frac_bits)
+    y = saturate(sra_round(acc, fmt.frac_bits), fmt)
+    if act is not None:
+        name, impl = act
+        if impl == "lut":
+            y = lut_apply(y, act_table, fmt) if act_table is not None \
+                else get_activation(name, impl)(y, fmt)
+        else:
+            y = get_activation(name, impl)(y, fmt)
+    return y
+
+
+def make_fc_kernel(n_in: int, n_out: int, fmt: QFormat, act=None):
+    """Pallas kernel computing one FC layer; weights are kernel inputs so
+    the same compiled kernel serves every layer of a given shape.  LUT
+    activation tables ride along as an extra kernel input."""
+    out_shape = jax.ShapeDtypeStruct((n_out,), jnp.int32)
+    use_lut = act is not None and act[1] == "lut"
+
+    if use_lut:
+        table = jnp.asarray(lut_table(act[0], fmt))
+
+        def kernel(x_ref, w_ref, b_ref, t_ref, o_ref):
+            o_ref[...] = fc_int(x_ref[...], w_ref[...], b_ref[...], fmt,
+                                act, act_table=t_ref[...])
+
+        def apply(xq, wq, bq):
+            return pl.pallas_call(kernel, out_shape=out_shape, interpret=True)(
+                xq, wq, bq, table)
+    else:
+        def kernel(x_ref, w_ref, b_ref, o_ref):
+            o_ref[...] = fc_int(x_ref[...], w_ref[...], b_ref[...], fmt, act)
+
+        def apply(xq, wq, bq):
+            return pl.pallas_call(kernel, out_shape=out_shape, interpret=True)(
+                xq, wq, bq)
+
+    return apply

@@ -1,0 +1,139 @@
+"""Fused LSTM cell as a fixed-point Pallas kernel.
+
+This is the compute hot-spot of the paper's flagship accelerator [2]: all
+four gate pre-activations are produced by one fused MAC pass
+(``x @ Wx + h @ Wh + b`` over the concatenated [i|f|g|o] weight matrix —
+the RTL template's "fused gate" optimisation), then routed through the
+selected sigmoid/tanh implementation variants, and the state update runs in
+the same fixed-point datapath:
+
+    c' = sat( f*c >> fb  +  i*g >> fb )
+    h' = sat( o * tanh(c') >> fb )
+
+Gate order along the fused axis is [i, f, g, o] (matches ref.py and the
+Rust behavioural simulator).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..quant import QFormat, saturate, sra_round
+from .activations import gate_pair, lut_apply, lut_table
+
+
+def lstm_cell_int(xq, hq, cq, wxq, whq, bq, fmt: QFormat,
+                  sigmoid_impl: str = "exact", tanh_impl: str = "exact",
+                  sig_table=None, tan_table=None):
+    """Plain-jnp fixed-point LSTM cell.
+
+    xq: int32[n_in]; hq, cq: int32[n_h]; wxq: int32[n_in, 4*n_h];
+    whq: int32[n_h, 4*n_h]; bq: int32[4*n_h].  Returns (h', c').
+    LUT gate variants receive their tables via sig_table / tan_table when
+    running inside a Pallas kernel.
+    """
+    n_h = hq.shape[-1]
+    sig0, tan0 = gate_pair(sigmoid_impl, tanh_impl)
+    if sigmoid_impl == "lut" and sig_table is not None:
+        sig = lambda q, f: lut_apply(q, sig_table, f)
+    else:
+        sig = sig0
+    if tanh_impl == "lut" and tan_table is not None:
+        tan = lambda q, f: lut_apply(q, tan_table, f)
+    else:
+        tan = tan0
+
+    acc = (
+        jnp.dot(xq, wxq, preferred_element_type=jnp.int32)
+        + jnp.dot(hq, whq, preferred_element_type=jnp.int32)
+        + (bq.astype(jnp.int32) << fmt.frac_bits)
+    )
+    z = saturate(sra_round(acc, fmt.frac_bits), fmt)
+
+    i = sig(z[0 * n_h : 1 * n_h], fmt)
+    f = sig(z[1 * n_h : 2 * n_h], fmt)
+    g = tan(z[2 * n_h : 3 * n_h], fmt)
+    o = sig(z[3 * n_h : 4 * n_h], fmt)
+
+    c_new = saturate(sra_round(f * cq, fmt.frac_bits) + sra_round(i * g, fmt.frac_bits), fmt)
+    h_new = saturate(sra_round(o * tan(c_new, fmt), fmt.frac_bits), fmt)
+    return h_new, c_new
+
+
+def make_lstm_cell_kernel(n_in: int, n_h: int, fmt: QFormat,
+                          sigmoid_impl: str = "exact", tanh_impl: str = "exact"):
+    """Pallas kernel for one LSTM cell step (single block; see fc.py for the
+    VMEM sizing rationale).  LUT gate tables are threaded through as extra
+    kernel inputs."""
+    sig_lut = sigmoid_impl == "lut"
+    tan_lut = tanh_impl == "lut"
+    extra = []
+    if sig_lut:
+        extra.append(jnp.asarray(lut_table("sigmoid", fmt)))
+    if tan_lut:
+        extra.append(jnp.asarray(lut_table("tanh", fmt)))
+
+    def kernel(*refs):
+        x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref = refs[:6]
+        i = 6
+        st = refs[i][...] if sig_lut else None
+        i += int(sig_lut)
+        tt = refs[i][...] if tan_lut else None
+        h_out, c_out = refs[-2], refs[-1]
+        h_new, c_new = lstm_cell_int(
+            x_ref[...], h_ref[...], c_ref[...],
+            wx_ref[...], wh_ref[...], b_ref[...],
+            fmt, sigmoid_impl, tanh_impl,
+            sig_table=st, tan_table=tt,
+        )
+        h_out[...] = h_new
+        c_out[...] = c_new
+
+    out_shape = (
+        jax.ShapeDtypeStruct((n_h,), jnp.int32),
+        jax.ShapeDtypeStruct((n_h,), jnp.int32),
+    )
+
+    def apply(xq, hq, cq, wxq, whq, bq):
+        return pl.pallas_call(
+            kernel,
+            out_shape=out_shape,
+            interpret=True,
+        )(xq, hq, cq, wxq, whq, bq, *extra)
+
+    return apply
+
+
+def lstm_scan(xsq, wxq, whq, bq, fmt: QFormat,
+              sigmoid_impl: str = "exact", tanh_impl: str = "exact",
+              use_pallas: bool = True, unroll: bool = False):
+    """Run the cell over a [T, n_in] int32 sequence.
+
+    Default is ``lax.scan`` (one HLO while-loop, compact module); with
+    ``unroll=True`` the T cells are inlined into straight-line HLO — the
+    L2 ablation point the §Perf pass measures (larger module, lets XLA
+    fuse across timesteps, no loop overhead per step)."""
+    n_in = xsq.shape[-1]
+    n_h = whq.shape[0]
+    if use_pallas:
+        cell = make_lstm_cell_kernel(n_in, n_h, fmt, sigmoid_impl, tanh_impl)
+
+        def step(carry, x):
+            h, c = carry
+            h2, c2 = cell(x, h, c, wxq, whq, bq)
+            return (h2, c2), ()
+    else:
+        def step(carry, x):
+            h, c = carry
+            h2, c2 = lstm_cell_int(x, h, c, wxq, whq, bq, fmt, sigmoid_impl, tanh_impl)
+            return (h2, c2), ()
+
+    h0 = jnp.zeros((n_h,), dtype=jnp.int32)
+    c0 = jnp.zeros((n_h,), dtype=jnp.int32)
+    if unroll:
+        carry = (h0, c0)
+        for t in range(xsq.shape[0]):
+            carry, _ = step(carry, xsq[t])
+        return carry[0]
+    (h, _c), _ = jax.lax.scan(step, (h0, c0), xsq)
+    return h

@@ -1,0 +1,108 @@
+"""Pure-jnp float32 oracles for every kernel.
+
+These are the correctness baseline of the whole stack: pytest compares each
+fixed-point Pallas kernel against the corresponding oracle within the
+quantisation error bound derived from the Q-format (see test files).  They
+are also the "software definition" the paper's §5.1 refers to when it says
+Hard* activations achieve *no* software/hardware mismatch.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+def sigmoid(x):
+    return jax.nn.sigmoid(x)
+
+
+def tanh(x):
+    return jnp.tanh(x)
+
+
+def hardsigmoid(x):
+    return jnp.clip(x / 4.0 + 0.5, 0.0, 1.0)
+
+
+def hardtanh(x):
+    return jnp.clip(x, -1.0, 1.0)
+
+
+ACT = {
+    "sigmoid": sigmoid,
+    "tanh": tanh,
+    "hardsigmoid": hardsigmoid,
+    "hardtanh": hardtanh,
+}
+
+
+# ---------------------------------------------------------------------------
+# layers (float reference semantics)
+# ---------------------------------------------------------------------------
+
+def fc(x, w, b, act=None):
+    """y = act(x @ w + b); x: [n_in], w: [n_in, n_out], b: [n_out]."""
+    y = x @ w + b
+    return ACT[act](y) if act else y
+
+
+def lstm_cell(x, h, c, wx, wh, b, sigmoid_fn=sigmoid, tanh_fn=tanh):
+    """Standard LSTM cell; gate order [i, f, g, o] along the last axis."""
+    n_h = h.shape[-1]
+    z = x @ wx + h @ wh + b
+    i = sigmoid_fn(z[..., 0 * n_h : 1 * n_h])
+    f = sigmoid_fn(z[..., 1 * n_h : 2 * n_h])
+    g = tanh_fn(z[..., 2 * n_h : 3 * n_h])
+    o = sigmoid_fn(z[..., 3 * n_h : 4 * n_h])
+    c_new = f * c + i * g
+    h_new = o * tanh_fn(c_new)
+    return h_new, c_new
+
+
+def lstm(xs, wx, wh, b, sigmoid_fn=sigmoid, tanh_fn=tanh):
+    """Run the cell over time; xs: [T, n_in] -> final hidden [n_h]."""
+    n_h = wh.shape[0]
+    h = jnp.zeros((n_h,), dtype=xs.dtype)
+    c = jnp.zeros((n_h,), dtype=xs.dtype)
+    for t in range(xs.shape[0]):
+        h, c = lstm_cell(xs[t], h, c, wx, wh, b, sigmoid_fn, tanh_fn)
+    return h
+
+
+def conv1d(x, k, b, stride=1, act=None):
+    """x: [T, c_in], k: [kw, c_in, c_out], b: [c_out] -> [T_out, c_out],
+    valid padding."""
+    kw = k.shape[0]
+    t_out = (x.shape[0] - kw) // stride + 1
+    windows = jnp.stack([x[t * stride : t * stride + kw] for t in range(t_out)])
+    y = jnp.einsum("twc,wcd->td", windows, k) + b
+    return ACT[act](y) if act else y
+
+
+def global_avg_pool(x):
+    """x: [T, c] -> [c]."""
+    return jnp.mean(x, axis=0)
+
+
+def attention(q, k, v):
+    """Single-head scaled dot-product attention; q,k,v: [T, d]."""
+    d = q.shape[-1]
+    scores = (q @ k.T) / jnp.sqrt(jnp.float32(d))
+    w = jax.nn.softmax(scores, axis=-1)
+    return w @ v
+
+
+# ---------------------------------------------------------------------------
+# numpy mirrors for golden-vector generation
+# ---------------------------------------------------------------------------
+
+def np_sigmoid(x):
+    return 1.0 / (1.0 + np.exp(-np.asarray(x, dtype=np.float64)))
+
+
+def np_tanh(x):
+    return np.tanh(np.asarray(x, dtype=np.float64))

@@ -1,0 +1,236 @@
+"""L2: JAX model builders assembled from the fixed-point Pallas kernels.
+
+Each *accelerator configuration* (model × activation implementation ×
+Q-format) builds a closed jax function ``f32 input -> f32 output`` with the
+quantised weights baked in as int32 constants — the software twin of "one
+generated bitstream per configuration".  ``aot.py`` lowers every
+configuration in ``configs.CONFIGS`` to an HLO-text artifact that the Rust
+runtime loads at startup.
+
+Weights are generated deterministically (seeded per model) in float64,
+quantised with the same round-half-up rule as the Rust behavioural
+simulator, and exported to ``artifacts/weights/<model>.json`` so the two
+sides simulate the *same* network.
+"""
+
+import hashlib
+
+import jax.numpy as jnp
+import numpy as np
+
+from .quant import FORMATS, QFormat, dequantize, np_quantize, quantize
+from .kernels.activations import get_activation
+from .kernels.attention import make_attention_kernel
+from .kernels.conv import global_avg_pool_int, make_conv1d_kernel
+from .kernels.fc import make_fc_kernel
+from .kernels.lstm import lstm_scan
+
+
+def _rng(model_name: str) -> np.random.Generator:
+    seed = int.from_bytes(hashlib.sha256(model_name.encode()).digest()[:4], "little")
+    return np.random.default_rng(seed)
+
+
+def _uniform(rng, shape, lo, hi):
+    return rng.uniform(lo, hi, size=shape).astype(np.float64)
+
+
+# ---------------------------------------------------------------------------
+# model topologies (sizes follow the paper's application scenarios)
+# ---------------------------------------------------------------------------
+
+#: MLP soft sensor for fluid-flow estimation [4,11]: 8 level-sensor readings
+#: -> flow estimate.
+MLP_LAYERS = [(8, 16), (16, 8), (8, 1)]
+
+#: LSTM HAR/EEG-style classifier [2,20]: 24 timesteps x 6 IMU channels,
+#: hidden 20, 6 classes.
+LSTM_T, LSTM_IN, LSTM_H, LSTM_CLASSES = 24, 6, 20, 6
+
+#: 1-D CNN for on-device ECG analysis [3]: 128-sample beat window.
+CNN_T, CNN_SPEC = 128, [(1, 8, 7, 2), (8, 16, 5, 2)]  # (c_in, c_out, kw, stride)
+CNN_CLASSES = 5
+
+#: Tiny transformer attention block (§3.1 "attention modules").
+ATTN_T, ATTN_D, ATTN_CLASSES = 16, 16, 4
+
+
+def mlp_weights(rng=None):
+    rng = rng or _rng("mlp_fluid")
+    ws = []
+    for n_in, n_out in MLP_LAYERS:
+        w = _uniform(rng, (n_in, n_out), -1.0, 1.0) / np.sqrt(n_in)
+        b = _uniform(rng, (n_out,), -0.25, 0.25)
+        ws.append({"w": w, "b": b})
+    return ws
+
+
+def lstm_weights(rng=None):
+    rng = rng or _rng("lstm_har")
+    wx = _uniform(rng, (LSTM_IN, 4 * LSTM_H), -1.0, 1.0) / np.sqrt(LSTM_IN)
+    wh = _uniform(rng, (LSTM_H, 4 * LSTM_H), -1.0, 1.0) / np.sqrt(LSTM_H)
+    b = _uniform(rng, (4 * LSTM_H,), -0.25, 0.25)
+    # forget-gate bias +0.5 (standard init, keeps state dynamics non-trivial)
+    b[LSTM_H : 2 * LSTM_H] += 0.5
+    wf = _uniform(rng, (LSTM_H, LSTM_CLASSES), -1.0, 1.0) / np.sqrt(LSTM_H)
+    bf = _uniform(rng, (LSTM_CLASSES,), -0.25, 0.25)
+    return {"wx": wx, "wh": wh, "b": b, "w_head": wf, "b_head": bf}
+
+
+def cnn_weights(rng=None):
+    rng = rng or _rng("cnn_ecg")
+    convs = []
+    for c_in, c_out, kw, _stride in CNN_SPEC:
+        k = _uniform(rng, (kw, c_in, c_out), -1.0, 1.0) / np.sqrt(kw * c_in)
+        b = _uniform(rng, (c_out,), -0.25, 0.25)
+        convs.append({"k": k, "b": b})
+    c_last = CNN_SPEC[-1][1]
+    w = _uniform(rng, (c_last, CNN_CLASSES), -1.0, 1.0) / np.sqrt(c_last)
+    b = _uniform(rng, (CNN_CLASSES,), -0.25, 0.25)
+    return {"convs": convs, "w_head": w, "b_head": b}
+
+
+def attn_weights(rng=None):
+    rng = rng or _rng("attn_tiny")
+    proj = {
+        n: _uniform(rng, (ATTN_D, ATTN_D), -1.0, 1.0) / np.sqrt(ATTN_D)
+        for n in ("wq", "wk", "wv")
+    }
+    w = _uniform(rng, (ATTN_D, ATTN_CLASSES), -1.0, 1.0) / np.sqrt(ATTN_D)
+    b = _uniform(rng, (ATTN_CLASSES,), -0.25, 0.25)
+    return {**proj, "w_head": w, "b_head": b}
+
+
+WEIGHTS = {
+    "mlp_fluid": mlp_weights,
+    "lstm_har": lstm_weights,
+    "cnn_ecg": cnn_weights,
+    "attn_tiny": attn_weights,
+}
+
+
+# ---------------------------------------------------------------------------
+# builders: (config) -> (fn: f32 -> f32, input_shape, output_shape)
+# ---------------------------------------------------------------------------
+
+def build_mlp(fmt: QFormat, act=("sigmoid", "exact")):
+    ws = mlp_weights()
+    qw = [(np_quantize(l["w"], fmt), np_quantize(l["b"], fmt)) for l in ws]
+    kernels = [
+        make_fc_kernel(n_in, n_out, fmt, act=act if i < len(MLP_LAYERS) - 1 else None)
+        for i, (n_in, n_out) in enumerate(MLP_LAYERS)
+    ]
+
+    def fn(x):
+        q = quantize(x, fmt)
+        for k, (w, b) in zip(kernels, qw):
+            q = k(q, jnp.asarray(w), jnp.asarray(b))
+        return dequantize(q, fmt)
+
+    return fn, (MLP_LAYERS[0][0],), (MLP_LAYERS[-1][1],)
+
+
+def build_lstm(fmt: QFormat, sigmoid_impl="exact", tanh_impl="exact",
+               use_pallas=True, unroll=False):
+    w = lstm_weights()
+    wxq, whq, bq = (np_quantize(w[k], fmt) for k in ("wx", "wh", "b"))
+    whd, bhd = np_quantize(w["w_head"], fmt), np_quantize(w["b_head"], fmt)
+    head = make_fc_kernel(LSTM_H, LSTM_CLASSES, fmt, act=None)
+
+    def fn(xs):
+        xsq = quantize(xs, fmt)
+        h = lstm_scan(xsq, jnp.asarray(wxq), jnp.asarray(whq), jnp.asarray(bq),
+                      fmt, sigmoid_impl, tanh_impl, use_pallas=use_pallas,
+                      unroll=unroll)
+        logits = head(h, jnp.asarray(whd), jnp.asarray(bhd))
+        return dequantize(logits, fmt)
+
+    return fn, (LSTM_T, LSTM_IN), (LSTM_CLASSES,)
+
+
+def build_cnn(fmt: QFormat, act=("tanh", "exact")):
+    w = cnn_weights()
+    t = CNN_T
+    kernels = []
+    for (c_in, c_out, kw, stride), conv_w in zip(CNN_SPEC, w["convs"]):
+        kernels.append((
+            make_conv1d_kernel(t, c_in, kw, c_out, fmt, stride, act=act),
+            np_quantize(conv_w["k"], fmt),
+            np_quantize(conv_w["b"], fmt),
+        ))
+        t = (t - kw) // stride + 1
+    head = make_fc_kernel(CNN_SPEC[-1][1], CNN_CLASSES, fmt, act=None)
+    whd, bhd = np_quantize(w["w_head"], fmt), np_quantize(w["b_head"], fmt)
+
+    def fn(x):
+        q = quantize(x, fmt)
+        for k, kq, bq in kernels:
+            q = k(q, jnp.asarray(kq), jnp.asarray(bq))
+        pooled = global_avg_pool_int(q, fmt)
+        logits = head(pooled, jnp.asarray(whd), jnp.asarray(bhd))
+        return dequantize(logits, fmt)
+
+    return fn, (CNN_T, 1), (CNN_CLASSES,)
+
+
+def build_attn(fmt: QFormat):
+    w = attn_weights()
+    wq_, wk_, wv_ = (np_quantize(w[k], fmt) for k in ("wq", "wk", "wv"))
+    whd, bhd = np_quantize(w["w_head"], fmt), np_quantize(w["b_head"], fmt)
+    attn = make_attention_kernel(ATTN_T, ATTN_D, fmt)
+    head = make_fc_kernel(ATTN_D, ATTN_CLASSES, fmt, act=None)
+
+    from .quant import saturate, sra_round
+
+    def proj(xq, pw):
+        acc = jnp.dot(xq, jnp.asarray(pw), preferred_element_type=jnp.int32)
+        return saturate(sra_round(acc, fmt.frac_bits), fmt)
+
+    def fn(x):
+        xq = quantize(x, fmt)
+        q_, k_, v_ = proj(xq, wq_), proj(xq, wk_), proj(xq, wv_)
+        o = attn(q_, k_, v_)
+        pooled = global_avg_pool_int(o, fmt)
+        logits = head(pooled, jnp.asarray(whd), jnp.asarray(bhd))
+        return dequantize(logits, fmt)
+
+    return fn, (ATTN_T, ATTN_D), (ATTN_CLASSES,)
+
+
+BUILDERS = {
+    "mlp_fluid": build_mlp,
+    "lstm_har": build_lstm,
+    "cnn_ecg": build_cnn,
+    "attn_tiny": build_attn,
+}
+
+
+def build_from_config(cfg) -> tuple:
+    """Build the jax function for a configs.AccelConfig."""
+    fmt = FORMATS[cfg.fmt]
+    if cfg.model == "mlp_fluid":
+        return build_mlp(fmt, act=(cfg.act, cfg.act_impl))
+    if cfg.model == "lstm_har":
+        return build_lstm(fmt, sigmoid_impl=cfg.act_impl, tanh_impl=cfg.tanh_impl,
+                          unroll=cfg.unroll)
+    if cfg.model == "cnn_ecg":
+        return build_cnn(fmt, act=(cfg.act, cfg.act_impl))
+    if cfg.model == "attn_tiny":
+        return build_attn(fmt)
+    raise KeyError(cfg.model)
+
+
+def sample_input(model: str, fmt: QFormat, seed: int = 0) -> np.ndarray:
+    """Deterministic sample input, generated *on the Q grid* so that f32
+    quantisation is exact on both the Python and Rust sides."""
+    shapes = {
+        "mlp_fluid": (MLP_LAYERS[0][0],),
+        "lstm_har": (LSTM_T, LSTM_IN),
+        "cnn_ecg": (CNN_T, 1),
+        "attn_tiny": (ATTN_T, ATTN_D),
+    }
+    rng = np.random.default_rng(seed ^ int.from_bytes(
+        hashlib.sha256(model.encode()).digest()[4:8], "little"))
+    lo, hi = int(-2.0 * fmt.scale), int(2.0 * fmt.scale)
+    q = rng.integers(lo, hi, size=shapes[model], endpoint=True)
+    return (q.astype(np.float64) * fmt.resolution).astype(np.float32)

@@ -1,0 +1,130 @@
+"""Bit-true fixed-point (Q-format) arithmetic helpers.
+
+These mirror the RTL arithmetic of the paper's accelerator templates and are
+mirrored *exactly* by the Rust behavioural simulator
+(``rust/src/rtl/fixed_point.rs``).  Every rounding decision below is part of
+the cross-layer contract:
+
+* quantisation uses ``floor(x * 2^f + 0.5)`` (round-half-up), then saturates
+  to the signed ``total_bits`` range;
+* post-multiply rescaling uses ``sra_round``: add ``1 << (n-1)`` then
+  arithmetic-shift-right by ``n`` (the standard DSP48 rounding idiom);
+* all intermediate accumulation happens at ``2f`` scale in int32 — safe for
+  the layer sizes used here (see DESIGN.md §3).
+
+Values travel through the compiled HLO as **int32 tensors** so the PJRT CPU
+runtime, the Pallas interpret path and the Rust simulator agree bit-for-bit
+on the pure-integer activation variants (PLA / LUT / Hard*).  The ``exact``
+variants route through f32 ``jax.nn`` transcendentals and are only required
+to agree within 1 LSB.
+"""
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class QFormat:
+    """Signed fixed-point format with ``total_bits`` bits, ``frac_bits`` of
+    which sit right of the binary point (Q(total-frac-1).frac plus sign)."""
+
+    total_bits: int = 16
+    frac_bits: int = 8
+
+    def __post_init__(self) -> None:
+        if not (2 <= self.total_bits <= 26):
+            # > 26 would overflow int32 accumulators at 2f scale.
+            raise ValueError(f"total_bits out of range: {self.total_bits}")
+        if not (0 < self.frac_bits < self.total_bits):
+            raise ValueError(f"frac_bits out of range: {self.frac_bits}")
+
+    @property
+    def scale(self) -> int:
+        return 1 << self.frac_bits
+
+    @property
+    def qmin(self) -> int:
+        return -(1 << (self.total_bits - 1))
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.total_bits - 1)) - 1
+
+    @property
+    def resolution(self) -> float:
+        return 1.0 / self.scale
+
+    @property
+    def max_value(self) -> float:
+        return self.qmax / self.scale
+
+    @property
+    def min_value(self) -> float:
+        return self.qmin / self.scale
+
+    def name(self) -> str:
+        return f"q{self.total_bits}_{self.frac_bits}"
+
+
+#: Default format used by most accelerator variants (matches the 16-bit
+#: datapath of the paper's LSTM accelerator [2]).
+Q16_8 = QFormat(16, 8)
+#: Reduced-precision variants explored by the Generator.
+Q12_6 = QFormat(12, 6)
+Q8_4 = QFormat(8, 4)
+
+FORMATS = {f.name(): f for f in (Q16_8, Q12_6, Q8_4)}
+
+
+def quantize(x, fmt: QFormat):
+    """f32 -> int32 Q-value: floor(x * 2^f + 0.5), saturated."""
+    q = jnp.floor(x * float(fmt.scale) + 0.5).astype(jnp.int32)
+    return jnp.clip(q, fmt.qmin, fmt.qmax)
+
+
+def dequantize(q, fmt: QFormat):
+    """int32 Q-value -> f32."""
+    return q.astype(jnp.float32) * np.float32(fmt.resolution)
+
+
+def sra_round(p, n: int):
+    """Arithmetic shift right by ``n`` with round-half-up on the dropped
+    bits: ``(p + (1 << (n-1))) >> n``.  ``n == 0`` is the identity."""
+    if n == 0:
+        return p
+    return jnp.right_shift(p + (1 << (n - 1)), n)
+
+
+def saturate(q, fmt: QFormat):
+    return jnp.clip(q, fmt.qmin, fmt.qmax)
+
+
+def requant_product(p, fmt: QFormat):
+    """Rescale a product of two Q(f) values (at 2f scale) back to Q(f)."""
+    return saturate(sra_round(p, fmt.frac_bits), fmt)
+
+
+# ---------------------------------------------------------------------------
+# NumPy mirrors (used by tests and by golden-vector generation so that the
+# expectation does not silently depend on jax behaviour).
+# ---------------------------------------------------------------------------
+
+def np_quantize(x: np.ndarray, fmt: QFormat) -> np.ndarray:
+    q = np.floor(np.asarray(x, dtype=np.float64) * fmt.scale + 0.5).astype(np.int64)
+    return np.clip(q, fmt.qmin, fmt.qmax).astype(np.int32)
+
+
+def np_dequantize(q: np.ndarray, fmt: QFormat) -> np.ndarray:
+    return np.asarray(q, dtype=np.float64) * fmt.resolution
+
+
+def np_sra_round(p: np.ndarray, n: int) -> np.ndarray:
+    if n == 0:
+        return p
+    return np.right_shift(np.asarray(p, dtype=np.int64) + (1 << (n - 1)), n)
+
+
+def np_requant_product(p: np.ndarray, fmt: QFormat) -> np.ndarray:
+    return np.clip(np_sra_round(p, fmt.frac_bits), fmt.qmin, fmt.qmax)

@@ -1,0 +1,134 @@
+"""L1 performance model: VMEM footprint + MXU utilisation estimates.
+
+``interpret=True`` Pallas gives CPU-numpy timings only, so TPU efficiency
+is *estimated from kernel structure* (DESIGN.md §7): for each kernel we
+compute the VMEM bytes its BlockSpec would pin (all operands + outputs for
+the single-block schedules used here) and the MXU utilisation of its
+matmul work — the fraction of each 128x128-systolic-array pass the
+operand tiles actually fill.
+
+These numbers drive two checks, enforced by tests and recorded in
+EXPERIMENTS.md §Perf:
+
+* every kernel fits VMEM (16 MiB/core, headroom factor 2) — the schedule
+  needs no HBM double-buffering at these sizes;
+* the expected MXU utilisation is small (tiny embedded layers), so the
+  *correct* TPU schedule is the one used: fuse whole layers per block and
+  batch across requests rather than tile within a layer.
+"""
+
+from dataclasses import dataclass
+
+from . import model
+from .quant import QFormat
+
+#: TPU core VMEM budget (bytes) and MXU tile edge.
+VMEM_BYTES = 16 * 1024 * 1024
+MXU_EDGE = 128
+
+#: int32 operand width used by the fixed-point kernels.
+ELEM_BYTES = 4
+
+
+@dataclass(frozen=True)
+class KernelProfile:
+    name: str
+    vmem_bytes: int
+    macs: int
+    mxu_passes: int
+
+    @property
+    def vmem_fraction(self) -> float:
+        return self.vmem_bytes / VMEM_BYTES
+
+    @property
+    def mxu_utilization(self) -> float:
+        """MACs actually performed / MACs a full systolic pass could do."""
+        if self.mxu_passes == 0:
+            return 0.0
+        return self.macs / (self.mxu_passes * MXU_EDGE * MXU_EDGE * MXU_EDGE)
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def fc_profile(n_in: int, n_out: int, name: str = "fc") -> KernelProfile:
+    """x[n_in] @ w[n_in, n_out] + b[n_out] -> y[n_out], one block."""
+    vmem = ELEM_BYTES * (n_in + n_in * n_out + 2 * n_out)
+    # systolic passes: ceil over each matmul dim (M=1 for matvec)
+    passes = _ceil_div(1, MXU_EDGE) * _ceil_div(n_in, MXU_EDGE) * _ceil_div(n_out, MXU_EDGE)
+    return KernelProfile(name, vmem, n_in * n_out, passes)
+
+
+def lstm_cell_profile(n_in: int, n_h: int) -> KernelProfile:
+    """Fused-gate LSTM cell step, one block."""
+    n4 = 4 * n_h
+    vmem = ELEM_BYTES * (
+        n_in + 2 * n_h          # x, h, c
+        + n_in * n4 + n_h * n4  # wx, wh
+        + n4                    # bias
+        + 2 * n_h               # outputs
+    )
+    macs = (n_in + n_h) * n4 + 3 * n_h
+    passes = (
+        _ceil_div(1, MXU_EDGE) * _ceil_div(n_in, MXU_EDGE) * _ceil_div(n4, MXU_EDGE)
+        + _ceil_div(1, MXU_EDGE) * _ceil_div(n_h, MXU_EDGE) * _ceil_div(n4, MXU_EDGE)
+    )
+    return KernelProfile("lstm_cell", vmem, macs, passes)
+
+
+def conv1d_profile(t_in: int, c_in: int, kw: int, c_out: int, stride: int) -> KernelProfile:
+    t_out = (t_in - kw) // stride + 1
+    vmem = ELEM_BYTES * (
+        t_in * c_in             # input block
+        + t_out * kw * c_in     # materialised im2col windows
+        + kw * c_in * c_out     # kernel
+        + c_out + t_out * c_out # bias + output
+    )
+    macs = t_out * kw * c_in * c_out
+    passes = (
+        _ceil_div(t_out, MXU_EDGE)
+        * _ceil_div(kw * c_in, MXU_EDGE)
+        * _ceil_div(c_out, MXU_EDGE)
+    )
+    return KernelProfile("conv1d", vmem, macs, passes)
+
+
+def attention_profile(t: int, d: int) -> KernelProfile:
+    vmem = ELEM_BYTES * (3 * t * d + t * t + t * d)
+    macs = 2 * t * t * d
+    passes = 2 * _ceil_div(t, MXU_EDGE) * _ceil_div(d, MXU_EDGE) * _ceil_div(t, MXU_EDGE)
+    return KernelProfile("attention", vmem, macs, passes)
+
+
+def model_profiles() -> dict:
+    """Per-kernel profiles for every kernel the artifact set instantiates."""
+    out = {}
+    for i, (n_in, n_out) in enumerate(model.MLP_LAYERS):
+        out[f"mlp_fluid/fc{i}"] = fc_profile(n_in, n_out, name=f"fc{i}")
+    out["lstm_har/cell"] = lstm_cell_profile(model.LSTM_IN, model.LSTM_H)
+    out["lstm_har/head"] = fc_profile(model.LSTM_H, model.LSTM_CLASSES, "head")
+    t = model.CNN_T
+    for i, (c_in, c_out, kw, stride) in enumerate(model.CNN_SPEC):
+        out[f"cnn_ecg/conv{i}"] = conv1d_profile(t, c_in, kw, c_out, stride)
+        t = (t - kw) // stride + 1
+    out["cnn_ecg/head"] = fc_profile(model.CNN_SPEC[-1][1], model.CNN_CLASSES, "head")
+    out["attn_tiny/attn"] = attention_profile(model.ATTN_T, model.ATTN_D)
+    return out
+
+
+def report(fmt: QFormat = None) -> str:
+    lines = [
+        f"{'kernel':<22} {'VMEM kB':>9} {'VMEM %':>8} {'MACs':>9} {'MXU util %':>11}"
+    ]
+    for name, p in model_profiles().items():
+        lines.append(
+            f"{name:<22} {p.vmem_bytes / 1024:>9.1f} {p.vmem_fraction * 100:>8.3f} "
+            f"{p.macs:>9} {p.mxu_utilization * 100:>11.4f}"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(report())

@@ -1,0 +1,192 @@
+"""RQ1 activation variants: precision bounds vs the float oracle, RTL-style
+structural properties (monotonicity, symmetry, saturation), and the Pallas
+wrapper's exact agreement with the inline jnp path."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.activations import (
+    IMPLS, LUT_SIZE, get_activation, hardsigmoid, hardtanh,
+    lut_table, make_activation_kernel, sigmoid_exact, sigmoid_lut,
+    sigmoid_pla, tanh_exact, tanh_lut, tanh_pla,
+)
+from compile.quant import Q8_4, Q12_6, Q16_8, np_quantize, np_dequantize
+
+FMT = Q16_8
+LSB = FMT.resolution
+
+#: Published approximation error of the PLAN sigmoid is ~0.0189; add one
+#: LSB of quantisation headroom.  tanh doubles the sigmoid error.
+PLA_SIGMOID_TOL = 0.0189 + 2 * LSB
+PLA_TANH_TOL = 2 * PLA_SIGMOID_TOL + 2 * LSB
+#: LUT over [-8,8) with 256 entries: step 1/16, max |f'| = 1/4 (sigmoid) /
+#: 1 (tanh) -> worst mid-cell error step/2 * slope + 1 LSB.
+LUT_SIGMOID_TOL = (1 / 16) / 2 * 0.25 + 2 * LSB
+LUT_TANH_TOL = (1 / 16) / 2 * 1.0 + 2 * LSB
+
+
+def grid(lo=-8.0, hi=8.0, n=4096):
+    """Inputs snapped to the Q grid so quantisation is exact."""
+    x = np.linspace(lo, hi, n, endpoint=False)
+    return np.floor(x * FMT.scale + 0.5) / FMT.scale
+
+
+def run(fn, x, fmt=FMT):
+    q = jnp.asarray(np_quantize(x, fmt))
+    return np.asarray(fn(q, fmt)) * fmt.resolution
+
+
+CASES = [
+    (sigmoid_exact, ref.np_sigmoid, 1.5 * LSB, "sigmoid_exact"),
+    (sigmoid_pla, ref.np_sigmoid, PLA_SIGMOID_TOL, "sigmoid_pla"),
+    (sigmoid_lut, ref.np_sigmoid, LUT_SIGMOID_TOL, "sigmoid_lut"),
+    (tanh_exact, ref.np_tanh, 1.5 * LSB, "tanh_exact"),
+    (tanh_pla, ref.np_tanh, PLA_TANH_TOL, "tanh_pla"),
+    (tanh_lut, ref.np_tanh, LUT_TANH_TOL, "tanh_lut"),
+]
+
+
+@pytest.mark.parametrize("fn,oracle,tol,name", CASES, ids=lambda c: c if isinstance(c, str) else "")
+def test_error_bound_vs_oracle(fn, oracle, tol, name):
+    x = grid()
+    y = run(fn, x)
+    err = np.abs(y - oracle(x))
+    assert err.max() <= tol, f"{name}: max err {err.max():.5f} > {tol:.5f}"
+
+
+# The published PLAN coefficients leave a ~0.004 downward step at the
+# |x| = 2.375 segment boundary (the segments do not intersect there), so
+# "monotone" for the faithful PLA reproduction means "within 1 LSB".
+PLA_MONO_SLACK = 1  # LSBs
+
+
+def _assert_monotone(y, name, slack_lsb=0):
+    dq = np.diff(np.round(y * FMT.scale))
+    assert dq.min() >= -slack_lsb, f"{name} not monotone (min step {dq.min()})"
+
+
+@pytest.mark.parametrize("fn,name,slack", [
+    (sigmoid_exact, "exact", 0), (sigmoid_pla, "pla", PLA_MONO_SLACK),
+    (sigmoid_lut, "lut", 0),
+])
+def test_sigmoid_bounds_and_monotonic(fn, name, slack):
+    x = grid()
+    y = run(fn, x)
+    assert y.min() >= 0.0 and y.max() <= 1.0
+    _assert_monotone(y, f"sigmoid_{name}", slack)
+
+
+@pytest.mark.parametrize("fn,name,slack", [
+    (tanh_exact, "exact", 0), (tanh_pla, "pla", 2 * PLA_MONO_SLACK),
+    (tanh_lut, "lut", 0),
+])
+def test_tanh_bounds_and_monotonic(fn, name, slack):
+    x = grid()
+    y = run(fn, x)
+    assert y.min() >= -1.0 and y.max() <= 1.0
+    _assert_monotone(y, f"tanh_{name}", slack)
+
+
+def test_pla_sigmoid_symmetry():
+    """PLAN evaluates |x| then mirrors: sigma(-x) = 1 - sigma(x) exactly."""
+    x = grid(0.0, 8.0, 2048)
+    q = jnp.asarray(np_quantize(x, FMT))
+    pos = np.asarray(sigmoid_pla(q, FMT))
+    neg = np.asarray(sigmoid_pla(-q, FMT))
+    np.testing.assert_array_equal(neg, FMT.scale - pos)
+
+
+def test_pla_sigmoid_saturates():
+    q = jnp.asarray(np_quantize(np.asarray([5.0, 6.0, 8.0, -5.0, -8.0]), FMT))
+    y = np.asarray(sigmoid_pla(q, FMT))
+    assert list(y[:3]) == [FMT.scale] * 3
+    assert list(y[3:]) == [0, 0]
+
+
+def test_hardsigmoid_exact_on_grid():
+    """Hard variants have zero software/hardware mismatch (§5.1): on inputs
+    where x/4 lands on the grid the fixed-point result equals the float
+    definition exactly."""
+    x = np.arange(-1024, 1025) * (4.0 / FMT.scale)  # x/4 exact on grid
+    y = run(hardsigmoid, x)
+    np.testing.assert_array_equal(y, np.clip(x / 4 + 0.5, 0, 1))
+
+
+def test_hardtanh_exact_everywhere_on_grid():
+    x = grid(-4, 4, 2048)
+    y = run(hardtanh, x)
+    np.testing.assert_array_equal(y, np.clip(x, -1, 1))
+
+
+@pytest.mark.parametrize("fmt", [Q16_8, Q12_6, Q8_4], ids=lambda f: f.name())
+def test_hard_variants_all_formats(fmt):
+    x = np.arange(fmt.qmin, fmt.qmax + 1, max(1, (fmt.qmax - fmt.qmin) // 500))
+    xq = jnp.asarray(x, dtype=jnp.int32)
+    hs = np.asarray(hardsigmoid(xq, fmt))
+    ht = np.asarray(hardtanh(xq, fmt))
+    assert hs.min() >= 0 and hs.max() <= fmt.scale
+    assert ht.min() >= -fmt.scale and ht.max() <= fmt.scale
+
+
+def test_lut_table_contents():
+    t = np.asarray(lut_table("sigmoid", FMT))
+    assert t.shape == (LUT_SIZE,)
+    assert np.all(np.diff(t) >= 0)
+    assert t[0] == 0 and t[-1] == FMT.scale  # saturated ends at Q16.8
+
+
+def test_registry_covers_manifest_impls():
+    for act, impls in IMPLS.items():
+        for impl in impls:
+            assert callable(get_activation(act, impl))
+    with pytest.raises(KeyError):
+        get_activation("sigmoid", "nope")
+
+
+@pytest.mark.parametrize("act,impl", [
+    ("sigmoid", "exact"), ("sigmoid", "pla"), ("sigmoid", "lut"),
+    ("tanh", "exact"), ("tanh", "pla"), ("tanh", "lut"),
+    ("hardsigmoid", "hard"), ("hardtanh", "hard"),
+])
+def test_pallas_kernel_matches_inline(act, impl):
+    """The standalone Pallas kernel must agree bit-for-bit with the inline
+    jnp path (same jaxpr, different call mechanism)."""
+    n = 256
+    x = grid(-8, 8, n)
+    q = jnp.asarray(np_quantize(x, FMT))
+    inline = np.asarray(get_activation(act, impl)(q, FMT))
+    kern = make_activation_kernel(act, impl, FMT, n)
+    np.testing.assert_array_equal(np.asarray(kern(q)), inline)
+
+
+@given(
+    st.sampled_from([("sigmoid", "pla"), ("sigmoid", "lut"),
+                     ("tanh", "pla"), ("tanh", "lut"),
+                     ("hardsigmoid", "hard"), ("hardtanh", "hard")]),
+    st.sampled_from([Q16_8, Q12_6]),
+    st.lists(st.floats(-30, 30, allow_nan=False), min_size=1, max_size=128),
+)
+@settings(max_examples=40, deadline=None)
+def test_hypothesis_integer_variants_in_range(case, fmt, xs):
+    """Pure-integer variants never leave the format's representable range,
+    for any input anywhere in the int domain (overflow safety)."""
+    act, impl = case
+    if impl == "lut" and fmt.frac_bits < 4:
+        return
+    q = jnp.asarray(np_quantize(np.asarray(xs), fmt))
+    y = np.asarray(get_activation(act, impl)(q, fmt))
+    assert y.min() >= fmt.qmin and y.max() <= fmt.qmax
+
+
+@given(st.lists(st.floats(-8, 8, allow_nan=False), min_size=2, max_size=64))
+@settings(max_examples=40, deadline=None)
+def test_hypothesis_pla_monotone_pairs(xs):
+    """Pairwise monotonicity of PLAN sigmoid over arbitrary inputs (within
+    the 1-LSB PLAN boundary step, see PLA_MONO_SLACK)."""
+    x = np.sort(np.asarray(xs))
+    q = jnp.asarray(np_quantize(x, FMT))
+    y = np.asarray(sigmoid_pla(q, FMT))
+    assert np.diff(y).min(initial=0) >= -PLA_MONO_SLACK

@@ -1,0 +1,84 @@
+"""AOT lowering: HLO text shape, golden-vector reproducibility, manifest
+integrity.  Uses the artifacts/ directory when present (built by `make
+artifacts`), lowering a fresh micro-artifact otherwise."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, configs, model
+from compile.quant import FORMATS, Q16_8
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_emits_entry():
+    fn, in_shape, _ = model.build_mlp(Q16_8, act=("hardsigmoid", "hard"))
+    spec = jax.ShapeDtypeStruct(in_shape, jnp.float32)
+    text = aot.to_hlo_text(jax.jit(fn).lower(spec))
+    assert "ENTRY" in text and "HloModule" in text
+    # return_tuple=True: root is a tuple
+    assert "tuple(" in text or "(f32[" in text
+
+
+def test_act_micro_names_unique():
+    names = [configs.act_micro_name(a, i) for a, i in configs.ACT_MICRO]
+    assert len(names) == len(set(names))
+    cfg_names = [c.name for c in configs.CONFIGS]
+    assert len(cfg_names) == len(set(cfg_names))
+    assert not set(names) & set(cfg_names)
+
+
+def test_config_lookup():
+    assert configs.by_name("lstm_har.opt").pipelined
+    with pytest.raises(KeyError):
+        configs.by_name("missing")
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built")
+class TestBuiltArtifacts:
+    def manifest(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_manifest_complete(self):
+        m = self.manifest()
+        names = {e["name"] for e in m["artifacts"]}
+        want = {c.name for c in configs.CONFIGS} | {
+            configs.act_micro_name(a, i) for a, i in configs.ACT_MICRO}
+        assert names == want
+        for e in m["artifacts"]:
+            assert os.path.exists(os.path.join(ART, e["file"])), e["file"]
+            assert os.path.exists(os.path.join(ART, "golden", f'{e["name"]}.json'))
+
+    def test_golden_vectors_reproduce(self):
+        """Re-executing the jitted model on the stored golden input must
+        reproduce the stored output exactly (same jax version, same host)."""
+        cfg = configs.by_name("lstm_har.opt")
+        with open(os.path.join(ART, "golden", f"{cfg.name}.json")) as f:
+            g = json.load(f)
+        fn, in_shape, out_shape = model.build_from_config(cfg)
+        j = jax.jit(fn)
+        for case in g["cases"]:
+            x = np.asarray(case["input"], dtype=np.float32).reshape(in_shape)
+            y = np.asarray(j(x)).reshape(-1)
+            np.testing.assert_array_equal(y, np.asarray(case["output"], dtype=np.float32))
+
+    def test_weights_export_matches_generator(self):
+        with open(os.path.join(ART, "weights", "lstm_har.json")) as f:
+            stored = json.load(f)
+        w = model.lstm_weights()
+        np.testing.assert_array_equal(
+            np.asarray(stored["wx"]["data"]).reshape(stored["wx"]["shape"]), w["wx"])
+
+    def test_hlo_artifacts_are_text(self):
+        m = self.manifest()
+        for e in m["artifacts"][:4]:
+            with open(os.path.join(ART, e["file"])) as f:
+                head = f.read(200)
+            assert "HloModule" in head

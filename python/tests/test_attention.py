@@ -1,0 +1,72 @@
+"""Attention kernel."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import attention_int, make_attention_kernel
+from compile.quant import Q16_8, np_dequantize, np_quantize
+
+FMT = Q16_8
+
+
+def make_case(t, d, seed=0):
+    rng = np.random.default_rng(seed)
+    return tuple(np.floor(rng.uniform(-1, 1, (t, d)) * FMT.scale) / FMT.scale
+                 for _ in range(3))
+
+
+def qz(a):
+    return jnp.asarray(np_quantize(a, FMT))
+
+
+def deq(a):
+    return jnp.asarray(np_dequantize(np.asarray(a), FMT), dtype=jnp.float32)
+
+
+@pytest.mark.parametrize("t,d", [(4, 4), (16, 16), (8, 32)])
+def test_vs_float_oracle(t, d):
+    qm, km, vm = make_case(t, d)
+    got = np.asarray(attention_int(qz(qm), qz(km), qz(vm), FMT)) * FMT.resolution
+    want = np.asarray(ref.attention(deq(qz(qm)), deq(qz(km)), deq(qz(vm))))
+    # score requantisation perturbs the softmax slightly; values are O(1)
+    assert np.abs(got - want).max() <= 0.03
+
+
+def test_pallas_matches_inline():
+    qm, km, vm = make_case(16, 16, seed=2)
+    inline = np.asarray(attention_int(qz(qm), qz(km), qz(vm), FMT))
+    kern = make_attention_kernel(16, 16, FMT)
+    np.testing.assert_array_equal(np.asarray(kern(qz(qm), qz(km), qz(vm))), inline)
+
+
+def test_uniform_keys_average_values():
+    """Identical keys -> uniform attention -> output == mean of V rows."""
+    t, d = 8, 8
+    k = np.zeros((t, d))
+    rng = np.random.default_rng(3)
+    qm = rng.uniform(-1, 1, (t, d))
+    vm = np.floor(rng.uniform(-1, 1, (t, d)) * FMT.scale) / FMT.scale
+    got = np.asarray(attention_int(qz(qm), qz(k), qz(vm), FMT)) * FMT.resolution
+    want = vm.mean(axis=0)
+    assert np.abs(got - want[None, :]).max() <= 0.02
+
+
+def test_output_within_value_range():
+    """Attention output is a convex combination of V rows (within rounding)."""
+    qm, km, vm = make_case(8, 8, seed=4)
+    got = np.asarray(attention_int(qz(qm), qz(km), qz(vm), FMT)) * FMT.resolution
+    lo, hi = vm.min(axis=0), vm.max(axis=0)
+    eps = 0.02
+    assert np.all(got >= lo[None, :] - eps) and np.all(got <= hi[None, :] + eps)
+
+
+@given(st.integers(2, 16), st.integers(2, 16), st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_hypothesis_shapes(t, d, seed):
+    qm, km, vm = make_case(t, d, seed=seed)
+    y = np.asarray(attention_int(qz(qm), qz(km), qz(vm), FMT))
+    assert y.shape == (t, d)
+    assert y.min() >= FMT.qmin and y.max() <= FMT.qmax

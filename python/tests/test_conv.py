@@ -1,0 +1,86 @@
+"""Conv1d + pooling kernels."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.conv import conv1d_int, global_avg_pool_int, make_conv1d_kernel
+from compile.quant import Q16_8, np_dequantize, np_quantize
+
+FMT = Q16_8
+
+
+def make_case(t, c_in, kw, c_out, seed=0):
+    rng = np.random.default_rng(seed)
+    x = np.floor(rng.uniform(-1, 1, (t, c_in)) * FMT.scale) / FMT.scale
+    k = rng.uniform(-1, 1, (kw, c_in, c_out)) / np.sqrt(kw * c_in)
+    b = rng.uniform(-0.25, 0.25, c_out)
+    return x, k, b
+
+
+def q(a):
+    return jnp.asarray(np_quantize(a, FMT))
+
+
+def deq(a):
+    return jnp.asarray(np_dequantize(np.asarray(a), FMT), dtype=jnp.float32)
+
+
+@pytest.mark.parametrize("t,c_in,kw,c_out,stride", [
+    (16, 1, 3, 4, 1), (32, 2, 5, 8, 2), (128, 1, 7, 8, 2),
+])
+def test_linear_error_bound(t, c_in, kw, c_out, stride):
+    x, k, b = make_case(t, c_in, kw, c_out)
+    xq, kq, bq = q(x), q(k), q(b)
+    y = np.asarray(conv1d_int(xq, kq, bq, FMT, stride)) * FMT.resolution
+    want = np.asarray(ref.conv1d(deq(xq), deq(kq), deq(bq), stride))
+    assert y.shape == want.shape == ((t - kw) // stride + 1, c_out)
+    assert np.abs(y - want).max() <= 1.0 * FMT.resolution
+
+
+@pytest.mark.parametrize("act", [None, ("tanh", "exact"), ("tanh", "pla"),
+                                 ("tanh", "lut"), ("hardtanh", "hard")])
+def test_pallas_matches_inline(act):
+    t, c_in, kw, c_out, stride = 32, 2, 5, 4, 2
+    x, k, b = make_case(t, c_in, kw, c_out, seed=2)
+    xq, kq, bq = q(x), q(k), q(b)
+    inline = np.asarray(conv1d_int(xq, kq, bq, FMT, stride, act))
+    kern = make_conv1d_kernel(t, c_in, kw, c_out, FMT, stride, act)
+    np.testing.assert_array_equal(np.asarray(kern(xq, kq, bq)), inline)
+
+
+def test_identity_kernel_passthrough():
+    """A delta kernel must reproduce the (shifted) input exactly."""
+    t = 16
+    x = np.floor(np.random.default_rng(3).uniform(-1, 1, (t, 1)) * FMT.scale) / FMT.scale
+    k = np.zeros((3, 1, 1)); k[1, 0, 0] = 1.0
+    b = np.zeros(1)
+    y = np.asarray(conv1d_int(q(x), q(k), q(b), FMT, 1)) * FMT.resolution
+    np.testing.assert_array_equal(y[:, 0], x[1:-1, 0])
+
+
+def test_global_avg_pool_matches_float():
+    x = np.floor(np.random.default_rng(4).uniform(-1, 1, (29, 8)) * FMT.scale) / FMT.scale
+    got = np.asarray(global_avg_pool_int(q(x), FMT)) * FMT.resolution
+    want = x.mean(axis=0)
+    assert np.abs(got - want).max() <= 1.0 * FMT.resolution
+
+
+def test_global_avg_pool_constant_input():
+    xq = jnp.full((10, 3), 77, dtype=jnp.int32)
+    np.testing.assert_array_equal(np.asarray(global_avg_pool_int(xq, FMT)), [77, 77, 77])
+
+
+@given(st.integers(4, 64), st.integers(1, 3), st.integers(1, 7),
+       st.integers(1, 8), st.integers(1, 3), st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_hypothesis_shape_sweep(t, c_in, kw, c_out, stride, seed):
+    if kw > t:
+        return
+    x, k, b = make_case(t, c_in, kw, c_out, seed=seed)
+    xq, kq, bq = q(x), q(k), q(b)
+    y = np.asarray(conv1d_int(xq, kq, bq, FMT, stride))
+    assert y.shape == ((t - kw) // stride + 1, c_out)
+    assert y.min() >= FMT.qmin and y.max() <= FMT.qmax

@@ -1,0 +1,96 @@
+"""FC kernel vs the float oracle and the Pallas/inline agreement contract."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fc import fc_int, make_fc_kernel
+from compile.quant import Q8_4, Q16_8, np_dequantize, np_quantize
+
+FMT = Q16_8
+
+
+def make_case(n_in, n_out, seed=0):
+    rng = np.random.default_rng(seed)
+    x = np.floor(rng.uniform(-2, 2, n_in) * FMT.scale) / FMT.scale
+    w = rng.uniform(-1, 1, (n_in, n_out)) / np.sqrt(n_in)
+    b = rng.uniform(-0.25, 0.25, n_out)
+    return x, w, b
+
+
+def as_q(x, w, b, fmt=FMT):
+    return (jnp.asarray(np_quantize(x, fmt)),
+            jnp.asarray(np_quantize(w, fmt)),
+            jnp.asarray(np_quantize(b, fmt)))
+
+
+@pytest.mark.parametrize("n_in,n_out", [(8, 16), (16, 8), (20, 6), (64, 32)])
+def test_linear_error_bound(n_in, n_out):
+    """With weights evaluated at their dequantised values, the only error
+    sources are the bias shift (exact) and one sra_round: <= 1 LSB."""
+    x, w, b = make_case(n_in, n_out)
+    xq, wq, bq = as_q(x, w, b)
+    y = np.asarray(fc_int(xq, wq, bq, FMT)) * FMT.resolution
+    exact = ref.fc(
+        jnp.asarray(np_dequantize(np.asarray(xq), FMT), dtype=jnp.float32),
+        jnp.asarray(np_dequantize(np.asarray(wq), FMT), dtype=jnp.float32),
+        jnp.asarray(np_dequantize(np.asarray(bq), FMT), dtype=jnp.float32))
+    err = np.abs(y - np.asarray(exact))
+    assert err.max() <= 1.0 * FMT.resolution
+
+
+@pytest.mark.parametrize("act", [("sigmoid", "exact"), ("sigmoid", "pla"),
+                                 ("sigmoid", "lut"), ("hardsigmoid", "hard"),
+                                 ("tanh", "exact"), ("hardtanh", "hard")])
+def test_pallas_matches_inline(act):
+    x, w, b = make_case(16, 8, seed=3)
+    xq, wq, bq = as_q(x, w, b)
+    inline = np.asarray(fc_int(xq, wq, bq, FMT, act=act))
+    kern = make_fc_kernel(16, 8, FMT, act=act)
+    np.testing.assert_array_equal(np.asarray(kern(xq, wq, bq)), inline)
+
+
+def test_zero_input_gives_activated_bias():
+    x, w, b = make_case(8, 4, seed=5)
+    xq, wq, bq = as_q(np.zeros(8), w, b)
+    y = np.asarray(fc_int(xq, wq, bq, FMT)) * FMT.resolution
+    np.testing.assert_allclose(y, np_dequantize(np.asarray(bq), FMT), atol=FMT.resolution)
+
+
+def test_saturation_on_hot_inputs():
+    """Drive the accumulator past the representable range: output must
+    clamp at the format bounds, not wrap."""
+    n = 32
+    x = np.full(n, 60.0)
+    w = np.ones((n, 2))
+    b = np.zeros(2)
+    xq, wq, bq = as_q(x, w, b)
+    y = np.asarray(fc_int(xq, wq, bq, FMT))
+    assert list(y) == [FMT.qmax, FMT.qmax]
+    y2 = np.asarray(fc_int(-xq, wq, bq, FMT))
+    assert list(y2) == [FMT.qmin, FMT.qmin]
+
+
+@given(
+    st.integers(1, 48), st.integers(1, 48),
+    st.sampled_from([Q16_8, Q8_4]),
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_hypothesis_shapes_and_bound(n_in, n_out, fmt, seed):
+    """Hypothesis sweep over layer shapes and formats: Pallas kernel output
+    equals the inline path and respects the <=1 LSB linear bound."""
+    rng = np.random.default_rng(seed)
+    x = np.floor(rng.uniform(-2, 2, n_in) * fmt.scale) / fmt.scale
+    w = rng.uniform(-1, 1, (n_in, n_out)) / np.sqrt(n_in)
+    b = rng.uniform(-0.25, 0.25, n_out)
+    xq, wq, bq = as_q(x, w, b, fmt)
+    kern = make_fc_kernel(n_in, n_out, fmt)
+    got = np.asarray(kern(xq, wq, bq))
+    np.testing.assert_array_equal(got, np.asarray(fc_int(xq, wq, bq, fmt)))
+    exact = (np_dequantize(np.asarray(xq), fmt) @ np_dequantize(np.asarray(wq), fmt)
+             + np_dequantize(np.asarray(bq), fmt))
+    exact = np.clip(exact, fmt.min_value, fmt.max_value)
+    assert np.abs(got * fmt.resolution - exact).max() <= 1.5 * fmt.resolution

@@ -1,0 +1,137 @@
+"""LSTM cell/scan kernels: float-oracle tolerance, Pallas/inline agreement,
+state-update invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.lstm import lstm_cell_int, lstm_scan, make_lstm_cell_kernel
+from compile.quant import Q12_6, Q16_8, np_dequantize, np_quantize
+
+FMT = Q16_8
+
+
+def make_weights(n_in, n_h, seed=0):
+    rng = np.random.default_rng(seed)
+    wx = rng.uniform(-1, 1, (n_in, 4 * n_h)) / np.sqrt(n_in)
+    wh = rng.uniform(-1, 1, (n_h, 4 * n_h)) / np.sqrt(n_h)
+    b = rng.uniform(-0.25, 0.25, 4 * n_h)
+    return wx, wh, b
+
+
+def q(a, fmt=FMT):
+    return jnp.asarray(np_quantize(a, fmt))
+
+
+def deq(a, fmt=FMT):
+    return jnp.asarray(np_dequantize(np.asarray(a), fmt), dtype=jnp.float32)
+
+
+@pytest.mark.parametrize("impl,ref_sig,ref_tan,tol_lsb", [
+    (("exact", "exact"), ref.sigmoid, ref.tanh, 4),
+    (("hard", "hard"), ref.hardsigmoid, ref.hardtanh, 4),
+])
+def test_cell_vs_float_oracle(impl, ref_sig, ref_tan, tol_lsb):
+    """One cell step against the float reference evaluated at the
+    dequantised weights: a handful of LSBs of rounding error."""
+    n_in, n_h = 6, 20
+    wx, wh, b = make_weights(n_in, n_h)
+    rng = np.random.default_rng(1)
+    x = np.floor(rng.uniform(-1, 1, n_in) * FMT.scale) / FMT.scale
+    h = np.floor(rng.uniform(-0.5, 0.5, n_h) * FMT.scale) / FMT.scale
+    c = np.floor(rng.uniform(-0.5, 0.5, n_h) * FMT.scale) / FMT.scale
+
+    xq, hq, cq = q(x), q(h), q(c)
+    wxq, whq, bq = q(wx), q(wh), q(b)
+    h2, c2 = lstm_cell_int(xq, hq, cq, wxq, whq, bq, FMT, *impl)
+
+    hr, cr = ref.lstm_cell(deq(xq), deq(hq), deq(cq), deq(wxq), deq(whq),
+                           deq(bq), ref_sig, ref_tan)
+    assert np.abs(np.asarray(h2) * FMT.resolution - np.asarray(hr)).max() <= tol_lsb * FMT.resolution
+    assert np.abs(np.asarray(c2) * FMT.resolution - np.asarray(cr)).max() <= tol_lsb * FMT.resolution
+
+
+@pytest.mark.parametrize("sig_impl,tan_impl", [
+    ("exact", "exact"), ("pla", "pla"), ("lut", "lut"), ("hard", "hard"),
+    ("lut", "pla"),
+])
+def test_pallas_cell_matches_inline(sig_impl, tan_impl):
+    n_in, n_h = 6, 20
+    wx, wh, b = make_weights(n_in, n_h, seed=2)
+    rng = np.random.default_rng(3)
+    x, h, c = (rng.uniform(-1, 1, s) for s in (n_in, n_h, n_h))
+    args = (q(x), q(h), q(c), q(wx), q(wh), q(b))
+    h_i, c_i = lstm_cell_int(*args, FMT, sig_impl, tan_impl)
+    kern = make_lstm_cell_kernel(n_in, n_h, FMT, sig_impl, tan_impl)
+    h_p, c_p = kern(*args)
+    np.testing.assert_array_equal(np.asarray(h_p), np.asarray(h_i))
+    np.testing.assert_array_equal(np.asarray(c_p), np.asarray(c_i))
+
+
+def test_scan_matches_manual_loop():
+    """lax.scan over the Pallas cell == a hand-rolled python loop over the
+    inline cell (bit-for-bit, hard variants)."""
+    n_in, n_h, t = 6, 20, 10
+    wx, wh, b = make_weights(n_in, n_h, seed=4)
+    rng = np.random.default_rng(5)
+    xs = rng.uniform(-1, 1, (t, n_in))
+    xsq, wxq, whq, bq = q(xs), q(wx), q(wh), q(b)
+
+    got = np.asarray(lstm_scan(xsq, wxq, whq, bq, FMT, "hard", "hard"))
+
+    h = jnp.zeros((n_h,), dtype=jnp.int32)
+    c = jnp.zeros((n_h,), dtype=jnp.int32)
+    for i in range(t):
+        h, c = lstm_cell_int(xsq[i], h, c, wxq, whq, bq, FMT, "hard", "hard")
+    np.testing.assert_array_equal(got, np.asarray(h))
+
+
+def test_scan_pallas_equals_scan_inline():
+    n_in, n_h, t = 4, 8, 6
+    wx, wh, b = make_weights(n_in, n_h, seed=6)
+    xs = np.random.default_rng(7).uniform(-1, 1, (t, n_in))
+    xsq, wxq, whq, bq = q(xs), q(wx), q(wh), q(b)
+    a = np.asarray(lstm_scan(xsq, wxq, whq, bq, FMT, "pla", "pla", use_pallas=True))
+    b2 = np.asarray(lstm_scan(xsq, wxq, whq, bq, FMT, "pla", "pla", use_pallas=False))
+    np.testing.assert_array_equal(a, b2)
+
+
+def test_full_sequence_vs_float_oracle_hard():
+    """24-step rollout with hard activations: error grows with T but must
+    stay within a conservative envelope."""
+    n_in, n_h, t = 6, 20, 24
+    wx, wh, b = make_weights(n_in, n_h, seed=8)
+    xs = np.random.default_rng(9).uniform(-1, 1, (t, n_in))
+    xsq, wxq, whq, bq = q(xs), q(wx), q(wh), q(b)
+    got = np.asarray(lstm_scan(xsq, wxq, whq, bq, FMT, "hard", "hard")) * FMT.resolution
+    want = np.asarray(ref.lstm(deq(xsq), deq(wxq), deq(whq), deq(bq),
+                               ref.hardsigmoid, ref.hardtanh))
+    assert np.abs(got - want).max() <= 0.02  # ~5 LSB envelope over 24 steps
+
+
+def test_state_bounds_invariant():
+    """h is the product of a sigmoid gate and tanh(c): |h| <= 1 always."""
+    n_in, n_h, t = 6, 8, 16
+    wx, wh, b = make_weights(n_in, n_h, seed=10)
+    xs = np.random.default_rng(11).uniform(-4, 4, (t, n_in))  # hot inputs
+    h = np.asarray(lstm_scan(q(xs), q(wx), q(wh), q(b), FMT, "hard", "hard"))
+    assert np.abs(h).max() <= FMT.scale  # |h| <= 1.0 in Q
+
+
+@given(st.integers(1, 8), st.integers(1, 24), st.integers(1, 12),
+       st.sampled_from([Q16_8, Q12_6]), st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_hypothesis_cell_shapes(n_in, n_h, t, fmt, seed):
+    """Shape sweep: scan runs for arbitrary (n_in, n_h, T) and the result
+    stays inside the h-bound invariant."""
+    rng = np.random.default_rng(seed)
+    wx = rng.uniform(-1, 1, (n_in, 4 * n_h)) / np.sqrt(n_in)
+    wh = rng.uniform(-1, 1, (n_h, 4 * n_h)) / np.sqrt(n_h)
+    b = rng.uniform(-0.25, 0.25, 4 * n_h)
+    xs = rng.uniform(-2, 2, (t, n_in))
+    h = np.asarray(lstm_scan(q(xs, fmt), q(wx, fmt), q(wh, fmt), q(b, fmt),
+                             fmt, "hard", "hard"))
+    assert h.shape == (n_h,)
+    assert np.abs(h).max() <= fmt.scale

@@ -1,0 +1,81 @@
+"""L2 model builders: shapes, determinism, variant consistency."""
+
+import jax
+import numpy as np
+import pytest
+
+from compile import configs, model
+from compile.quant import FORMATS, Q16_8
+
+
+@pytest.mark.parametrize("cfg", configs.CONFIGS, ids=lambda c: c.name)
+def test_config_builds_and_runs(cfg):
+    fn, in_shape, out_shape = model.build_from_config(cfg)
+    fmt = FORMATS[cfg.fmt]
+    x = model.sample_input(cfg.model, fmt, seed=0)
+    assert x.shape == in_shape
+    y = np.asarray(jax.jit(fn)(x))
+    assert y.shape == out_shape
+    assert np.all(np.isfinite(y))
+    # outputs live on the Q grid
+    q = y * fmt.scale
+    np.testing.assert_allclose(q, np.round(q), atol=1e-4)
+
+
+def test_models_deterministic():
+    fn, _, _ = model.build_mlp(Q16_8)
+    x = model.sample_input("mlp_fluid", Q16_8, seed=1)
+    j = jax.jit(fn)
+    np.testing.assert_array_equal(np.asarray(j(x)), np.asarray(j(x)))
+
+
+def test_weights_deterministic_across_calls():
+    a, b = model.mlp_weights(), model.mlp_weights()
+    for la, lb in zip(a, b):
+        np.testing.assert_array_equal(la["w"], lb["w"])
+    wa, wb = model.lstm_weights(), model.lstm_weights()
+    np.testing.assert_array_equal(wa["wx"], wb["wx"])
+
+
+def test_activation_variants_agree_roughly():
+    """Different activation implementations of the same network must stay
+    close: PLA/LUT within the approximation error envelope of exact."""
+    x = model.sample_input("mlp_fluid", Q16_8, seed=2)
+    outs = {}
+    for impl in ("exact", "pla", "lut"):
+        fn, _, _ = model.build_mlp(Q16_8, act=("sigmoid", impl))
+        outs[impl] = np.asarray(jax.jit(fn)(x))
+    assert np.abs(outs["pla"] - outs["exact"]).max() <= 0.15
+    assert np.abs(outs["lut"] - outs["exact"]).max() <= 0.15
+
+
+def test_lstm_variants_agree_roughly():
+    x = model.sample_input("lstm_har", Q16_8, seed=3)
+    fn_e, _, _ = model.build_lstm(Q16_8, "exact", "exact")
+    fn_p, _, _ = model.build_lstm(Q16_8, "pla", "pla")
+    ye = np.asarray(jax.jit(fn_e)(x))
+    yp = np.asarray(jax.jit(fn_p)(x))
+    # 24 recurrent steps compound the PLA error; envelope is generous but
+    # catches gross mismatches (sign flips, saturation bugs)
+    assert np.abs(ye - yp).max() <= 0.6
+
+
+def test_lstm_pallas_equals_inline_model():
+    x = model.sample_input("lstm_har", Q16_8, seed=4)
+    fn_a, _, _ = model.build_lstm(Q16_8, "hard", "hard", use_pallas=True)
+    fn_b, _, _ = model.build_lstm(Q16_8, "hard", "hard", use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(jax.jit(fn_a)(x)),
+                                  np.asarray(jax.jit(fn_b)(x)))
+
+
+def test_sample_input_on_grid():
+    for m in model.WEIGHTS:
+        x = model.sample_input(m, Q16_8, seed=0)
+        q = x.astype(np.float64) * Q16_8.scale
+        np.testing.assert_array_equal(q, np.round(q))
+
+
+def test_sample_input_seeds_differ():
+    a = model.sample_input("mlp_fluid", Q16_8, seed=0)
+    b = model.sample_input("mlp_fluid", Q16_8, seed=1)
+    assert not np.array_equal(a, b)

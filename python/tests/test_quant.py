@@ -1,0 +1,121 @@
+"""Fixed-point core: quantise/dequantise, rounding, saturation, and the
+jnp-vs-numpy mirror contract that golden-vector generation relies on."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.quant import (
+    FORMATS, Q8_4, Q12_6, Q16_8, QFormat,
+    dequantize, np_dequantize, np_quantize, np_sra_round,
+    quantize, requant_product, saturate, sra_round,
+)
+
+ALL_FMTS = [Q16_8, Q12_6, Q8_4]
+
+
+@pytest.mark.parametrize("fmt", ALL_FMTS, ids=lambda f: f.name())
+class TestRoundtrip:
+    def test_grid_points_roundtrip_exactly(self, fmt):
+        qs = np.arange(fmt.qmin, fmt.qmax + 1, max(1, (fmt.qmax - fmt.qmin) // 999))
+        xs = qs.astype(np.float64) * fmt.resolution
+        back = np.asarray(quantize(jnp.asarray(xs, dtype=jnp.float32), fmt))
+        np.testing.assert_array_equal(back, qs.astype(np.int32))
+
+    def test_dequantize_inverse(self, fmt):
+        q = jnp.asarray([fmt.qmin, -1, 0, 1, fmt.qmax], dtype=jnp.int32)
+        x = dequantize(q, fmt)
+        np.testing.assert_array_equal(np.asarray(quantize(x, fmt)), np.asarray(q))
+
+    def test_saturates_out_of_range(self, fmt):
+        big = jnp.asarray([1e6, -1e6], dtype=jnp.float32)
+        q = np.asarray(quantize(big, fmt))
+        assert q[0] == fmt.qmax and q[1] == fmt.qmin
+
+    def test_quantization_error_bound(self, fmt):
+        rng = np.random.default_rng(7)
+        x = rng.uniform(fmt.min_value, fmt.max_value, size=4096)
+        q = np.asarray(quantize(jnp.asarray(x, dtype=jnp.float32), fmt))
+        err = np.abs(q * fmt.resolution - x)
+        # f32 representation noise adds a hair on top of the 0.5 LSB bound
+        assert err.max() <= 0.5 * fmt.resolution * (1 + 1e-3)
+
+
+class TestSraRound:
+    def test_matches_numpy_mirror(self):
+        rng = np.random.default_rng(3)
+        p = rng.integers(-(1 << 30), 1 << 30, size=2048)
+        for n in (0, 1, 4, 8, 12):
+            a = np.asarray(sra_round(jnp.asarray(p, dtype=jnp.int32), n))
+            b = np_sra_round(p, n)
+            np.testing.assert_array_equal(a, b.astype(np.int32))
+
+    def test_round_half_up(self):
+        assert int(sra_round(jnp.int32(3), 2)) == 1   # 0.75 -> 1
+        assert int(sra_round(jnp.int32(-3), 2)) == -1  # -0.75 -> -1
+        assert int(sra_round(jnp.int32(2), 2)) == 1   # exactly half rounds up
+        assert int(sra_round(jnp.int32(-2), 2)) == 0  # -0.5 -> 0 (half-up)
+
+    def test_identity_at_zero_shift(self):
+        p = jnp.asarray([-5, 0, 7], dtype=jnp.int32)
+        np.testing.assert_array_equal(np.asarray(sra_round(p, 0)), np.asarray(p))
+
+
+class TestProductRequant:
+    @pytest.mark.parametrize("fmt", ALL_FMTS, ids=lambda f: f.name())
+    def test_one_times_one(self, fmt):
+        one = fmt.scale
+        p = jnp.int32(one) * jnp.int32(one)
+        assert int(requant_product(p, fmt)) == one
+
+    def test_product_error_bound_q16(self):
+        fmt = Q16_8
+        rng = np.random.default_rng(11)
+        a = rng.uniform(-2, 2, 512)
+        b = rng.uniform(-2, 2, 512)
+        qa, qb = np_quantize(a, fmt), np_quantize(b, fmt)
+        p = qa.astype(np.int64) * qb.astype(np.int64)
+        y = np.asarray(requant_product(jnp.asarray(p, dtype=jnp.int32), fmt))
+        exact = np_dequantize(qa, fmt) * np_dequantize(qb, fmt)
+        err = np.abs(y * fmt.resolution - exact)
+        assert err.max() <= 0.5 * fmt.resolution + 1e-12
+
+
+class TestFormatValidation:
+    def test_rejects_bad_total_bits(self):
+        with pytest.raises(ValueError):
+            QFormat(1, 0)
+        with pytest.raises(ValueError):
+            QFormat(32, 16)  # would overflow int32 at 2f scale
+
+    def test_rejects_bad_frac_bits(self):
+        with pytest.raises(ValueError):
+            QFormat(16, 16)
+        with pytest.raises(ValueError):
+            QFormat(16, 0)
+
+    def test_registry_contains_defaults(self):
+        assert set(FORMATS) == {"q16_8", "q12_6", "q8_4"}
+
+
+@given(st.lists(st.floats(-100.0, 100.0, allow_nan=False), min_size=1, max_size=64),
+       st.sampled_from(ALL_FMTS))
+@settings(max_examples=50, deadline=None)
+def test_hypothesis_jnp_numpy_mirror_agree(xs, fmt):
+    """The jax and numpy quantisers must agree bit-for-bit: golden vectors
+    are generated through numpy, executed through jax/HLO."""
+    x64 = np.asarray(xs, dtype=np.float64)
+    # route through f32 like the HLO graph boundary does
+    x32 = x64.astype(np.float32)
+    a = np.asarray(quantize(jnp.asarray(x32), fmt))
+    b = np_quantize(x32.astype(np.float64), fmt)
+    np.testing.assert_array_equal(a, b)
+
+
+@given(st.integers(-(1 << 30), 1 << 30), st.integers(0, 16))
+@settings(max_examples=200, deadline=None)
+def test_hypothesis_sra_round_error(p, n):
+    """sra_round(p, n) is within 0.5 of p / 2^n (round-half-up)."""
+    y = int(np_sra_round(np.asarray([p]), n)[0])
+    assert abs(y - p / (1 << n)) <= 0.5

@@ -1,0 +1,61 @@
+"""L1 performance model: VMEM/MXU structural checks (EXPERIMENTS.md §Perf)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import vmem
+
+
+def test_every_kernel_fits_vmem_with_headroom():
+    for name, p in vmem.model_profiles().items():
+        assert p.vmem_bytes * 2 <= vmem.VMEM_BYTES, f"{name}: {p.vmem_bytes}"
+
+
+def test_mxu_utilization_bounds():
+    for name, p in vmem.model_profiles().items():
+        u = p.mxu_utilization
+        assert 0.0 < u <= 1.0, f"{name}: {u}"
+        # embedded-scale layers are tiny against a 128^3 systolic pass
+        assert u < 0.2, f"{name}: unexpectedly high MXU utilisation {u}"
+
+
+def test_conv_profile_matches_hand_count():
+    # t=128, c_in=1, kw=7, c_out=8, stride=2 -> t_out=61
+    p = vmem.conv1d_profile(128, 1, 7, 8, 2)
+    assert p.macs == 61 * 7 * 8
+    assert p.mxu_passes == 1
+    assert p.vmem_bytes == 4 * (128 + 61 * 7 + 7 * 8 + 8 + 61 * 8)
+
+
+def test_lstm_profile_matches_hand_count():
+    p = vmem.lstm_cell_profile(6, 20)
+    assert p.macs == 26 * 80 + 60
+    assert p.mxu_passes == 2
+
+
+def test_report_renders():
+    r = vmem.report()
+    assert "lstm_har/cell" in r and "VMEM" in r
+
+
+@given(st.integers(1, 512), st.integers(1, 512))
+@settings(max_examples=50, deadline=None)
+def test_hypothesis_fc_profile_scaling(n_in, n_out):
+    p = vmem.fc_profile(n_in, n_out)
+    assert p.vmem_bytes == 4 * (n_in + n_in * n_out + 2 * n_out)
+    assert p.macs == n_in * n_out
+    # passes cover the work: utilisation never exceeds 1
+    assert p.mxu_utilization <= 1.0
+
+
+@given(st.integers(8, 256), st.integers(1, 8), st.integers(1, 7),
+       st.integers(1, 16), st.integers(1, 4))
+@settings(max_examples=50, deadline=None)
+def test_hypothesis_conv_profile_consistent(t_in, c_in, kw, c_out, stride):
+    if kw > t_in:
+        return
+    p = vmem.conv1d_profile(t_in, c_in, kw, c_out, stride)
+    t_out = (t_in - kw) // stride + 1
+    assert p.macs == t_out * kw * c_in * c_out
+    assert p.vmem_bytes > 0
+    assert p.mxu_utilization <= 1.0

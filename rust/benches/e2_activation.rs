@@ -1,0 +1,114 @@
+//! E2 — Activation-function implementation variants ([2,5], §3.1).
+//!
+//! Paper: Sigmoid/Tanh/HardSigmoid/HardTanh each come in multiple RTL
+//! implementations trading precision, resources and throughput, letting
+//! the designer pick per application.
+//!
+//! This harness regenerates the variant table (resources / latency /
+//! max error) from the analytical models, measures the *empirical* max
+//! error of every variant against the f64 oracle, and — when artifacts are
+//! built — cross-checks the compiled HLO micro-kernels against the
+//! bit-true Rust evaluation.
+
+use elastic_gen::rtl::activation::{ActImpl, ActKind, ActVariant};
+use elastic_gen::rtl::fixed_point::Q16_8;
+use elastic_gen::runtime::Engine;
+use elastic_gen::util::table::{num, Table};
+
+fn oracle(kind: ActKind, x: f64) -> f64 {
+    match kind {
+        ActKind::Sigmoid => 1.0 / (1.0 + (-x).exp()),
+        ActKind::Tanh => x.tanh(),
+        ActKind::HardSigmoid => (x / 4.0 + 0.5).clamp(0.0, 1.0),
+        ActKind::HardTanh => x.clamp(-1.0, 1.0),
+    }
+}
+
+fn main() {
+    elastic_gen::bench::banner(
+        "E2",
+        "activation variant trade-offs (precision / resources / throughput)",
+        "multiple implementation options per function [2,5]",
+    );
+    let fmt = Q16_8;
+    let variants = [
+        ("sigmoid/exact", ActVariant::new(ActKind::Sigmoid, ActImpl::Exact)),
+        ("sigmoid/pla", ActVariant::new(ActKind::Sigmoid, ActImpl::Pla)),
+        ("sigmoid/lut", ActVariant::new(ActKind::Sigmoid, ActImpl::Lut)),
+        ("tanh/exact", ActVariant::new(ActKind::Tanh, ActImpl::Exact)),
+        ("tanh/pla", ActVariant::new(ActKind::Tanh, ActImpl::Pla)),
+        ("tanh/lut", ActVariant::new(ActKind::Tanh, ActImpl::Lut)),
+        ("hardsigmoid", ActVariant::new(ActKind::HardSigmoid, ActImpl::Hard)),
+        ("hardtanh", ActVariant::new(ActKind::HardTanh, ActImpl::Hard)),
+    ];
+
+    let mut t = Table::new(&[
+        "variant", "LUTs", "FFs", "BRAM", "DSP", "lat", "II", "err model (LSB)",
+        "err measured (LSB)",
+    ]);
+    for (name, v) in &variants {
+        // empirical max error over the whole representable input range
+        let mut max_err = 0.0f64;
+        for q in fmt.qmin()..=fmt.qmax() {
+            let y = fmt.dequantize(v.eval(q, fmt));
+            let want = oracle(v.kind, fmt.dequantize(q));
+            max_err = max_err.max((y - want).abs());
+        }
+        let r = v.resources();
+        t.row(&[
+            name.to_string(),
+            r.luts.to_string(),
+            r.ffs.to_string(),
+            r.bram18.to_string(),
+            r.dsps.to_string(),
+            v.latency().to_string(),
+            v.ii().to_string(),
+            num(v.max_error_lsb(fmt), 1),
+            num(max_err / fmt.resolution(), 1),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("trade-off shape: exact = precise/expensive/slow; hard = 1-cycle/20-LUT/exact-to-spec;");
+    println!("PLA/LUT sit between — matching the paper's \"multiple implementation options\".\n");
+
+    // cross-check the compiled HLO micro-kernels (bit-true contract)
+    let dir = elastic_gen::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("(artifacts not built; skipping PJRT cross-check)");
+        return;
+    }
+    let names: Vec<String> = variants
+        .iter()
+        .map(|(_, v)| {
+            let (k, i) = match (v.kind, v.imp) {
+                (ActKind::Sigmoid, ActImpl::Exact) => ("sigmoid", "exact"),
+                (ActKind::Sigmoid, ActImpl::Pla) => ("sigmoid", "pla"),
+                (ActKind::Sigmoid, ActImpl::Lut) => ("sigmoid", "lut"),
+                (ActKind::Tanh, ActImpl::Exact) => ("tanh", "exact"),
+                (ActKind::Tanh, ActImpl::Pla) => ("tanh", "pla"),
+                (ActKind::Tanh, ActImpl::Lut) => ("tanh", "lut"),
+                (ActKind::HardSigmoid, _) | (ActKind::Sigmoid, ActImpl::Hard) => {
+                    ("hardsigmoid", "hard")
+                }
+                (ActKind::HardTanh, _) | (ActKind::Tanh, ActImpl::Hard) => ("hardtanh", "hard"),
+            };
+            format!("act.{k}.{i}")
+        })
+        .collect();
+    let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+    let engine = Engine::load(&dir, &refs).expect("load act micro-kernels");
+    let n = 256;
+    let xs: Vec<f32> = (0..n)
+        .map(|i| (-8.0 + 16.0 * i as f32 / n as f32 * 256.0).floor() / 256.0)
+        .collect();
+    let mut worst = 0.0f64;
+    for ((_, v), name) in variants.iter().zip(&names) {
+        let got = engine.infer(name, &xs).unwrap();
+        for (x, g) in xs.iter().zip(&got) {
+            let q = fmt.quantize(*x as f64);
+            let want = fmt.dequantize(v.eval(q, fmt));
+            worst = worst.max((*g as f64 - want).abs() / fmt.resolution());
+        }
+    }
+    println!("PJRT-vs-RTL-model cross-check: worst deviation {worst:.2} LSB (<= 1 expected: exact \n                      transcendental paths are f32-vs-f64, integer paths bit-identical)");
+}

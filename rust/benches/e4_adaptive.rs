@@ -1,0 +1,121 @@
+//! E4 — Adaptive strategy switching: learnable vs predefined threshold
+//! ([7], §3.2).
+//!
+//! Paper: on irregular workloads, the learnable-threshold method
+//! outperformed the predefined threshold by ~6 %.
+//!
+//! The predefined baseline is the designer's datasheet-derived break-even
+//! (FPGA configuration energy / static power, no board overheads); the
+//! learnable scheme runs Hedge over a threshold grid under the node's
+//! actual gap predictor.  Three irregular workloads + one regular control.
+
+use elastic_gen::elastic_node::Platform;
+use elastic_gen::fpga::{device, ConfigController};
+use elastic_gen::models::Topology;
+use elastic_gen::rtl::composition::{build, BuildOpts};
+use elastic_gen::rtl::fixed_point::Q16_8;
+use elastic_gen::sim::{cost_model, NodeSim};
+use elastic_gen::strategy::learnable::LearnableThreshold;
+use elastic_gen::strategy::{datasheet_breakeven, IdleWait, OnOff, PredefinedThreshold};
+use elastic_gen::util::rng::Rng;
+use elastic_gen::util::table::{num, Table};
+use elastic_gen::util::units::{Hertz, Secs};
+use elastic_gen::workload::Workload;
+
+fn main() {
+    elastic_gen::bench::banner(
+        "E4",
+        "learnable vs predefined threshold switching on irregular workloads",
+        "learnable threshold outperformed predefined by ~6 %",
+    );
+
+    let dev = device("xc7s15").unwrap();
+    let acc = build(Topology::LstmHar, &BuildOpts::optimised(Q16_8));
+    let cost = cost_model(
+        &acc,
+        dev,
+        Hertz::from_mhz(100.0),
+        &Platform::default(),
+        &ConfigController::raw(dev),
+    );
+    let sim = NodeSim::new(cost);
+    let th_ds = datasheet_breakeven(dev);
+    println!(
+        "datasheet threshold {:.0} ms | true system break-even {:.0} ms\n",
+        th_ds.ms(),
+        cost.breakeven_gap().ms()
+    );
+
+    let workloads: Vec<(&str, Workload)> = vec![
+        (
+            "phased 30ms<->3s",
+            Workload::Phased {
+                fast_gap: Secs::from_ms(30.0),
+                slow_gap: Secs(3.0),
+                phase_len: 40,
+            },
+        ),
+        (
+            "bursty 8x30ms/2s",
+            Workload::Bursty {
+                burst_len: 8,
+                intra_gap: Secs::from_ms(30.0),
+                burst_gap: Secs(2.0),
+            },
+        ),
+        (
+            "poisson mean 0.5s",
+            Workload::Poisson { mean_gap: Secs(0.5) },
+        ),
+        (
+            "regular 40ms (control)",
+            Workload::Periodic { period: Secs::from_ms(40.0) },
+        ),
+    ];
+
+    let mut t = Table::new(&[
+        "workload", "on-off (mJ)", "idle (mJ)", "predef (mJ)", "learnable (mJ)",
+        "learnable gain",
+    ]);
+    let mut gains = Vec::new();
+    for (name, w) in &workloads {
+        let arrivals = w.arrivals(2400, &mut Rng::new(21));
+        let on = sim.run(&arrivals, &mut OnOff).energy.total().mj();
+        let idle = sim.run(&arrivals, &mut IdleWait).energy.total().mj();
+        let pre = sim
+            .run(&arrivals, &mut PredefinedThreshold::at(th_ds))
+            .energy
+            .total()
+            .mj();
+        let lrn = sim
+            .run(&arrivals, &mut LearnableThreshold::default_grid())
+            .energy
+            .total()
+            .mj();
+        let gain = (pre / lrn - 1.0) * 100.0;
+        if !name.contains("control") {
+            gains.push(gain);
+        }
+        t.row(&[
+            name.to_string(),
+            num(on, 1),
+            num(idle, 1),
+            num(pre, 1),
+            num(lrn, 1),
+            format!("{gain:+.1}%"),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let avg = gains.iter().sum::<f64>() / gains.len() as f64;
+    println!("measured : learnable beats predefined by {avg:.1}% avg on irregular workloads");
+    println!("paper    : ~6%");
+    println!(
+        "shape    : {}",
+        if avg > 0.5 {
+            "HOLDS (learnable wins on irregular workloads, roughly single-digit %)"
+        } else {
+            "DOES NOT HOLD"
+        }
+    );
+}

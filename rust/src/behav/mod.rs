@@ -1,0 +1,11 @@
+//! Behavioural simulation (GHDL substitute, §2.3): bit-true fixed-point
+//! execution of generated accelerators against the exported weights, used
+//! to (a) verify mathematical correctness against the compiled HLO and the
+//! golden vectors, and (b) provide the cycle-count ground truth via the
+//! RTL templates.
+
+pub mod exec;
+pub mod weights;
+
+pub use exec::{run_model, ExecConfig};
+pub use weights::{load, ModelWeights};

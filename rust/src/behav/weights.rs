@@ -1,0 +1,164 @@
+//! Loading the float64 weight export written by `python/compile/aot.py`
+//! (`artifacts/weights/<model>.json`).  The behavioural simulator
+//! quantises these with the shared round-half-up rule, giving the exact
+//! int constants baked into the compiled HLO.
+
+use crate::util::json::{parse_file, Json};
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// A 2-D tensor in row-major order.
+#[derive(Debug, Clone)]
+pub struct Tensor2 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Tensor2 {
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.cols + c]
+    }
+}
+
+fn tensor2(j: &Json) -> Result<Tensor2> {
+    let shape = j
+        .get("shape")
+        .and_then(|s| s.as_arr())
+        .ok_or_else(|| anyhow!("tensor missing shape"))?;
+    let data = j
+        .get("data")
+        .map(|d| d.to_f64_vec())
+        .ok_or_else(|| anyhow!("tensor missing data"))?;
+    let dims: Vec<usize> = shape.iter().filter_map(|d| d.as_usize()).collect();
+    let (rows, cols) = match dims.len() {
+        1 => (1, dims[0]),
+        2 => (dims[0], dims[1]),
+        3 => (dims[0] * dims[1], dims[2]), // conv kernels [kw, c_in, c_out]
+        n => return Err(anyhow!("unsupported tensor rank {n}")),
+    };
+    if rows * cols != data.len() {
+        return Err(anyhow!("shape/data mismatch: {rows}x{cols} vs {}", data.len()));
+    }
+    Ok(Tensor2 { rows, cols, data })
+}
+
+fn vec1(j: &Json) -> Result<Vec<f64>> {
+    Ok(tensor2(j)?.data)
+}
+
+/// MLP weights: per-layer (w [n_in x n_out], b [n_out]).
+#[derive(Debug, Clone)]
+pub struct MlpWeights {
+    pub layers: Vec<(Tensor2, Vec<f64>)>,
+}
+
+/// LSTM weights (gate order [i|f|g|o] along columns).
+#[derive(Debug, Clone)]
+pub struct LstmWeights {
+    pub wx: Tensor2,
+    pub wh: Tensor2,
+    pub b: Vec<f64>,
+    pub w_head: Tensor2,
+    pub b_head: Vec<f64>,
+}
+
+/// CNN weights: per-conv (k [kw*c_in x c_out], b [c_out]) + head.
+#[derive(Debug, Clone)]
+pub struct CnnWeights {
+    pub convs: Vec<(Tensor2, Vec<f64>)>,
+    pub w_head: Tensor2,
+    pub b_head: Vec<f64>,
+}
+
+/// Attention-block weights.
+#[derive(Debug, Clone)]
+pub struct AttnWeights {
+    pub wq: Tensor2,
+    pub wk: Tensor2,
+    pub wv: Tensor2,
+    pub w_head: Tensor2,
+    pub b_head: Vec<f64>,
+}
+
+#[derive(Debug, Clone)]
+pub enum ModelWeights {
+    Mlp(MlpWeights),
+    Lstm(LstmWeights),
+    Cnn(CnnWeights),
+    Attn(AttnWeights),
+}
+
+/// Load `artifacts/weights/<model>.json`.
+pub fn load(artifacts_dir: &Path, model: &str) -> Result<ModelWeights> {
+    let path = artifacts_dir.join("weights").join(format!("{model}.json"));
+    let j = parse_file(&path).with_context(|| format!("loading weights for {model}"))?;
+    match model {
+        "mlp_fluid" => {
+            let arr = j.as_arr().ok_or_else(|| anyhow!("mlp weights not a list"))?;
+            let mut layers = Vec::new();
+            for l in arr {
+                layers.push((
+                    tensor2(l.get("w").ok_or_else(|| anyhow!("missing w"))?)?,
+                    vec1(l.get("b").ok_or_else(|| anyhow!("missing b"))?)?,
+                ));
+            }
+            Ok(ModelWeights::Mlp(MlpWeights { layers }))
+        }
+        "lstm_har" => Ok(ModelWeights::Lstm(LstmWeights {
+            wx: tensor2(j.get("wx").ok_or_else(|| anyhow!("missing wx"))?)?,
+            wh: tensor2(j.get("wh").ok_or_else(|| anyhow!("missing wh"))?)?,
+            b: vec1(j.get("b").ok_or_else(|| anyhow!("missing b"))?)?,
+            w_head: tensor2(j.get("w_head").ok_or_else(|| anyhow!("missing w_head"))?)?,
+            b_head: vec1(j.get("b_head").ok_or_else(|| anyhow!("missing b_head"))?)?,
+        })),
+        "cnn_ecg" => {
+            let convs_j = j
+                .get("convs")
+                .and_then(|c| c.as_arr())
+                .ok_or_else(|| anyhow!("missing convs"))?;
+            let mut convs = Vec::new();
+            for c in convs_j {
+                convs.push((
+                    tensor2(c.get("k").ok_or_else(|| anyhow!("missing k"))?)?,
+                    vec1(c.get("b").ok_or_else(|| anyhow!("missing b"))?)?,
+                ));
+            }
+            Ok(ModelWeights::Cnn(CnnWeights {
+                convs,
+                w_head: tensor2(j.get("w_head").ok_or_else(|| anyhow!("missing w_head"))?)?,
+                b_head: vec1(j.get("b_head").ok_or_else(|| anyhow!("missing b_head"))?)?,
+            }))
+        }
+        "attn_tiny" => Ok(ModelWeights::Attn(AttnWeights {
+            wq: tensor2(j.get("wq").ok_or_else(|| anyhow!("missing wq"))?)?,
+            wk: tensor2(j.get("wk").ok_or_else(|| anyhow!("missing wk"))?)?,
+            wv: tensor2(j.get("wv").ok_or_else(|| anyhow!("missing wv"))?)?,
+            w_head: tensor2(j.get("w_head").ok_or_else(|| anyhow!("missing w_head"))?)?,
+            b_head: vec1(j.get("b_head").ok_or_else(|| anyhow!("missing b_head"))?)?,
+        })),
+        other => Err(anyhow!("unknown model '{other}'")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn tensor2_shapes() {
+        let t = tensor2(&parse(r#"{"shape": [2, 3], "data": [1,2,3,4,5,6]}"#).unwrap()).unwrap();
+        assert_eq!((t.rows, t.cols), (2, 3));
+        assert_eq!(t.at(1, 2), 6.0);
+        // rank-3 conv kernel flattens leading dims
+        let t3 =
+            tensor2(&parse(r#"{"shape": [2, 1, 3], "data": [1,2,3,4,5,6]}"#).unwrap()).unwrap();
+        assert_eq!((t3.rows, t3.cols), (2, 3));
+    }
+
+    #[test]
+    fn mismatched_shape_rejected() {
+        assert!(tensor2(&parse(r#"{"shape": [2, 2], "data": [1]}"#).unwrap()).is_err());
+    }
+}

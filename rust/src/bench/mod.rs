@@ -1,0 +1,112 @@
+//! Criterion-lite benchmark harness (criterion is not in the vendored
+//! crate set).  Warmup + timed iterations with summary statistics, plus
+//! the table plumbing the E1-E8 bench binaries share.
+
+use crate::util::stats::Summary;
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box;
+
+/// One benchmark's timing result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iterations: u64,
+    pub per_iter: Summary,
+}
+
+impl BenchResult {
+    pub fn mean_ns(&self) -> f64 {
+        self.per_iter.mean * 1e9
+    }
+
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<40} {:>12.3} us/iter (p50 {:.3}, p99 {:.3}, n={})",
+            self.name,
+            self.per_iter.mean * 1e6,
+            self.per_iter.p50 * 1e6,
+            self.per_iter.p99 * 1e6,
+            self.iterations
+        )
+    }
+}
+
+/// Time `f` for ~`target` wall time after ~10% warmup, batching iterations
+/// so each sample is long enough to measure (>= 1 us).
+pub fn bench<F: FnMut()>(name: &str, target: Duration, mut f: F) -> BenchResult {
+    // warmup + batch-size calibration
+    let warm_until = Instant::now() + target / 10;
+    let mut calib_iters = 0u64;
+    let calib_start = Instant::now();
+    while Instant::now() < warm_until || calib_iters == 0 {
+        f();
+        calib_iters += 1;
+    }
+    let per_iter = calib_start.elapsed().as_secs_f64() / calib_iters as f64;
+    let batch = ((1e-5 / per_iter.max(1e-12)).ceil() as u64).clamp(1, 1_000_000);
+
+    let mut samples = Vec::new();
+    let mut iterations = 0u64;
+    let t_end = Instant::now() + target;
+    while Instant::now() < t_end {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let dt = t0.elapsed().as_secs_f64() / batch as f64;
+        samples.push(dt);
+        iterations += batch;
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    BenchResult {
+        name: name.to_string(),
+        iterations,
+        per_iter: Summary::of(&samples),
+    }
+}
+
+/// Default wall budget per benchmark.
+pub fn default_target() -> Duration {
+    std::env::var("BENCH_SECS")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .map(Duration::from_secs_f64)
+        .unwrap_or_else(|| Duration::from_millis(800))
+}
+
+/// Standard header for the E1-E8 bench binaries.
+pub fn banner(id: &str, title: &str, paper_claim: &str) {
+    println!("==========================================================");
+    println!("{id}: {title}");
+    println!("paper: {paper_claim}");
+    println!("==========================================================");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-ish", Duration::from_millis(50), || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iterations > 100);
+        assert!(r.per_iter.mean > 0.0);
+        assert!(r.report_line().contains("us/iter"));
+    }
+
+    #[test]
+    fn bench_ordering_sane() {
+        let fast = bench("fast", Duration::from_millis(40), || {
+            black_box((0..10).sum::<u64>());
+        });
+        let slow = bench("slow", Duration::from_millis(40), || {
+            black_box((0..10_000).sum::<u64>());
+        });
+        assert!(slow.per_iter.mean > fast.per_iter.mean);
+    }
+}

@@ -1,0 +1,144 @@
+//! Serving metrics: per-artifact latency/throughput accounting, shared
+//! between the worker thread and observers.
+
+use crate::util::stats::Summary;
+use crate::util::table::{num, Table};
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+#[derive(Debug, Default)]
+struct ArtifactStats {
+    served: u64,
+    failed: u64,
+    queue_wait_s: Vec<f64>,
+    exec_s: Vec<f64>,
+    e2e_s: Vec<f64>,
+}
+
+/// Thread-safe metrics sink.
+#[derive(Debug)]
+pub struct Metrics {
+    inner: Mutex<BTreeMap<String, ArtifactStats>>,
+    start: Instant,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            inner: Mutex::new(BTreeMap::new()),
+            start: Instant::now(),
+        }
+    }
+}
+
+impl Metrics {
+    pub fn record(&self, artifact: &str, ok: bool, queue_wait_s: f64, exec_s: f64) {
+        let mut m = self.inner.lock().unwrap();
+        let s = m.entry(artifact.to_string()).or_default();
+        if ok {
+            s.served += 1;
+            s.queue_wait_s.push(queue_wait_s);
+            s.exec_s.push(exec_s);
+            s.e2e_s.push(queue_wait_s + exec_s);
+        } else {
+            s.failed += 1;
+        }
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let m = self.inner.lock().unwrap();
+        let elapsed = self.start.elapsed().as_secs_f64();
+        let rows = m
+            .iter()
+            .map(|(name, s)| ArtifactSnapshot {
+                artifact: name.clone(),
+                served: s.served,
+                failed: s.failed,
+                throughput_rps: s.served as f64 / elapsed.max(1e-9),
+                queue_wait: maybe_summary(&s.queue_wait_s),
+                exec: maybe_summary(&s.exec_s),
+                e2e: maybe_summary(&s.e2e_s),
+            })
+            .collect();
+        MetricsSnapshot {
+            elapsed_s: elapsed,
+            rows,
+        }
+    }
+}
+
+fn maybe_summary(v: &[f64]) -> Option<Summary> {
+    if v.is_empty() {
+        None
+    } else {
+        Some(Summary::of(v))
+    }
+}
+
+#[derive(Debug)]
+pub struct ArtifactSnapshot {
+    pub artifact: String,
+    pub served: u64,
+    pub failed: u64,
+    pub throughput_rps: f64,
+    pub queue_wait: Option<Summary>,
+    pub exec: Option<Summary>,
+    pub e2e: Option<Summary>,
+}
+
+#[derive(Debug)]
+pub struct MetricsSnapshot {
+    pub elapsed_s: f64,
+    pub rows: Vec<ArtifactSnapshot>,
+}
+
+impl MetricsSnapshot {
+    pub fn total_served(&self) -> u64 {
+        self.rows.iter().map(|r| r.served).sum()
+    }
+
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&[
+            "artifact", "served", "fail", "rps", "p50 ms", "p99 ms", "exec p50 ms",
+        ])
+        .with_title(&format!("Serving metrics ({:.1}s)", self.elapsed_s));
+        for r in &self.rows {
+            let p = |s: &Option<Summary>, f: fn(&Summary) -> f64| {
+                s.as_ref().map(|s| num(f(s) * 1e3, 3)).unwrap_or_else(|| "-".into())
+            };
+            t.row(&[
+                r.artifact.clone(),
+                r.served.to_string(),
+                r.failed.to_string(),
+                num(r.throughput_rps, 1),
+                p(&r.e2e, |s| s.p50),
+                p(&r.e2e, |s| s.p99),
+                p(&r.exec, |s| s.p50),
+            ]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_snapshot() {
+        let m = Metrics::default();
+        m.record("a", true, 0.001, 0.002);
+        m.record("a", true, 0.002, 0.002);
+        m.record("a", false, 0.0, 0.0);
+        m.record("b", true, 0.0, 0.001);
+        let s = m.snapshot();
+        assert_eq!(s.total_served(), 3);
+        let a = &s.rows[0];
+        assert_eq!(a.artifact, "a");
+        assert_eq!(a.served, 2);
+        assert_eq!(a.failed, 1);
+        assert!((a.e2e.as_ref().unwrap().mean - 0.0035).abs() < 1e-9);
+        assert!(s.render().contains("Serving metrics"));
+    }
+}

@@ -1,0 +1,18 @@
+//! L3 serving coordinator: request routing, micro-batching, a dedicated
+//! PJRT worker thread, and serving metrics.
+//!
+//! The paper's deployment shape is a single FPGA behind an MCU; the
+//! software twin is a single engine thread owning the PJRT client (the
+//! executables hold raw runtime handles and stay on one thread), fed
+//! through an MPSC queue.  Batching amortises dispatch overhead the way
+//! the MCU batches sensor windows.
+
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use request::{Request, Response};
+pub use router::Router;
+pub use server::{Coordinator, CoordinatorConfig};

@@ -1,0 +1,36 @@
+//! Request/response types crossing the coordinator queue.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+/// An inference request bound for one artifact.
+pub struct Request {
+    pub id: u64,
+    pub artifact: String,
+    pub input: Vec<f32>,
+    pub enqueued: Instant,
+    /// Reply channel (one-shot use).
+    pub reply: Sender<Response>,
+}
+
+/// The served result with timing breakdown.
+#[derive(Debug)]
+pub struct Response {
+    pub id: u64,
+    pub artifact: String,
+    pub output: Result<Vec<f32>, String>,
+    /// Time spent queued before the engine picked the request up.
+    pub queue_wait_s: f64,
+    /// Engine execution time.
+    pub exec_s: f64,
+}
+
+impl Response {
+    pub fn total_s(&self) -> f64 {
+        self.queue_wait_s + self.exec_s
+    }
+
+    pub fn is_ok(&self) -> bool {
+        self.output.is_ok()
+    }
+}

@@ -1,0 +1,176 @@
+//! Variant routing: choose which compiled accelerator artifact serves a
+//! model request, using the same application knowledge the Generator
+//! consumed (precision budget, energy preference).
+
+use crate::runtime::{ArtifactMeta, Manifest};
+use anyhow::{anyhow, Result};
+
+/// Routing policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Lowest activation error (exact variants).
+    HighestPrecision,
+    /// Cheapest variant within an error budget (LSBs at the artifact's
+    /// own format) — the Generator's serving-side counterpart.
+    CheapestWithin { max_error_lsb: u32 },
+    /// A specific named artifact.
+    Named,
+}
+
+/// Maps model names to artifacts.
+#[derive(Debug, Clone)]
+pub struct Router {
+    entries: Vec<ArtifactMeta>,
+}
+
+impl Router {
+    pub fn new(manifest: &Manifest) -> Router {
+        Router {
+            entries: manifest.models().cloned().collect(),
+        }
+    }
+
+    fn error_lsb(meta: &ArtifactMeta) -> f64 {
+        let sig = meta
+            .sigmoid_variant()
+            .map(|v| v.max_error_lsb(meta.fmt))
+            .unwrap_or(0.0);
+        let tan = meta
+            .tanh_variant()
+            .map(|v| v.max_error_lsb(meta.fmt))
+            .unwrap_or(0.0);
+        sig.max(tan)
+    }
+
+    /// Relative serving cost proxy: hard < lut < pla < exact, scaled down
+    /// by pipelining (matches the template cycle model's ordering).
+    fn cost_rank(meta: &ArtifactMeta) -> f64 {
+        let base = match meta.act_impl.as_str() {
+            "hard" => 1.0,
+            "lut" => 2.0,
+            "pla" => 3.0,
+            _ => 6.0,
+        };
+        if meta.pipelined {
+            base * 0.5
+        } else {
+            base
+        }
+    }
+
+    /// Route a request for `model` under `policy`.
+    pub fn route(&self, model: &str, policy: Policy) -> Result<&ArtifactMeta> {
+        let candidates: Vec<&ArtifactMeta> =
+            self.entries.iter().filter(|a| a.model == model).collect();
+        if candidates.is_empty() {
+            return Err(anyhow!("no artifact for model '{model}'"));
+        }
+        let chosen = match policy {
+            Policy::Named => candidates[0],
+            Policy::HighestPrecision => candidates
+                .iter()
+                .min_by(|a, b| {
+                    Self::error_lsb(a)
+                        .partial_cmp(&Self::error_lsb(b))
+                        .unwrap()
+                })
+                .unwrap(),
+            Policy::CheapestWithin { max_error_lsb } => {
+                let within: Vec<&&ArtifactMeta> = candidates
+                    .iter()
+                    .filter(|a| Self::error_lsb(a) <= max_error_lsb as f64)
+                    .collect();
+                if within.is_empty() {
+                    return Err(anyhow!(
+                        "no {model} variant within {max_error_lsb} LSB error budget"
+                    ));
+                }
+                within
+                    .into_iter()
+                    .min_by(|a, b| {
+                        Self::cost_rank(a).partial_cmp(&Self::cost_rank(b)).unwrap()
+                    })
+                    .unwrap()
+            }
+        };
+        Ok(chosen)
+    }
+
+    pub fn models(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.entries.iter().map(|a| a.model.as_str()).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rtl::fixed_point::Q16_8;
+    use std::path::PathBuf;
+
+    fn meta(name: &str, model: &str, act: &str, act_impl: &str, pipelined: bool) -> ArtifactMeta {
+        ArtifactMeta {
+            name: name.into(),
+            file: format!("{name}.hlo.txt"),
+            kind: "model".into(),
+            model: model.into(),
+            fmt: Q16_8,
+            act: act.into(),
+            act_impl: act_impl.into(),
+            tanh_impl: String::new(),
+            pipelined,
+            alus: 1,
+            input_shape: vec![8],
+            output_shape: vec![1],
+            note: String::new(),
+        }
+    }
+
+    fn router() -> Router {
+        Router {
+            entries: vec![
+                meta("m.base", "mlp_fluid", "sigmoid", "exact", false),
+                meta("m.pla", "mlp_fluid", "sigmoid", "pla", false),
+                meta("m.hard", "mlp_fluid", "hardsigmoid", "hard", true),
+            ],
+        }
+    }
+
+    #[test]
+    fn highest_precision_prefers_exact() {
+        let r = router();
+        // Hard* variants have zero approximation error to *their own*
+        // definition; among sigmoid impls, exact has the least error to
+        // sigmoid.  hard ties at 1 LSB -> min_by keeps the first minimum.
+        let a = r.route("mlp_fluid", Policy::HighestPrecision).unwrap();
+        assert!(a.act_impl == "exact" || a.act_impl == "hard");
+    }
+
+    #[test]
+    fn cheapest_within_budget_prefers_hard() {
+        let r = router();
+        let a = r
+            .route("mlp_fluid", Policy::CheapestWithin { max_error_lsb: 50 })
+            .unwrap();
+        assert_eq!(a.act_impl, "hard");
+    }
+
+    #[test]
+    fn tight_budget_excludes_pla() {
+        let r = Router {
+            entries: vec![meta("m.pla", "mlp_fluid", "sigmoid", "pla", false)],
+        };
+        // PLA error ~0.0189 = ~4.8 LSB at q16_8 (+1) -> budget 2 fails
+        assert!(r
+            .route("mlp_fluid", Policy::CheapestWithin { max_error_lsb: 2 })
+            .is_err());
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        assert!(router().route("nope", Policy::Named).is_err());
+        let _ = PathBuf::new(); // silence unused import on some cfgs
+    }
+}

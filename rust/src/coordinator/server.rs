@@ -1,0 +1,174 @@
+//! The coordinator server: a client handle + a dedicated engine thread.
+//!
+//! The PJRT executables hold raw runtime handles, so the engine lives on
+//! exactly one thread; requests arrive over an MPSC queue, get
+//! micro-batched per artifact, executed, and answered over per-request
+//! reply channels.
+
+use super::metrics::Metrics;
+use super::request::{Request, Response};
+use crate::runtime::Engine;
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Coordinator tuning knobs.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub artifacts_dir: PathBuf,
+    /// Artifacts to compile at startup (empty = all model artifacts).
+    pub artifacts: Vec<String>,
+    /// Maximum micro-batch drained per engine pass.
+    pub batch_max: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            artifacts_dir: crate::artifacts_dir(),
+            artifacts: vec![],
+            batch_max: 16,
+        }
+    }
+}
+
+/// Client handle; cloneable across request-producer threads.
+pub struct Coordinator {
+    tx: Sender<Request>,
+    metrics: Arc<Metrics>,
+    next_id: Arc<AtomicU64>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start the engine thread.  Fails (via the first request) if the
+    /// artifacts cannot be loaded; `start` itself waits for engine
+    /// readiness so callers get load errors eagerly.
+    pub fn start(config: CoordinatorConfig) -> Result<Coordinator> {
+        let (tx, rx) = channel::<Request>();
+        let metrics = Arc::new(Metrics::default());
+        let m2 = metrics.clone();
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+
+        let worker = std::thread::Builder::new()
+            .name("elastic-engine".into())
+            .spawn(move || worker_loop(config, rx, m2, ready_tx))
+            .expect("spawn engine thread");
+
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(Coordinator {
+                tx,
+                metrics,
+                next_id: Arc::new(AtomicU64::new(1)),
+                worker: Some(worker),
+            }),
+            Ok(Err(e)) => {
+                let _ = worker.join();
+                Err(anyhow!("engine startup failed: {e}"))
+            }
+            Err(_) => Err(anyhow!("engine thread died during startup")),
+        }
+    }
+
+    /// Submit a request; returns the receiver for its response.
+    pub fn submit(&self, artifact: &str, input: Vec<f32>) -> Receiver<Response> {
+        let (reply, rx) = channel();
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            artifact: artifact.to_string(),
+            input,
+            enqueued: Instant::now(),
+            reply,
+        };
+        // send fails only if the worker died; the caller sees it as a
+        // disconnected reply channel
+        let _ = self.tx.send(req);
+        rx
+    }
+
+    /// Submit and wait.
+    ///
+    /// Perf note (EXPERIMENTS.md §Perf): spin-before-park variants of this
+    /// path and of the worker's dequeue were tried and *regressed* the
+    /// round-trip 7x on this host — the spinners steal cycles from the
+    /// PJRT engine thread.  Plain blocking channels are the optimum here.
+    pub fn infer(&self, artifact: &str, input: Vec<f32>) -> Result<Response> {
+        self.submit(artifact, input)
+            .recv()
+            .map_err(|_| anyhow!("engine thread gone"))
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        // closing the queue stops the worker
+        let (dummy_tx, _) = channel::<Request>();
+        let tx = std::mem::replace(&mut self.tx, dummy_tx);
+        drop(tx);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(
+    config: CoordinatorConfig,
+    rx: Receiver<Request>,
+    metrics: Arc<Metrics>,
+    ready: Sender<Result<(), String>>,
+) {
+    let names: Vec<&str> = config.artifacts.iter().map(|s| s.as_str()).collect();
+    let engine = match Engine::load(&config.artifacts_dir, &names) {
+        Ok(e) => {
+            let _ = ready.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e.to_string()));
+            return;
+        }
+    };
+
+    loop {
+        // block for the first request, then drain a micro-batch
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // all handles dropped: shut down
+        };
+        let mut batch = vec![first];
+        while batch.len() < config.batch_max {
+            match rx.try_recv() {
+                Ok(r) => batch.push(r),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => break,
+            }
+        }
+
+        for req in batch {
+            let picked_up = Instant::now();
+            let queue_wait = picked_up.duration_since(req.enqueued).as_secs_f64();
+            let result = engine.infer(&req.artifact, &req.input);
+            let exec = picked_up.elapsed().as_secs_f64();
+            let ok = result.is_ok();
+            metrics.record(&req.artifact, ok, queue_wait, exec);
+            let _ = req.reply.send(Response {
+                id: req.id,
+                artifact: req.artifact,
+                output: result.map_err(|e| e.to_string()),
+                queue_wait_s: queue_wait,
+                exec_s: exec,
+            });
+        }
+    }
+}
+
+// Integration coverage lives in rust/tests/integration_runtime.rs (needs
+// built artifacts).

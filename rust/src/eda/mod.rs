@@ -1,0 +1,11 @@
+//! EDA tool substitute (§2.3): analytical synthesis (technology mapping +
+//! capacity), timing analysis (fmax with congestion) and vendor-style
+//! report rendering.
+
+pub mod report;
+pub mod synth;
+pub mod timing;
+
+pub use report::{report, DesignReport};
+pub use synth::{synthesize, SynthResult, TechFactors};
+pub use timing::{fmax, meets_timing, slack_ns};

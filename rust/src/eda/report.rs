@@ -1,0 +1,137 @@
+//! Vendor-style report rendering (the "EDA Tool Analysis" output of §2.3):
+//! utilisation, timing and power sections in the familiar Vivado
+//! `report_utilization` shape, so downstream users can eyeball generated
+//! designs the way they would a real run.
+
+use super::synth::SynthResult;
+use super::timing;
+use crate::fpga::device::FpgaDevice;
+use crate::power::PowerEstimate;
+use crate::rtl::composition::Accelerator;
+use crate::util::table::{num, Table};
+use crate::util::units::Hertz;
+
+/// Complete design report for one (accelerator, device, clock) triple.
+#[derive(Debug, Clone)]
+pub struct DesignReport {
+    pub design: String,
+    pub device: String,
+    pub synth: SynthResult,
+    pub fmax: Hertz,
+    pub clock: Hertz,
+    pub slack_ns: f64,
+    pub power: PowerEstimate,
+    pub cycles: u64,
+    pub latency_us: f64,
+    pub gops_per_watt: f64,
+}
+
+/// Build the full report.
+pub fn report(
+    acc: &Accelerator,
+    device: &FpgaDevice,
+    clock: Hertz,
+) -> DesignReport {
+    let synth = super::synth::synthesize(acc, device);
+    let fmax = timing::fmax(&synth, device);
+    let power = crate::power::power(acc, device, clock);
+    DesignReport {
+        design: acc.name.clone(),
+        device: device.name.to_string(),
+        slack_ns: timing::slack_ns(&synth, device, clock),
+        fmax,
+        clock,
+        power,
+        cycles: acc.cycles(),
+        latency_us: acc.latency(clock).us(),
+        gops_per_watt: crate::power::gops_per_watt(acc, device, clock),
+        synth,
+    }
+}
+
+impl DesignReport {
+    pub fn timing_met(&self) -> bool {
+        self.slack_ns >= 0.0
+    }
+
+    /// Render the three report sections as text.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "Design Report: {} on {} @ {:.1} MHz\n\n",
+            self.design,
+            self.device,
+            self.clock.mhz()
+        ));
+
+        let mut util = Table::new(&["Resource", "Used", "Available", "Util%"])
+            .with_title("1. Utilization");
+        let rows = [
+            ("LUT", self.synth.mapped.luts, self.synth.capacity.luts),
+            ("FF", self.synth.mapped.ffs, self.synth.capacity.ffs),
+            ("BRAM18", self.synth.mapped.bram18, self.synth.capacity.bram18),
+            ("DSP", self.synth.mapped.dsps, self.synth.capacity.dsps),
+        ];
+        for (name, used, avail) in rows {
+            let pct = if avail == 0 {
+                "-".to_string()
+            } else {
+                num(100.0 * used as f64 / avail as f64, 1)
+            };
+            util.row(&[name.to_string(), used.to_string(), avail.to_string(), pct]);
+        }
+        out.push_str(&util.render());
+        out.push('\n');
+
+        let mut t = Table::new(&["Metric", "Value"]).with_title("2. Timing");
+        t.row(&["Critical path (ns)".into(), num(self.synth.crit_path_ns, 2)]);
+        t.row(&["Fmax (MHz)".into(), num(self.fmax.mhz(), 1)]);
+        t.row(&["Requested (MHz)".into(), num(self.clock.mhz(), 1)]);
+        t.row(&["WNS (ns)".into(), num(self.slack_ns, 2)]);
+        t.row(&[
+            "Timing".into(),
+            if self.timing_met() { "MET" } else { "VIOLATED" }.into(),
+        ]);
+        out.push_str(&t.render());
+        out.push('\n');
+
+        let mut p = Table::new(&["Metric", "Value"]).with_title("3. Power / Performance");
+        p.row(&["Static (mW)".into(), num(self.power.static_w.mw(), 2)]);
+        p.row(&["Dynamic (mW)".into(), num(self.power.dynamic_w.mw(), 2)]);
+        p.row(&["Total (mW)".into(), num(self.power.total().mw(), 2)]);
+        p.row(&["Cycles/inf".into(), self.cycles.to_string()]);
+        p.row(&["Latency (us)".into(), num(self.latency_us, 2)]);
+        p.row(&["GOPS/s/W".into(), num(self.gops_per_watt, 2)]);
+        out.push_str(&p.render());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::device::device;
+    use crate::models::Topology;
+    use crate::rtl::composition::{build, BuildOpts};
+    use crate::rtl::fixed_point::Q16_8;
+
+    #[test]
+    fn report_sections_render() {
+        let acc = build(Topology::LstmHar, &BuildOpts::optimised(Q16_8));
+        let r = report(&acc, device("xc7s15").unwrap(), Hertz::from_mhz(100.0));
+        let text = r.render();
+        assert!(text.contains("1. Utilization"));
+        assert!(text.contains("2. Timing"));
+        assert!(text.contains("3. Power / Performance"));
+        assert!(text.contains("GOPS/s/W"));
+    }
+
+    #[test]
+    fn report_values_consistent() {
+        let acc = build(Topology::MlpFluid, &BuildOpts::optimised(Q16_8));
+        let r = report(&acc, device("xc7s15").unwrap(), Hertz::from_mhz(100.0));
+        assert_eq!(r.cycles, acc.cycles());
+        assert!(r.timing_met());
+        assert!(r.gops_per_watt > 0.0);
+    }
+}

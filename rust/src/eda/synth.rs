@@ -1,0 +1,98 @@
+//! Analytical technology mapping ("synthesis").
+//!
+//! Template profiles are expressed in 7-series-equivalent units; mapping to
+//! a concrete device applies family technology factors (4-input iCE40 LUTs
+//! absorb less logic than 6-input 7-series LUTs, Spartan-6 sits between)
+//! and checks capacity.  This is the stand-in for Vivado/Radiant described
+//! in DESIGN.md §2 — the Generator consumes exactly the numbers a vendor
+//! utilisation report would give it.
+
+use crate::fpga::device::{Family, FpgaDevice, Resources};
+use crate::rtl::composition::Accelerator;
+
+/// Per-family technology factors relative to the 7-series baseline.
+#[derive(Debug, Clone, Copy)]
+pub struct TechFactors {
+    /// LUT inflation (how many native LUTs per 6-input-equivalent LUT).
+    pub lut: f64,
+    /// FF inflation.
+    pub ff: f64,
+    /// Combinational delay scaling (fabric speed).
+    pub delay: f64,
+}
+
+pub fn tech_factors(family: Family) -> TechFactors {
+    match family {
+        Family::Spartan7 => TechFactors { lut: 1.0, ff: 1.0, delay: 1.0 },
+        Family::Spartan6 => TechFactors { lut: 1.15, ff: 1.0, delay: 1.45 },
+        Family::Ice40 => TechFactors { lut: 1.6, ff: 1.0, delay: 1.9 },
+    }
+}
+
+/// Result of mapping an accelerator onto a device.
+#[derive(Debug, Clone)]
+pub struct SynthResult {
+    pub mapped: Resources,
+    pub capacity: Resources,
+    pub fits: bool,
+    /// Worst-dimension utilisation (>= 1.0 when over capacity).
+    pub utilization: f64,
+    /// Post-mapping combinational delay in ns.
+    pub crit_path_ns: f64,
+}
+
+/// Map `acc` onto `device`.
+pub fn synthesize(acc: &Accelerator, device: &FpgaDevice) -> SynthResult {
+    let tf = tech_factors(device.family);
+    let raw = acc.resources();
+    let mapped = Resources {
+        luts: (raw.luts as f64 * tf.lut).ceil() as u32,
+        ffs: (raw.ffs as f64 * tf.ff).ceil() as u32,
+        bram18: raw.bram18,
+        dsps: raw.dsps,
+    };
+    let utilization = mapped.utilization(&device.resources);
+    SynthResult {
+        mapped,
+        capacity: device.resources,
+        fits: mapped.fits_in(&device.resources),
+        utilization,
+        crit_path_ns: acc.crit_path_ns() * tf.delay,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::device::device;
+    use crate::models::Topology;
+    use crate::rtl::composition::{build, BuildOpts};
+    use crate::rtl::fixed_point::Q16_8;
+
+    #[test]
+    fn ice40_inflates_luts() {
+        let acc = build(Topology::MlpFluid, &BuildOpts::optimised(Q16_8));
+        let s7 = synthesize(&acc, device("xc7s15").unwrap());
+        let ice = synthesize(&acc, device("ice40up5k").unwrap());
+        assert!(ice.mapped.luts > s7.mapped.luts);
+        assert!(ice.crit_path_ns > s7.crit_path_ns);
+    }
+
+    #[test]
+    fn capacity_check() {
+        let acc = build(Topology::CnnEcg, &BuildOpts::optimised(Q16_8));
+        let on_s25 = synthesize(&acc, device("xc7s25").unwrap());
+        assert!(on_s25.fits, "util {}", on_s25.utilization);
+    }
+
+    #[test]
+    fn utilization_consistent_with_fits() {
+        for t in Topology::all() {
+            let acc = build(*t, &BuildOpts::baseline(Q16_8));
+            for d in crate::fpga::device::DEVICES {
+                let s = synthesize(&acc, d);
+                assert_eq!(s.fits, s.utilization <= 1.0, "{} on {}", t.name(), d.name);
+            }
+        }
+    }
+}

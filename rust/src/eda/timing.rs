@@ -1,0 +1,87 @@
+//! Timing analysis: achievable clock from the mapped critical path plus a
+//! routing-congestion penalty that grows with utilisation (the familiar
+//! "timing collapses when the device fills up" effect every Vivado user
+//! knows), capped by the family fabric ceiling.
+
+use super::synth::SynthResult;
+use crate::fpga::device::FpgaDevice;
+use crate::util::units::Hertz;
+
+/// Routing delay added on top of the logic path, as a function of
+/// utilisation: negligible below ~50 %, steep past ~80 %.
+pub fn routing_penalty_ns(logic_ns: f64, utilization: f64) -> f64 {
+    let u = utilization.clamp(0.0, 1.2);
+    // smooth convex penalty: 8% of logic delay at u=0.5, ~60% at u=0.9
+    let frac = 0.04 + 0.75 * u.powi(4);
+    logic_ns * frac
+}
+
+/// Achievable fmax for a mapped design.
+pub fn fmax(synth: &SynthResult, device: &FpgaDevice) -> Hertz {
+    let total_ns = synth.crit_path_ns + routing_penalty_ns(synth.crit_path_ns, synth.utilization);
+    let f = 1e9 / total_ns;
+    Hertz(f.min(device.fmax_ceiling.value()))
+}
+
+/// Timing closure check at a requested clock.
+pub fn meets_timing(synth: &SynthResult, device: &FpgaDevice, clock: Hertz) -> bool {
+    fmax(synth, device).value() >= clock.value()
+}
+
+/// Worst negative slack (ns) at the requested clock; positive = met.
+pub fn slack_ns(synth: &SynthResult, device: &FpgaDevice, clock: Hertz) -> f64 {
+    let period = 1e9 / clock.value();
+    let path = 1e9 / fmax(synth, device).value();
+    period - path
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eda::synth::synthesize;
+    use crate::fpga::device::device;
+    use crate::models::Topology;
+    use crate::rtl::composition::{build, BuildOpts};
+    use crate::rtl::fixed_point::Q16_8;
+
+    #[test]
+    fn optimised_design_closes_100mhz_on_s15() {
+        // the E8/[11] claim: the (pipelined, hard-activation) MLP runs at
+        // 100 MHz on XC7S15
+        let acc = build(Topology::MlpFluid, &BuildOpts::optimised(Q16_8));
+        let d = device("xc7s15").unwrap();
+        let s = synthesize(&acc, d);
+        assert!(meets_timing(&s, d, Hertz::from_mhz(100.0)), "fmax {}", fmax(&s, d));
+    }
+
+    #[test]
+    fn lx9_slower_than_s15() {
+        // [10] vs [11]: the Spartan-6 predecessor closed at 50 MHz only
+        let acc = build(Topology::MlpFluid, &BuildOpts::optimised(Q16_8));
+        let f_lx9 = fmax(&synthesize(&acc, device("lx9").unwrap()), device("lx9").unwrap());
+        let f_s15 = fmax(&synthesize(&acc, device("xc7s15").unwrap()), device("xc7s15").unwrap());
+        assert!(f_lx9.value() < f_s15.value());
+    }
+
+    #[test]
+    fn congestion_penalty_grows() {
+        assert!(routing_penalty_ns(5.0, 0.9) > routing_penalty_ns(5.0, 0.3) * 3.0);
+    }
+
+    #[test]
+    fn slack_sign_matches_closure() {
+        let acc = build(Topology::LstmHar, &BuildOpts::baseline(Q16_8));
+        let d = device("xc7s15").unwrap();
+        let s = synthesize(&acc, d);
+        let clk = Hertz::from_mhz(100.0);
+        assert_eq!(meets_timing(&s, d, clk), slack_ns(&s, d, clk) >= 0.0);
+    }
+
+    #[test]
+    fn fmax_capped_by_ceiling() {
+        let acc = build(Topology::MlpFluid, &BuildOpts::optimised(Q16_8));
+        let d = device("ice40up5k").unwrap();
+        let f = fmax(&synthesize(&acc, d), d);
+        assert!(f.value() <= d.fmax_ceiling.value());
+    }
+}

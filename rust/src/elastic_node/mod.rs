@@ -1,0 +1,70 @@
+//! Elastic Node platform emulation (§3.3, [8,9]).
+//!
+//! The Elastic Node is the research group's MCU + FPGA board: the MCU owns
+//! the sensors and the FPGA power rail, streams bitstreams from flash into
+//! the configuration port, and carries current-sense instrumentation on
+//! every rail.  The simulator needs its power constants (the MCU and flash
+//! are active *during configuration* — a first-order term in the On-Off
+//! strategy's cost) and the measurement layer reproduces the INA-style
+//! sensing used for "real hardware measurements".
+
+pub mod measurement;
+
+use crate::util::units::Watts;
+
+/// Board-level power constants around the FPGA.
+#[derive(Debug, Clone, Copy)]
+pub struct Platform {
+    /// MCU active (streaming a bitstream or marshalling a request).
+    pub mcu_active: Watts,
+    /// MCU in its sleep mode (waiting on a timer/sensor interrupt).
+    pub mcu_sleep: Watts,
+    /// SPI flash read current while a bitstream streams out.
+    pub flash_read: Watts,
+}
+
+impl Default for Platform {
+    fn default() -> Platform {
+        // STM32-class MCU + NOR flash, values in the Elastic Node's
+        // published envelope
+        Platform {
+            mcu_active: Watts::from_mw(30.0),
+            mcu_sleep: Watts::from_mw(0.9),
+            flash_read: Watts::from_mw(50.0),
+        }
+    }
+}
+
+impl Platform {
+    /// Extra board power on top of the FPGA's own draw, per node state.
+    pub fn overhead(&self, state: BoardState) -> Watts {
+        match state {
+            BoardState::Configuring => self.mcu_active + self.flash_read,
+            BoardState::Serving => self.mcu_active,
+            BoardState::Waiting => self.mcu_sleep,
+        }
+    }
+}
+
+/// Coarse board activity classes used for overhead accounting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BoardState {
+    /// MCU streaming the bitstream from flash.
+    Configuring,
+    /// MCU shuttling request/response data.
+    Serving,
+    /// Idle/off periods.
+    Waiting,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_is_most_expensive_overhead() {
+        let p = Platform::default();
+        assert!(p.overhead(BoardState::Configuring).value() > p.overhead(BoardState::Serving).value());
+        assert!(p.overhead(BoardState::Serving).value() > p.overhead(BoardState::Waiting).value());
+    }
+}

@@ -1,0 +1,114 @@
+//! Configuration controller model: the time/energy cost of (re)configuring
+//! the FPGA, with optional bitstream compression.
+//!
+//! This is the quantity the workload-aware strategies trade against idle
+//! power ([6]): the On-Off strategy pays `powerup + config` on every
+//! request, Idle-Waiting pays it once.
+
+use super::compression::CompressionResult;
+use super::device::FpgaDevice;
+use crate::util::units::{Joules, Secs, Watts};
+
+/// How the bitstream is delivered to the configuration port.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ConfigSource {
+    /// Raw bitstream streamed at the config clock.
+    Raw,
+    /// Compressed image; the soft decompressor streams at the config clock
+    /// but only `compressed_bytes` must be fetched from flash, which is the
+    /// bottleneck on the Elastic Node (flash SPI shares the config clock).
+    Compressed { compressed_bytes: u32 },
+}
+
+/// Configuration controller bound to one device.
+#[derive(Debug, Clone)]
+pub struct ConfigController {
+    pub device: &'static FpgaDevice,
+    pub source: ConfigSource,
+}
+
+impl ConfigController {
+    pub fn raw(device: &'static FpgaDevice) -> ConfigController {
+        ConfigController {
+            device,
+            source: ConfigSource::Raw,
+        }
+    }
+
+    pub fn compressed(device: &'static FpgaDevice, r: &CompressionResult) -> ConfigController {
+        ConfigController {
+            device,
+            source: ConfigSource::Compressed {
+                compressed_bytes: r.compressed_bytes as u32,
+            },
+        }
+    }
+
+    /// Bytes that must cross the flash/config link.
+    pub fn transfer_bytes(&self) -> u32 {
+        match self.source {
+            ConfigSource::Raw => self.device.bitstream_bytes,
+            ConfigSource::Compressed { compressed_bytes } => compressed_bytes,
+        }
+    }
+
+    /// Time to configure, excluding power-up.
+    pub fn config_time(&self) -> Secs {
+        let bits = self.transfer_bytes() as f64 * 8.0;
+        let raw = bits / (self.device.config_clock.value() * self.device.config_width_bits as f64);
+        // the decompressor adds a small fixed pipeline overhead
+        let overhead = match self.source {
+            ConfigSource::Raw => 0.0,
+            ConfigSource::Compressed { .. } => 50e-6,
+        };
+        Secs(raw + overhead)
+    }
+
+    /// Full power-off -> operational sequence time.
+    pub fn cold_start_time(&self) -> Secs {
+        Secs(self.device.powerup_s) + self.config_time()
+    }
+
+    /// Energy of the power-up + configuration sequence.
+    pub fn cold_start_energy(&self) -> Joules {
+        // power-up ramp at ~half config power, then configuration
+        let ramp = Watts(self.device.config_power.value() * 0.5) * Secs(self.device.powerup_s);
+        ramp + self.device.config_power * self.config_time()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::device::device;
+
+    #[test]
+    fn raw_config_time_matches_device() {
+        let d = device("xc7s15").unwrap();
+        let c = ConfigController::raw(d);
+        assert!((c.config_time().value() - d.config_time_s()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compression_shortens_config() {
+        let d = device("xc7s15").unwrap();
+        let raw = ConfigController::raw(d);
+        let comp = ConfigController::compressed(
+            d,
+            &CompressionResult {
+                original_bytes: d.bitstream_bytes as usize,
+                compressed_bytes: d.bitstream_bytes as usize / 8,
+            },
+        );
+        assert!(comp.config_time().value() < raw.config_time().value() / 6.0);
+        assert!(comp.cold_start_energy().value() < raw.cold_start_energy().value());
+    }
+
+    #[test]
+    fn cold_start_includes_powerup() {
+        let d = device("xc7s6").unwrap();
+        let c = ConfigController::raw(d);
+        assert!(c.cold_start_time().value() > c.config_time().value());
+        assert!(c.cold_start_energy().value() > 0.0);
+    }
+}

@@ -1,0 +1,258 @@
+//! FPGA device catalog.
+//!
+//! Parametric models of the resource-constrained parts the paper's research
+//! line targets: Spartan-7 (XC7S6/15/25, the Elastic Node main fabric
+//! [8,22]), the older Spartan-6 LX9 [10], and the Lattice iCE40UP5K (the
+//! low-static-power comparison point reachable with Radiant, §2.3).
+//!
+//! Constants are datasheet-derived (capacities, bitstream lengths) or
+//! calibrated to the published measurements of the Elastic Node line
+//! (static/config power).  Absolute watts are approximations; the design
+//! space exploration depends on the *relative* standing of the devices,
+//! which these numbers preserve (DESIGN.md §2 substitution table).
+
+use crate::util::units::{Hertz, Watts};
+
+/// FPGA resource vector.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Resources {
+    /// Logic LUTs (device-native: 6-input for 7-series, 4-input for iCE40).
+    pub luts: u32,
+    /// Flip-flops.
+    pub ffs: u32,
+    /// Block RAM, in 18 Kb-equivalent half-blocks.
+    pub bram18: u32,
+    /// DSP/MAC hard blocks.
+    pub dsps: u32,
+}
+
+impl Resources {
+    pub const fn new(luts: u32, ffs: u32, bram18: u32, dsps: u32) -> Resources {
+        Resources { luts, ffs, bram18, dsps }
+    }
+
+    pub fn fits_in(&self, cap: &Resources) -> bool {
+        self.luts <= cap.luts
+            && self.ffs <= cap.ffs
+            && self.bram18 <= cap.bram18
+            && self.dsps <= cap.dsps
+    }
+
+    pub fn add(&self, o: &Resources) -> Resources {
+        Resources {
+            luts: self.luts + o.luts,
+            ffs: self.ffs + o.ffs,
+            bram18: self.bram18 + o.bram18,
+            dsps: self.dsps + o.dsps,
+        }
+    }
+
+    pub fn scale(&self, k: u32) -> Resources {
+        Resources {
+            luts: self.luts * k,
+            ffs: self.ffs * k,
+            bram18: self.bram18 * k,
+            dsps: self.dsps * k,
+        }
+    }
+
+    /// Worst-case utilisation fraction against a capacity vector.
+    pub fn utilization(&self, cap: &Resources) -> f64 {
+        let frac = |a: u32, b: u32| {
+            if b == 0 {
+                if a == 0 { 0.0 } else { f64::INFINITY }
+            } else {
+                a as f64 / b as f64
+            }
+        };
+        frac(self.luts, cap.luts)
+            .max(frac(self.ffs, cap.ffs))
+            .max(frac(self.bram18, cap.bram18))
+            .max(frac(self.dsps, cap.dsps))
+    }
+}
+
+/// FPGA family, selects the synthesis technology factors (eda::synth).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Family {
+    Spartan7,
+    Spartan6,
+    Ice40,
+}
+
+/// Static model of one FPGA part.
+#[derive(Debug, Clone)]
+pub struct FpgaDevice {
+    pub name: &'static str,
+    pub family: Family,
+    /// Process node in nm (drives the dynamic-power coefficient).
+    pub node_nm: u32,
+    pub resources: Resources,
+    /// Static (leakage + fixed) power with the fabric configured and idle.
+    pub static_power: Watts,
+    /// Power drawn while the configuration controller is loading.
+    pub config_power: Watts,
+    /// Full configuration bitstream length in bytes.
+    pub bitstream_bytes: u32,
+    /// Configuration interface clock.
+    pub config_clock: Hertz,
+    /// Configuration interface width in bits (1 = SPI, 4 = QSPI, 8 = SelectMAP).
+    pub config_width_bits: u32,
+    /// Power-up ramp + PLL lock overhead before configuration can start.
+    pub powerup_s: f64,
+    /// Fabric speed ceiling for simple pipelined logic at this node.
+    pub fmax_ceiling: Hertz,
+    /// Dynamic power per MHz per 1000 LUTs toggling (calibration constant).
+    pub dyn_mw_per_mhz_per_klut: f64,
+}
+
+impl FpgaDevice {
+    /// Raw (uncompressed) configuration time.
+    pub fn config_time_s(&self) -> f64 {
+        let bits = self.bitstream_bytes as f64 * 8.0;
+        bits / (self.config_clock.value() * self.config_width_bits as f64)
+    }
+}
+
+/// The device catalog.
+pub static DEVICES: &[FpgaDevice] = &[
+    FpgaDevice {
+        name: "xc7s6",
+        family: Family::Spartan7,
+        node_nm: 28,
+        resources: Resources::new(3750, 7500, 10, 10),
+        static_power: Watts(0.026),
+        config_power: Watts(0.110),
+        // XC7S6 and XC7S15 share a die: identical bitstream length.
+        bitstream_bytes: 4_310_752 / 8,
+        config_clock: Hertz(66e6),
+        config_width_bits: 1,
+        powerup_s: 1.2e-3,
+        fmax_ceiling: Hertz(160e6),
+        dyn_mw_per_mhz_per_klut: 0.085,
+    },
+    FpgaDevice {
+        name: "xc7s15",
+        family: Family::Spartan7,
+        node_nm: 28,
+        resources: Resources::new(8000, 16_000, 20, 20),
+        static_power: Watts(0.032),
+        config_power: Watts(0.120),
+        bitstream_bytes: 4_310_752 / 8,
+        config_clock: Hertz(66e6),
+        config_width_bits: 1,
+        powerup_s: 1.2e-3,
+        fmax_ceiling: Hertz(160e6),
+        dyn_mw_per_mhz_per_klut: 0.085,
+    },
+    FpgaDevice {
+        name: "xc7s25",
+        family: Family::Spartan7,
+        node_nm: 28,
+        resources: Resources::new(14_600, 29_200, 90, 80),
+        static_power: Watts(0.048),
+        config_power: Watts(0.140),
+        bitstream_bytes: 9_934_432 / 8,
+        config_clock: Hertz(66e6),
+        config_width_bits: 1,
+        powerup_s: 1.2e-3,
+        fmax_ceiling: Hertz(160e6),
+        dyn_mw_per_mhz_per_klut: 0.085,
+    },
+    FpgaDevice {
+        name: "lx9",
+        family: Family::Spartan6,
+        node_nm: 45,
+        resources: Resources::new(5720, 11_440, 32, 16),
+        static_power: Watts(0.041),
+        config_power: Watts(0.130),
+        bitstream_bytes: 2_742_528 / 8,
+        config_clock: Hertz(26e6),
+        config_width_bits: 1,
+        powerup_s: 2.0e-3,
+        fmax_ceiling: Hertz(100e6),
+        dyn_mw_per_mhz_per_klut: 0.140,
+    },
+    FpgaDevice {
+        name: "ice40up5k",
+        family: Family::Ice40,
+        node_nm: 40,
+        resources: Resources::new(5280, 5280, 30, 8),
+        // iCE40 UltraPlus headline feature: ~100 uW static.
+        static_power: Watts(0.000_1),
+        config_power: Watts(0.008),
+        bitstream_bytes: 104_161,
+        config_clock: Hertz(20e6),
+        config_width_bits: 1,
+        powerup_s: 0.8e-3,
+        fmax_ceiling: Hertz(48e6),
+        dyn_mw_per_mhz_per_klut: 0.060,
+    },
+];
+
+/// Look a device up by name (case-insensitive).
+pub fn device(name: &str) -> Option<&'static FpgaDevice> {
+    let lower = name.to_ascii_lowercase();
+    DEVICES.iter().find(|d| d.name == lower)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_lookup() {
+        assert_eq!(device("XC7S15").unwrap().resources.luts, 8000);
+        assert!(device("nope").is_none());
+    }
+
+    #[test]
+    fn same_die_same_bitstream() {
+        assert_eq!(
+            device("xc7s6").unwrap().bitstream_bytes,
+            device("xc7s15").unwrap().bitstream_bytes
+        );
+    }
+
+    #[test]
+    fn config_time_plausible() {
+        // XC7S15 over 1-bit SPI @ 66 MHz: ~65 ms
+        let t = device("xc7s15").unwrap().config_time_s();
+        assert!((0.05..0.08).contains(&t), "config time {t}");
+        // iCE40 is much faster to configure (tiny bitstream)
+        assert!(device("ice40up5k").unwrap().config_time_s() < t);
+    }
+
+    #[test]
+    fn fits_and_utilization() {
+        let need = Resources::new(4000, 8000, 8, 12);
+        let s6 = &device("xc7s6").unwrap().resources;
+        let s15 = &device("xc7s15").unwrap().resources;
+        assert!(!need.fits_in(s6));
+        assert!(need.fits_in(s15));
+        assert!((need.utilization(s15) - 0.6).abs() < 1e-9); // dsps 12/20
+    }
+
+    #[test]
+    fn utilization_handles_zero_capacity() {
+        let need = Resources::new(0, 0, 0, 1);
+        let cap = Resources::new(100, 100, 10, 0);
+        assert!(need.utilization(&cap).is_infinite());
+        assert!(!need.fits_in(&cap));
+    }
+
+    #[test]
+    fn static_power_ordering() {
+        // iCE40's static power is orders of magnitude below Spartan-7's.
+        let ice = device("ice40up5k").unwrap().static_power;
+        let s7 = device("xc7s15").unwrap().static_power;
+        assert!(ice.value() * 100.0 < s7.value());
+    }
+
+    #[test]
+    fn resources_arithmetic() {
+        let a = Resources::new(1, 2, 3, 4);
+        let b = a.add(&a).scale(2);
+        assert_eq!(b, Resources::new(4, 8, 12, 16));
+    }
+}

@@ -1,0 +1,11 @@
+//! FPGA device substrate: the part catalog, synthetic bitstreams, the
+//! compression study (E6) and the configuration-controller cost model that
+//! the workload-aware strategies trade against.
+
+pub mod bitstream;
+pub mod compression;
+pub mod config_ctrl;
+pub mod device;
+
+pub use config_ctrl::{ConfigController, ConfigSource};
+pub use device::{device, Family, FpgaDevice, Resources, DEVICES};

@@ -1,0 +1,119 @@
+//! Application-specific knowledge (RQ3, §2.1): the optimisation goal and
+//! the constraint set a deployment scenario imposes on the Generator.
+
+use crate::models::Topology;
+use crate::util::units::Secs;
+use crate::workload::Workload;
+
+/// What the Generator optimises for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Goal {
+    /// Maximise GOPS/s/W of the inference itself (the paper's headline).
+    EnergyEfficiency,
+    /// Minimise whole-system energy per served request under the
+    /// application's workload (includes idle/config energy — the goal the
+    /// combined RQ3 evaluation uses).
+    EnergyPerItem,
+    /// Minimise inference latency.
+    Latency,
+}
+
+/// An application scenario: model + workload + constraints + goal.
+#[derive(Debug, Clone)]
+pub struct AppSpec {
+    pub name: String,
+    pub topology: Topology,
+    pub workload: Workload,
+    pub goal: Goal,
+    /// Hard response-time bound (arrival -> result), if any.
+    pub max_latency: Option<Secs>,
+    /// Worst-case activation error budget, in LSBs of the datapath format.
+    pub max_act_error_lsb: Option<f64>,
+    /// Devices the deployment may use (empty = whole catalog).
+    pub device_allowlist: Vec<&'static str>,
+}
+
+impl AppSpec {
+    /// The paper's three motivating scenarios, used by E7.
+    pub fn soft_sensor() -> AppSpec {
+        AppSpec {
+            name: "soft-sensor".into(),
+            topology: Topology::MlpFluid,
+            // fluid-flow estimation: regular 50ms sensor loop
+            workload: Workload::Periodic {
+                period: Secs::from_ms(50.0),
+            },
+            goal: Goal::EnergyPerItem,
+            max_latency: Some(Secs::from_ms(50.0)),
+            max_act_error_lsb: None,
+            device_allowlist: vec![],
+        }
+    }
+
+    pub fn ecg_monitor() -> AppSpec {
+        AppSpec {
+            name: "ecg-monitor".into(),
+            topology: Topology::CnnEcg,
+            // one beat window per second, Poisson-perturbed heart rate
+            workload: Workload::Poisson {
+                mean_gap: Secs(0.8),
+            },
+            goal: Goal::EnergyPerItem,
+            max_latency: Some(Secs::from_ms(300.0)),
+            max_act_error_lsb: Some(8.0),
+            device_allowlist: vec![],
+        }
+    }
+
+    pub fn har_wearable() -> AppSpec {
+        AppSpec {
+            name: "har-wearable".into(),
+            topology: Topology::LstmHar,
+            // bursty activity recognition windows
+            workload: Workload::Bursty {
+                burst_len: 8,
+                intra_gap: Secs::from_ms(30.0),
+                burst_gap: Secs(2.0),
+            },
+            goal: Goal::EnergyPerItem,
+            max_latency: Some(Secs::from_ms(100.0)),
+            max_act_error_lsb: Some(16.0),
+            device_allowlist: vec!["xc7s6", "xc7s15", "xc7s25"],
+        }
+    }
+
+    pub fn scenarios() -> Vec<AppSpec> {
+        vec![
+            AppSpec::soft_sensor(),
+            AppSpec::ecg_monitor(),
+            AppSpec::har_wearable(),
+        ]
+    }
+
+    pub fn allows_device(&self, name: &str) -> bool {
+        self.device_allowlist.is_empty() || self.device_allowlist.contains(&name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenarios_cover_three_topologies() {
+        let s = AppSpec::scenarios();
+        assert_eq!(s.len(), 3);
+        let topos: Vec<_> = s.iter().map(|a| a.topology).collect();
+        assert!(topos.contains(&Topology::MlpFluid));
+        assert!(topos.contains(&Topology::CnnEcg));
+        assert!(topos.contains(&Topology::LstmHar));
+    }
+
+    #[test]
+    fn allowlist_semantics() {
+        let spec = AppSpec::har_wearable();
+        assert!(spec.allows_device("xc7s15"));
+        assert!(!spec.allows_device("ice40up5k"));
+        assert!(AppSpec::soft_sensor().allows_device("ice40up5k"));
+    }
+}

@@ -1,0 +1,274 @@
+//! The Generator's design space (§2.2): the cross product of RTL template
+//! parameters, datapath formats, devices, clocks and workload strategies.
+
+use crate::fpga::device::{FpgaDevice, DEVICES};
+use crate::rtl::activation::{ActImpl, ActKind, ActVariant};
+use crate::rtl::composition::BuildOpts;
+use crate::rtl::fixed_point::{QFormat, Q12_6, Q16_8, Q8_4};
+
+/// Which workload-handling strategy a candidate deploys with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StrategyKind {
+    OnOff,
+    IdleWait,
+    ClockScale,
+    PredefinedThreshold,
+    LearnableThreshold,
+}
+
+impl StrategyKind {
+    pub fn all() -> &'static [StrategyKind] {
+        &[
+            StrategyKind::OnOff,
+            StrategyKind::IdleWait,
+            StrategyKind::ClockScale,
+            StrategyKind::PredefinedThreshold,
+            StrategyKind::LearnableThreshold,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StrategyKind::OnOff => "on-off",
+            StrategyKind::IdleWait => "idle-wait",
+            StrategyKind::ClockScale => "clock-scale",
+            StrategyKind::PredefinedThreshold => "predefined-threshold",
+            StrategyKind::LearnableThreshold => "learnable-threshold",
+        }
+    }
+}
+
+/// One point in the design space.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub device: &'static FpgaDevice,
+    pub fmt: QFormat,
+    pub sigmoid: ActVariant,
+    pub tanh: ActVariant,
+    pub alus: u32,
+    pub pipelined: bool,
+    pub clock_mhz: f64,
+    pub strategy: StrategyKind,
+}
+
+impl Candidate {
+    pub fn build_opts(&self) -> BuildOpts {
+        BuildOpts {
+            fmt: self.fmt,
+            sigmoid: self.sigmoid,
+            tanh: self.tanh,
+            alus: self.alus,
+            pipelined: self.pipelined,
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "{}/{}/{:?}-{:?}/alus{}{}/{}MHz/{}",
+            self.device.name,
+            self.fmt.name(),
+            self.sigmoid.imp,
+            self.tanh.imp,
+            self.alus,
+            if self.pipelined { "/pipe" } else { "/seq" },
+            self.clock_mhz,
+            self.strategy.name()
+        )
+    }
+}
+
+/// Axis definitions (pruned to the values the template library supports).
+pub fn sigmoid_variants() -> Vec<ActVariant> {
+    vec![
+        ActVariant::new(ActKind::Sigmoid, ActImpl::Exact),
+        ActVariant::new(ActKind::Sigmoid, ActImpl::Pla),
+        ActVariant::new(ActKind::Sigmoid, ActImpl::Lut),
+        ActVariant::new(ActKind::HardSigmoid, ActImpl::Hard),
+    ]
+}
+
+pub fn tanh_variants() -> Vec<ActVariant> {
+    vec![
+        ActVariant::new(ActKind::Tanh, ActImpl::Exact),
+        ActVariant::new(ActKind::Tanh, ActImpl::Pla),
+        ActVariant::new(ActKind::Tanh, ActImpl::Lut),
+        ActVariant::new(ActKind::HardTanh, ActImpl::Hard),
+    ]
+}
+
+pub const FORMATS: [QFormat; 3] = [Q16_8, Q12_6, Q8_4];
+pub const ALUS: [u32; 4] = [1, 2, 4, 8];
+pub const CLOCKS_MHZ: [f64; 4] = [25.0, 50.0, 100.0, 150.0];
+
+/// Full enumeration filtered by a device allowlist.  Activation pairs are
+/// tied (same implementation family for sigmoid and tanh) — mixing
+/// families is allowed by the templates but adds nothing the evaluation
+/// needs, and it keeps the space at a size the exhaustive search can
+/// sweep in milliseconds.
+pub fn enumerate(device_allowlist: &[&str]) -> Vec<Candidate> {
+    let mut out = Vec::new();
+    for device in DEVICES {
+        if !device_allowlist.is_empty() && !device_allowlist.contains(&device.name) {
+            continue;
+        }
+        for fmt in FORMATS {
+            for (sig, tan) in sigmoid_variants().into_iter().zip(tanh_variants()) {
+                // LUT variants need frac_bits >= 4
+                if sig.imp == ActImpl::Lut && fmt.frac_bits < 4 {
+                    continue;
+                }
+                for alus in ALUS {
+                    for pipelined in [false, true] {
+                        for clock_mhz in CLOCKS_MHZ {
+                            for strategy in StrategyKind::all() {
+                                out.push(Candidate {
+                                    device,
+                                    fmt,
+                                    sigmoid: sig,
+                                    tanh: tan,
+                                    alus,
+                                    pipelined,
+                                    clock_mhz,
+                                    strategy: *strategy,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Coordinate view of the design space for the heuristic searchers: each
+/// candidate is a 7-vector of axis indices.
+#[derive(Debug, Clone)]
+pub struct Axes {
+    pub devices: Vec<&'static FpgaDevice>,
+    pub formats: Vec<QFormat>,
+    pub act_pairs: Vec<(ActVariant, ActVariant)>,
+    pub alus: Vec<u32>,
+    pub pipelined: Vec<bool>,
+    pub clocks_mhz: Vec<f64>,
+    pub strategies: Vec<StrategyKind>,
+}
+
+/// Number of search axes in [`Axes`] / genome length.
+pub const N_AXES: usize = 7;
+
+impl Axes {
+    pub fn new(device_allowlist: &[&str]) -> Axes {
+        Axes {
+            devices: DEVICES
+                .iter()
+                .filter(|d| device_allowlist.is_empty() || device_allowlist.contains(&d.name))
+                .collect(),
+            formats: FORMATS.to_vec(),
+            act_pairs: sigmoid_variants().into_iter().zip(tanh_variants()).collect(),
+            alus: ALUS.to_vec(),
+            pipelined: vec![false, true],
+            clocks_mhz: CLOCKS_MHZ.to_vec(),
+            strategies: StrategyKind::all().to_vec(),
+        }
+    }
+
+    /// Axis cardinalities, in genome order.
+    pub fn dims(&self) -> [usize; N_AXES] {
+        [
+            self.devices.len(),
+            self.formats.len(),
+            self.act_pairs.len(),
+            self.alus.len(),
+            self.pipelined.len(),
+            self.clocks_mhz.len(),
+            self.strategies.len(),
+        ]
+    }
+
+    /// Materialise a candidate from axis indices (indices are clamped).
+    pub fn candidate(&self, idx: &[usize; N_AXES]) -> Candidate {
+        let clamp = |i: usize, n: usize| i.min(n - 1);
+        let (sig, tan) = self.act_pairs[clamp(idx[2], self.act_pairs.len())];
+        Candidate {
+            device: self.devices[clamp(idx[0], self.devices.len())],
+            fmt: self.formats[clamp(idx[1], self.formats.len())],
+            sigmoid: sig,
+            tanh: tan,
+            alus: self.alus[clamp(idx[3], self.alus.len())],
+            pipelined: self.pipelined[clamp(idx[4], self.pipelined.len())],
+            clock_mhz: self.clocks_mhz[clamp(idx[5], self.clocks_mhz.len())],
+            strategy: self.strategies[clamp(idx[6], self.strategies.len())],
+        }
+    }
+
+    /// Uniformly random genome.
+    pub fn random(&self, rng: &mut crate::util::rng::Rng) -> [usize; N_AXES] {
+        let dims = self.dims();
+        let mut g = [0usize; N_AXES];
+        for (gi, d) in g.iter_mut().zip(dims) {
+            *gi = rng.below(d as u64) as usize;
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_space_size() {
+        let all = enumerate(&[]);
+        // 5 devices x (3 fmts x 4 act pairs - LUT@q8_4 exclusions) x 4 alus
+        // x 2 sched x 4 clocks x 5 strategies
+        assert!(all.len() > 5_000, "{}", all.len());
+        // every candidate is well-formed
+        assert!(all.iter().all(|c| c.alus >= 1 && c.clock_mhz > 0.0));
+    }
+
+    #[test]
+    fn allowlist_filters() {
+        let only = enumerate(&["xc7s6"]);
+        assert!(only.iter().all(|c| c.device.name == "xc7s6"));
+        assert!(!only.is_empty());
+    }
+
+    #[test]
+    fn describe_is_informative() {
+        let c = &enumerate(&["xc7s15"])[0];
+        let d = c.describe();
+        assert!(d.contains("xc7s15"));
+        assert!(d.contains("MHz"));
+    }
+
+    #[test]
+    fn axes_candidate_roundtrip() {
+        let axes = Axes::new(&[]);
+        let dims = axes.dims();
+        assert_eq!(dims[0], DEVICES.len());
+        let c = axes.candidate(&[0, 0, 0, 0, 1, 2, 3]);
+        assert!(c.pipelined);
+        assert_eq!(c.clock_mhz, CLOCKS_MHZ[2]);
+    }
+
+    #[test]
+    fn axes_clamp_out_of_range() {
+        let axes = Axes::new(&["xc7s6"]);
+        let c = axes.candidate(&[99, 99, 99, 99, 99, 99, 99]);
+        assert_eq!(c.device.name, "xc7s6");
+        assert_eq!(c.strategy, *StrategyKind::all().last().unwrap());
+    }
+
+    #[test]
+    fn axes_random_in_bounds() {
+        let axes = Axes::new(&[]);
+        let mut rng = crate::util::rng::Rng::new(1);
+        for _ in 0..100 {
+            let g = axes.random(&mut rng);
+            for (gi, d) in g.iter().zip(axes.dims()) {
+                assert!(*gi < d);
+            }
+        }
+    }
+}

@@ -1,0 +1,261 @@
+//! Analytical candidate estimation and pruning (§2.2 "Exploration and
+//! Estimation").
+//!
+//! For every candidate the estimator runs the full analytical chain —
+//! template instantiation → technology mapping → timing → power → a
+//! closed-form workload-energy model — and checks the application's
+//! constraints.  The closed-form model is deliberately cheap (the
+//! Generator sweeps thousands of candidates); E7 validates its ranking
+//! against the discrete-event simulator on the finalists.
+
+use super::constraints::{AppSpec, Goal};
+use super::design_space::{Candidate, StrategyKind};
+use crate::eda;
+use crate::elastic_node::Platform;
+use crate::fpga::ConfigController;
+use crate::power;
+use crate::rtl::composition::{build, Accelerator};
+use crate::sim;
+use crate::strategy::CostModel;
+use crate::util::units::{Hertz, Joules, Secs};
+
+/// Estimated performance of one candidate under one application.
+#[derive(Debug, Clone)]
+pub struct Estimate {
+    pub candidate: Candidate,
+    pub feasible: bool,
+    pub reject_reason: Option<&'static str>,
+    /// Pure inference latency.
+    pub latency: Secs,
+    /// Worst-case response latency under the chosen strategy (includes
+    /// reconfiguration when the strategy may power off).
+    pub response_latency: Secs,
+    pub gops_per_watt: f64,
+    pub energy_per_item: Joules,
+    pub act_error_lsb: f64,
+    pub utilization: f64,
+}
+
+impl Estimate {
+    /// Scalar score, higher is better (used by all search algorithms).
+    pub fn score(&self, goal: Goal) -> f64 {
+        if !self.feasible {
+            return f64::NEG_INFINITY;
+        }
+        match goal {
+            Goal::EnergyEfficiency => self.gops_per_watt,
+            Goal::EnergyPerItem => -self.energy_per_item.value(),
+            Goal::Latency => -self.response_latency.value(),
+        }
+    }
+}
+
+/// Build the cost model a candidate's strategy would see.
+pub fn candidate_cost_model(acc: &Accelerator, c: &Candidate) -> CostModel {
+    let platform = Platform::default();
+    let config = ConfigController::raw(c.device);
+    sim::cost_model(acc, c.device, Hertz::from_mhz(c.clock_mhz), &platform, &config)
+}
+
+/// Closed-form mean energy per served item for a strategy at mean gap `g`.
+pub fn strategy_energy_per_item(cost: &CostModel, kind: StrategyKind, g: Secs) -> Joules {
+    let busy = cost.busy_power * cost.busy_time;
+    let idle_gap = Secs((g.value() - cost.busy_time.value()).max(0.0));
+    let idle = cost.idle_power * idle_gap;
+    let onoff = cost.cold_energy + cost.off_power * idle_gap;
+    match kind {
+        StrategyKind::OnOff => busy + onoff,
+        StrategyKind::IdleWait => busy + idle,
+        StrategyKind::ClockScale => {
+            // stretch the inference across ~the whole gap; dynamic energy is
+            // f-invariant to first order, static burns for the full gap
+            let t = g.value().max(cost.busy_time.value());
+            let dyn_e = (cost.busy_power.value() - cost.idle_power.value())
+                * cost.busy_time.value();
+            Joules(dyn_e + cost.idle_power.value() * t)
+        }
+        // threshold switches: the oracle bound (they approach the better
+        // side of the crossover; the learnable variant tracks it under
+        // drift — E4 quantifies the gap to this bound)
+        StrategyKind::PredefinedThreshold | StrategyKind::LearnableThreshold => {
+            busy + Joules(idle.value().min(onoff.value()))
+        }
+    }
+}
+
+/// Template-level cache key: candidates differing only in clock/strategy
+/// share one built accelerator (20 reuses per template point on the full
+/// axes — the §Perf memoisation, ~3x on exhaustive sweeps).
+type AccKey = (crate::models::Topology, &'static str, (u32, u32), u8, u8, u32, bool);
+
+fn acc_key(spec: &AppSpec, c: &Candidate) -> AccKey {
+    (
+        spec.topology,
+        c.device.name,
+        (c.fmt.total_bits, c.fmt.frac_bits),
+        c.sigmoid.imp as u8,
+        c.tanh.imp as u8,
+        c.alus,
+        c.pipelined,
+    )
+}
+
+/// Accelerator-build cache for DSE sweeps.
+#[derive(Default)]
+pub struct EstimatorCache {
+    built: std::collections::HashMap<AccKey, Accelerator>,
+}
+
+impl EstimatorCache {
+    pub fn new() -> EstimatorCache {
+        EstimatorCache::default()
+    }
+
+    fn get(&mut self, spec: &AppSpec, c: &Candidate) -> &Accelerator {
+        self.built
+            .entry(acc_key(spec, c))
+            .or_insert_with(|| build(spec.topology, &c.build_opts()))
+    }
+}
+
+/// Evaluate one candidate against an application spec.
+pub fn estimate(spec: &AppSpec, c: &Candidate) -> Estimate {
+    let acc = build(spec.topology, &c.build_opts());
+    estimate_with_acc(spec, c, &acc)
+}
+
+/// Cached variant for sweeps (see [`EstimatorCache`]).
+pub fn estimate_cached(spec: &AppSpec, c: &Candidate, cache: &mut EstimatorCache) -> Estimate {
+    let acc = cache.get(spec, c);
+    estimate_with_acc(spec, c, acc)
+}
+
+fn estimate_with_acc(spec: &AppSpec, c: &Candidate, acc: &Accelerator) -> Estimate {
+    let clock = Hertz::from_mhz(c.clock_mhz);
+    let synth = eda::synthesize(acc, c.device);
+    let latency = acc.latency(clock);
+    let act_error_lsb = c
+        .sigmoid
+        .max_error_lsb(c.fmt)
+        .max(c.tanh.max_error_lsb(c.fmt));
+
+    let cost = candidate_cost_model(acc, c);
+    let g = spec.workload.mean_gap();
+    let energy_per_item = strategy_energy_per_item(&cost, c.strategy, g);
+    let may_power_off = matches!(
+        c.strategy,
+        StrategyKind::OnOff | StrategyKind::PredefinedThreshold | StrategyKind::LearnableThreshold
+    );
+    let response_latency = if may_power_off {
+        latency + cost.cold_time
+    } else if c.strategy == StrategyKind::ClockScale {
+        // stretched inference fills the period
+        Secs(latency.value().max(g.value() * 0.9))
+    } else {
+        latency
+    };
+
+    let mut reject: Option<&'static str> = None;
+    if !spec.allows_device(c.device.name) {
+        reject = Some("device not allowed");
+    } else if !synth.fits {
+        reject = Some("over capacity");
+    } else if !eda::meets_timing(&synth, c.device, clock) {
+        reject = Some("timing violated");
+    } else if latency.value() >= g.value() {
+        reject = Some("cannot sustain workload rate");
+    } else if let Some(maxl) = spec.max_latency {
+        if response_latency.value() > maxl.value() {
+            reject = Some("latency bound violated");
+        }
+    }
+    if reject.is_none() {
+        if let Some(max_err) = spec.max_act_error_lsb {
+            if act_error_lsb > max_err {
+                reject = Some("activation error budget exceeded");
+            }
+        }
+    }
+
+    Estimate {
+        candidate: c.clone(),
+        feasible: reject.is_none(),
+        reject_reason: reject,
+        latency,
+        response_latency,
+        gops_per_watt: power::gops_per_watt(acc, c.device, clock),
+        energy_per_item,
+        act_error_lsb,
+        utilization: synth.utilization,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generator::design_space::enumerate;
+
+    #[test]
+    fn some_candidates_feasible_for_each_scenario() {
+        for spec in AppSpec::scenarios() {
+            let feasible = enumerate(&[])
+                .iter()
+                .map(|c| estimate(&spec, c))
+                .filter(|e| e.feasible)
+                .count();
+            assert!(feasible > 10, "{}: {feasible} feasible", spec.name);
+        }
+    }
+
+    #[test]
+    fn cached_estimate_identical_to_uncached() {
+        let spec = AppSpec::soft_sensor();
+        let mut cache = EstimatorCache::new();
+        for c in enumerate(&["xc7s15"]).iter().take(300) {
+            let a = estimate(&spec, c);
+            let b = estimate_cached(&spec, c, &mut cache);
+            assert_eq!(a.feasible, b.feasible);
+            assert_eq!(a.energy_per_item.value(), b.energy_per_item.value());
+            assert_eq!(a.gops_per_watt, b.gops_per_watt);
+        }
+    }
+
+    #[test]
+    fn infeasible_scores_neg_infinity() {
+        let spec = AppSpec::har_wearable();
+        let bad = enumerate(&["ice40up5k"]); // not in the allowlist
+        let e = estimate(&spec, &bad[0]);
+        assert!(!e.feasible);
+        assert_eq!(e.score(Goal::EnergyPerItem), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn idle_beats_onoff_at_short_gap_in_closed_form() {
+        let spec = AppSpec::soft_sensor(); // 50ms period
+        let cands = enumerate(&["xc7s15"]);
+        let idle = cands
+            .iter()
+            .find(|c| c.strategy == StrategyKind::IdleWait && c.pipelined && c.clock_mhz == 100.0)
+            .unwrap();
+        let mut onoff = idle.clone();
+        onoff.strategy = StrategyKind::OnOff;
+        let e_idle = estimate(&spec, idle);
+        let e_onoff = estimate(&spec, &onoff);
+        assert!(e_idle.energy_per_item.value() < e_onoff.energy_per_item.value());
+    }
+
+    #[test]
+    fn threshold_oracle_never_worse_than_either_side() {
+        let spec = AppSpec::ecg_monitor();
+        for c in enumerate(&["xc7s6"]).iter().take(200) {
+            let acc = build(spec.topology, &c.build_opts());
+            let cost = candidate_cost_model(&acc, c);
+            let g = spec.workload.mean_gap();
+            let th = strategy_energy_per_item(&cost, StrategyKind::PredefinedThreshold, g);
+            let idle = strategy_energy_per_item(&cost, StrategyKind::IdleWait, g);
+            let onoff = strategy_energy_per_item(&cost, StrategyKind::OnOff, g);
+            assert!(th.value() <= idle.value() + 1e-15);
+            assert!(th.value() <= onoff.value() + 1e-15);
+        }
+    }
+}

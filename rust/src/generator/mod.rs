@@ -1,0 +1,18 @@
+//! The *Generator* (§2.2, RQ3): application-specific knowledge + RTL
+//! templates + workload-aware strategies → energy-optimal accelerator
+//! configurations.
+//!
+//! * [`constraints`] — application scenario specs (goal + constraints).
+//! * [`design_space`] — the candidate cross-product and its axis view.
+//! * [`estimator`] — analytical evaluation + constraint pruning.
+//! * [`search`] — exhaustive / greedy / annealing / genetic + Pareto.
+
+pub mod constraints;
+pub mod design_space;
+pub mod estimator;
+pub mod search;
+
+pub use constraints::{AppSpec, Goal};
+pub use design_space::{Candidate, StrategyKind};
+pub use estimator::{estimate, Estimate};
+pub use search::{generate, SearchResult, Searcher};

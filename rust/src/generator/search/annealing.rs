@@ -1,0 +1,122 @@
+//! Simulated annealing: random single-axis neighbour moves with a
+//! geometric temperature schedule.  Infeasible states are admitted early
+//! (scored by a large penalty instead of -inf) so the walk can cross
+//! infeasible ridges, and frozen out as the temperature drops.
+
+use super::{SearchResult, Searcher};
+use crate::generator::constraints::AppSpec;
+use crate::generator::design_space::{Axes, Candidate, N_AXES};
+use crate::generator::estimator::{estimate, Estimate};
+use crate::util::rng::Rng;
+
+pub struct Annealing {
+    pub seed: u64,
+    pub steps: usize,
+    pub t0: f64,
+    pub cooling: f64,
+}
+
+impl Default for Annealing {
+    fn default() -> Annealing {
+        Annealing {
+            seed: 11,
+            steps: 800,
+            t0: 1.0,
+            cooling: 0.995,
+        }
+    }
+}
+
+/// Soft score: feasible candidates keep their goal score; infeasible ones
+/// are pushed far below any feasible value but remain comparable.
+fn soft_score(e: &Estimate, spec: &AppSpec) -> f64 {
+    if e.feasible {
+        e.score(spec.goal)
+    } else {
+        -1e12 * (1.0 + e.utilization)
+    }
+}
+
+impl Searcher for Annealing {
+    fn name(&self) -> &'static str {
+        "annealing"
+    }
+
+    fn search(&mut self, spec: &AppSpec, _space: &[Candidate]) -> SearchResult {
+        let axes = Axes::new(&[]);
+        let dims = axes.dims();
+        let mut rng = Rng::new(self.seed);
+        let mut evals = 0usize;
+
+        let mut g = axes.random(&mut rng);
+        let mut cur = estimate(spec, &axes.candidate(&g));
+        evals += 1;
+        let mut cur_s = soft_score(&cur, spec);
+        let mut best: Option<Estimate> = cur.feasible.then(|| cur.clone());
+        let mut best_s = if cur.feasible { cur_s } else { f64::NEG_INFINITY };
+
+        // normalise the acceptance scale to typical score magnitudes
+        let scale = cur_s.abs().max(1e-6);
+        let mut temp = self.t0;
+
+        for _ in 0..self.steps {
+            let axis = rng.below(N_AXES as u64) as usize;
+            let old = g[axis];
+            let mut new = rng.below(dims[axis] as u64) as usize;
+            if new == old {
+                new = (new + 1) % dims[axis];
+            }
+            g[axis] = new;
+            let e = estimate(spec, &axes.candidate(&g));
+            evals += 1;
+            let s = soft_score(&e, spec);
+            let accept = s >= cur_s || {
+                let d = (s - cur_s) / scale;
+                rng.chance((d / temp).exp())
+            };
+            if accept {
+                cur_s = s;
+                cur = e;
+                if cur.feasible && cur_s > best_s {
+                    best_s = cur_s;
+                    best = Some(cur.clone());
+                }
+            } else {
+                g[axis] = old;
+            }
+            temp *= self.cooling;
+        }
+
+        SearchResult {
+            best,
+            evaluations: evals,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generator::design_space::enumerate;
+    use crate::generator::search::exhaustive::Exhaustive;
+
+    #[test]
+    fn annealing_finds_feasible_near_optimum() {
+        let spec = AppSpec::har_wearable();
+        let space = enumerate(&[]);
+        let opt = Exhaustive.search(&spec, &space).best.unwrap();
+        let got = Annealing::default().search(&spec, &space).best.unwrap();
+        assert!(got.feasible);
+        let ratio = got.energy_per_item.value() / opt.energy_per_item.value();
+        assert!(ratio < 2.0, "annealing {ratio}x worse than optimum");
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let spec = AppSpec::soft_sensor();
+        let space = enumerate(&[]);
+        let a = Annealing::default().search(&spec, &space).best.unwrap();
+        let b = Annealing::default().search(&spec, &space).best.unwrap();
+        assert_eq!(a.candidate.describe(), b.candidate.describe());
+    }
+}

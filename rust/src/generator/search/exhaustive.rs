@@ -1,0 +1,92 @@
+//! Exhaustive sweep: evaluate every candidate, keep the best feasible one.
+//! On the pruned space (~10^4 points) this completes in well under a
+//! second and serves as the optimality reference for the heuristics.
+
+use super::{SearchResult, Searcher};
+use crate::generator::constraints::AppSpec;
+use crate::generator::design_space::Candidate;
+use crate::generator::estimator::{estimate_cached, Estimate, EstimatorCache};
+
+#[derive(Debug, Default)]
+pub struct Exhaustive;
+
+impl Searcher for Exhaustive {
+    fn name(&self) -> &'static str {
+        "exhaustive"
+    }
+
+    fn search(&mut self, spec: &AppSpec, space: &[Candidate]) -> SearchResult {
+        let mut best: Option<Estimate> = None;
+        let mut cache = EstimatorCache::new();
+        for c in space {
+            let e = estimate_cached(spec, c, &mut cache);
+            if !e.feasible {
+                continue;
+            }
+            let better = match &best {
+                None => true,
+                Some(b) => e.score(spec.goal) > b.score(spec.goal),
+            };
+            if better {
+                best = Some(e);
+            }
+        }
+        SearchResult {
+            best,
+            evaluations: space.len(),
+        }
+    }
+}
+
+/// Full ranking (used by the Pareto analysis and reports).
+pub fn rank(spec: &AppSpec, space: &[Candidate]) -> Vec<Estimate> {
+    let mut cache = EstimatorCache::new();
+    let mut es: Vec<Estimate> = space
+        .iter()
+        .map(|c| estimate_cached(spec, c, &mut cache))
+        .filter(|e| e.feasible)
+        .collect();
+    es.sort_by(|a, b| {
+        b.score(spec.goal)
+            .partial_cmp(&a.score(spec.goal))
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    es
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generator::design_space::enumerate;
+
+    #[test]
+    fn finds_a_feasible_best_per_scenario() {
+        let space = enumerate(&[]);
+        for spec in AppSpec::scenarios() {
+            let r = Exhaustive.search(&spec, &space);
+            let best = r.best.expect(&spec.name);
+            assert!(best.feasible);
+            assert_eq!(r.evaluations, space.len());
+        }
+    }
+
+    #[test]
+    fn rank_is_sorted_and_feasible() {
+        let spec = AppSpec::soft_sensor();
+        let space = enumerate(&["xc7s6", "xc7s15"]);
+        let ranked = rank(&spec, &space);
+        assert!(!ranked.is_empty());
+        assert!(ranked.windows(2).all(|w| {
+            w[0].score(spec.goal) >= w[1].score(spec.goal)
+        }));
+    }
+
+    #[test]
+    fn best_matches_rank_head() {
+        let spec = AppSpec::ecg_monitor();
+        let space = enumerate(&["xc7s15"]);
+        let best = Exhaustive.search(&spec, &space).best.unwrap();
+        let head = &rank(&spec, &space)[0];
+        assert_eq!(best.score(spec.goal), head.score(spec.goal));
+    }
+}

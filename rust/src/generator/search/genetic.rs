@@ -1,0 +1,131 @@
+//! Genetic search: tournament selection, uniform crossover, per-axis
+//! mutation, elitism.  Genomes are the 7-axis index vectors of
+//! `design_space::Axes`.
+
+use super::{SearchResult, Searcher};
+use crate::generator::constraints::AppSpec;
+use crate::generator::design_space::{Axes, Candidate, N_AXES};
+use crate::generator::estimator::{estimate, Estimate};
+use crate::util::rng::Rng;
+
+pub struct Genetic {
+    pub seed: u64,
+    pub population: usize,
+    pub generations: usize,
+    pub mutation_rate: f64,
+    pub elite: usize,
+}
+
+impl Default for Genetic {
+    fn default() -> Genetic {
+        Genetic {
+            seed: 13,
+            population: 40,
+            generations: 18,
+            mutation_rate: 0.15,
+            elite: 4,
+        }
+    }
+}
+
+type Genome = [usize; N_AXES];
+
+fn fitness(e: &Estimate, spec: &AppSpec) -> f64 {
+    if e.feasible {
+        e.score(spec.goal)
+    } else {
+        -1e12 * (1.0 + e.utilization)
+    }
+}
+
+impl Searcher for Genetic {
+    fn name(&self) -> &'static str {
+        "genetic"
+    }
+
+    fn search(&mut self, spec: &AppSpec, _space: &[Candidate]) -> SearchResult {
+        let axes = Axes::new(&[]);
+        let dims = axes.dims();
+        let mut rng = Rng::new(self.seed);
+        let mut evals = 0usize;
+
+        let eval = |g: &Genome, evals: &mut usize| -> (Estimate, f64) {
+            let e = estimate(spec, &axes.candidate(g));
+            *evals += 1;
+            let f = fitness(&e, spec);
+            (e, f)
+        };
+
+        let mut pop: Vec<(Genome, Estimate, f64)> = (0..self.population)
+            .map(|_| {
+                let g = axes.random(&mut rng);
+                let (e, f) = eval(&g, &mut evals);
+                (g, e, f)
+            })
+            .collect();
+
+        for _ in 0..self.generations {
+            pop.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap_or(std::cmp::Ordering::Equal));
+            let mut next: Vec<(Genome, Estimate, f64)> = pop[..self.elite.min(pop.len())].to_vec();
+
+            while next.len() < self.population {
+                // tournament of 3 for each parent
+                let pick = |rng: &mut Rng| -> usize {
+                    (0..3)
+                        .map(|_| rng.below(pop.len() as u64) as usize)
+                        .min_by(|&a, &b| {
+                            pop[b].2.partial_cmp(&pop[a].2).unwrap_or(std::cmp::Ordering::Equal)
+                        })
+                        .unwrap()
+                };
+                let (pa, pb) = (pick(&mut rng), pick(&mut rng));
+                let mut child: Genome = [0; N_AXES];
+                for i in 0..N_AXES {
+                    child[i] = if rng.chance(0.5) { pop[pa].0[i] } else { pop[pb].0[i] };
+                    if rng.chance(self.mutation_rate) {
+                        child[i] = rng.below(dims[i] as u64) as usize;
+                    }
+                }
+                let (e, f) = eval(&child, &mut evals);
+                next.push((child, e, f));
+            }
+            pop = next;
+        }
+
+        pop.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap_or(std::cmp::Ordering::Equal));
+        let best = pop.into_iter().map(|(_, e, _)| e).find(|e| e.feasible);
+        SearchResult { best, evaluations: evals }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generator::design_space::enumerate;
+    use crate::generator::search::exhaustive::Exhaustive;
+
+    #[test]
+    fn genetic_near_optimum_with_budget() {
+        let spec = AppSpec::ecg_monitor();
+        let space = enumerate(&[]);
+        let opt = Exhaustive.search(&spec, &space).best.unwrap();
+        let r = Genetic::default().search(&spec, &space);
+        let got = r.best.unwrap();
+        let ratio = got.energy_per_item.value() / opt.energy_per_item.value();
+        assert!(ratio < 2.0, "genetic {ratio}x worse");
+        assert!(r.evaluations < space.len(), "no budget saving");
+    }
+
+    #[test]
+    fn elitism_preserves_best() {
+        // the final best must never be worse than a pure random sample of
+        // the same budget (sanity against regressions in selection)
+        let spec = AppSpec::soft_sensor();
+        let space = enumerate(&[]);
+        let g = Genetic { generations: 6, ..Default::default() }
+            .search(&spec, &space)
+            .best
+            .unwrap();
+        assert!(g.feasible);
+    }
+}

@@ -1,0 +1,43 @@
+//! Search algorithms over the design space (§4 "implement search
+//! algorithms ... to explore combinations of inputs").
+//!
+//! Four searchers with one interface, plus the Pareto front:
+//!
+//! * [`exhaustive`] — the ground truth on this space (~10^4 points).
+//! * [`greedy`] — coordinate ascent from a feasible seed.
+//! * [`annealing`] — simulated annealing with per-axis neighbour moves.
+//! * [`genetic`] — a small GA (tournament selection, uniform crossover).
+//!
+//! The ablation bench (E7) reports how close each heuristic gets to the
+//! exhaustive optimum at what fraction of the evaluation budget.
+
+pub mod annealing;
+pub mod exhaustive;
+pub mod genetic;
+pub mod greedy;
+pub mod pareto;
+
+use super::constraints::AppSpec;
+use super::design_space::Candidate;
+use super::estimator::Estimate;
+
+/// Result of one search run.
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    pub best: Option<Estimate>,
+    /// Number of estimator evaluations spent.
+    pub evaluations: usize,
+}
+
+/// Common interface so benches can sweep searchers uniformly.
+pub trait Searcher {
+    fn name(&self) -> &'static str;
+    fn search(&mut self, spec: &AppSpec, space: &[Candidate]) -> SearchResult;
+}
+
+/// Convenience: the generator's default pipeline — exhaustive search over
+/// the (already small) pruned space.
+pub fn generate(spec: &AppSpec) -> SearchResult {
+    let space = super::design_space::enumerate(&[]);
+    exhaustive::Exhaustive.search(spec, &space)
+}

@@ -1,0 +1,92 @@
+//! Pareto-front extraction over the multi-objective view of the design
+//! space: (energy per item, response latency, worst-dimension
+//! utilisation).  The Generator's single-goal searches optimise a scalar;
+//! the front is what the evaluation reports show a designer.
+
+use crate::generator::estimator::Estimate;
+
+/// Objective vector (all minimised).
+pub fn objectives(e: &Estimate) -> [f64; 3] {
+    [
+        e.energy_per_item.value(),
+        e.response_latency.value(),
+        e.utilization,
+    ]
+}
+
+/// `a` dominates `b` iff a <= b on all objectives and < on at least one.
+pub fn dominates(a: &[f64; 3], b: &[f64; 3]) -> bool {
+    let mut strictly = false;
+    for i in 0..3 {
+        if a[i] > b[i] {
+            return false;
+        }
+        if a[i] < b[i] {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// Non-dominated subset (simple O(n^2), fine at this scale).
+pub fn front(estimates: &[Estimate]) -> Vec<Estimate> {
+    let objs: Vec<[f64; 3]> = estimates.iter().map(objectives).collect();
+    estimates
+        .iter()
+        .enumerate()
+        .filter(|(i, e)| {
+            e.feasible
+                && !objs
+                    .iter()
+                    .enumerate()
+                    .any(|(j, o)| j != *i && estimates[j].feasible && dominates(o, &objs[*i]))
+        })
+        .map(|(_, e)| e.clone())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generator::constraints::AppSpec;
+    use crate::generator::design_space::enumerate;
+    use crate::generator::estimator::estimate;
+
+    #[test]
+    fn dominates_semantics() {
+        assert!(dominates(&[1.0, 1.0, 1.0], &[2.0, 1.0, 1.0]));
+        assert!(!dominates(&[1.0, 1.0, 1.0], &[1.0, 1.0, 1.0]));
+        assert!(!dominates(&[1.0, 2.0, 0.0], &[2.0, 1.0, 0.0]));
+    }
+
+    #[test]
+    fn front_is_nondominated_and_nonempty() {
+        let spec = AppSpec::soft_sensor();
+        let es: Vec<Estimate> = enumerate(&["xc7s6", "xc7s15"])
+            .iter()
+            .map(|c| estimate(&spec, c))
+            .collect();
+        let f = front(&es);
+        assert!(!f.is_empty());
+        assert!(f.len() < es.iter().filter(|e| e.feasible).count());
+        // no member dominates another
+        for a in &f {
+            for b in &f {
+                let (oa, ob) = (objectives(a), objectives(b));
+                if oa != ob {
+                    assert!(!dominates(&oa, &ob) || !dominates(&ob, &oa));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn front_members_feasible() {
+        let spec = AppSpec::ecg_monitor();
+        let es: Vec<Estimate> = enumerate(&["xc7s15"])
+            .iter()
+            .map(|c| estimate(&spec, c))
+            .collect();
+        assert!(front(&es).iter().all(|e| e.feasible));
+    }
+}

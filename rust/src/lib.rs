@@ -1,0 +1,54 @@
+//! # elastic-gen
+//!
+//! Reproduction of *"Leveraging Application-Specific Knowledge for
+//! Energy-Efficient Deep Learning Accelerators on Resource-Constrained
+//! FPGAs"* (Qian, CS.AR 2025) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1/L2 (build-time Python)** — bit-true fixed-point Pallas kernels
+//!   and JAX model graphs, AOT-lowered to HLO-text artifacts
+//!   (`python/compile/`, `make artifacts`).
+//! * **L3 (this crate)** — the paper's contribution: the accelerator
+//!   *Generator* (design-space exploration over RTL templates ×
+//!   workload-aware strategies × application constraints), every substrate
+//!   it needs (FPGA device models, EDA estimation, behavioural simulation,
+//!   discrete-event energy simulation, the Elastic Node testbed emulation)
+//!   and a serving coordinator that executes the compiled artifacts via
+//!   the PJRT CPU client.
+//!
+//! See DESIGN.md for the module inventory and the experiment index
+//! (E1-E8), EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod behav;
+pub mod bench;
+pub mod coordinator;
+pub mod eda;
+pub mod elastic_node;
+pub mod fpga;
+pub mod generator;
+pub mod models;
+pub mod power;
+pub mod rtl;
+pub mod runtime;
+pub mod sim;
+pub mod strategy;
+pub mod util;
+pub mod workload;
+
+/// Workspace-relative artifacts directory (overridable via ELASTIC_ARTIFACTS).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("ELASTIC_ARTIFACTS") {
+        return p.into();
+    }
+    // look upward from cwd for an `artifacts/` directory (so tests,
+    // examples and benches work from any workspace subdirectory)
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !dir.pop() {
+            return "artifacts".into();
+        }
+    }
+}

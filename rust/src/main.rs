@@ -1,0 +1,275 @@
+//! `elastic-gen` CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!
+//! * `generate` — run the Generator for an application scenario and print
+//!   the winning configuration + its EDA report (Fig. 1 end-to-end).
+//! * `report`   — EDA-style report for an explicit design point.
+//! * `simulate` — workload simulation comparing all strategies.
+//! * `serve`    — load compiled artifacts and serve a synthetic request
+//!   stream through the PJRT engine, printing latency metrics.
+//! * `devices`  — print the device catalog.
+//! * `verify`   — cross-check PJRT execution and the behavioural
+//!   simulator against the golden vectors.
+
+use elastic_gen::coordinator::{Coordinator, CoordinatorConfig};
+use elastic_gen::eda;
+use elastic_gen::elastic_node::Platform;
+use elastic_gen::fpga::{device, ConfigController, DEVICES};
+use elastic_gen::generator::search::exhaustive::rank;
+use elastic_gen::generator::{design_space, AppSpec};
+use elastic_gen::models::Topology;
+use elastic_gen::rtl::composition::{build, BuildOpts};
+use elastic_gen::rtl::fixed_point::QFormat;
+use elastic_gen::runtime::{Golden, Manifest};
+use elastic_gen::sim::{cost_model, NodeSim};
+use elastic_gen::strategy::learnable::LearnableThreshold;
+use elastic_gen::strategy::{ClockScale, IdleWait, OnOff, PredefinedThreshold, Strategy};
+use elastic_gen::util::cli::Args;
+use elastic_gen::util::rng::Rng;
+use elastic_gen::util::table::{num, Table};
+use elastic_gen::util::units::{Hertz, Secs};
+use elastic_gen::workload::Workload;
+
+fn main() {
+    let args = Args::from_env();
+    let r = match args.subcommand() {
+        Some("generate") => cmd_generate(&args),
+        Some("report") => cmd_report(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("devices") => cmd_devices(),
+        Some("verify") => cmd_verify(&args),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    println!(
+        "elastic-gen — energy-efficient DL accelerator generator\n\n\
+         USAGE: elastic-gen <subcommand> [--options]\n\n\
+         SUBCOMMANDS\n\
+           generate  --app <soft-sensor|ecg-monitor|har-wearable> [--top N]\n\
+           report    --model <mlp_fluid|lstm_har|cnn_ecg|attn_tiny> --device <name>\n\
+                     [--clock-mhz 100] [--optimised]\n\
+           simulate  --period-ms <f> [--requests N] [--device <name>]\n\
+           serve     [--requests N] [--artifact <name>]\n\
+           verify    [--artifact <name>]\n\
+           devices"
+    );
+}
+
+fn scenario(name: &str) -> anyhow::Result<AppSpec> {
+    AppSpec::scenarios()
+        .into_iter()
+        .find(|s| s.name == name)
+        .ok_or_else(|| anyhow::anyhow!("unknown app '{name}' (see usage)"))
+}
+
+fn cmd_generate(args: &Args) -> anyhow::Result<()> {
+    let spec = scenario(args.get_or("app", "soft-sensor"))?;
+    let top = args.get_usize("top", 5);
+    println!(
+        "Generating accelerators for '{}' ({} / goal {:?})",
+        spec.name,
+        spec.workload.describe(),
+        spec.goal
+    );
+    let space = design_space::enumerate(&[]);
+    let ranked = rank(&spec, &space);
+    println!(
+        "design space: {} candidates, {} feasible\n",
+        space.len(),
+        ranked.len()
+    );
+    let mut t = Table::new(&[
+        "#", "configuration", "E/item (mJ)", "latency (us)", "GOPS/s/W", "util %",
+    ]);
+    for (i, e) in ranked.iter().take(top).enumerate() {
+        t.row(&[
+            (i + 1).to_string(),
+            e.candidate.describe(),
+            num(e.energy_per_item.mj(), 4),
+            num(e.latency.us(), 1),
+            num(e.gops_per_watt, 2),
+            num(e.utilization * 100.0, 1),
+        ]);
+    }
+    println!("{}", t.render());
+
+    if let Some(best) = ranked.first() {
+        let acc = build(spec.topology, &best.candidate.build_opts());
+        let rep = eda::report(
+            &acc,
+            best.candidate.device,
+            Hertz::from_mhz(best.candidate.clock_mhz),
+        );
+        println!("{}", rep.render());
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> anyhow::Result<()> {
+    let topo = Topology::parse(args.get_or("model", "lstm_har"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+    let dev = device(args.get_or("device", "xc7s15"))
+        .ok_or_else(|| anyhow::anyhow!("unknown device"))?;
+    let clock = Hertz::from_mhz(args.get_f64("clock-mhz", 100.0));
+    let fmt = QFormat::parse(args.get_or("fmt", "q16_8"))
+        .ok_or_else(|| anyhow::anyhow!("bad --fmt"))?;
+    let opts = if args.has_flag("optimised") {
+        BuildOpts::optimised(fmt)
+    } else {
+        BuildOpts::baseline(fmt)
+    };
+    let acc = build(topo, &opts);
+    println!("{}", eda::report(&acc, dev, clock).render());
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let dev = device(args.get_or("device", "xc7s15"))
+        .ok_or_else(|| anyhow::anyhow!("unknown device"))?;
+    let period = Secs::from_ms(args.get_f64("period-ms", 40.0));
+    let n = args.get_usize("requests", 1000);
+    let acc = build(Topology::LstmHar, &BuildOpts::optimised(elastic_gen::rtl::Q16_8));
+    let cost = cost_model(
+        &acc,
+        dev,
+        Hertz::from_mhz(100.0),
+        &Platform::default(),
+        &ConfigController::raw(dev),
+    );
+    let arrivals = Workload::Periodic { period }.arrivals(n, &mut Rng::new(42));
+    let sim = NodeSim::new(cost);
+
+    let mut strategies: Vec<Box<dyn Strategy>> = vec![
+        Box::new(OnOff),
+        Box::new(IdleWait),
+        Box::new(ClockScale),
+        Box::new(PredefinedThreshold::breakeven()),
+        Box::new(LearnableThreshold::default_grid()),
+    ];
+    let mut t = Table::new(&[
+        "strategy", "served", "E total (mJ)", "E/item (mJ)", "p50 lat (ms)", "config (mJ)",
+        "idle (mJ)",
+    ])
+    .with_title(&format!(
+        "Workload simulation: {} requests, period {:.1} ms, {} @100MHz",
+        n,
+        period.ms(),
+        dev.name
+    ));
+    for s in strategies.iter_mut() {
+        let r = sim.run(&arrivals, s.as_mut());
+        let lat = elastic_gen::util::stats::Summary::of(&r.latencies);
+        t.row(&[
+            r.strategy.to_string(),
+            r.served.to_string(),
+            num(r.energy.total().mj(), 2),
+            num(r.energy_per_item().mj(), 4),
+            num(lat.p50 * 1e3, 3),
+            num(r.energy.config.mj(), 2),
+            num(r.energy.idle.mj(), 2),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize("requests", 200);
+    let coord = Coordinator::start(CoordinatorConfig::default())?;
+    let manifest = Manifest::load(&elastic_gen::artifacts_dir())?;
+    let artifact = args.get_or("artifact", "lstm_har.opt").to_string();
+    let meta = manifest
+        .get(&artifact)
+        .ok_or_else(|| anyhow::anyhow!("unknown artifact '{artifact}'"))?;
+    let mut rng = Rng::new(7);
+    println!("serving {n} requests against '{artifact}' ...");
+    for _ in 0..n {
+        let input: Vec<f32> = (0..meta.input_len())
+            .map(|_| (rng.range(-2.0, 2.0) * 256.0).floor() as f32 / 256.0)
+            .collect();
+        let resp = coord.infer(&artifact, input)?;
+        if let Err(e) = &resp.output {
+            anyhow::bail!("inference failed: {e}");
+        }
+    }
+    println!("{}", coord.metrics().snapshot().render());
+    Ok(())
+}
+
+fn cmd_devices() -> anyhow::Result<()> {
+    let mut t = Table::new(&[
+        "device", "family", "LUTs", "FFs", "BRAM18", "DSPs", "static mW", "bitstream kB",
+        "config ms",
+    ])
+    .with_title("FPGA device catalog");
+    for d in DEVICES {
+        t.row(&[
+            d.name.to_string(),
+            format!("{:?}", d.family),
+            d.resources.luts.to_string(),
+            d.resources.ffs.to_string(),
+            d.resources.bram18.to_string(),
+            d.resources.dsps.to_string(),
+            num(d.static_power.mw(), 2),
+            num(d.bitstream_bytes as f64 / 1024.0, 0),
+            num(d.config_time_s() * 1e3, 1),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> anyhow::Result<()> {
+    let dir = elastic_gen::artifacts_dir();
+    let manifest = Manifest::load(&dir)?;
+    let only = args.get("artifact");
+    let engine = elastic_gen::runtime::Engine::load(
+        &dir,
+        &manifest
+            .artifacts
+            .iter()
+            .filter(|a| only.map(|o| a.name == o).unwrap_or(true))
+            .map(|a| a.name.as_str())
+            .collect::<Vec<_>>(),
+    )?;
+    println!("platform: {}", engine.platform());
+    let mut checked = 0;
+    for meta in &manifest.artifacts {
+        if let Some(o) = only {
+            if meta.name != o {
+                continue;
+            }
+        }
+        let golden = Golden::load(&dir, &meta.name)?;
+        for (i, case) in golden.cases.iter().enumerate() {
+            let input: Vec<f32> = case.input.iter().map(|&x| x as f32).collect();
+            let got = engine.infer(&meta.name, &input)?;
+            let tol = 1.5 * meta.fmt.resolution() as f64;
+            for (g, w) in got.iter().zip(&case.output) {
+                if (*g as f64 - w).abs() > tol {
+                    anyhow::bail!(
+                        "{} case {i}: PJRT {} vs golden {} (tol {tol})",
+                        meta.name,
+                        g,
+                        w
+                    );
+                }
+            }
+        }
+        checked += 1;
+        println!("  OK {}", meta.name);
+    }
+    println!("verified {checked} artifacts against golden vectors");
+    Ok(())
+}

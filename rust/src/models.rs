@@ -1,0 +1,113 @@
+//! Model topology catalog — the single Rust-side source of truth for the
+//! network shapes compiled by `python/compile/model.py`.  The constants
+//! must match the python definitions exactly (the cross-layer tests
+//! compare behavioural simulation against the compiled artifacts).
+
+/// One FC layer: (n_in, n_out).
+pub type FcShape = (u32, u32);
+
+/// One conv layer: (c_in, c_out, kernel_width, stride).
+pub type ConvShape = (u32, u32, u32, u32);
+
+/// MLP soft sensor for fluid-flow estimation [4,11].
+pub const MLP_LAYERS: &[FcShape] = &[(8, 16), (16, 8), (8, 1)];
+
+/// LSTM HAR/EEG-style classifier [2,20].
+pub const LSTM_T: u32 = 24;
+pub const LSTM_IN: u32 = 6;
+pub const LSTM_H: u32 = 20;
+pub const LSTM_CLASSES: u32 = 6;
+
+/// 1-D CNN for on-device ECG analysis [3].
+pub const CNN_T: u32 = 128;
+pub const CNN_SPEC: &[ConvShape] = &[(1, 8, 7, 2), (8, 16, 5, 2)];
+pub const CNN_CLASSES: u32 = 5;
+
+/// Tiny transformer attention block (§3.1).
+pub const ATTN_T: u32 = 16;
+pub const ATTN_D: u32 = 16;
+pub const ATTN_CLASSES: u32 = 4;
+
+/// The four model topologies in the artifact set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Topology {
+    MlpFluid,
+    LstmHar,
+    CnnEcg,
+    AttnTiny,
+}
+
+impl Topology {
+    pub fn parse(name: &str) -> Option<Topology> {
+        match name {
+            "mlp_fluid" => Some(Topology::MlpFluid),
+            "lstm_har" => Some(Topology::LstmHar),
+            "cnn_ecg" => Some(Topology::CnnEcg),
+            "attn_tiny" => Some(Topology::AttnTiny),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Topology::MlpFluid => "mlp_fluid",
+            Topology::LstmHar => "lstm_har",
+            Topology::CnnEcg => "cnn_ecg",
+            Topology::AttnTiny => "attn_tiny",
+        }
+    }
+
+    /// Flat input element count.
+    pub fn input_len(&self) -> usize {
+        match self {
+            Topology::MlpFluid => MLP_LAYERS[0].0 as usize,
+            Topology::LstmHar => (LSTM_T * LSTM_IN) as usize,
+            Topology::CnnEcg => CNN_T as usize,
+            Topology::AttnTiny => (ATTN_T * ATTN_D) as usize,
+        }
+    }
+
+    /// Flat output element count.
+    pub fn output_len(&self) -> usize {
+        match self {
+            Topology::MlpFluid => MLP_LAYERS.last().unwrap().1 as usize,
+            Topology::LstmHar => LSTM_CLASSES as usize,
+            Topology::CnnEcg => CNN_CLASSES as usize,
+            Topology::AttnTiny => ATTN_CLASSES as usize,
+        }
+    }
+
+    pub fn all() -> &'static [Topology] {
+        &[
+            Topology::MlpFluid,
+            Topology::LstmHar,
+            Topology::CnnEcg,
+            Topology::AttnTiny,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for t in Topology::all() {
+            assert_eq!(Topology::parse(t.name()), Some(*t));
+        }
+        assert_eq!(Topology::parse("bogus"), None);
+    }
+
+    #[test]
+    fn shapes_match_python() {
+        assert_eq!(Topology::MlpFluid.input_len(), 8);
+        assert_eq!(Topology::MlpFluid.output_len(), 1);
+        assert_eq!(Topology::LstmHar.input_len(), 144);
+        assert_eq!(Topology::LstmHar.output_len(), 6);
+        assert_eq!(Topology::CnnEcg.input_len(), 128);
+        assert_eq!(Topology::CnnEcg.output_len(), 5);
+        assert_eq!(Topology::AttnTiny.input_len(), 256);
+        assert_eq!(Topology::AttnTiny.output_len(), 4);
+    }
+}

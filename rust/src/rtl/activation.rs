@@ -1,0 +1,346 @@
+//! Activation-function RTL template variants (RQ1).
+//!
+//! Functional semantics are the bit-true mirror of
+//! `python/compile/kernels/activations.py`; hardware costs are the
+//! per-variant synthesis profile the Generator's analytical models consume
+//! (calibrated to the template library of [2,5]):
+//!
+//! | impl  | datapath                    | LUT | FF | BRAM | DSP | lat | II |
+//! |-------|-----------------------------|-----|----|------|-----|-----|----|
+//! | Exact | iterative polynomial/CORDIC | 520 | 380| 0    | 2   | 12  | 4  |
+//! | Pla   | PLAN shift+add segments     | 96  | 60 | 0    | 0   | 2   | 1  |
+//! | Lut   | 256-entry BRAM table        | 24  | 20 | 1    | 0   | 2   | 1  |
+//! | Hard  | shift + clamp               | 18  | 16 | 0    | 0   | 1   | 1  |
+//!
+//! `lat` is result latency in cycles, `II` the initiation interval (results
+//! per cycle once the pipeline is primed).
+
+use super::fixed_point::{sra_round, QFormat};
+use crate::fpga::device::Resources;
+
+/// Which mathematical function.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ActKind {
+    Sigmoid,
+    Tanh,
+    HardSigmoid,
+    HardTanh,
+}
+
+/// Which RTL implementation style.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ActImpl {
+    Exact,
+    Pla,
+    Lut,
+    Hard,
+}
+
+/// A concrete activation variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ActVariant {
+    pub kind: ActKind,
+    pub imp: ActImpl,
+}
+
+/// LUT variant geometry (mirrors activations.py).
+pub const LUT_LO: f64 = -8.0;
+pub const LUT_HI: f64 = 8.0;
+pub const LUT_SIZE: usize = 256;
+
+impl ActVariant {
+    pub fn new(kind: ActKind, imp: ActImpl) -> ActVariant {
+        ActVariant { kind, imp }
+    }
+
+    /// Parse the manifest encoding, e.g. ("sigmoid", "pla").
+    pub fn parse(kind: &str, imp: &str) -> Option<ActVariant> {
+        let kind = match kind {
+            "sigmoid" => ActKind::Sigmoid,
+            "tanh" => ActKind::Tanh,
+            "hardsigmoid" => ActKind::HardSigmoid,
+            "hardtanh" => ActKind::HardTanh,
+            _ => return None,
+        };
+        let imp = match imp {
+            "exact" => ActImpl::Exact,
+            "pla" => ActImpl::Pla,
+            "lut" => ActImpl::Lut,
+            "hard" => ActImpl::Hard,
+            _ => return None,
+        };
+        Some(ActVariant { kind, imp })
+    }
+
+    // -- functional semantics (bit-true) ------------------------------------
+
+    /// Apply the variant to one Q value.
+    pub fn eval(&self, q: i64, fmt: QFormat) -> i64 {
+        match (self.kind, self.imp) {
+            (ActKind::Sigmoid, ActImpl::Exact) => {
+                fmt.quantize(sigmoid_f64(fmt.dequantize(q)))
+            }
+            (ActKind::Sigmoid, ActImpl::Pla) => sigmoid_pla(q, fmt),
+            (ActKind::Sigmoid, ActImpl::Lut) => lut_eval(q, fmt, ActKind::Sigmoid),
+            (ActKind::Tanh, ActImpl::Exact) => fmt.quantize(fmt.dequantize(q).tanh()),
+            (ActKind::Tanh, ActImpl::Pla) => tanh_pla(q, fmt),
+            (ActKind::Tanh, ActImpl::Lut) => lut_eval(q, fmt, ActKind::Tanh),
+            (ActKind::HardSigmoid, _) => hardsigmoid(q, fmt),
+            (ActKind::HardTanh, _) => hardtanh(q, fmt),
+            // manifest encoding: ("sigmoid", "hard") means the hard variant
+            // substituted at the sigmoid position (and likewise for tanh)
+            (ActKind::Sigmoid, ActImpl::Hard) => hardsigmoid(q, fmt),
+            (ActKind::Tanh, ActImpl::Hard) => hardtanh(q, fmt),
+        }
+    }
+
+    pub fn eval_vec(&self, qs: &[i64], fmt: QFormat) -> Vec<i64> {
+        qs.iter().map(|&q| self.eval(q, fmt)).collect()
+    }
+
+    /// Worst-case absolute error vs the real-valued function, in LSBs of
+    /// `fmt` (analytical precision model used as a DSE constraint).
+    pub fn max_error_lsb(&self, fmt: QFormat) -> f64 {
+        let lsb = fmt.resolution();
+        match self.imp {
+            ActImpl::Exact | ActImpl::Hard => 1.0,
+            // PLAN: published max error 0.0189 for sigmoid; tanh doubles it
+            ActImpl::Pla => {
+                let base = match self.kind {
+                    ActKind::Sigmoid => 0.0189,
+                    ActKind::Tanh => 2.0 * 0.0189,
+                    _ => 0.0,
+                };
+                base / lsb + 1.0
+            }
+            // LUT: half-cell * max slope + rounding
+            ActImpl::Lut => {
+                let cell = (LUT_HI - LUT_LO) / LUT_SIZE as f64;
+                let slope = match self.kind {
+                    ActKind::Sigmoid => 0.25,
+                    ActKind::Tanh => 1.0,
+                    _ => 0.0,
+                };
+                (cell / 2.0 * slope) / lsb + 1.0
+            }
+        }
+    }
+
+    // -- hardware profile ----------------------------------------------------
+
+    pub fn resources(&self) -> Resources {
+        match self.imp {
+            ActImpl::Exact => Resources::new(520, 380, 0, 2),
+            ActImpl::Pla => Resources::new(96, 60, 0, 0),
+            ActImpl::Lut => Resources::new(24, 20, 1, 0),
+            ActImpl::Hard => Resources::new(18, 16, 0, 0),
+        }
+    }
+
+    /// Result latency in cycles.
+    pub fn latency(&self) -> u64 {
+        match self.imp {
+            ActImpl::Exact => 12,
+            ActImpl::Pla | ActImpl::Lut => 2,
+            ActImpl::Hard => 1,
+        }
+    }
+
+    /// Initiation interval (cycles between consecutive inputs).
+    pub fn ii(&self) -> u64 {
+        match self.imp {
+            ActImpl::Exact => 4,
+            _ => 1,
+        }
+    }
+
+    /// Combinational path through the unit in ns (drives the fmax model).
+    pub fn logic_delay_ns(&self) -> f64 {
+        match self.imp {
+            ActImpl::Exact => 7.5,
+            ActImpl::Pla => 4.8,
+            ActImpl::Lut => 4.2,
+            ActImpl::Hard => 3.5,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// bit-true implementations (mirror activations.py exactly for the
+// pure-integer paths; Exact routes through f64 and agrees within 1 LSB)
+// ---------------------------------------------------------------------------
+
+fn sigmoid_f64(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// PLAN sigmoid for q >= 0 (see activations.py::_plan_positive).
+fn plan_positive(q: i64, fmt: QFormat) -> i64 {
+    let one = fmt.scale();
+    let b1 = one;
+    let b2 = (19 * one) >> 3;
+    let b3 = 5 * one;
+    if q < b1 {
+        sra_round(q, 2) + (one >> 1)
+    } else if q < b2 {
+        sra_round(q, 3) + ((5 * one) >> 3)
+    } else if q < b3 {
+        sra_round(q, 5) + ((27 * one) >> 5)
+    } else {
+        one
+    }
+}
+
+pub fn sigmoid_pla(q: i64, fmt: QFormat) -> i64 {
+    let one = fmt.scale();
+    let pos = plan_positive(q.abs(), fmt);
+    fmt.saturate(if q < 0 { one - pos } else { pos })
+}
+
+pub fn tanh_pla(q: i64, fmt: QFormat) -> i64 {
+    let one = fmt.scale();
+    let s = sigmoid_pla(2 * q, fmt);
+    fmt.saturate(2 * s - one)
+}
+
+/// BRAM table contents (mirrors activations.py::lut_table).
+pub fn lut_table(kind: ActKind, fmt: QFormat) -> Vec<i64> {
+    let step = (LUT_HI - LUT_LO) / LUT_SIZE as f64;
+    (0..LUT_SIZE)
+        .map(|i| {
+            let mid = i as f64 * step + LUT_LO + step / 2.0;
+            let f = match kind {
+                ActKind::Sigmoid => sigmoid_f64(mid),
+                ActKind::Tanh => mid.tanh(),
+                _ => panic!("no LUT for hard variants"),
+            };
+            (f * fmt.scale() as f64 + 0.5)
+                .floor()
+                .clamp(fmt.qmin() as f64, fmt.qmax() as f64) as i64
+        })
+        .collect()
+}
+
+fn lut_eval(q: i64, fmt: QFormat, kind: ActKind) -> i64 {
+    assert!(fmt.frac_bits >= 4, "LUT variant requires frac_bits >= 4");
+    let shift = fmt.frac_bits - 4;
+    let lo_q = (LUT_LO * fmt.scale() as f64) as i64;
+    let idx = ((q - lo_q) >> shift).clamp(0, LUT_SIZE as i64 - 1) as usize;
+    lut_table(kind, fmt)[idx]
+}
+
+pub fn hardsigmoid(q: i64, fmt: QFormat) -> i64 {
+    let one = fmt.scale();
+    (sra_round(q, 2) + (one >> 1)).clamp(0, one)
+}
+
+pub fn hardtanh(q: i64, fmt: QFormat) -> i64 {
+    let one = fmt.scale();
+    q.clamp(-one, one)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rtl::fixed_point::Q16_8;
+
+    const F: QFormat = Q16_8;
+
+    #[test]
+    fn pla_matches_known_points() {
+        // sigma(0) = 0.5; sigma(1) = 0.75 under PLAN
+        assert_eq!(sigmoid_pla(0, F), F.scale() / 2);
+        assert_eq!(sigmoid_pla(F.scale(), F), (3 * F.scale()) / 4);
+        assert_eq!(sigmoid_pla(8 * F.scale(), F), F.scale());
+        assert_eq!(sigmoid_pla(-8 * F.scale(), F), 0);
+    }
+
+    #[test]
+    fn pla_symmetry() {
+        for q in (-2048..2048).step_by(7) {
+            assert_eq!(sigmoid_pla(-q, F), F.scale() - sigmoid_pla(q, F));
+        }
+    }
+
+    #[test]
+    fn exact_sigmoid_error() {
+        let v = ActVariant::new(ActKind::Sigmoid, ActImpl::Exact);
+        for q in (-2048..2048).step_by(13) {
+            let y = v.eval(q, F);
+            let want = sigmoid_f64(F.dequantize(q));
+            assert!((F.dequantize(y) - want).abs() <= F.resolution());
+        }
+    }
+
+    #[test]
+    fn pla_error_within_model() {
+        let v = ActVariant::new(ActKind::Sigmoid, ActImpl::Pla);
+        let bound = v.max_error_lsb(F) * F.resolution();
+        for q in -2048..2048 {
+            let err = (F.dequantize(v.eval(q, F)) - sigmoid_f64(F.dequantize(q))).abs();
+            assert!(err <= bound, "q={q} err={err}");
+        }
+    }
+
+    #[test]
+    fn lut_error_within_model() {
+        for kind in [ActKind::Sigmoid, ActKind::Tanh] {
+            let v = ActVariant::new(kind, ActImpl::Lut);
+            let bound = v.max_error_lsb(F) * F.resolution();
+            for q in (-2048..2048).step_by(3) {
+                let want = match kind {
+                    ActKind::Sigmoid => sigmoid_f64(F.dequantize(q)),
+                    _ => F.dequantize(q).tanh(),
+                };
+                let err = (F.dequantize(v.eval(q, F)) - want).abs();
+                assert!(err <= bound, "{kind:?} q={q} err={err}");
+            }
+        }
+    }
+
+    #[test]
+    fn hard_variants_clamp() {
+        let one = F.scale();
+        assert_eq!(hardsigmoid(10 * one, F), one);
+        assert_eq!(hardsigmoid(-10 * one, F), 0);
+        assert_eq!(hardsigmoid(0, F), one / 2);
+        assert_eq!(hardtanh(5 * one, F), one);
+        assert_eq!(hardtanh(-5 * one, F), -one);
+        assert_eq!(hardtanh(3, F), 3);
+    }
+
+    #[test]
+    fn lut_saturated_ends() {
+        let t = lut_table(ActKind::Sigmoid, F);
+        assert_eq!(t[0], 0);
+        assert_eq!(t[LUT_SIZE - 1], F.scale());
+        assert!(t.windows(2).all(|w| w[1] >= w[0]));
+    }
+
+    #[test]
+    fn out_of_range_lut_index_clamps() {
+        let v = ActVariant::new(ActKind::Sigmoid, ActImpl::Lut);
+        assert_eq!(v.eval(F.qmin(), F), 0);
+        assert_eq!(v.eval(F.qmax(), F), F.scale());
+    }
+
+    #[test]
+    fn hardware_profile_ordering() {
+        // cheaper variants use strictly fewer LUTs and lower latency
+        let exact = ActVariant::new(ActKind::Sigmoid, ActImpl::Exact);
+        let pla = ActVariant::new(ActKind::Sigmoid, ActImpl::Pla);
+        let hard = ActVariant::new(ActKind::HardSigmoid, ActImpl::Hard);
+        assert!(exact.resources().luts > pla.resources().luts);
+        assert!(pla.resources().luts > hard.resources().luts);
+        assert!(exact.latency() > hard.latency());
+        assert!(exact.logic_delay_ns() > hard.logic_delay_ns());
+    }
+
+    #[test]
+    fn parse_manifest_encoding() {
+        let v = ActVariant::parse("sigmoid", "pla").unwrap();
+        assert_eq!(v.kind, ActKind::Sigmoid);
+        assert_eq!(v.imp, ActImpl::Pla);
+        assert!(ActVariant::parse("sigmoid", "bogus").is_none());
+    }
+}

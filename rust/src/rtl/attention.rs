@@ -1,0 +1,129 @@
+//! Single-head attention RTL template (§3.1 "attention modules in
+//! Transformer models").
+//!
+//! Embedded design point: Q/K/V projections and both matmuls run on the MAC
+//! array; the softmax is a dedicated exact unit (shares the Exact activation
+//! profile scaled by the row reduction).
+
+use super::activation::{ActImpl, ActKind, ActVariant};
+use super::component::{
+    bram18_for_bits, dsps_per_mac, ComponentProfile, BRAM_DELAY_NS, CTRL_FFS, CTRL_LUTS,
+    DSP_DELAY_NS, PIPELINE_FILL,
+};
+use super::fixed_point::QFormat;
+use crate::fpga::device::Resources;
+
+#[derive(Debug, Clone)]
+pub struct AttentionTemplate {
+    pub name: String,
+    /// Sequence length.
+    pub t: u32,
+    /// Head dimension.
+    pub d: u32,
+    pub alus: u32,
+    pub pipelined: bool,
+    pub fmt: QFormat,
+}
+
+impl AttentionTemplate {
+    pub fn new(name: &str, t: u32, d: u32, fmt: QFormat) -> AttentionTemplate {
+        AttentionTemplate {
+            name: name.to_string(),
+            t,
+            d,
+            alus: 1,
+            pipelined: false,
+            fmt,
+        }
+    }
+
+    pub fn with_alus(mut self, alus: u32) -> AttentionTemplate {
+        assert!(alus >= 1);
+        self.alus = alus;
+        self
+    }
+
+    pub fn pipelined(mut self, on: bool) -> AttentionTemplate {
+        self.pipelined = on;
+        self
+    }
+
+    pub fn macs(&self) -> u64 {
+        let (t, d) = (self.t as u64, self.d as u64);
+        // projections: 3 * T*d*d; scores: T*T*d; weighted sum: T*T*d
+        3 * t * d * d + 2 * t * t * d
+    }
+
+    /// Softmax unit modelled as an exact transcendental per score row
+    /// element (exp) plus the division pass.
+    fn softmax_cycles(&self) -> u64 {
+        let exact = ActVariant::new(ActKind::Sigmoid, ActImpl::Exact);
+        let elems = self.t as u64 * self.t as u64;
+        elems * exact.ii() + 2 * self.t as u64 + exact.latency()
+    }
+
+    pub fn cycles(&self) -> u64 {
+        let mac = self.macs().div_ceil(self.alus as u64);
+        let fill = if self.pipelined { PIPELINE_FILL } else { self.t as u64 };
+        mac + self.softmax_cycles() + fill
+    }
+
+    pub fn resources(&self) -> Resources {
+        let dsps = self.alus * dsps_per_mac(self.fmt.total_bits);
+        let weight_bits = 3 * self.d as u64 * self.d as u64 * self.fmt.total_bits as u64;
+        let score_bits = self.t as u64 * self.t as u64 * self.fmt.total_bits as u64;
+        let brams = bram18_for_bits(weight_bits + score_bits);
+        let softmax = ActVariant::new(ActKind::Sigmoid, ActImpl::Exact).resources();
+        Resources::new(
+            CTRL_LUTS + 150 + 14 * self.alus,
+            CTRL_FFS + 160 + 18 * self.alus,
+            brams,
+            dsps,
+        )
+        .add(&softmax)
+    }
+
+    pub fn crit_path_ns(&self) -> f64 {
+        let softmax = ActVariant::new(ActKind::Sigmoid, ActImpl::Exact).logic_delay_ns();
+        DSP_DELAY_NS.max(BRAM_DELAY_NS).max(if self.pipelined {
+            softmax * 0.75
+        } else {
+            softmax
+        })
+    }
+
+    pub fn profile(&self) -> ComponentProfile {
+        ComponentProfile {
+            name: self.name.clone(),
+            resources: self.resources(),
+            cycles: self.cycles(),
+            crit_path_ns: self.crit_path_ns(),
+            macs: self.macs(),
+            active_fraction: 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rtl::fixed_point::Q16_8;
+
+    #[test]
+    fn macs_formula() {
+        let a = AttentionTemplate::new("a", 16, 16, Q16_8);
+        assert_eq!(a.macs(), 3 * 16 * 16 * 16 + 2 * 16 * 16 * 16);
+    }
+
+    #[test]
+    fn parallelism_helps() {
+        let a = AttentionTemplate::new("a", 16, 16, Q16_8);
+        assert!(a.clone().with_alus(8).cycles() < a.cycles());
+    }
+
+    #[test]
+    fn softmax_in_resources() {
+        let a = AttentionTemplate::new("a", 16, 16, Q16_8);
+        assert!(a.resources().dsps >= 2); // exact unit brings DSPs
+    }
+}

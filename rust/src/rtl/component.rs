@@ -1,0 +1,95 @@
+//! Common profile type produced by every RTL template's analytical model.
+
+use crate::fpga::device::Resources;
+
+/// Analytical synthesis/performance profile of one instantiated component.
+///
+/// Produced by the templates (`FcTemplate::profile()` etc.), consumed by the
+/// composition model, the EDA estimator and the Generator.
+#[derive(Debug, Clone)]
+pub struct ComponentProfile {
+    pub name: String,
+    /// Fabric resources (before the device-specific technology factor the
+    /// EDA model applies — these are 7-series-equivalent numbers).
+    pub resources: Resources,
+    /// Cycles to process one inference through this component.
+    pub cycles: u64,
+    /// Longest combinational path in ns (pre-routing).
+    pub crit_path_ns: f64,
+    /// Multiply-accumulate operations per inference (for GOPS accounting;
+    /// 1 MAC = 2 ops by the usual convention).
+    pub macs: u64,
+    /// Fraction of the run during which this component's logic toggles
+    /// (drives the dynamic-power estimate).
+    pub active_fraction: f64,
+}
+
+impl ComponentProfile {
+    /// Ops per inference (2 ops per MAC).
+    pub fn ops(&self) -> u64 {
+        self.macs * 2
+    }
+}
+
+/// Pipeline register fill depth added by pipelined schedules.
+pub const PIPELINE_FILL: u64 = 8;
+
+/// Control/FSM overhead LUTs per template instance.
+pub const CTRL_LUTS: u32 = 120;
+pub const CTRL_FFS: u32 = 90;
+
+/// DSP multiplier combinational delay (ns) and BRAM access time (ns) on the
+/// 28 nm fabric — the baseline the per-family technology factors scale.
+pub const DSP_DELAY_NS: f64 = 4.0;
+pub const BRAM_DELAY_NS: f64 = 2.9;
+/// Extra mux/control delay of non-pipelined (resource-shared) schedules.
+pub const SEQ_MUX_DELAY_NS: f64 = 1.8;
+
+/// BRAM18 blocks needed for `bits` of storage.
+pub fn bram18_for_bits(bits: u64) -> u32 {
+    const BRAM18_BITS: u64 = 18 * 1024;
+    bits.div_ceil(BRAM18_BITS) as u32
+}
+
+/// DSP blocks per MAC lane for a given operand width (7-series DSP48: one
+/// block up to 18x25 bit, two cascaded above).
+pub fn dsps_per_mac(total_bits: u32) -> u32 {
+    if total_bits <= 18 {
+        1
+    } else {
+        2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bram_rounding() {
+        assert_eq!(bram18_for_bits(0), 0);
+        assert_eq!(bram18_for_bits(1), 1);
+        assert_eq!(bram18_for_bits(18 * 1024), 1);
+        assert_eq!(bram18_for_bits(18 * 1024 + 1), 2);
+    }
+
+    #[test]
+    fn dsp_width_split() {
+        assert_eq!(dsps_per_mac(16), 1);
+        assert_eq!(dsps_per_mac(18), 1);
+        assert_eq!(dsps_per_mac(24), 2);
+    }
+
+    #[test]
+    fn ops_convention() {
+        let p = ComponentProfile {
+            name: "x".into(),
+            resources: Resources::default(),
+            cycles: 10,
+            crit_path_ns: 4.0,
+            macs: 100,
+            active_fraction: 1.0,
+        };
+        assert_eq!(p.ops(), 200);
+    }
+}

@@ -1,0 +1,245 @@
+//! Accelerator composition: a generated accelerator is a layer-serial chain
+//! of template instances sharing one clock domain (the design style of the
+//! paper's template library — each layer gets its own engine, engines run
+//! back-to-back, weights live on-chip).
+
+use super::activation::{ActImpl, ActKind, ActVariant};
+use super::attention::AttentionTemplate;
+use super::component::ComponentProfile;
+use super::conv::ConvTemplate;
+use super::fc::FcTemplate;
+use super::fixed_point::QFormat;
+use super::lstm::LstmTemplate;
+use crate::fpga::device::{FpgaDevice, Resources};
+use crate::models::{self, Topology};
+use crate::util::units::{Hertz, Secs};
+
+/// A fully specified accelerator design (pre-synthesis).
+#[derive(Debug, Clone)]
+pub struct Accelerator {
+    pub name: String,
+    pub components: Vec<ComponentProfile>,
+    pub fmt: QFormat,
+}
+
+impl Accelerator {
+    pub fn new(name: &str, fmt: QFormat) -> Accelerator {
+        Accelerator {
+            name: name.to_string(),
+            components: Vec::new(),
+            fmt,
+        }
+    }
+
+    pub fn push(&mut self, p: ComponentProfile) -> &mut Self {
+        self.components.push(p);
+        self
+    }
+
+    /// Total fabric demand (7-series-equivalent units).
+    pub fn resources(&self) -> Resources {
+        self.components
+            .iter()
+            .fold(Resources::default(), |acc, c| acc.add(&c.resources))
+    }
+
+    /// Cycles per inference (layer-serial execution).
+    pub fn cycles(&self) -> u64 {
+        self.components.iter().map(|c| c.cycles).sum()
+    }
+
+    pub fn macs(&self) -> u64 {
+        self.components.iter().map(|c| c.macs).sum()
+    }
+
+    pub fn ops(&self) -> u64 {
+        self.macs() * 2
+    }
+
+    /// Longest pre-routing combinational path across components.
+    pub fn crit_path_ns(&self) -> f64 {
+        self.components
+            .iter()
+            .map(|c| c.crit_path_ns)
+            .fold(0.0, f64::max)
+    }
+
+    pub fn fits(&self, device: &FpgaDevice) -> bool {
+        self.resources().fits_in(&device.resources)
+    }
+
+    /// Inference latency at a given clock.
+    pub fn latency(&self, clock: Hertz) -> Secs {
+        clock.cycles(self.cycles())
+    }
+}
+
+/// Schedule/implementation knobs shared by the builder (the manifest's
+/// L3-side attributes).
+#[derive(Debug, Clone, Copy)]
+pub struct BuildOpts {
+    pub fmt: QFormat,
+    pub sigmoid: ActVariant,
+    pub tanh: ActVariant,
+    pub alus: u32,
+    pub pipelined: bool,
+}
+
+impl BuildOpts {
+    /// The E1 baseline of [2]: same MAC array as the optimised design,
+    /// sequential schedule, exact activation units.
+    pub fn baseline(fmt: QFormat) -> BuildOpts {
+        BuildOpts {
+            fmt,
+            sigmoid: ActVariant::new(ActKind::Sigmoid, ActImpl::Exact),
+            tanh: ActVariant::new(ActKind::Tanh, ActImpl::Exact),
+            alus: 4,
+            pipelined: false,
+        }
+    }
+
+    pub fn optimised(fmt: QFormat) -> BuildOpts {
+        BuildOpts {
+            fmt,
+            sigmoid: ActVariant::new(ActKind::HardSigmoid, ActImpl::Hard),
+            tanh: ActVariant::new(ActKind::HardTanh, ActImpl::Hard),
+            alus: 4,
+            pipelined: true,
+        }
+    }
+}
+
+/// Instantiate the template chain for a model topology.
+pub fn build(topology: Topology, opts: &BuildOpts) -> Accelerator {
+    let mut acc = Accelerator::new(topology.name(), opts.fmt);
+    match topology {
+        Topology::MlpFluid => {
+            for (i, &(n_in, n_out)) in models::MLP_LAYERS.iter().enumerate() {
+                let mut fc = FcTemplate::new(&format!("fc{i}"), n_in, n_out, opts.fmt)
+                    .with_alus(opts.alus)
+                    .pipelined(opts.pipelined);
+                if i + 1 < models::MLP_LAYERS.len() {
+                    fc = fc.with_act(opts.sigmoid);
+                }
+                acc.push(fc.profile());
+            }
+        }
+        Topology::LstmHar => {
+            acc.push(
+                LstmTemplate::new(
+                    "lstm",
+                    models::LSTM_IN,
+                    models::LSTM_H,
+                    models::LSTM_T,
+                    opts.sigmoid,
+                    opts.tanh,
+                    opts.fmt,
+                )
+                .with_alus(opts.alus)
+                .pipelined(opts.pipelined)
+                .profile(),
+            );
+            acc.push(
+                FcTemplate::new("head", models::LSTM_H, models::LSTM_CLASSES, opts.fmt)
+                    .with_alus(opts.alus)
+                    .pipelined(opts.pipelined)
+                    .profile(),
+            );
+        }
+        Topology::CnnEcg => {
+            let mut t = models::CNN_T;
+            for (i, &(c_in, c_out, kw, stride)) in models::CNN_SPEC.iter().enumerate() {
+                acc.push(
+                    ConvTemplate::new(&format!("conv{i}"), t, c_in, kw, c_out, stride, opts.fmt)
+                        .with_alus(opts.alus)
+                        .pipelined(opts.pipelined)
+                        .with_act(opts.tanh)
+                        .profile(),
+                );
+                t = (t - kw) / stride + 1;
+            }
+            acc.push(
+                FcTemplate::new(
+                    "head",
+                    models::CNN_SPEC.last().unwrap().1,
+                    models::CNN_CLASSES,
+                    opts.fmt,
+                )
+                .with_alus(opts.alus)
+                .pipelined(opts.pipelined)
+                .profile(),
+            );
+        }
+        Topology::AttnTiny => {
+            acc.push(
+                AttentionTemplate::new("attn", models::ATTN_T, models::ATTN_D, opts.fmt)
+                    .with_alus(opts.alus)
+                    .pipelined(opts.pipelined)
+                    .profile(),
+            );
+            acc.push(
+                FcTemplate::new("head", models::ATTN_D, models::ATTN_CLASSES, opts.fmt)
+                    .with_alus(opts.alus)
+                    .pipelined(opts.pipelined)
+                    .profile(),
+            );
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::device::device;
+    use crate::rtl::fixed_point::Q16_8;
+
+    #[test]
+    fn mlp_builds_three_layers() {
+        let acc = build(Topology::MlpFluid, &BuildOpts::baseline(Q16_8));
+        assert_eq!(acc.components.len(), 3);
+        assert_eq!(acc.macs(), 8 * 16 + 16 * 8 + 8);
+    }
+
+    #[test]
+    fn optimised_faster_than_baseline_everywhere() {
+        for t in Topology::all() {
+            let base = build(*t, &BuildOpts::baseline(Q16_8));
+            let opt = build(*t, &BuildOpts::optimised(Q16_8));
+            assert!(
+                opt.cycles() < base.cycles(),
+                "{}: {} !< {}",
+                t.name(),
+                opt.cycles(),
+                base.cycles()
+            );
+        }
+    }
+
+    #[test]
+    fn all_models_fit_on_xc7s25() {
+        let d = device("xc7s25").unwrap();
+        for t in Topology::all() {
+            let acc = build(*t, &BuildOpts::optimised(Q16_8));
+            assert!(acc.fits(d), "{} does not fit", t.name());
+        }
+    }
+
+    #[test]
+    fn latency_at_clock() {
+        let acc = build(Topology::MlpFluid, &BuildOpts::optimised(Q16_8));
+        let lat = acc.latency(Hertz::from_mhz(100.0));
+        assert!(lat.value() > 0.0 && lat.us() < 1000.0);
+    }
+
+    #[test]
+    fn crit_path_is_max() {
+        let acc = build(Topology::LstmHar, &BuildOpts::baseline(Q16_8));
+        let max = acc
+            .components
+            .iter()
+            .map(|c| c.crit_path_ns)
+            .fold(0.0, f64::max);
+        assert_eq!(acc.crit_path_ns(), max);
+    }
+}

@@ -1,0 +1,180 @@
+//! 1-D convolution RTL template (the on-device ECG CNN of [3]).
+//!
+//! The RTL design streams the input window through a shift register and
+//! evaluates `c_out` MAC columns; the template's axes match fc.rs
+//! (ALU parallelism, pipelined activation, variant, format).
+
+use super::activation::ActVariant;
+use super::component::{
+    bram18_for_bits, dsps_per_mac, ComponentProfile, BRAM_DELAY_NS, CTRL_FFS, CTRL_LUTS,
+    DSP_DELAY_NS, PIPELINE_FILL, SEQ_MUX_DELAY_NS,
+};
+use super::fixed_point::QFormat;
+use crate::fpga::device::Resources;
+
+#[derive(Debug, Clone)]
+pub struct ConvTemplate {
+    pub name: String,
+    pub t_in: u32,
+    pub c_in: u32,
+    pub kw: u32,
+    pub c_out: u32,
+    pub stride: u32,
+    pub alus: u32,
+    pub pipelined: bool,
+    pub act: Option<ActVariant>,
+    pub fmt: QFormat,
+}
+
+impl ConvTemplate {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: &str,
+        t_in: u32,
+        c_in: u32,
+        kw: u32,
+        c_out: u32,
+        stride: u32,
+        fmt: QFormat,
+    ) -> ConvTemplate {
+        assert!(stride >= 1 && kw <= t_in);
+        ConvTemplate {
+            name: name.to_string(),
+            t_in,
+            c_in,
+            kw,
+            c_out,
+            stride,
+            alus: 1,
+            pipelined: false,
+            act: None,
+            fmt,
+        }
+    }
+
+    pub fn with_alus(mut self, alus: u32) -> ConvTemplate {
+        assert!(alus >= 1);
+        self.alus = alus;
+        self
+    }
+
+    pub fn pipelined(mut self, on: bool) -> ConvTemplate {
+        self.pipelined = on;
+        self
+    }
+
+    pub fn with_act(mut self, act: ActVariant) -> ConvTemplate {
+        self.act = Some(act);
+        self
+    }
+
+    pub fn t_out(&self) -> u32 {
+        (self.t_in - self.kw) / self.stride + 1
+    }
+
+    pub fn macs(&self) -> u64 {
+        self.t_out() as u64 * self.kw as u64 * self.c_in as u64 * self.c_out as u64
+    }
+
+    pub fn cycles(&self) -> u64 {
+        let mac = self.macs().div_ceil(self.alus as u64);
+        let outputs = self.t_out() as u64 * self.c_out as u64;
+        let act = match (&self.act, self.pipelined) {
+            (None, _) => 0,
+            (Some(a), true) => a.latency(),
+            (Some(a), false) => outputs * a.ii() + a.latency(),
+        };
+        let fill = if self.pipelined { PIPELINE_FILL } else { 0 };
+        // the sequential schedule overlaps accumulator writeback with the
+        // MAC stream except for the final output column
+        let drain = if self.pipelined { 0 } else { self.c_out as u64 };
+        mac + act + fill + drain
+    }
+
+    pub fn resources(&self) -> Resources {
+        let dsps = self.alus * dsps_per_mac(self.fmt.total_bits);
+        let weight_bits =
+            self.kw as u64 * self.c_in as u64 * self.c_out as u64 * self.fmt.total_bits as u64;
+        // line buffer for the sliding window
+        let linebuf_bits = self.kw as u64 * self.c_in as u64 * self.fmt.total_bits as u64;
+        let brams = bram18_for_bits(weight_bits + linebuf_bits);
+        let mut r = Resources::new(
+            CTRL_LUTS + 60 + 14 * self.alus,
+            CTRL_FFS + 80 + 18 * self.alus + if self.pipelined { 96 } else { 0 },
+            brams,
+            dsps,
+        );
+        if let Some(a) = &self.act {
+            r = r.add(&a.resources());
+        }
+        r
+    }
+
+    pub fn crit_path_ns(&self) -> f64 {
+        let mut d: f64 = DSP_DELAY_NS.max(BRAM_DELAY_NS);
+        if let Some(a) = &self.act {
+            if self.pipelined {
+                d = d.max(a.logic_delay_ns() * 0.75);
+            } else {
+                d = d.max(a.logic_delay_ns());
+            }
+        }
+        if !self.pipelined {
+            d += SEQ_MUX_DELAY_NS;
+        }
+        d
+    }
+
+    pub fn profile(&self) -> ComponentProfile {
+        ComponentProfile {
+            name: self.name.clone(),
+            resources: self.resources(),
+            cycles: self.cycles(),
+            crit_path_ns: self.crit_path_ns(),
+            macs: self.macs(),
+            active_fraction: 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rtl::activation::{ActImpl, ActKind};
+    use crate::rtl::fixed_point::Q16_8;
+
+    fn t() -> ConvTemplate {
+        ConvTemplate::new("conv", 128, 1, 7, 8, 2, Q16_8)
+    }
+
+    #[test]
+    fn output_length() {
+        assert_eq!(t().t_out(), 61);
+        assert_eq!(
+            ConvTemplate::new("c", 61, 8, 5, 16, 2, Q16_8).t_out(),
+            29
+        );
+    }
+
+    #[test]
+    fn macs_formula() {
+        assert_eq!(t().macs(), 61 * 7 * 8);
+    }
+
+    #[test]
+    fn parallelism_reduces_cycles() {
+        assert!(t().with_alus(8).cycles() * 6 < t().cycles());
+    }
+
+    #[test]
+    fn pipelined_act_cheaper_than_sequential() {
+        let act = ActVariant::new(ActKind::Tanh, ActImpl::Exact);
+        assert!(t().with_act(act).pipelined(true).cycles() < t().with_act(act).cycles());
+    }
+
+    #[test]
+    #[should_panic]
+    fn kernel_wider_than_input_rejected() {
+        ConvTemplate::new("bad", 4, 1, 7, 8, 1, Q16_8);
+    }
+}

@@ -1,0 +1,179 @@
+//! Fully-connected layer RTL template ([4,10,11]).
+//!
+//! Design axes (the template's generics in the paper's library):
+//!
+//! * `alus`       — parallel MAC lanes (DSP blocks); the classic
+//!                  throughput-vs-resources axis of §5.1.
+//! * `pipelined`  — activation and accumulation overlapped with the MAC
+//!                  stream (II=1) vs a resource-shared sequential schedule.
+//! * `act`        — activation variant appended to the layer.
+//! * `fmt`        — datapath width (DSP lane splitting above 18 bit).
+
+use super::activation::ActVariant;
+use super::component::{
+    bram18_for_bits, dsps_per_mac, ComponentProfile, BRAM_DELAY_NS, CTRL_FFS, CTRL_LUTS,
+    DSP_DELAY_NS, PIPELINE_FILL, SEQ_MUX_DELAY_NS,
+};
+use super::fixed_point::QFormat;
+use crate::fpga::device::Resources;
+
+#[derive(Debug, Clone)]
+pub struct FcTemplate {
+    pub name: String,
+    pub n_in: u32,
+    pub n_out: u32,
+    pub alus: u32,
+    pub pipelined: bool,
+    pub act: Option<ActVariant>,
+    pub fmt: QFormat,
+}
+
+impl FcTemplate {
+    pub fn new(name: &str, n_in: u32, n_out: u32, fmt: QFormat) -> FcTemplate {
+        FcTemplate {
+            name: name.to_string(),
+            n_in,
+            n_out,
+            alus: 1,
+            pipelined: false,
+            act: None,
+            fmt,
+        }
+    }
+
+    pub fn with_alus(mut self, alus: u32) -> FcTemplate {
+        assert!(alus >= 1);
+        self.alus = alus;
+        self
+    }
+
+    pub fn pipelined(mut self, on: bool) -> FcTemplate {
+        self.pipelined = on;
+        self
+    }
+
+    pub fn with_act(mut self, act: ActVariant) -> FcTemplate {
+        self.act = Some(act);
+        self
+    }
+
+    pub fn macs(&self) -> u64 {
+        self.n_in as u64 * self.n_out as u64
+    }
+
+    /// Cycles for one forward pass.
+    pub fn cycles(&self) -> u64 {
+        let mac_cycles = self.macs().div_ceil(self.alus as u64);
+        let act_cycles = match (&self.act, self.pipelined) {
+            (None, _) => 0,
+            // pipelined: the act unit consumes results as they retire; only
+            // its fill latency is exposed.
+            (Some(a), true) => a.latency(),
+            // sequential: each of the n_out results is pushed through the
+            // shared act unit after the MACs finish.
+            (Some(a), false) => self.n_out as u64 * a.ii() + a.latency(),
+        };
+        let fill = if self.pipelined { PIPELINE_FILL } else { 0 };
+        // per-output accumulator drain in the sequential schedule
+        let drain = if self.pipelined { 0 } else { self.n_out as u64 };
+        mac_cycles + act_cycles + fill + drain
+    }
+
+    pub fn resources(&self) -> Resources {
+        let dsps = self.alus * dsps_per_mac(self.fmt.total_bits);
+        let weight_bits = self.macs() * self.fmt.total_bits as u64;
+        let brams = bram18_for_bits(weight_bits);
+        let mut r = Resources::new(
+            CTRL_LUTS + 14 * self.alus,
+            CTRL_FFS + 18 * self.alus + if self.pipelined { 64 } else { 0 },
+            brams,
+            dsps,
+        );
+        if let Some(a) = &self.act {
+            r = r.add(&a.resources());
+        }
+        r
+    }
+
+    pub fn crit_path_ns(&self) -> f64 {
+        let mut d: f64 = DSP_DELAY_NS.max(BRAM_DELAY_NS);
+        if let Some(a) = &self.act {
+            if !self.pipelined {
+                // act output feeds the same cycle's writeback mux
+                d = d.max(a.logic_delay_ns());
+            } else {
+                // registered boundary: act path stands alone
+                d = d.max(a.logic_delay_ns() * 0.75);
+            }
+        }
+        if !self.pipelined {
+            d += SEQ_MUX_DELAY_NS;
+        }
+        d
+    }
+
+    pub fn profile(&self) -> ComponentProfile {
+        ComponentProfile {
+            name: self.name.clone(),
+            resources: self.resources(),
+            cycles: self.cycles(),
+            crit_path_ns: self.crit_path_ns(),
+            macs: self.macs(),
+            active_fraction: 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rtl::activation::{ActImpl, ActKind};
+    use crate::rtl::fixed_point::Q16_8;
+
+    fn t() -> FcTemplate {
+        FcTemplate::new("fc", 16, 8, Q16_8)
+    }
+
+    #[test]
+    fn more_alus_fewer_cycles() {
+        assert!(t().with_alus(8).cycles() < t().with_alus(1).cycles());
+        // but more DSPs
+        assert!(t().with_alus(8).resources().dsps > t().with_alus(1).resources().dsps);
+    }
+
+    #[test]
+    fn pipelining_hides_activation() {
+        let act = ActVariant::new(ActKind::Sigmoid, ActImpl::Exact);
+        let seq = t().with_act(act).cycles();
+        let pipe = t().with_act(act).pipelined(true).cycles();
+        assert!(pipe < seq, "pipe {pipe} >= seq {seq}");
+    }
+
+    #[test]
+    fn exact_act_dominates_critical_path_when_sequential() {
+        let act = ActVariant::new(ActKind::Sigmoid, ActImpl::Exact);
+        let with = t().with_act(act).crit_path_ns();
+        let without = t().crit_path_ns();
+        assert!(with > without);
+    }
+
+    #[test]
+    fn weight_storage_scales() {
+        let small = FcTemplate::new("s", 8, 8, Q16_8).resources().bram18;
+        let big = FcTemplate::new("b", 64, 64, Q16_8).resources().bram18;
+        assert!(big > small);
+    }
+
+    #[test]
+    fn macs_count() {
+        assert_eq!(t().macs(), 128);
+        assert_eq!(t().profile().ops(), 256);
+    }
+
+    #[test]
+    fn cycles_monotone_in_size() {
+        let a = FcTemplate::new("a", 8, 8, Q16_8).cycles();
+        let b = FcTemplate::new("b", 32, 8, Q16_8).cycles();
+        assert!(b > a);
+    }
+}

@@ -1,0 +1,167 @@
+//! Bit-true Q-format fixed-point arithmetic.
+//!
+//! Exact mirror of `python/compile/quant.py` — the cross-layer contract:
+//! quantisation is `floor(x * 2^f + 0.5)` saturated to the signed
+//! `total_bits` range; post-multiply rescaling is `sra_round`
+//! (add `1 << (n-1)`, arithmetic shift right by `n`).  The behavioural
+//! simulator (GHDL substitute) executes the same schedule as the compiled
+//! HLO on these primitives, so the pure-integer activation variants agree
+//! bit-for-bit across Rust / Pallas / PJRT.
+
+/// Signed fixed-point format: `total_bits` wide, `frac_bits` fractional.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct QFormat {
+    pub total_bits: u32,
+    pub frac_bits: u32,
+}
+
+/// 16-bit Q8.8 — the default datapath of the LSTM accelerator [2].
+pub const Q16_8: QFormat = QFormat { total_bits: 16, frac_bits: 8 };
+/// Reduced-precision exploration points.
+pub const Q12_6: QFormat = QFormat { total_bits: 12, frac_bits: 6 };
+pub const Q8_4: QFormat = QFormat { total_bits: 8, frac_bits: 4 };
+
+impl QFormat {
+    pub fn new(total_bits: u32, frac_bits: u32) -> QFormat {
+        assert!((2..=26).contains(&total_bits), "total_bits {total_bits}");
+        assert!(frac_bits > 0 && frac_bits < total_bits, "frac_bits {frac_bits}");
+        QFormat { total_bits, frac_bits }
+    }
+
+    /// Parse "q16_8"-style names (the manifest encoding).
+    pub fn parse(name: &str) -> Option<QFormat> {
+        let rest = name.strip_prefix('q')?;
+        let (t, f) = rest.split_once('_')?;
+        Some(QFormat::new(t.parse().ok()?, f.parse().ok()?))
+    }
+
+    pub fn name(&self) -> String {
+        format!("q{}_{}", self.total_bits, self.frac_bits)
+    }
+
+    #[inline]
+    pub fn scale(&self) -> i64 {
+        1 << self.frac_bits
+    }
+
+    #[inline]
+    pub fn qmin(&self) -> i64 {
+        -(1 << (self.total_bits - 1))
+    }
+
+    #[inline]
+    pub fn qmax(&self) -> i64 {
+        (1 << (self.total_bits - 1)) - 1
+    }
+
+    pub fn resolution(&self) -> f64 {
+        1.0 / self.scale() as f64
+    }
+
+    /// f64 -> Q value: floor(x * 2^f + 0.5), saturated.
+    #[inline]
+    pub fn quantize(&self, x: f64) -> i64 {
+        let q = (x * self.scale() as f64 + 0.5).floor();
+        if q <= self.qmin() as f64 {
+            self.qmin()
+        } else if q >= self.qmax() as f64 {
+            self.qmax()
+        } else {
+            q as i64
+        }
+    }
+
+    #[inline]
+    pub fn dequantize(&self, q: i64) -> f64 {
+        q as f64 * self.resolution()
+    }
+
+    #[inline]
+    pub fn saturate(&self, q: i64) -> i64 {
+        q.clamp(self.qmin(), self.qmax())
+    }
+
+    /// Rescale a product of two Q(f) values (at 2f scale) back to Q(f).
+    #[inline]
+    pub fn requant_product(&self, p: i64) -> i64 {
+        self.saturate(sra_round(p, self.frac_bits))
+    }
+
+    pub fn quantize_vec(&self, xs: &[f64]) -> Vec<i64> {
+        xs.iter().map(|&x| self.quantize(x)).collect()
+    }
+
+    pub fn dequantize_vec(&self, qs: &[i64]) -> Vec<f64> {
+        qs.iter().map(|&q| self.dequantize(q)).collect()
+    }
+}
+
+/// Arithmetic shift right with round-half-up: `(p + (1 << (n-1))) >> n`.
+/// `n == 0` is the identity (matches `quant.sra_round`).
+#[inline]
+pub fn sra_round(p: i64, n: u32) -> i64 {
+    if n == 0 {
+        p
+    } else {
+        (p + (1i64 << (n - 1))) >> n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_matches_python_semantics() {
+        let f = Q16_8;
+        // floor(x * 256 + 0.5)
+        assert_eq!(f.quantize(1.0), 256);
+        assert_eq!(f.quantize(0.001953125), 1); // exactly 0.5 LSB rounds up
+        assert_eq!(f.quantize(-0.001953125), 0); // -0.5 LSB rounds up to 0
+        assert_eq!(f.quantize(1000.0), f.qmax());
+        assert_eq!(f.quantize(-1000.0), f.qmin());
+    }
+
+    #[test]
+    fn sra_round_matches_python() {
+        // same cases as python/tests/test_quant.py::TestSraRound
+        assert_eq!(sra_round(3, 2), 1);
+        assert_eq!(sra_round(-3, 2), -1);
+        assert_eq!(sra_round(2, 2), 1);
+        assert_eq!(sra_round(-2, 2), 0);
+        assert_eq!(sra_round(-5, 0), -5);
+    }
+
+    #[test]
+    fn grid_roundtrip() {
+        let f = Q12_6;
+        for q in f.qmin()..=f.qmax() {
+            assert_eq!(f.quantize(f.dequantize(q)), q);
+        }
+    }
+
+    #[test]
+    fn product_requant() {
+        let f = Q16_8;
+        let one = f.scale();
+        assert_eq!(f.requant_product(one * one), one);
+        // 1.5 * 2.0 = 3.0
+        let a = f.quantize(1.5);
+        let b = f.quantize(2.0);
+        assert_eq!(f.dequantize(f.requant_product(a * b)), 3.0);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(QFormat::parse("q16_8"), Some(Q16_8));
+        assert_eq!(QFormat::parse("q12_6"), Some(Q12_6));
+        assert_eq!(QFormat::parse("garbage"), None);
+        assert_eq!(Q8_4.name(), "q8_4");
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_overflowing_format() {
+        QFormat::new(32, 16);
+    }
+}

@@ -1,0 +1,18 @@
+//! RTL template library (RQ1): bit-true functional models + analytical
+//! synthesis profiles for every DL component the paper's generator
+//! composes — activations (4 functions x up to 3 implementations), FC,
+//! LSTM, conv and attention templates, plus the fixed-point datapath
+//! contract shared with the Python kernels.
+
+pub mod activation;
+pub mod attention;
+pub mod component;
+pub mod composition;
+pub mod conv;
+pub mod fc;
+pub mod fixed_point;
+pub mod lstm;
+
+pub use activation::{ActImpl, ActKind, ActVariant};
+pub use composition::{build, Accelerator, BuildOpts};
+pub use fixed_point::{QFormat, Q12_6, Q16_8, Q8_4};

@@ -1,0 +1,199 @@
+//! Artifact manifest: the index of AOT-compiled HLO modules written by
+//! `python/compile/aot.py` (`artifacts/manifest.json`), plus the golden
+//! cross-check vectors.
+
+use crate::rtl::activation::ActVariant;
+use crate::rtl::fixed_point::QFormat;
+use crate::util::json::{parse_file, Json};
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One compiled accelerator artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    /// "model" or "activation" (E2 micro-kernels).
+    pub kind: String,
+    pub model: String,
+    pub fmt: QFormat,
+    pub act: String,
+    pub act_impl: String,
+    pub tanh_impl: String,
+    pub pipelined: bool,
+    pub alus: u32,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    pub note: String,
+}
+
+impl ArtifactMeta {
+    pub fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    pub fn output_len(&self) -> usize {
+        self.output_shape.iter().product()
+    }
+
+    /// The sigmoid-position activation variant of this artifact.
+    pub fn sigmoid_variant(&self) -> Option<ActVariant> {
+        ActVariant::parse(&self.act, &self.act_impl)
+    }
+
+    /// The tanh-position variant (LSTM/CNN artifacts).
+    pub fn tanh_variant(&self) -> Option<ActVariant> {
+        if self.tanh_impl.is_empty() {
+            return None;
+        }
+        let kind = if self.tanh_impl == "hard" { "hardtanh" } else { "tanh" };
+        ActVariant::parse(kind, &self.tanh_impl)
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let j = parse_file(&dir.join("manifest.json")).context("loading manifest")?;
+        let arts = j
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+        let mut artifacts = Vec::new();
+        for a in arts {
+            artifacts.push(parse_artifact(a)?);
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    pub fn hlo_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+
+    /// Model artifacts only (excludes the E2 activation micro-kernels).
+    pub fn models(&self) -> impl Iterator<Item = &ArtifactMeta> {
+        self.artifacts.iter().filter(|a| a.kind == "model")
+    }
+}
+
+fn parse_artifact(a: &Json) -> Result<ArtifactMeta> {
+    let s = |k: &str| -> String {
+        a.get(k).and_then(|v| v.as_str()).unwrap_or_default().to_string()
+    };
+    let shape = |k: &str| -> Vec<usize> {
+        a.get(k)
+            .and_then(|v| v.as_arr())
+            .map(|arr| arr.iter().filter_map(|d| d.as_usize()).collect())
+            .unwrap_or_default()
+    };
+    let fmt_name = s("fmt");
+    let fmt = QFormat::parse(&fmt_name)
+        .ok_or_else(|| anyhow!("artifact {}: bad fmt '{fmt_name}'", s("name")))?;
+    Ok(ArtifactMeta {
+        name: s("name"),
+        file: s("file"),
+        kind: s("kind"),
+        model: s("model"),
+        fmt,
+        act: s("act"),
+        act_impl: s("act_impl"),
+        tanh_impl: s("tanh_impl"),
+        pipelined: a.get("pipelined").and_then(|v| v.as_bool()).unwrap_or(false),
+        alus: a.get("alus").and_then(|v| v.as_usize()).unwrap_or(1) as u32,
+        input_shape: shape("input_shape"),
+        output_shape: shape("output_shape"),
+        note: s("note"),
+    })
+}
+
+/// One golden test case: flat input/output pair.
+#[derive(Debug, Clone)]
+pub struct GoldenCase {
+    pub input: Vec<f64>,
+    pub output: Vec<f64>,
+}
+
+/// Golden vectors for one artifact.
+#[derive(Debug, Clone)]
+pub struct Golden {
+    pub name: String,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    pub cases: Vec<GoldenCase>,
+}
+
+impl Golden {
+    pub fn load(dir: &Path, name: &str) -> Result<Golden> {
+        let j = parse_file(&dir.join("golden").join(format!("{name}.json")))
+            .with_context(|| format!("golden vectors for {name}"))?;
+        let cases = j
+            .get("cases")
+            .and_then(|c| c.as_arr())
+            .ok_or_else(|| anyhow!("golden {name}: missing cases"))?
+            .iter()
+            .map(|c| GoldenCase {
+                input: c.get("input").map(|v| v.to_f64_vec()).unwrap_or_default(),
+                output: c.get("output").map(|v| v.to_f64_vec()).unwrap_or_default(),
+            })
+            .collect();
+        let shape = |k: &str| -> Vec<usize> {
+            j.get(k)
+                .and_then(|v| v.as_arr())
+                .map(|arr| arr.iter().filter_map(|d| d.as_usize()).collect())
+                .unwrap_or_default()
+        };
+        Ok(Golden {
+            name: name.to_string(),
+            input_shape: shape("input_shape"),
+            output_shape: shape("output_shape"),
+            cases,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn parse_artifact_entry() {
+        let j = parse(
+            r#"{"name": "x.y", "file": "x.y.hlo.txt", "kind": "model",
+                "model": "lstm_har", "fmt": "q16_8", "act": "sigmoid",
+                "act_impl": "hard", "tanh_impl": "hard", "pipelined": true,
+                "alus": 4, "input_shape": [24, 6], "output_shape": [6],
+                "note": ""}"#,
+        )
+        .unwrap();
+        let a = parse_artifact(&j).unwrap();
+        assert_eq!(a.input_len(), 144);
+        assert_eq!(a.output_len(), 6);
+        assert!(a.pipelined);
+        assert_eq!(a.fmt.frac_bits, 8);
+        assert!(a.sigmoid_variant().is_some());
+        assert!(a.tanh_variant().is_some());
+    }
+
+    #[test]
+    fn bad_fmt_rejected() {
+        let j = parse(r#"{"name": "x", "fmt": "zzz"}"#).unwrap();
+        assert!(parse_artifact(&j).is_err());
+    }
+
+    // manifest-file loading is exercised by the integration tests (needs
+    // `make artifacts`)
+}

@@ -1,0 +1,8 @@
+//! Runtime: artifact manifest + the PJRT CPU execution engine that runs
+//! the AOT-compiled HLO artifacts on the request path (no Python).
+
+pub mod artifact;
+pub mod engine;
+
+pub use artifact::{ArtifactMeta, Golden, Manifest};
+pub use engine::{load_default, Engine};

@@ -1,0 +1,129 @@
+//! Battery-lifetime model ("effectively extending the system lifetime",
+//! §3.2).
+//!
+//! Converts a simulated energy-per-item + workload rate into deployment
+//! lifetime on a battery, with self-discharge and usable-capacity derating
+//! — the numbers an IoT deployment actually plans against.
+
+use super::SimReport;
+use crate::util::units::{Joules, Secs, Watts};
+
+/// A battery, described the way datasheets do.
+#[derive(Debug, Clone, Copy)]
+pub struct Battery {
+    /// Nominal capacity in watt-hours.
+    pub capacity_wh: f64,
+    /// Fraction usable before brown-out (depth-of-discharge derating).
+    pub usable_fraction: f64,
+    /// Self-discharge per month (fraction of nominal).
+    pub self_discharge_monthly: f64,
+}
+
+impl Battery {
+    /// CR123A-class lithium primary cell.
+    pub fn cr123a() -> Battery {
+        Battery {
+            capacity_wh: 4.5,
+            usable_fraction: 0.85,
+            self_discharge_monthly: 0.003,
+        }
+    }
+
+    /// Compact LiPo pouch (rechargeable, deeper self-discharge).
+    pub fn lipo_1000mah() -> Battery {
+        Battery {
+            capacity_wh: 3.7,
+            usable_fraction: 0.80,
+            self_discharge_monthly: 0.05,
+        }
+    }
+
+    pub fn usable_energy(&self) -> Joules {
+        Joules(self.capacity_wh * 3600.0 * self.usable_fraction)
+    }
+
+    /// Equivalent continuous self-discharge power.
+    pub fn self_discharge_power(&self) -> Watts {
+        let j_per_month = self.capacity_wh * 3600.0 * self.self_discharge_monthly;
+        Watts(j_per_month / (30.0 * 86_400.0))
+    }
+
+    /// Deployment lifetime given a mean load power.
+    pub fn lifetime(&self, load: Watts) -> Secs {
+        let total = load + self.self_discharge_power();
+        self.usable_energy() / total
+    }
+}
+
+/// Lifetime from a simulation report: mean power = total energy / span.
+pub fn lifetime_from_report(battery: &Battery, report: &SimReport) -> Secs {
+    let mean_power = report.energy.total() / report.sim_time;
+    battery.lifetime(mean_power)
+}
+
+/// Convenience: lifetime in days.
+pub fn days(t: Secs) -> f64 {
+    t.value() / 86_400.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elastic_node::Platform;
+    use crate::fpga::{device, ConfigController};
+    use crate::models::Topology;
+    use crate::rtl::composition::{build, BuildOpts};
+    use crate::rtl::fixed_point::Q16_8;
+    use crate::sim::{cost_model, NodeSim};
+    use crate::strategy::{IdleWait, OnOff};
+    use crate::util::rng::Rng;
+    use crate::util::units::Hertz;
+    use crate::workload::Workload;
+
+    #[test]
+    fn cr123a_basics() {
+        let b = Battery::cr123a();
+        assert!((b.usable_energy().value() - 4.5 * 3600.0 * 0.85).abs() < 1e-6);
+        // ~10 mW load: about two weeks
+        let t = b.lifetime(Watts::from_mw(10.0));
+        assert!(days(t) > 10.0 && days(t) < 25.0, "{} days", days(t));
+    }
+
+    #[test]
+    fn self_discharge_bounds_lifetime() {
+        let b = Battery::lipo_1000mah();
+        // at (almost) zero load, lifetime approaches the self-discharge
+        // limit (~16 months for 5%/month), not infinity
+        let t = b.lifetime(Watts(1e-9));
+        assert!(days(t) < 700.0, "{} days", days(t));
+    }
+
+    #[test]
+    fn idle_wait_extends_lifetime_at_40ms() {
+        // the paper's framing of E3: the strategy choice extends system
+        // lifetime
+        let acc = build(Topology::LstmHar, &BuildOpts::optimised(Q16_8));
+        let d = device("xc7s15").unwrap();
+        let cost = cost_model(
+            &acc,
+            d,
+            Hertz::from_mhz(100.0),
+            &Platform::default(),
+            &ConfigController::raw(d),
+        );
+        let arrivals = Workload::Periodic {
+            period: crate::util::units::Secs::from_ms(40.0),
+        }
+        .arrivals(500, &mut Rng::new(1));
+        let sim = NodeSim::new(cost);
+        let b = Battery::cr123a();
+        let idle = lifetime_from_report(&b, &sim.run(&arrivals, &mut IdleWait));
+        let onoff = lifetime_from_report(&b, &sim.run(&arrivals, &mut OnOff));
+        assert!(
+            idle.value() > 3.0 * onoff.value(),
+            "idle {} vs onoff {} days",
+            days(idle),
+            days(onoff)
+        );
+    }
+}

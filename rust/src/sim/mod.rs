@@ -1,0 +1,329 @@
+//! Duty-cycled node simulation: a single-server queueing simulation of the
+//! Elastic Node (MCU + FPGA) processing a request stream under a
+//! workload-aware strategy, with exact joule accounting per power state.
+//!
+//! This is the evaluation engine behind E3 (Idle-Waiting vs On-Off), E4
+//! (adaptive threshold switching) and the workload-aware terms of the
+//! Generator's objective (E7).
+
+pub mod lifetime;
+pub mod multi;
+
+use crate::elastic_node::{BoardState, Platform};
+use crate::fpga::{ConfigController, FpgaDevice};
+use crate::power;
+use crate::rtl::composition::Accelerator;
+use crate::strategy::{CostModel, GapPredictor, PostAction, Strategy};
+use crate::util::units::{Hertz, Joules, Secs, Watts};
+use std::collections::VecDeque;
+
+/// Energy breakdown of one simulated run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EnergyLedger {
+    pub config: Joules,
+    pub busy: Joules,
+    pub idle: Joules,
+    pub off: Joules,
+}
+
+impl EnergyLedger {
+    pub fn total(&self) -> Joules {
+        self.config + self.busy + self.idle + self.off
+    }
+}
+
+/// Outcome of one simulated run.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub strategy: &'static str,
+    pub served: u64,
+    pub dropped: u64,
+    pub sim_time: Secs,
+    pub energy: EnergyLedger,
+    /// Request latency (arrival -> completion), seconds, per served item.
+    pub latencies: Vec<f64>,
+    /// Cumulative total energy at each completion (for budget queries).
+    pub energy_at_completion: Vec<f64>,
+}
+
+impl SimReport {
+    pub fn energy_per_item(&self) -> Joules {
+        if self.served == 0 {
+            Joules(f64::INFINITY)
+        } else {
+            Joules(self.energy.total().value() / self.served as f64)
+        }
+    }
+
+    /// E3's metric: how many items complete before the energy budget runs
+    /// out.
+    pub fn items_within_budget(&self, budget: Joules) -> u64 {
+        self.energy_at_completion
+            .iter()
+            .take_while(|&&e| e <= budget.value())
+            .count() as u64
+    }
+}
+
+/// Build the strategy-facing cost model for an accelerator mapped on a
+/// device at a clock, including the board overheads.
+pub fn cost_model(
+    acc: &Accelerator,
+    device: &'static FpgaDevice,
+    clock: Hertz,
+    platform: &Platform,
+    config: &ConfigController,
+) -> CostModel {
+    let est = power::power(acc, device, clock);
+    let cold_time = config.cold_start_time();
+    let cold_energy =
+        config.cold_start_energy() + platform.overhead(BoardState::Configuring) * cold_time;
+    CostModel {
+        cold_energy,
+        cold_time,
+        idle_power: device.static_power + platform.overhead(BoardState::Waiting),
+        off_power: platform.overhead(BoardState::Waiting),
+        busy_time: acc.latency(clock),
+        busy_power: est.total() + platform.overhead(BoardState::Serving),
+        clock,
+        min_clock: Hertz::from_mhz(1.0),
+    }
+}
+
+/// Busy time/power at a scaled clock: latency stretches as f_nom/f, the
+/// dynamic share of busy power scales with f.
+fn scaled_busy(cost: &CostModel, f: Hertz) -> (Secs, Watts) {
+    let ratio = f.value() / cost.clock.value();
+    let t = Secs(cost.busy_time.value() / ratio);
+    // split busy power: idle_power approximates the static + board share
+    let dyn_part = (cost.busy_power.value() - cost.idle_power.value()).max(0.0);
+    let p = Watts(cost.idle_power.value() + dyn_part * ratio);
+    (t, p)
+}
+
+/// Single-server FIFO simulation of a request stream under `strategy`.
+pub struct NodeSim {
+    pub cost: CostModel,
+    /// Requests queued beyond this bound are dropped (sensor buffers are
+    /// finite on the Elastic Node).
+    pub queue_capacity: usize,
+    /// EMA weight of the gap predictor feeding the strategy.
+    pub predictor_alpha: f64,
+}
+
+impl NodeSim {
+    pub fn new(cost: CostModel) -> NodeSim {
+        NodeSim {
+            cost,
+            queue_capacity: 64,
+            predictor_alpha: 0.3,
+        }
+    }
+
+    /// Run over a sorted arrival trace.  The FPGA starts powered off.
+    pub fn run(&self, arrivals: &[Secs], strategy: &mut dyn Strategy) -> SimReport {
+        let cost = &self.cost;
+        let mut ledger = EnergyLedger::default();
+        let mut latencies = Vec::with_capacity(arrivals.len());
+        let mut energy_at_completion = Vec::with_capacity(arrivals.len());
+        let mut predictor = GapPredictor::new(self.predictor_alpha);
+
+        // node state between servings
+        let mut powered_off = true;
+        // time the server becomes free (configured or off per `powered_off`)
+        let mut t_free = 0.0f64;
+        let mut served = 0u64;
+        let mut dropped = 0u64;
+        // completion times of in-flight/queued work, for queue accounting
+        let mut completions: VecDeque<f64> = VecDeque::new();
+
+        for (i, a) in arrivals.iter().enumerate() {
+            let a = a.value();
+            while let Some(&c) = completions.front() {
+                if c <= a {
+                    completions.pop_front();
+                } else {
+                    break;
+                }
+            }
+            if completions.len() > self.queue_capacity {
+                dropped += 1;
+                continue;
+            }
+
+            // idle/off energy across the gap before this service starts
+            if a > t_free {
+                let gap = Secs(a - t_free);
+                if powered_off {
+                    ledger.off += cost.off_power * gap;
+                } else {
+                    ledger.idle += cost.idle_power * gap;
+                }
+            }
+            let mut t = a.max(t_free);
+
+            // cold start if off (powered_off is re-decided after serving)
+            if powered_off {
+                ledger.config += cost.cold_energy;
+                t += cost.cold_time.value();
+            }
+
+            // predicted gap for clock scaling + the post-decision
+            let predicted = predictor
+                .predict()
+                .unwrap_or_else(|| Secs(cost.breakeven_gap().value().min(1.0)));
+
+            // inference at the strategy's clock
+            let f = strategy.clock(cost, predicted);
+            let (busy_t, busy_p) = scaled_busy(cost, f);
+            t += busy_t.value();
+            ledger.busy += busy_p * busy_t;
+
+            served += 1;
+            latencies.push(t - a);
+            energy_at_completion.push(ledger.total().value());
+            completions.push_back(t);
+            t_free = t;
+
+            // decide what to do until the next request
+            match strategy.decide(cost, predicted) {
+                PostAction::PowerOff => powered_off = true,
+                PostAction::StayIdle => powered_off = false,
+            }
+
+            // feedback: realised gap between completion and next arrival
+            if let Some(next) = arrivals.get(i + 1) {
+                let realized = Secs((next.value() - t_free).max(0.0));
+                strategy.observe(realized);
+                predictor.observe(Secs((next.value() - a).max(1e-9)));
+            }
+        }
+
+        SimReport {
+            strategy: strategy.name(),
+            served,
+            dropped,
+            sim_time: Secs(t_free),
+            energy: ledger,
+            latencies,
+            energy_at_completion,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elastic_node::Platform;
+    use crate::fpga::device::device;
+    use crate::models::Topology;
+    use crate::rtl::composition::{build, BuildOpts};
+    use crate::rtl::fixed_point::Q16_8;
+    use crate::strategy::{IdleWait, OnOff, PredefinedThreshold};
+    use crate::util::rng::Rng;
+    use crate::workload::Workload;
+
+    fn fixture() -> (NodeSim, Vec<Secs>) {
+        let acc = build(Topology::LstmHar, &BuildOpts::optimised(Q16_8));
+        let d = device("xc7s15").unwrap();
+        let platform = Platform::default();
+        let cfg = ConfigController::raw(d);
+        let cost = cost_model(&acc, d, Hertz::from_mhz(100.0), &platform, &cfg);
+        let arrivals = Workload::Periodic { period: Secs::from_ms(40.0) }
+            .arrivals(500, &mut Rng::new(1));
+        (NodeSim::new(cost), arrivals)
+    }
+
+    #[test]
+    fn idle_wait_beats_on_off_at_40ms() {
+        let (sim, arrivals) = fixture();
+        let idle = sim.run(&arrivals, &mut IdleWait);
+        let onoff = sim.run(&arrivals, &mut OnOff);
+        assert_eq!(idle.served, 500);
+        let ratio = onoff.energy_per_item().value() / idle.energy_per_item().value();
+        // the paper reports 12.39x at the 40ms period; the shape (order of
+        // magnitude in idle-waiting's favour) must reproduce
+        assert!(ratio > 4.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn on_off_wins_at_long_periods() {
+        let (sim, _) = fixture();
+        let arrivals = Workload::Periodic { period: Secs(30.0) }
+            .arrivals(30, &mut Rng::new(2));
+        let idle = sim.run(&arrivals, &mut IdleWait);
+        let onoff = sim.run(&arrivals, &mut OnOff);
+        assert!(
+            onoff.energy_per_item().value() < idle.energy_per_item().value(),
+            "onoff {} !< idle {}",
+            onoff.energy_per_item(),
+            idle.energy_per_item()
+        );
+    }
+
+    #[test]
+    fn threshold_matches_best_pure_strategy_on_each_side() {
+        let (sim, _) = fixture();
+        for (period, best_is_idle) in [(Secs::from_ms(40.0), true), (Secs(30.0), false)] {
+            let arrivals = Workload::Periodic { period }.arrivals(50, &mut Rng::new(3));
+            let adaptive = sim.run(&arrivals, &mut PredefinedThreshold::breakeven());
+            let idle = sim.run(&arrivals, &mut IdleWait);
+            let onoff = sim.run(&arrivals, &mut OnOff);
+            let best = if best_is_idle { &idle } else { &onoff };
+            // the predictor has no history before the first gap: allow one
+            // worst-case mispredicted gap on top of the pure optimum
+            let slack = sim.cost.idle_power.value() * period.value()
+                + sim.cost.cold_energy.value();
+            assert!(
+                adaptive.energy.total().value()
+                    <= best.energy.total().value() * 1.05 + slack,
+                "period {period}: adaptive {} vs best {}",
+                adaptive.energy.total(),
+                best.energy.total()
+            );
+        }
+    }
+
+    #[test]
+    fn energy_ledger_components_positive() {
+        let (sim, arrivals) = fixture();
+        let r = sim.run(&arrivals, &mut OnOff);
+        assert!(r.energy.config.value() > 0.0);
+        assert!(r.energy.busy.value() > 0.0);
+        assert!(r.energy.total().value() > r.energy.config.value());
+    }
+
+    #[test]
+    fn budget_query_monotone() {
+        let (sim, arrivals) = fixture();
+        let r = sim.run(&arrivals, &mut IdleWait);
+        let half = r.items_within_budget(Joules(r.energy.total().value() / 2.0));
+        let full = r.items_within_budget(r.energy.total());
+        assert!(half < full);
+        assert_eq!(full, r.served);
+    }
+
+    #[test]
+    fn latencies_include_cold_start() {
+        let (sim, arrivals) = fixture();
+        let onoff = sim.run(&arrivals, &mut OnOff);
+        let idle = sim.run(&arrivals, &mut IdleWait);
+        // every on-off response pays the ~66ms configuration
+        assert!(onoff.latencies.iter().skip(2).all(|&l| l > 0.06));
+        // idle-waiting responses are pure inference after the first
+        assert!(idle.latencies.last().unwrap() < &0.01);
+    }
+
+    #[test]
+    fn overload_drops_requests() {
+        let (sim, _) = fixture();
+        // arrivals far faster than the on-off service time
+        let arrivals = Workload::Periodic { period: Secs::from_ms(1.0) }
+            .arrivals(2000, &mut Rng::new(4));
+        let mut sim = sim;
+        sim.queue_capacity = 4;
+        let r = sim.run(&arrivals, &mut OnOff);
+        assert!(r.dropped > 0, "expected drops");
+        assert_eq!(r.served + r.dropped, 2000);
+    }
+}

@@ -1,0 +1,222 @@
+//! Multi-accelerator node simulation: one FPGA, several generated
+//! accelerators, a request stream that mixes models.
+//!
+//! This is the §4 future-work extension ("dynamic inclusion of inputs"):
+//! when a request targets a model whose bitstream is not resident, the
+//! node must reconfigure — so *which* accelerator stays resident becomes a
+//! workload-aware decision.  Two policies:
+//!
+//! * [`SwapPolicy::Always`] — naive: reconfigure on every model switch.
+//! * [`SwapPolicy::Hysteresis`] — keep the resident accelerator until the
+//!   other model has been requested `threshold` times in a row (absorbs
+//!   ping-pong mixes by batching requests MCU-side for the non-resident
+//!   model up to a small buffer).
+
+use crate::strategy::CostModel;
+use crate::util::units::{Joules, Secs};
+
+/// Per-model serving profile on the shared fabric.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelProfile {
+    /// Cold configuration of this model's bitstream.
+    pub config_energy: Joules,
+    pub config_time: Secs,
+    /// One inference.
+    pub busy_energy: Joules,
+    pub busy_time: Secs,
+}
+
+impl ModelProfile {
+    pub fn from_cost(cost: &CostModel) -> ModelProfile {
+        ModelProfile {
+            config_energy: cost.cold_energy,
+            config_time: cost.cold_time,
+            busy_energy: cost.busy_power * cost.busy_time,
+            busy_time: cost.busy_time,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SwapPolicy {
+    Always,
+    /// Swap only after `threshold` consecutive foreign-model requests;
+    /// foreign requests queue MCU-side meanwhile (bounded buffer).
+    Hysteresis { threshold: u32, buffer: u32 },
+}
+
+/// Outcome of a multi-model run.
+#[derive(Debug, Clone, Default)]
+pub struct MultiReport {
+    pub served: u64,
+    pub deferred_served: u64,
+    pub reconfigurations: u64,
+    pub config_energy: Joules,
+    pub busy_energy: Joules,
+}
+
+impl MultiReport {
+    pub fn total_energy(&self) -> Joules {
+        self.config_energy + self.busy_energy
+    }
+}
+
+/// Simulate a request stream over two models (ids 0/1) with idle power
+/// ignored (both policies idle identically; the comparison is about
+/// reconfiguration energy).
+pub fn run(
+    profiles: [ModelProfile; 2],
+    requests: &[u8],
+    policy: SwapPolicy,
+) -> MultiReport {
+    let mut report = MultiReport::default();
+    let mut resident: Option<u8> = None;
+    let mut foreign_streak = 0u32;
+    let mut deferred: Vec<u8> = Vec::new();
+
+    let serve = |model: u8, report: &mut MultiReport| {
+        let p = &profiles[model as usize];
+        report.busy_energy += p.busy_energy;
+        report.served += 1;
+    };
+    let configure = |model: u8, report: &mut MultiReport| {
+        let p = &profiles[model as usize];
+        report.config_energy += p.config_energy;
+        report.reconfigurations += 1;
+    };
+
+    for &m in requests {
+        debug_assert!(m < 2);
+        match resident {
+            None => {
+                configure(m, &mut report);
+                resident = Some(m);
+                serve(m, &mut report);
+            }
+            Some(r) if r == m => {
+                foreign_streak = 0;
+                serve(m, &mut report);
+            }
+            Some(_) => match policy {
+                SwapPolicy::Always => {
+                    configure(m, &mut report);
+                    resident = Some(m);
+                    foreign_streak = 0;
+                    serve(m, &mut report);
+                }
+                SwapPolicy::Hysteresis { threshold, buffer } => {
+                    foreign_streak += 1;
+                    deferred.push(m);
+                    if foreign_streak >= threshold || deferred.len() as u32 >= buffer {
+                        configure(m, &mut report);
+                        resident = Some(m);
+                        foreign_streak = 0;
+                        for d in deferred.drain(..) {
+                            let p = &profiles[d as usize];
+                            report.busy_energy += p.busy_energy;
+                            report.deferred_served += 1;
+                            report.served += 1;
+                        }
+                    }
+                }
+            },
+        }
+    }
+    // flush any deferred work at the end of the run
+    if let (Some(_), false) = (resident, deferred.is_empty()) {
+        let m = deferred[0];
+        let mut cfg_done = false;
+        for d in deferred.drain(..) {
+            if !cfg_done {
+                configure(m, &mut report);
+                cfg_done = true;
+            }
+            let p = &profiles[d as usize];
+            report.busy_energy += p.busy_energy;
+            report.deferred_served += 1;
+            report.served += 1;
+        }
+        resident = Some(m);
+    }
+    let _ = resident;
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile(cfg_mj: f64, busy_uj: f64) -> ModelProfile {
+        ModelProfile {
+            config_energy: Joules::from_mj(cfg_mj),
+            config_time: Secs::from_ms(60.0),
+            busy_energy: Joules::from_uj(busy_uj),
+            busy_time: Secs::from_us(50.0),
+        }
+    }
+
+    fn ping_pong(n: usize) -> Vec<u8> {
+        (0..n).map(|i| (i % 2) as u8).collect()
+    }
+
+    #[test]
+    fn always_swaps_every_switch() {
+        let r = run([profile(10.0, 5.0); 2], &ping_pong(100), SwapPolicy::Always);
+        assert_eq!(r.reconfigurations, 100);
+        assert_eq!(r.served, 100);
+    }
+
+    #[test]
+    fn hysteresis_batches_ping_pong() {
+        let r = run(
+            [profile(10.0, 5.0); 2],
+            &ping_pong(100),
+            SwapPolicy::Hysteresis { threshold: 8, buffer: 16 },
+        );
+        assert_eq!(r.served, 100);
+        assert!(r.reconfigurations < 20, "{}", r.reconfigurations);
+        let naive = run([profile(10.0, 5.0); 2], &ping_pong(100), SwapPolicy::Always);
+        assert!(r.total_energy().value() < naive.total_energy().value() / 4.0);
+    }
+
+    #[test]
+    fn hysteresis_no_cost_on_single_model() {
+        let reqs = vec![0u8; 50];
+        let r = run(
+            [profile(10.0, 5.0); 2],
+            &reqs,
+            SwapPolicy::Hysteresis { threshold: 4, buffer: 8 },
+        );
+        assert_eq!(r.reconfigurations, 1);
+        assert_eq!(r.served, 50);
+    }
+
+    #[test]
+    fn all_requests_eventually_served() {
+        // trailing deferred requests must flush
+        let mut reqs = vec![0u8; 5];
+        reqs.extend([1, 1]); // below the threshold at stream end
+        let r = run(
+            [profile(10.0, 5.0); 2],
+            &reqs,
+            SwapPolicy::Hysteresis { threshold: 5, buffer: 8 },
+        );
+        assert_eq!(r.served, 7);
+        assert_eq!(r.deferred_served, 2);
+    }
+
+    #[test]
+    fn phase_structured_stream_cheap_for_both() {
+        // long runs per model: hysteresis matches Always
+        let mut reqs = vec![0u8; 40];
+        reqs.extend(vec![1u8; 40]);
+        let a = run([profile(10.0, 5.0); 2], &reqs, SwapPolicy::Always);
+        let h = run(
+            [profile(10.0, 5.0); 2],
+            &reqs,
+            SwapPolicy::Hysteresis { threshold: 4, buffer: 8 },
+        );
+        assert_eq!(a.reconfigurations, 2);
+        assert_eq!(h.reconfigurations, 2);
+    }
+}

@@ -1,0 +1,218 @@
+//! Learnable-threshold strategy switching ([7]).
+//!
+//! The predefined break-even threshold is optimal only when the gap
+//! prediction is; under irregular workloads the realised gaps scatter and
+//! the fixed switch pays the wrong cost on both sides.  The learnable
+//! variant runs multiplicative-weights ("Hedge") over a geometric grid of
+//! candidate thresholds: after every gap, each expert is charged the
+//! energy *it* would have spent on that gap, and the played threshold is
+//! the weighted median of the ensemble.  This is a no-regret scheme — over
+//! time the played threshold tracks the best fixed threshold in hindsight,
+//! and under regime switches it re-adapts at the learning rate.
+
+use super::{CostModel, PostAction, Strategy};
+use crate::util::units::{Joules, Secs};
+
+#[derive(Debug)]
+pub struct LearnableThreshold {
+    /// Candidate thresholds (geometric grid, seconds).
+    grid: Vec<f64>,
+    /// Hedge weights (log domain).
+    log_w: Vec<f64>,
+    /// Learning rate.
+    eta: f64,
+    /// A decision awaits its realised-gap feedback.
+    pending: bool,
+    /// Cost model captured at decision time (for the observe() update).
+    last_cost: Option<CostModel>,
+    /// Predicted gap at decision time.
+    last_predicted: Secs,
+}
+
+impl LearnableThreshold {
+    /// Grid spanning [lo, hi] with `n` geometric points.
+    pub fn new(lo: Secs, hi: Secs, n: usize, eta: f64) -> LearnableThreshold {
+        assert!(n >= 2 && hi.value() > lo.value() && lo.value() > 0.0);
+        let ratio = (hi.value() / lo.value()).powf(1.0 / (n - 1) as f64);
+        let grid: Vec<f64> = (0..n).map(|i| lo.value() * ratio.powi(i as i32)).collect();
+        LearnableThreshold {
+            log_w: vec![0.0; grid.len()],
+            grid,
+            eta,
+            pending: false,
+            last_cost: None,
+            last_predicted: Secs(0.0),
+        }
+    }
+
+    /// Default configuration: 24 thresholds from 1 ms to 30 s.
+    pub fn default_grid() -> LearnableThreshold {
+        LearnableThreshold::new(Secs::from_ms(1.0), Secs(30.0), 24, 0.25)
+    }
+
+    /// Current played threshold: weighted median of the grid.
+    pub fn threshold(&self) -> Secs {
+        let max = self.log_w.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let w: Vec<f64> = self.log_w.iter().map(|l| (l - max).exp()).collect();
+        let total: f64 = w.iter().sum();
+        let mut acc = 0.0;
+        for (i, wi) in w.iter().enumerate() {
+            acc += wi;
+            if acc >= total / 2.0 {
+                return Secs(self.grid[i]);
+            }
+        }
+        Secs(*self.grid.last().unwrap())
+    }
+
+    /// Charge each expert the energy it would have spent on the *realised*
+    /// gap had it applied its threshold to the *predicted* gap — i.e.
+    /// experts are evaluated under the same imperfect predictor the node
+    /// actually has, so the ensemble learns a threshold that compensates
+    /// for prediction lag (the effect [7] exploits).  Losses are
+    /// normalised by the worst expert so `eta` is scale-free.
+    fn update(&mut self, cost: &CostModel, predicted: Secs, realized: Secs) {
+        let losses: Vec<f64> = self
+            .grid
+            .iter()
+            .map(|&th| {
+                let action = if predicted.value() > th {
+                    PostAction::PowerOff
+                } else {
+                    PostAction::StayIdle
+                };
+                cost.gap_energy(action, realized).value()
+            })
+            .collect();
+        // regret against the round's best expert, on a *fixed* energy
+        // scale (the cold-start cost) so high-stakes rounds move the
+        // weights proportionally more than low-stakes ones — per-round
+        // min-max normalisation would erase exactly the asymmetry the
+        // learner needs to see.
+        let min = losses.iter().cloned().fold(f64::MAX, f64::min);
+        let scale = cost.cold_energy.value().max(1e-18);
+        for (lw, loss) in self.log_w.iter_mut().zip(&losses) {
+            let regret = ((loss - min) / scale).min(8.0);
+            *lw -= self.eta * regret;
+        }
+        // keep the log-weights bounded
+        let m = self.log_w.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        for lw in &mut self.log_w {
+            *lw -= m;
+            *lw = lw.max(-50.0);
+        }
+    }
+
+    /// Energy a fixed threshold would pay on a gap (used by tests/benches).
+    pub fn fixed_threshold_energy(cost: &CostModel, th: Secs, gap: Secs) -> Joules {
+        let action = if gap.value() > th.value() {
+            PostAction::PowerOff
+        } else {
+            PostAction::StayIdle
+        };
+        cost.gap_energy(action, gap)
+    }
+}
+
+impl Strategy for LearnableThreshold {
+    fn name(&self) -> &'static str {
+        "learnable-threshold"
+    }
+
+    fn decide(&mut self, cost: &CostModel, predicted_gap: Secs) -> PostAction {
+        self.last_cost = Some(*cost);
+        self.last_predicted = predicted_gap;
+        self.pending = true;
+        if predicted_gap.value() > self.threshold().value() {
+            PostAction::PowerOff
+        } else {
+            PostAction::StayIdle
+        }
+    }
+
+    fn observe(&mut self, realized_gap: Secs) {
+        if let (true, Some(cost)) = (self.pending, self.last_cost) {
+            self.update(&cost, self.last_predicted, realized_gap);
+            self.pending = false;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::{Hertz, Watts};
+
+    fn cost() -> CostModel {
+        CostModel {
+            cold_energy: Joules::from_mj(10.0),
+            cold_time: Secs::from_ms(66.0),
+            idle_power: Watts::from_mw(30.0),
+            off_power: Watts::from_mw(0.9),
+            busy_time: Secs::from_us(100.0),
+            busy_power: Watts::from_mw(80.0),
+            clock: Hertz::from_mhz(100.0),
+            min_clock: Hertz::from_mhz(5.0),
+        }
+    }
+
+    #[test]
+    fn converges_to_idle_side_on_short_gaps() {
+        let c = cost();
+        let mut s = LearnableThreshold::default_grid();
+        // constant 40ms gaps: best action is StayIdle -> threshold drifts up
+        for _ in 0..500 {
+            let _ = s.decide(&c, Secs::from_ms(40.0));
+            s.observe(Secs::from_ms(40.0));
+        }
+        assert_eq!(s.decide(&c, Secs::from_ms(40.0)), PostAction::StayIdle);
+        assert!(s.threshold().value() > 0.04, "th {}", s.threshold());
+    }
+
+    #[test]
+    fn converges_to_off_side_on_long_gaps() {
+        let c = cost();
+        let mut s = LearnableThreshold::default_grid();
+        for _ in 0..500 {
+            let _ = s.decide(&c, Secs(5.0));
+            s.observe(Secs(5.0));
+        }
+        assert_eq!(s.decide(&c, Secs(5.0)), PostAction::PowerOff);
+        assert!(s.threshold().value() < 5.0);
+    }
+
+    #[test]
+    fn readapts_after_regime_switch() {
+        let c = cost();
+        let mut s = LearnableThreshold::default_grid();
+        for _ in 0..300 {
+            let _ = s.decide(&c, Secs(5.0));
+            s.observe(Secs(5.0));
+        }
+        let th_long = s.threshold().value();
+        for _ in 0..300 {
+            let _ = s.decide(&c, Secs::from_ms(20.0));
+            s.observe(Secs::from_ms(20.0));
+        }
+        // after the switch to short gaps the threshold must move up past
+        // the observed gap (choose idle)
+        assert!(s.threshold().value() > 0.02, "before {} after {}", th_long, s.threshold());
+    }
+
+    #[test]
+    fn grid_is_geometric_and_sorted() {
+        let s = LearnableThreshold::new(Secs::from_ms(1.0), Secs(10.0), 16, 0.2);
+        assert_eq!(s.grid.len(), 16);
+        assert!(s.grid.windows(2).all(|w| w[1] > w[0]));
+        assert!((s.grid[0] - 0.001).abs() < 1e-12);
+        assert!((s.grid[15] - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn observe_without_decide_is_noop() {
+        let mut s = LearnableThreshold::default_grid();
+        let before = s.threshold();
+        s.observe(Secs(1.0));
+        assert_eq!(before.value(), s.threshold().value());
+    }
+}

@@ -1,0 +1,284 @@
+//! Workload-aware strategies (RQ2, §3.2, [6,7]).
+//!
+//! After every served request the node must decide what to do with the
+//! FPGA until the next one:
+//!
+//! * **On-Off** — power the rail down; pay `powerup + configuration`
+//!   (time *and* energy, MCU + flash + FPGA) on the next request.
+//! * **Idle-Waiting** — keep the fabric configured; pay idle power for the
+//!   whole gap ([6]'s contribution: at short periods this wins by an order
+//!   of magnitude).
+//! * **Clock-Scaling** — stretch the inference across the expected gap at
+//!   a reduced clock, trading peak power for the idle window.
+//! * **Adaptive (predefined threshold)** — Off when the expected gap
+//!   exceeds the break-even threshold `E_cold / P_idle`, Idle otherwise.
+//! * **Adaptive (learnable threshold)** — the same switch driven by an
+//!   online expert ensemble over candidate thresholds, updated with the
+//!   realised energy regret of each expert ([7]).
+
+pub mod learnable;
+
+use crate::util::units::{Hertz, Joules, Secs, Watts};
+
+/// What to do with the fabric after completing a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PostAction {
+    PowerOff,
+    StayIdle,
+}
+
+/// The cost constants a strategy trades against (device + accelerator +
+/// board, all precomputed by the simulator).
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    /// Full cold-start energy: power-up ramp + configuration, including
+    /// MCU/flash streaming overhead.
+    pub cold_energy: Joules,
+    /// Cold-start latency.
+    pub cold_time: Secs,
+    /// Power while configured and idle (FPGA static + MCU sleep).
+    pub idle_power: Watts,
+    /// Power while off (MCU sleep only).
+    pub off_power: Watts,
+    /// Inference latency at the nominal clock.
+    pub busy_time: Secs,
+    /// Power during inference at the nominal clock.
+    pub busy_power: Watts,
+    /// Nominal clock.
+    pub clock: Hertz,
+    /// Minimum clock the design can be scaled down to.
+    pub min_clock: Hertz,
+}
+
+impl CostModel {
+    /// The break-even gap: beyond this, powering off saves energy.
+    /// `P_idle * g = E_cold + P_off * g  =>  g* = E_cold / (P_idle - P_off)`.
+    pub fn breakeven_gap(&self) -> Secs {
+        let dp = (self.idle_power.value() - self.off_power.value()).max(1e-12);
+        Secs(self.cold_energy.value() / dp)
+    }
+
+    /// Energy consumed across a gap of length `g` for each action.
+    pub fn gap_energy(&self, action: PostAction, g: Secs) -> Joules {
+        match action {
+            PostAction::StayIdle => self.idle_power * g,
+            PostAction::PowerOff => self.cold_energy + self.off_power * g,
+        }
+    }
+}
+
+/// Strategy interface: consulted after each completed request.
+pub trait Strategy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Decision for the upcoming gap.  `predicted_gap` is the node's
+    /// current estimate of the time until the next request.
+    fn decide(&mut self, cost: &CostModel, predicted_gap: Secs) -> PostAction;
+
+    /// Clock to run the *next* inference at (clock-scaling strategies
+    /// deviate from nominal).
+    fn clock(&self, cost: &CostModel, predicted_gap: Secs) -> Hertz {
+        let _ = predicted_gap;
+        cost.clock
+    }
+
+    /// Feedback: the realised gap that followed the last decision.
+    fn observe(&mut self, realized_gap: Secs) {
+        let _ = realized_gap;
+    }
+}
+
+/// Always power off (the traditional duty-cycling baseline).
+#[derive(Debug, Default)]
+pub struct OnOff;
+
+impl Strategy for OnOff {
+    fn name(&self) -> &'static str {
+        "on-off"
+    }
+
+    fn decide(&mut self, _cost: &CostModel, _gap: Secs) -> PostAction {
+        PostAction::PowerOff
+    }
+}
+
+/// Always stay configured ([6]).
+#[derive(Debug, Default)]
+pub struct IdleWait;
+
+impl Strategy for IdleWait {
+    fn name(&self) -> &'static str {
+        "idle-wait"
+    }
+
+    fn decide(&mut self, _cost: &CostModel, _gap: Secs) -> PostAction {
+        PostAction::StayIdle
+    }
+}
+
+/// Stay configured and stretch the next inference across the predicted
+/// gap by lowering the clock (dynamic power scales with f, so the busy
+/// energy stays ~constant while the high-power window widens to swallow
+/// the idle window).
+#[derive(Debug, Default)]
+pub struct ClockScale;
+
+impl Strategy for ClockScale {
+    fn name(&self) -> &'static str {
+        "clock-scale"
+    }
+
+    fn decide(&mut self, _cost: &CostModel, _gap: Secs) -> PostAction {
+        PostAction::StayIdle
+    }
+
+    fn clock(&self, cost: &CostModel, predicted_gap: Secs) -> Hertz {
+        if predicted_gap.value() <= cost.busy_time.value() {
+            return cost.clock;
+        }
+        // choose f so that busy_time * (f_nom / f) ~ 0.9 * gap
+        let stretch = 0.9 * predicted_gap.value() / cost.busy_time.value();
+        let f = cost.clock.value() / stretch;
+        Hertz(f.clamp(cost.min_clock.value(), cost.clock.value()))
+    }
+}
+
+/// Threshold switch with the analytically precomputed break-even point.
+#[derive(Debug)]
+pub struct PredefinedThreshold {
+    threshold: Option<Secs>,
+}
+
+impl PredefinedThreshold {
+    /// Use the cost model's break-even gap.
+    pub fn breakeven() -> PredefinedThreshold {
+        PredefinedThreshold { threshold: None }
+    }
+
+    /// Fix an explicit threshold.
+    pub fn at(threshold: Secs) -> PredefinedThreshold {
+        PredefinedThreshold {
+            threshold: Some(threshold),
+        }
+    }
+}
+
+/// The threshold a designer would precompute from FPGA datasheet numbers
+/// alone — configuration energy and static power, *without* the
+/// board-level MCU/flash streaming overheads the deployed node actually
+/// pays.  This is the realistic "predefined" baseline of [7]: the
+/// learnable scheme's advantage is discovering the deployment's true
+/// crossover (see benches/e4_adaptive.rs).
+pub fn datasheet_breakeven(device: &'static crate::fpga::FpgaDevice) -> Secs {
+    let cfg = crate::fpga::ConfigController::raw(device);
+    Secs(cfg.cold_start_energy().value() / device.static_power.value().max(1e-12))
+}
+
+impl Strategy for PredefinedThreshold {
+    fn name(&self) -> &'static str {
+        "predefined-threshold"
+    }
+
+    fn decide(&mut self, cost: &CostModel, predicted_gap: Secs) -> PostAction {
+        let th = self.threshold.unwrap_or_else(|| cost.breakeven_gap());
+        if predicted_gap.value() > th.value() {
+            PostAction::PowerOff
+        } else {
+            PostAction::StayIdle
+        }
+    }
+}
+
+/// Exponential-moving-average gap predictor shared by the adaptive
+/// strategies and the simulator.
+#[derive(Debug, Clone)]
+pub struct GapPredictor {
+    ema: Option<f64>,
+    alpha: f64,
+}
+
+impl GapPredictor {
+    pub fn new(alpha: f64) -> GapPredictor {
+        assert!((0.0..=1.0).contains(&alpha));
+        GapPredictor { ema: None, alpha }
+    }
+
+    pub fn observe(&mut self, gap: Secs) {
+        self.ema = Some(match self.ema {
+            None => gap.value(),
+            Some(e) => e * (1.0 - self.alpha) + gap.value() * self.alpha,
+        });
+    }
+
+    pub fn predict(&self) -> Option<Secs> {
+        self.ema.map(Secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cost() -> CostModel {
+        CostModel {
+            cold_energy: Joules::from_mj(10.0),
+            cold_time: Secs::from_ms(66.0),
+            idle_power: Watts::from_mw(30.0),
+            off_power: Watts::from_mw(0.9),
+            busy_time: Secs::from_us(100.0),
+            busy_power: Watts::from_mw(80.0),
+            clock: Hertz::from_mhz(100.0),
+            min_clock: Hertz::from_mhz(5.0),
+        }
+    }
+
+    #[test]
+    fn breakeven_formula() {
+        let c = cost();
+        // 10 mJ / 29.1 mW ~ 0.344 s
+        assert!((c.breakeven_gap().value() - 0.010 / 0.0291).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gap_energy_crossover() {
+        let c = cost();
+        let g_short = Secs::from_ms(40.0);
+        let g_long = Secs(2.0);
+        assert!(
+            c.gap_energy(PostAction::StayIdle, g_short).value()
+                < c.gap_energy(PostAction::PowerOff, g_short).value()
+        );
+        assert!(
+            c.gap_energy(PostAction::PowerOff, g_long).value()
+                < c.gap_energy(PostAction::StayIdle, g_long).value()
+        );
+    }
+
+    #[test]
+    fn predefined_switches_at_threshold() {
+        let c = cost();
+        let mut s = PredefinedThreshold::breakeven();
+        assert_eq!(s.decide(&c, Secs::from_ms(40.0)), PostAction::StayIdle);
+        assert_eq!(s.decide(&c, Secs(1.0)), PostAction::PowerOff);
+    }
+
+    #[test]
+    fn clock_scaling_stretches() {
+        let c = cost();
+        let s = ClockScale;
+        let f = s.clock(&c, Secs::from_ms(10.0));
+        assert!(f.value() < c.clock.value());
+        assert!(f.value() >= c.min_clock.value());
+        // gap shorter than inference: no scaling
+        assert_eq!(s.clock(&c, Secs::from_us(50.0)).value(), c.clock.value());
+    }
+
+    #[test]
+    fn gap_predictor_ema() {
+        let mut p = GapPredictor::new(0.5);
+        assert!(p.predict().is_none());
+        p.observe(Secs(1.0));
+        p.observe(Secs(2.0));
+        assert!((p.predict().unwrap().value() - 1.5).abs() < 1e-12);
+    }
+}

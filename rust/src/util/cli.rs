@@ -1,0 +1,125 @@
+//! Hand-rolled command-line parsing (clap is not in the vendored crate set).
+//!
+//! Supports the subcommand + `--key value` / `--flag` grammar used by the
+//! `elastic-gen` binary and the examples:
+//!
+//! ```text
+//! elastic-gen generate --app soft-sensor --device xc7s15 --goal energy
+//! ```
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: positionals in order plus `--key [value]` options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (first token is NOT the program
+    /// name — strip it before calling).
+    pub fn parse(tokens: &[String]) -> Args {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(name) = t.strip_prefix("--") {
+                // --key=value or --key value or --flag
+                if let Some((k, v)) = name.split_once('=') {
+                    a.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    a.options.insert(name.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    a.flags.push(name.to_string());
+                }
+            } else {
+                a.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        a
+    }
+
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn from_env() -> Args {
+        let v: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&v)
+    }
+
+    /// First positional argument (the subcommand), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|s| {
+                s.parse::<f64>()
+                    .unwrap_or_else(|_| panic!("--{key} expects a number, got '{s}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|s| {
+                s.parse::<usize>()
+                    .unwrap_or_else(|_| panic!("--{key} expects an integer, got '{s}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = Args::parse(&toks("generate --device xc7s15 --budget 2.5 --verbose"));
+        assert_eq!(a.subcommand(), Some("generate"));
+        assert_eq!(a.get("device"), Some("xc7s15"));
+        assert_eq!(a.get_f64("budget", 0.0), 2.5);
+        assert!(a.has_flag("verbose"));
+        assert!(!a.has_flag("quiet"));
+    }
+
+    #[test]
+    fn key_equals_value() {
+        let a = Args::parse(&toks("run --n=10"));
+        assert_eq!(a.get_usize("n", 0), 10);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&toks(""));
+        assert_eq!(a.subcommand(), None);
+        assert_eq!(a.get_or("x", "d"), "d");
+        assert_eq!(a.get_f64("y", 1.5), 1.5);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse(&toks("cmd --flag"));
+        assert!(a.has_flag("flag"));
+    }
+}

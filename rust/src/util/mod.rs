@@ -1,0 +1,12 @@
+//! Shared substrates: deterministic RNG, statistics, JSON, tables, units,
+//! CLI parsing and a property-testing harness.  These stand in for crates
+//! (serde_json / clap / proptest / criterion) that are not available in the
+//! offline vendored build (see DESIGN.md §3).
+
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod units;

@@ -1,0 +1,266 @@
+//! Property-based testing harness (proptest is not in the vendored crate
+//! set, so the crate carries its own minimal, deterministic equivalent).
+//!
+//! A property is checked over `cases` randomly generated inputs; on failure
+//! the harness greedily shrinks the input with the strategy's `shrink`
+//! candidates until no smaller failing input is found, then panics with the
+//! minimal counterexample and the seed that reproduces it.
+//!
+//! ```ignore
+//! // (doctest binaries cannot link libstdc++ in the offline sandbox;
+//! // the same example runs as a unit test below)
+//! use elastic_gen::util::proptest::{check, vec_f64};
+//! check("sum is commutative", 100, vec_f64(0, 16, -1e3..1e3), |v| {
+//!     let s1: f64 = v.iter().sum();
+//!     let s2: f64 = v.iter().rev().sum();
+//!     (s1 - s2).abs() < 1e-6
+//! });
+//! ```
+
+use super::rng::Rng;
+use std::ops::Range;
+
+/// A generation + shrinking strategy for values of type `T`.
+pub trait Strategy {
+    type Value: Clone + std::fmt::Debug;
+
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+
+    /// Candidate smaller values; empty when fully shrunk.
+    fn shrink(&self, value: &Self::Value) -> Vec<Self::Value>;
+}
+
+/// Default seed; override with env `PROPTEST_SEED` for replay.
+fn seed() -> u64 {
+    std::env::var("PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xE1A5_71C6_0001)
+}
+
+/// Check `prop` over `cases` generated inputs; panics with the minimal
+/// failing case otherwise.
+pub fn check<S: Strategy>(
+    name: &str,
+    cases: usize,
+    strategy: S,
+    prop: impl Fn(&S::Value) -> bool,
+) {
+    let mut rng = Rng::new(seed() ^ hash_name(name));
+    for case in 0..cases {
+        let value = strategy.generate(&mut rng);
+        if !prop(&value) {
+            let minimal = shrink_loop(&strategy, value, &prop);
+            panic!(
+                "property '{name}' failed at case {case}\n  minimal counterexample: {minimal:?}\n  \
+                 replay with PROPTEST_SEED={}",
+                seed()
+            );
+        }
+    }
+}
+
+fn shrink_loop<S: Strategy>(
+    strategy: &S,
+    mut failing: S::Value,
+    prop: &impl Fn(&S::Value) -> bool,
+) -> S::Value {
+    // bounded effort so pathological strategies terminate
+    for _ in 0..10_000 {
+        let mut advanced = false;
+        for cand in strategy.shrink(&failing) {
+            if !prop(&cand) {
+                failing = cand;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    failing
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// built-in strategies
+// ---------------------------------------------------------------------------
+
+/// Uniform f64 in a range; shrinks toward 0 / the low bound.
+pub struct F64Range(pub Range<f64>);
+
+impl Strategy for F64Range {
+    type Value = f64;
+
+    fn generate(&self, rng: &mut Rng) -> f64 {
+        rng.range(self.0.start, self.0.end)
+    }
+
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        let target = if self.0.contains(&0.0) { 0.0 } else { self.0.start };
+        if (v - target).abs() < 1e-12 {
+            return vec![];
+        }
+        vec![target, target + (v - target) / 2.0]
+    }
+}
+
+/// Uniform i64 in an inclusive range; shrinks toward 0 / low bound.
+pub struct I64Range(pub i64, pub i64);
+
+impl Strategy for I64Range {
+    type Value = i64;
+
+    fn generate(&self, rng: &mut Rng) -> i64 {
+        rng.int_range(self.0, self.1)
+    }
+
+    fn shrink(&self, v: &i64) -> Vec<i64> {
+        let target = if self.0 <= 0 && self.1 >= 0 { 0 } else { self.0 };
+        if *v == target {
+            return vec![];
+        }
+        let mut out = vec![target];
+        let mid = target + (v - target) / 2;
+        if mid != *v {
+            out.push(mid);
+        }
+        // unit step toward the target so halving can't overshoot the
+        // true boundary
+        out.push(v - (v - target).signum());
+        out
+    }
+}
+
+/// Vec of f64 with length in [min_len, max_len]; shrinks by halving the
+/// vector and shrinking elements toward zero.
+pub struct VecF64 {
+    pub min_len: usize,
+    pub max_len: usize,
+    pub range: Range<f64>,
+}
+
+pub fn vec_f64(min_len: usize, max_len: usize, range: Range<f64>) -> VecF64 {
+    VecF64 {
+        min_len,
+        max_len,
+        range,
+    }
+}
+
+impl Strategy for VecF64 {
+    type Value = Vec<f64>;
+
+    fn generate(&self, rng: &mut Rng) -> Vec<f64> {
+        let len = rng.int_range(self.min_len as i64, self.max_len as i64) as usize;
+        (0..len)
+            .map(|_| rng.range(self.range.start, self.range.end))
+            .collect()
+    }
+
+    fn shrink(&self, v: &Vec<f64>) -> Vec<Vec<f64>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            out.push(v[..v.len() / 2].to_vec());
+            out.push(v[1..].to_vec());
+        }
+        // shrink the largest-magnitude element toward zero
+        if let Some((i, _)) = v
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+        {
+            if v[i].abs() > 1e-12 {
+                let mut w = v.clone();
+                w[i] /= 2.0;
+                out.push(w);
+            }
+        }
+        out
+    }
+}
+
+/// Pair of independent strategies.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Strategy, B: Strategy> Strategy for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+/// One of a fixed set of choices (no shrinking).
+pub struct OneOf<T: Clone + std::fmt::Debug>(pub Vec<T>);
+
+impl<T: Clone + std::fmt::Debug> Strategy for OneOf<T> {
+    type Value = T;
+
+    fn generate(&self, rng: &mut Rng) -> T {
+        rng.choice(&self.0).clone()
+    }
+
+    fn shrink(&self, _v: &T) -> Vec<T> {
+        vec![]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs() {
+        check("abs is non-negative", 200, F64Range(-100.0..100.0), |x| {
+            x.abs() >= 0.0
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimal() {
+        let r = std::panic::catch_unwind(|| {
+            check("all below 50", 500, I64Range(0, 1000), |x| *x < 50);
+        });
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        // minimal counterexample of "x < 50" over [0,1000] is exactly 50
+        assert!(msg.contains("minimal counterexample: 50"), "{msg}");
+    }
+
+    #[test]
+    fn vec_shrink_respects_min_len() {
+        let s = vec_f64(2, 8, -1.0..1.0);
+        let shrunk = s.shrink(&vec![0.5, -0.5]);
+        assert!(shrunk.iter().all(|v| v.len() >= 2 || !v.is_empty()));
+    }
+
+    #[test]
+    fn pair_generates_both() {
+        let mut rng = Rng::new(1);
+        let s = Pair(I64Range(1, 5), F64Range(0.0..1.0));
+        let (a, b) = s.generate(&mut rng);
+        assert!((1..=5).contains(&a));
+        assert!((0.0..1.0).contains(&b));
+    }
+}

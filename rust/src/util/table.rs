@@ -1,0 +1,160 @@
+//! ASCII table rendering for bench harnesses and EDA-style reports.
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple text table: header row + data rows, auto-sized columns.
+#[derive(Debug, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    align: Vec<Align>,
+    rows: Vec<Vec<String>>,
+    title: Option<String>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            align: header
+                .iter()
+                .enumerate()
+                .map(|(i, _)| if i == 0 { Align::Left } else { Align::Right })
+                .collect(),
+            rows: Vec::new(),
+            title: None,
+        }
+    }
+
+    pub fn with_title(mut self, title: &str) -> Table {
+        self.title = Some(title.to_string());
+        self
+    }
+
+    pub fn align(mut self, col: usize, a: Align) -> Table {
+        self.align[col] = a;
+        self
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Table {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row arity mismatch: {} vs {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Table {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.chars().count();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.chars().count());
+            }
+        }
+
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &width {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+
+        let fmt_row = |cells: &[String], align: &[Align]| -> String {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                let pad = width[i] - c.chars().count();
+                match align[i] {
+                    Align::Left => {
+                        s.push(' ');
+                        s.push_str(c);
+                        s.push_str(&" ".repeat(pad + 1));
+                    }
+                    Align::Right => {
+                        s.push_str(&" ".repeat(pad + 1));
+                        s.push_str(c);
+                        s.push(' ');
+                    }
+                }
+                s.push('|');
+            }
+            s
+        };
+
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(t);
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.header, &vec![Align::Left; ncol]));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &self.align));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+}
+
+/// Format an f64 with `digits` significant decimals, trimming noise.
+pub fn num(x: f64, digits: usize) -> String {
+    format!("{:.*}", digits, x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row_strs(&["alpha", "1.0"]);
+        t.row_strs(&["b", "123.45"]);
+        let s = t.render();
+        assert!(s.contains("| alpha |"));
+        assert!(s.contains("| 123.45 |"));
+        let lines: Vec<&str> = s.lines().collect();
+        // all lines equal width
+        assert!(lines.windows(2).all(|w| w[0].len() == w[1].len()));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        Table::new(&["a", "b"]).row_strs(&["only-one"]);
+    }
+
+    #[test]
+    fn title_rendered_first() {
+        let mut t = Table::new(&["x"]).with_title("T1");
+        t.row_strs(&["1"]);
+        assert!(t.render().starts_with("T1\n"));
+    }
+}

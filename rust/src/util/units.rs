@@ -1,0 +1,268 @@
+//! Physical-unit newtypes for the energy model.
+//!
+//! The whole evaluation pipeline turns on correct joule accounting, so time,
+//! power and energy get distinct types with only the physically meaningful
+//! arithmetic: `Power * Time = Energy`, `Energy / Time = Power`, etc.
+//! All values are f64 SI (seconds, watts, joules, hertz).
+
+use std::fmt;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub, SubAssign};
+
+macro_rules! unit {
+    ($name:ident, $sym:expr) => {
+        #[derive(Debug, Clone, Copy, PartialEq, PartialOrd, Default)]
+        pub struct $name(pub f64);
+
+        impl $name {
+            pub const ZERO: $name = $name(0.0);
+
+            pub fn value(self) -> f64 {
+                self.0
+            }
+
+            pub fn max(self, other: $name) -> $name {
+                $name(self.0.max(other.0))
+            }
+
+            pub fn min(self, other: $name) -> $name {
+                $name(self.0.min(other.0))
+            }
+
+            pub fn is_finite(self) -> bool {
+                self.0.is_finite()
+            }
+        }
+
+        impl Add for $name {
+            type Output = $name;
+            fn add(self, o: $name) -> $name {
+                $name(self.0 + o.0)
+            }
+        }
+
+        impl Sub for $name {
+            type Output = $name;
+            fn sub(self, o: $name) -> $name {
+                $name(self.0 - o.0)
+            }
+        }
+
+        impl AddAssign for $name {
+            fn add_assign(&mut self, o: $name) {
+                self.0 += o.0;
+            }
+        }
+
+        impl SubAssign for $name {
+            fn sub_assign(&mut self, o: $name) {
+                self.0 -= o.0;
+            }
+        }
+
+        impl Neg for $name {
+            type Output = $name;
+            fn neg(self) -> $name {
+                $name(-self.0)
+            }
+        }
+
+        impl Mul<f64> for $name {
+            type Output = $name;
+            fn mul(self, k: f64) -> $name {
+                $name(self.0 * k)
+            }
+        }
+
+        impl Div<f64> for $name {
+            type Output = $name;
+            fn div(self, k: f64) -> $name {
+                $name(self.0 / k)
+            }
+        }
+
+        /// Dimensionless ratio of two like quantities.
+        impl Div<$name> for $name {
+            type Output = f64;
+            fn div(self, o: $name) -> f64 {
+                self.0 / o.0
+            }
+        }
+
+        impl Sum for $name {
+            fn sum<I: Iterator<Item = $name>>(iter: I) -> $name {
+                $name(iter.map(|x| x.0).sum())
+            }
+        }
+
+        impl fmt::Display for $name {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "{}{}", format_si(self.0), $sym)
+            }
+        }
+    };
+}
+
+unit!(Secs, "s");
+unit!(Watts, "W");
+unit!(Joules, "J");
+unit!(Hertz, "Hz");
+
+impl Mul<Secs> for Watts {
+    type Output = Joules;
+    fn mul(self, t: Secs) -> Joules {
+        Joules(self.0 * t.0)
+    }
+}
+
+impl Mul<Watts> for Secs {
+    type Output = Joules;
+    fn mul(self, p: Watts) -> Joules {
+        Joules(self.0 * p.0)
+    }
+}
+
+impl Div<Secs> for Joules {
+    type Output = Watts;
+    fn div(self, t: Secs) -> Watts {
+        Watts(self.0 / t.0)
+    }
+}
+
+impl Div<Watts> for Joules {
+    type Output = Secs;
+    fn div(self, p: Watts) -> Secs {
+        Secs(self.0 / p.0)
+    }
+}
+
+impl Secs {
+    pub fn from_ms(ms: f64) -> Secs {
+        Secs(ms * 1e-3)
+    }
+
+    pub fn from_us(us: f64) -> Secs {
+        Secs(us * 1e-6)
+    }
+
+    pub fn ms(self) -> f64 {
+        self.0 * 1e3
+    }
+
+    pub fn us(self) -> f64 {
+        self.0 * 1e6
+    }
+
+    /// Cycles at `f` needed to cover this duration (ceiling).
+    pub fn cycles_at(self, f: Hertz) -> u64 {
+        (self.0 * f.0).ceil() as u64
+    }
+}
+
+impl Hertz {
+    pub fn from_mhz(mhz: f64) -> Hertz {
+        Hertz(mhz * 1e6)
+    }
+
+    pub fn mhz(self) -> f64 {
+        self.0 * 1e-6
+    }
+
+    /// Duration of `cycles` clock cycles at this frequency.
+    pub fn cycles(self, cycles: u64) -> Secs {
+        Secs(cycles as f64 / self.0)
+    }
+}
+
+impl Joules {
+    pub fn from_mj(mj: f64) -> Joules {
+        Joules(mj * 1e-3)
+    }
+
+    pub fn from_uj(uj: f64) -> Joules {
+        Joules(uj * 1e-6)
+    }
+
+    pub fn mj(self) -> f64 {
+        self.0 * 1e3
+    }
+
+    pub fn uj(self) -> f64 {
+        self.0 * 1e6
+    }
+}
+
+impl Watts {
+    pub fn from_mw(mw: f64) -> Watts {
+        Watts(mw * 1e-3)
+    }
+
+    pub fn mw(self) -> f64 {
+        self.0 * 1e3
+    }
+}
+
+/// Format with an SI prefix at 4 significant digits (e.g. `12.34m`).
+pub fn format_si(x: f64) -> String {
+    if x == 0.0 {
+        return "0".into();
+    }
+    let a = x.abs();
+    let (scale, prefix) = if a >= 1e9 {
+        (1e-9, "G")
+    } else if a >= 1e6 {
+        (1e-6, "M")
+    } else if a >= 1e3 {
+        (1e-3, "k")
+    } else if a >= 1.0 {
+        (1.0, "")
+    } else if a >= 1e-3 {
+        (1e3, "m")
+    } else if a >= 1e-6 {
+        (1e6, "u")
+    } else if a >= 1e-9 {
+        (1e9, "n")
+    } else {
+        (1e12, "p")
+    };
+    format!("{:.4}{}", x * scale, prefix)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dimensional_arithmetic() {
+        let e = Watts(2.0) * Secs(3.0);
+        assert_eq!(e, Joules(6.0));
+        assert_eq!(e / Secs(3.0), Watts(2.0));
+        assert_eq!(e / Watts(2.0), Secs(3.0));
+        assert!((Joules(6.0) / Joules(3.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn conversions() {
+        assert_eq!(Secs::from_ms(40.0).value(), 0.04);
+        assert!((Secs::from_us(28.07).us() - 28.07).abs() < 1e-9);
+        assert_eq!(Hertz::from_mhz(100.0).value(), 100e6);
+        assert_eq!(Hertz::from_mhz(100.0).cycles(100), Secs(1e-6));
+        assert_eq!(Secs(1e-6).cycles_at(Hertz::from_mhz(100.0)), 100);
+    }
+
+    #[test]
+    fn si_formatting() {
+        assert_eq!(format_si(0.0), "0");
+        assert!(format_si(0.0123).starts_with("12.3"));
+        assert!(format_si(1.5e6).ends_with('M'));
+        assert!(format_si(-2e-6).contains('u'));
+    }
+
+    #[test]
+    fn sum_and_ordering() {
+        let total: Joules = [Joules(1.0), Joules(2.5)].into_iter().sum();
+        assert_eq!(total, Joules(3.5));
+        assert!(Secs(1.0) < Secs(2.0));
+        assert_eq!(Secs(1.0).max(Secs(2.0)), Secs(2.0));
+    }
+}

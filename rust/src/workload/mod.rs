@@ -1,0 +1,217 @@
+//! Workload models (RQ2): request-arrival processes with the
+//! characteristics §2.1 names — regular sensor periods, irregular/bursty
+//! event streams — plus trace capture/replay for reproducible comparisons.
+
+pub mod trace;
+
+use crate::util::rng::Rng;
+use crate::util::units::Secs;
+
+/// A request-arrival process.
+#[derive(Debug, Clone)]
+pub enum Workload {
+    /// Fixed sensor period (the regular case of [6]).
+    Periodic { period: Secs },
+    /// Poisson arrivals with mean inter-arrival `mean_gap` (irregular [7]).
+    Poisson { mean_gap: Secs },
+    /// Bursts of `burst_len` requests `intra_gap` apart, separated by
+    /// `burst_gap` (the event-camera/alarm pattern of [7]).
+    Bursty {
+        burst_len: u32,
+        intra_gap: Secs,
+        burst_gap: Secs,
+    },
+    /// Alternating phases of two mean rates (regime switching), the
+    /// hardest case for a fixed threshold.
+    Phased {
+        fast_gap: Secs,
+        slow_gap: Secs,
+        phase_len: u32,
+    },
+    /// Explicit absolute arrival times.
+    Trace { times: Vec<Secs> },
+}
+
+impl Workload {
+    /// Generate `n` absolute arrival times (sorted, starting after t=0).
+    pub fn arrivals(&self, n: usize, rng: &mut Rng) -> Vec<Secs> {
+        let mut out = Vec::with_capacity(n);
+        match self {
+            Workload::Periodic { period } => {
+                for i in 1..=n {
+                    out.push(Secs(period.value() * i as f64));
+                }
+            }
+            Workload::Poisson { mean_gap } => {
+                let lambda = 1.0 / mean_gap.value();
+                let mut t = 0.0;
+                for _ in 0..n {
+                    t += rng.exponential(lambda);
+                    out.push(Secs(t));
+                }
+            }
+            Workload::Bursty {
+                burst_len,
+                intra_gap,
+                burst_gap,
+            } => {
+                let mut t = 0.0;
+                'outer: loop {
+                    t += burst_gap.value();
+                    for _ in 0..*burst_len {
+                        out.push(Secs(t));
+                        if out.len() == n {
+                            break 'outer;
+                        }
+                        t += intra_gap.value();
+                    }
+                }
+            }
+            Workload::Phased {
+                fast_gap,
+                slow_gap,
+                phase_len,
+            } => {
+                let mut t = 0.0;
+                let mut fast = true;
+                'outer2: loop {
+                    let gap = if fast { fast_gap } else { slow_gap };
+                    for _ in 0..*phase_len {
+                        // jitter +-20% keeps the phases from being trivially
+                        // learnable
+                        t += gap.value() * rng.range(0.8, 1.2);
+                        out.push(Secs(t));
+                        if out.len() == n {
+                            break 'outer2;
+                        }
+                    }
+                    fast = !fast;
+                }
+            }
+            Workload::Trace { times } => {
+                out.extend(times.iter().take(n).cloned());
+            }
+        }
+        out
+    }
+
+    /// Mean inter-arrival gap of the process (analytical, for the
+    /// Generator's closed-form estimators).
+    pub fn mean_gap(&self) -> Secs {
+        match self {
+            Workload::Periodic { period } => *period,
+            Workload::Poisson { mean_gap } => *mean_gap,
+            Workload::Bursty {
+                burst_len,
+                intra_gap,
+                burst_gap,
+            } => {
+                let per_burst =
+                    burst_gap.value() + intra_gap.value() * (*burst_len as f64 - 1.0);
+                Secs(per_burst / *burst_len as f64)
+            }
+            Workload::Phased {
+                fast_gap, slow_gap, ..
+            } => Secs((fast_gap.value() + slow_gap.value()) / 2.0),
+            Workload::Trace { times } => {
+                if times.len() < 2 {
+                    Secs(0.0)
+                } else {
+                    Secs(
+                        (times.last().unwrap().value() - times[0].value())
+                            / (times.len() - 1) as f64,
+                    )
+                }
+            }
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        match self {
+            Workload::Periodic { period } => format!("periodic({:.1}ms)", period.ms()),
+            Workload::Poisson { mean_gap } => format!("poisson(mean {:.1}ms)", mean_gap.ms()),
+            Workload::Bursty {
+                burst_len,
+                intra_gap,
+                burst_gap,
+            } => format!(
+                "bursty({}x{:.1}ms / {:.0}ms)",
+                burst_len,
+                intra_gap.ms(),
+                burst_gap.ms()
+            ),
+            Workload::Phased {
+                fast_gap,
+                slow_gap,
+                phase_len,
+            } => format!(
+                "phased({:.1}ms<->{:.1}ms x{})",
+                fast_gap.ms(),
+                slow_gap.ms(),
+                phase_len
+            ),
+            Workload::Trace { times } => format!("trace({} events)", times.len()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn periodic_exact() {
+        let w = Workload::Periodic { period: Secs::from_ms(10.0) };
+        let a = w.arrivals(3, &mut Rng::new(1));
+        assert_eq!(a, vec![Secs(0.01), Secs(0.02), Secs(0.03)]);
+    }
+
+    #[test]
+    fn arrivals_sorted_and_positive() {
+        let workloads = [
+            Workload::Poisson { mean_gap: Secs::from_ms(5.0) },
+            Workload::Bursty {
+                burst_len: 4,
+                intra_gap: Secs::from_ms(1.0),
+                burst_gap: Secs::from_ms(50.0),
+            },
+            Workload::Phased {
+                fast_gap: Secs::from_ms(2.0),
+                slow_gap: Secs::from_ms(30.0),
+                phase_len: 10,
+            },
+        ];
+        for w in workloads {
+            let a = w.arrivals(200, &mut Rng::new(3));
+            assert_eq!(a.len(), 200);
+            assert!(a[0].value() > 0.0);
+            assert!(a.windows(2).all(|p| p[1] >= p[0]), "{}", w.describe());
+        }
+    }
+
+    #[test]
+    fn poisson_mean_gap_converges() {
+        let w = Workload::Poisson { mean_gap: Secs::from_ms(10.0) };
+        let a = w.arrivals(20_000, &mut Rng::new(5));
+        let measured = a.last().unwrap().value() / 20_000.0;
+        assert!((measured / 0.01 - 1.0).abs() < 0.05, "{measured}");
+    }
+
+    #[test]
+    fn bursty_mean_gap_formula() {
+        let w = Workload::Bursty {
+            burst_len: 5,
+            intra_gap: Secs::from_ms(1.0),
+            burst_gap: Secs::from_ms(96.0),
+        };
+        // per burst: 96 + 4*1 = 100ms over 5 items = 20ms
+        assert!((w.mean_gap().ms() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trace_passthrough() {
+        let times = vec![Secs(0.1), Secs(0.2), Secs(0.5)];
+        let w = Workload::Trace { times: times.clone() };
+        assert_eq!(w.arrivals(2, &mut Rng::new(1)), times[..2].to_vec());
+    }
+}

@@ -1,0 +1,73 @@
+//! Trace capture/replay: a plain text format (one arrival time in seconds
+//! per line, `#` comments) so workload traces can be diffed, versioned and
+//! exchanged with the python side.
+
+use crate::util::units::Secs;
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+/// Serialise arrival times.
+pub fn to_text(times: &[Secs]) -> String {
+    let mut s = String::with_capacity(times.len() * 12);
+    s.push_str("# elastic-gen workload trace v1 (seconds)\n");
+    for t in times {
+        s.push_str(&format!("{:.9}\n", t.value()));
+    }
+    s
+}
+
+/// Parse a trace document.
+pub fn from_text(text: &str) -> Result<Vec<Secs>> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let v: f64 = line
+            .parse()
+            .map_err(|_| anyhow!("trace line {}: bad number '{line}'", i + 1))?;
+        if v < 0.0 {
+            return Err(anyhow!("trace line {}: negative time", i + 1));
+        }
+        out.push(Secs(v));
+    }
+    if out.windows(2).any(|w| w[1] < w[0]) {
+        return Err(anyhow!("trace not sorted"));
+    }
+    Ok(out)
+}
+
+pub fn save(path: &Path, times: &[Secs]) -> Result<()> {
+    std::fs::write(path, to_text(times))?;
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<Vec<Secs>> {
+    from_text(&std::fs::read_to_string(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let times = vec![Secs(0.001), Secs(0.04), Secs(1.5)];
+        let parsed = from_text(&to_text(&times)).unwrap();
+        assert_eq!(parsed.len(), 3);
+        assert!((parsed[2].value() - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_unsorted_and_garbage() {
+        assert!(from_text("2.0\n1.0\n").is_err());
+        assert!(from_text("abc\n").is_err());
+        assert!(from_text("-1\n").is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        assert_eq!(from_text("# hi\n\n0.5\n").unwrap(), vec![Secs(0.5)]);
+    }
+}

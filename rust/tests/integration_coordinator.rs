@@ -1,0 +1,135 @@
+//! Integration: the serving coordinator over the real PJRT engine
+//! (requires `make artifacts`).
+
+use elastic_gen::coordinator::router::Policy;
+use elastic_gen::coordinator::{Coordinator, CoordinatorConfig, Router};
+use elastic_gen::runtime::{Golden, Manifest};
+use elastic_gen::util::rng::Rng;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = elastic_gen::artifacts_dir();
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+fn coordinator(artifacts: &[&str]) -> Coordinator {
+    Coordinator::start(CoordinatorConfig {
+        artifacts_dir: artifacts_dir_checked(),
+        artifacts: artifacts.iter().map(|s| s.to_string()).collect(),
+        batch_max: 8,
+    })
+    .unwrap()
+}
+
+fn artifacts_dir_checked() -> std::path::PathBuf {
+    elastic_gen::artifacts_dir()
+}
+
+#[test]
+fn serves_correct_results() {
+    let dir = require_artifacts!();
+    let coord = coordinator(&["mlp_fluid.hard"]);
+    let golden = Golden::load(&dir, "mlp_fluid.hard").unwrap();
+    for case in &golden.cases {
+        let input: Vec<f32> = case.input.iter().map(|&x| x as f32).collect();
+        let resp = coord.infer("mlp_fluid.hard", input).unwrap();
+        let out = resp.output.unwrap();
+        for (g, w) in out.iter().zip(&case.output) {
+            assert_eq!(*g as f64, *w);
+        }
+        assert!(resp.exec_s > 0.0);
+    }
+}
+
+#[test]
+fn concurrent_producers_all_served() {
+    let _dir = require_artifacts!();
+    let coord = std::sync::Arc::new(coordinator(&["mlp_fluid.hard", "lstm_har.opt"]));
+    let manifest = Manifest::load(&artifacts_dir_checked()).unwrap();
+    let mut handles = Vec::new();
+    for t in 0..4 {
+        let coord = coord.clone();
+        let len = if t % 2 == 0 {
+            manifest.get("mlp_fluid.hard").unwrap().input_len()
+        } else {
+            manifest.get("lstm_har.opt").unwrap().input_len()
+        };
+        let name = if t % 2 == 0 { "mlp_fluid.hard" } else { "lstm_har.opt" };
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(t as u64);
+            let mut rxs = Vec::new();
+            for _ in 0..25 {
+                let input: Vec<f32> =
+                    (0..len).map(|_| (rng.range(-1.0, 1.0) * 256.0).floor() as f32 / 256.0).collect();
+                rxs.push(coord.submit(name, input));
+            }
+            rxs.into_iter().filter(|rx| rx.recv().unwrap().is_ok()).count()
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, 100);
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.total_served(), 100);
+    assert!(snap.render().contains("lstm_har.opt"));
+}
+
+#[test]
+fn router_policies_on_real_manifest() {
+    let dir = require_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    let router = Router::new(&manifest);
+    assert!(router.models().contains(&"mlp_fluid"));
+
+    // generous budget -> the hard pipelined variant is the cheapest
+    let cheap = router
+        .route("mlp_fluid", Policy::CheapestWithin { max_error_lsb: 64 })
+        .unwrap();
+    assert_eq!(cheap.act_impl, "hard");
+
+    let precise = router.route("mlp_fluid", Policy::HighestPrecision).unwrap();
+    assert!(precise.act_impl == "exact" || precise.act_impl == "hard");
+
+    assert!(router.route("lstm_har", Policy::Named).is_ok());
+}
+
+#[test]
+fn error_responses_for_bad_requests() {
+    let _dir = require_artifacts!();
+    let coord = coordinator(&["mlp_fluid.hard"]);
+    // wrong input length -> error response, not a crash
+    let resp = coord.infer("mlp_fluid.hard", vec![0.0; 3]).unwrap();
+    assert!(resp.output.is_err());
+    // unknown artifact
+    let resp = coord.infer("missing.artifact", vec![0.0; 8]).unwrap();
+    assert!(resp.output.is_err());
+    // coordinator still alive afterwards
+    let manifest = Manifest::load(&artifacts_dir_checked()).unwrap();
+    let n = manifest.get("mlp_fluid.hard").unwrap().input_len();
+    assert!(coord.infer("mlp_fluid.hard", vec![0.25; n]).unwrap().is_ok());
+}
+
+#[test]
+fn metrics_percentiles_populated() {
+    let _dir = require_artifacts!();
+    let coord = coordinator(&["mlp_fluid.hard"]);
+    for _ in 0..30 {
+        let _ = coord.infer("mlp_fluid.hard", vec![0.5; 8]).unwrap();
+    }
+    let snap = coord.metrics().snapshot();
+    let row = &snap.rows[0];
+    assert_eq!(row.served, 30);
+    let e2e = row.e2e.as_ref().unwrap();
+    assert!(e2e.p99 >= e2e.p50);
+    assert!(e2e.p50 > 0.0);
+}

@@ -1,0 +1,185 @@
+//! Integration: AOT artifacts -> PJRT execution -> golden vectors ->
+//! behavioural simulator, the §2.3 cross-check triangle.
+//!
+//! Requires `make artifacts` (skips politely otherwise).
+
+use elastic_gen::behav::{self, ExecConfig};
+use elastic_gen::models::Topology;
+use elastic_gen::runtime::{Engine, Golden, Manifest};
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = elastic_gen::artifacts_dir();
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn manifest_loads_and_is_complete() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    assert!(m.artifacts.len() >= 20, "{} artifacts", m.artifacts.len());
+    assert!(m.models().count() >= 12);
+    for a in &m.artifacts {
+        assert!(m.hlo_path(a).exists(), "{} missing", a.file);
+        assert!(a.input_len() > 0 && a.output_len() > 0);
+    }
+}
+
+#[test]
+fn pjrt_executes_every_artifact_against_golden() {
+    let dir = require_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    let names: Vec<&str> = manifest.artifacts.iter().map(|a| a.name.as_str()).collect();
+    let engine = Engine::load(&dir, &names).unwrap();
+    assert_eq!(engine.platform().to_lowercase().contains("cpu"), true);
+
+    for meta in &manifest.artifacts {
+        let golden = Golden::load(&dir, &meta.name).unwrap();
+        assert!(!golden.cases.is_empty());
+        for (ci, case) in golden.cases.iter().enumerate() {
+            let input: Vec<f32> = case.input.iter().map(|&x| x as f32).collect();
+            let got = engine.infer(&meta.name, &input).unwrap();
+            assert_eq!(got.len(), case.output.len());
+            // golden vectors were produced by the same computation in jax;
+            // XLA-version differences only reach transcendentals, so 1.5
+            // LSB is a conservative envelope (integer paths match exactly)
+            let tol = 1.5 * meta.fmt.resolution();
+            for (j, (g, w)) in got.iter().zip(&case.output).enumerate() {
+                assert!(
+                    (*g as f64 - w).abs() <= tol,
+                    "{} case {ci} elem {j}: pjrt {} vs golden {} (tol {tol})",
+                    meta.name,
+                    g,
+                    w
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pure_integer_artifacts_match_golden_bit_exactly() {
+    let dir = require_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    let pure: Vec<&str> = manifest
+        .artifacts
+        .iter()
+        .filter(|a| matches!(a.act_impl.as_str(), "pla" | "lut" | "hard"))
+        .filter(|a| a.tanh_impl.is_empty() || matches!(a.tanh_impl.as_str(), "pla" | "lut" | "hard"))
+        .map(|a| a.name.as_str())
+        .collect();
+    assert!(!pure.is_empty());
+    let engine = Engine::load(&dir, &pure).unwrap();
+    for name in pure {
+        let meta = manifest.get(name).unwrap();
+        let golden = Golden::load(&dir, name).unwrap();
+        for case in &golden.cases {
+            let input: Vec<f32> = case.input.iter().map(|&x| x as f32).collect();
+            let got = engine.infer(name, &input).unwrap();
+            for (g, w) in got.iter().zip(&case.output) {
+                assert_eq!(*g as f64, *w, "{name}: bit-exact mismatch");
+            }
+        }
+        let _ = meta;
+    }
+}
+
+#[test]
+fn behavioural_sim_matches_pjrt_on_integer_models() {
+    let dir = require_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    // hard-activation model artifacts run bit-identically in the Rust
+    // behavioural simulator (the GHDL-substitute cross-check)
+    for name in ["mlp_fluid.hard", "lstm_har.opt", "cnn_ecg.hard", "mlp_fluid.pla"] {
+        let meta = manifest.get(name).expect(name);
+        let topo = Topology::parse(&meta.model).unwrap();
+        let weights = behav::load(&dir, &meta.model).unwrap();
+        let cfg = ExecConfig {
+            fmt: meta.fmt,
+            act: meta.sigmoid_variant().unwrap(),
+            tanh: meta
+                .tanh_variant()
+                .unwrap_or(meta.sigmoid_variant().unwrap()),
+        };
+        let golden = Golden::load(&dir, name).unwrap();
+        for (ci, case) in golden.cases.iter().enumerate() {
+            let got = behav::run_model(topo, &weights, &cfg, &case.input);
+            for (j, (g, w)) in got.iter().zip(&case.output).enumerate() {
+                assert_eq!(
+                    *g, *w,
+                    "{name} case {ci} elem {j}: behav {} vs golden {}",
+                    g, w
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn behavioural_sim_close_on_exact_models() {
+    let dir = require_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    // exact-activation paths route through f32 (jax) vs f64 (rust)
+    // transcendentals; agreement within a few LSBs after 3 layers
+    for name in ["mlp_fluid.base", "cnn_ecg.base"] {
+        let meta = manifest.get(name).unwrap();
+        let topo = Topology::parse(&meta.model).unwrap();
+        let weights = behav::load(&dir, &meta.model).unwrap();
+        let cfg = ExecConfig {
+            fmt: meta.fmt,
+            act: meta.sigmoid_variant().unwrap(),
+            tanh: meta
+                .tanh_variant()
+                .unwrap_or(meta.sigmoid_variant().unwrap()),
+        };
+        let golden = Golden::load(&dir, name).unwrap();
+        let tol = 4.0 * meta.fmt.resolution();
+        for case in &golden.cases {
+            let got = behav::run_model(topo, &weights, &cfg, &case.input);
+            for (g, w) in got.iter().zip(&case.output) {
+                assert!((g - w).abs() <= tol, "{name}: {} vs {}", g, w);
+            }
+        }
+    }
+}
+
+#[test]
+fn engine_rejects_bad_inputs() {
+    let dir = require_artifacts!();
+    let engine = Engine::load(&dir, &["mlp_fluid.hard"]).unwrap();
+    assert!(engine.infer("mlp_fluid.hard", &[0.0; 3]).is_err()); // wrong len
+    assert!(engine.infer("not-loaded", &[0.0; 8]).is_err());
+}
+
+#[test]
+fn attention_artifact_tolerance() {
+    let dir = require_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    let meta = manifest.get("attn_tiny.base").unwrap();
+    let weights = behav::load(&dir, "attn_tiny").unwrap();
+    let cfg = ExecConfig {
+        fmt: meta.fmt,
+        act: meta.sigmoid_variant().unwrap(),
+        tanh: meta.sigmoid_variant().unwrap(),
+    };
+    let golden = Golden::load(&dir, "attn_tiny.base").unwrap();
+    // softmax f32-vs-f64: a couple of LSBs through two matmuls
+    let tol = 4.0 * meta.fmt.resolution();
+    for case in &golden.cases {
+        let got = behav::run_model(Topology::AttnTiny, &weights, &cfg, &case.input);
+        for (g, w) in got.iter().zip(&case.output) {
+            assert!((g - w).abs() <= tol, "attn: {} vs {}", g, w);
+        }
+    }
+}

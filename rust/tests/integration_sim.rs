@@ -1,0 +1,172 @@
+//! Integration: workload-aware strategy simulation (E3/E4 shapes) and the
+//! Elastic Node measurement cross-check.
+
+use elastic_gen::elastic_node::measurement::Sensor;
+use elastic_gen::elastic_node::Platform;
+use elastic_gen::fpga::{device, ConfigController};
+use elastic_gen::models::Topology;
+use elastic_gen::rtl::composition::{build, BuildOpts};
+use elastic_gen::rtl::fixed_point::Q16_8;
+use elastic_gen::sim::{cost_model, NodeSim, SimReport};
+use elastic_gen::strategy::learnable::LearnableThreshold;
+use elastic_gen::strategy::{
+    ClockScale, CostModel, IdleWait, OnOff, PredefinedThreshold, Strategy,
+};
+use elastic_gen::util::rng::Rng;
+use elastic_gen::util::units::{Hertz, Joules, Secs, Watts};
+use elastic_gen::workload::Workload;
+
+fn lstm_cost() -> CostModel {
+    let acc = build(Topology::LstmHar, &BuildOpts::optimised(Q16_8));
+    let d = device("xc7s15").unwrap();
+    cost_model(
+        &acc,
+        d,
+        Hertz::from_mhz(100.0),
+        &Platform::default(),
+        &ConfigController::raw(d),
+    )
+}
+
+fn run(period: Secs, n: usize, s: &mut dyn Strategy) -> SimReport {
+    let arrivals = Workload::Periodic { period }.arrivals(n, &mut Rng::new(5));
+    NodeSim::new(lstm_cost()).run(&arrivals, s)
+}
+
+#[test]
+fn e3_shape_idle_wait_dominates_short_periods_with_crossover() {
+    // sweep the request period: idle-waiting wins at the short end by a
+    // large factor, on-off wins past the break-even gap
+    let mut saw_idle_win_big = false;
+    let mut saw_onoff_win = false;
+    let mut prev_ratio = f64::INFINITY;
+    for period_ms in [20.0, 40.0, 100.0, 400.0, 2_000.0, 10_000.0, 40_000.0] {
+        let idle = run(Secs::from_ms(period_ms), 40, &mut IdleWait);
+        let onoff = run(Secs::from_ms(period_ms), 40, &mut OnOff);
+        let ratio = onoff.energy_per_item().value() / idle.energy_per_item().value();
+        if period_ms <= 40.0 && ratio > 5.0 {
+            saw_idle_win_big = true;
+        }
+        if ratio < 1.0 {
+            saw_onoff_win = true;
+        }
+        // the advantage must decay monotonically as the period grows
+        assert!(
+            ratio <= prev_ratio * 1.05,
+            "ratio not decaying at {period_ms} ms: {ratio} after {prev_ratio}"
+        );
+        prev_ratio = ratio;
+    }
+    assert!(saw_idle_win_big, "idle-waiting never dominated");
+    assert!(saw_onoff_win, "on-off never won at long periods");
+}
+
+#[test]
+fn e3_items_within_budget_ratio_at_40ms() {
+    // the paper's exact metric: workload items completed within a fixed
+    // energy budget at the 40 ms period
+    let arrivals =
+        Workload::Periodic { period: Secs::from_ms(40.0) }.arrivals(3000, &mut Rng::new(8));
+    let sim = NodeSim::new(lstm_cost());
+    let idle = sim.run(&arrivals, &mut IdleWait);
+    let onoff = sim.run(&arrivals, &mut OnOff);
+    let budget = Joules(1.0);
+    let ratio =
+        idle.items_within_budget(budget) as f64 / onoff.items_within_budget(budget).max(1) as f64;
+    // paper: 12.39x; shape target: order of magnitude
+    assert!(ratio > 6.0, "items ratio {ratio}");
+}
+
+#[test]
+fn e4_learnable_threshold_beats_predefined_on_phased_workload() {
+    let w = Workload::Phased {
+        fast_gap: Secs::from_ms(30.0),
+        slow_gap: Secs(3.0),
+        phase_len: 40,
+    };
+    let arrivals = w.arrivals(2400, &mut Rng::new(21));
+    let sim = NodeSim::new(lstm_cost());
+    // predefined = the designer's datasheet-derived threshold (no board
+    // overheads), the realistic fixed baseline of [7]
+    let th = elastic_gen::strategy::datasheet_breakeven(device("xc7s15").unwrap());
+    let pre = sim.run(&arrivals, &mut PredefinedThreshold::at(th));
+    let mut learn = LearnableThreshold::default_grid();
+    let lrn = sim.run(&arrivals, &mut learn);
+    let gain = pre.energy.total().value() / lrn.energy.total().value();
+    // paper: ~6% improvement on irregular workloads; shape target: a
+    // low-single-digit-% or better win
+    assert!(gain > 1.01, "learnable {gain:.3}x vs predefined (expected > 1.01)");
+    assert!(gain < 2.0, "suspiciously large gain {gain:.3}");
+}
+
+#[test]
+fn e4_learnable_matches_system_breakeven_when_prediction_good() {
+    // sanity: against the *true* system breakeven (perfect knowledge) the
+    // learnable scheme must come out within a couple of % — no-regret
+    let w = Workload::Phased {
+        fast_gap: Secs::from_ms(30.0),
+        slow_gap: Secs(3.0),
+        phase_len: 40,
+    };
+    let arrivals = w.arrivals(2400, &mut Rng::new(22));
+    let sim = NodeSim::new(lstm_cost());
+    let pre = sim.run(&arrivals, &mut PredefinedThreshold::breakeven());
+    let lrn = sim.run(&arrivals, &mut LearnableThreshold::default_grid());
+    let ratio = lrn.energy.total().value() / pre.energy.total().value();
+    assert!(ratio < 1.03, "learnable {ratio:.3}x of oracle predefined");
+}
+
+#[test]
+fn clock_scaling_reduces_peak_power_not_items() {
+    let period = Secs::from_ms(50.0);
+    let idle = run(period, 60, &mut IdleWait);
+    let scale = run(period, 60, &mut ClockScale);
+    assert_eq!(idle.served, scale.served);
+    // clock scaling trades idle energy for stretched busy energy; total
+    // must stay in the same ballpark (within 30%)
+    let ratio = scale.energy.total().value() / idle.energy.total().value();
+    assert!(ratio < 1.3, "clock-scale {ratio}x vs idle");
+}
+
+#[test]
+fn measurement_emulation_matches_ledger() {
+    // feed the sensor a two-phase trajectory equivalent to a sim gap and
+    // check integrated energy agrees with the analytic ledger
+    let cost = lstm_cost();
+    let sensor = Sensor::default();
+    let mut rng = Rng::new(31);
+    let busy = cost.busy_time;
+    let gap = Secs::from_ms(40.0);
+    let run = sensor.measure_trajectory(
+        &[(Secs(0.0), cost.busy_power), (busy, cost.idle_power)],
+        gap,
+        &mut rng,
+    );
+    let truth = cost.busy_power * busy + cost.idle_power * (gap - busy);
+    let rel = (run.energy.value() - truth.value()).abs() / truth.value();
+    assert!(rel < 0.05, "measured {} vs truth {} ({rel:.3})", run.energy, truth);
+}
+
+#[test]
+fn dropped_requests_only_under_overload() {
+    let fast = Workload::Periodic { period: Secs::from_ms(2.0) }
+        .arrivals(500, &mut Rng::new(2));
+    let slow = Workload::Periodic { period: Secs::from_ms(200.0) }
+        .arrivals(100, &mut Rng::new(2));
+    let mut sim = NodeSim::new(lstm_cost());
+    sim.queue_capacity = 8;
+    let r_fast = sim.run(&fast, &mut OnOff);
+    let r_slow = sim.run(&slow, &mut OnOff);
+    assert!(r_fast.dropped > 0);
+    assert_eq!(r_slow.dropped, 0);
+}
+
+#[test]
+fn cold_start_energy_scales_with_bitstream() {
+    let d6 = device("xc7s6").unwrap();
+    let d25 = device("xc7s25").unwrap();
+    let e6 = ConfigController::raw(d6).cold_start_energy();
+    let e25 = ConfigController::raw(d25).cold_start_energy();
+    assert!(e25.value() > e6.value() * 1.5, "{e25} vs {e6}");
+    let _ = Watts(0.0);
+}

@@ -1,0 +1,272 @@
+//! Property-based invariants over the core substrates, via the crate's
+//! own proptest harness (util::proptest).
+
+use elastic_gen::fpga::compression::{rle_decode, rle_encode};
+use elastic_gen::rtl::activation::{ActImpl, ActKind, ActVariant};
+use elastic_gen::rtl::fixed_point::{sra_round, QFormat, Q12_6, Q16_8, Q8_4};
+use elastic_gen::util::json;
+use elastic_gen::util::proptest::{check, vec_f64, F64Range, I64Range, OneOf, Pair, Strategy};
+use elastic_gen::util::rng::Rng;
+
+const FMTS: [QFormat; 3] = [Q16_8, Q12_6, Q8_4];
+
+#[test]
+fn prop_quantize_in_bounds_and_monotone() {
+    check(
+        "quantize stays in [qmin, qmax] and is monotone",
+        300,
+        Pair(F64Range(-1e4..1e4), F64Range(0.0..100.0)),
+        |(x, dx)| {
+            FMTS.iter().all(|f| {
+                let a = f.quantize(*x);
+                let b = f.quantize(x + dx);
+                a >= f.qmin() && a <= f.qmax() && b >= a
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_roundtrip_on_grid() {
+    check(
+        "dequantize . quantize is identity on representable values",
+        300,
+        I64Range(-(1 << 15), (1 << 15) - 1),
+        |q| {
+            let f = Q16_8;
+            f.quantize(f.dequantize(*q)) == *q
+        },
+    );
+}
+
+#[test]
+fn prop_sra_round_half_up_error() {
+    check(
+        "sra_round error <= 0.5 ulp of the shifted scale",
+        500,
+        Pair(I64Range(-(1 << 40), 1 << 40), I64Range(0, 20)),
+        |(p, n)| {
+            let y = sra_round(*p, *n as u32) as f64;
+            (y - *p as f64 / (1u64 << *n as u32) as f64).abs() <= 0.5
+        },
+    );
+}
+
+#[test]
+fn prop_requant_product_error() {
+    check(
+        "product requantisation within 0.5 LSB (pre-saturation range)",
+        300,
+        Pair(F64Range(-2.0..2.0), F64Range(-2.0..2.0)),
+        |(a, b)| {
+            let f = Q16_8;
+            let (qa, qb) = (f.quantize(*a), f.quantize(*b));
+            let y = f.requant_product(qa * qb);
+            let exact = f.dequantize(qa) * f.dequantize(qb);
+            (f.dequantize(y) - exact).abs() <= 0.5 * f.resolution() + 1e-12
+        },
+    );
+}
+
+#[test]
+fn prop_activations_bounded() {
+    let variants = vec![
+        ActVariant::new(ActKind::Sigmoid, ActImpl::Exact),
+        ActVariant::new(ActKind::Sigmoid, ActImpl::Pla),
+        ActVariant::new(ActKind::Sigmoid, ActImpl::Lut),
+        ActVariant::new(ActKind::Tanh, ActImpl::Pla),
+        ActVariant::new(ActKind::Tanh, ActImpl::Lut),
+        ActVariant::new(ActKind::HardSigmoid, ActImpl::Hard),
+        ActVariant::new(ActKind::HardTanh, ActImpl::Hard),
+    ];
+    check(
+        "activation outputs never leave the format range",
+        400,
+        Pair(OneOf(variants), I64Range(-(1 << 20), 1 << 20)),
+        |(v, q)| {
+            FMTS.iter()
+                .filter(|f| v.imp != ActImpl::Lut || f.frac_bits >= 4)
+                .all(|f| {
+                    let y = v.eval(*q, *f);
+                    y >= f.qmin() && y <= f.qmax()
+                })
+        },
+    );
+}
+
+#[test]
+fn prop_sigmoid_variants_monotone_pairs() {
+    let variants = vec![
+        ActVariant::new(ActKind::Sigmoid, ActImpl::Exact),
+        ActVariant::new(ActKind::Sigmoid, ActImpl::Lut),
+        ActVariant::new(ActKind::HardSigmoid, ActImpl::Hard),
+    ];
+    check(
+        "sigmoid-family variants are monotone",
+        400,
+        Pair(OneOf(variants), Pair(I64Range(-4096, 4096), I64Range(0, 4096))),
+        |(v, (q, d))| v.eval(q + d, Q16_8) >= v.eval(*q, Q16_8),
+    );
+}
+
+#[test]
+fn prop_pla_symmetry() {
+    check(
+        "PLAN sigmoid satisfies sigma(-x) = 1 - sigma(x) exactly",
+        500,
+        I64Range(-(1 << 15), 1 << 15),
+        |q| {
+            let f = Q16_8;
+            let v = ActVariant::new(ActKind::Sigmoid, ActImpl::Pla);
+            v.eval(-q, f) == f.scale() - v.eval(*q, f)
+        },
+    );
+}
+
+#[test]
+fn prop_rle_roundtrip() {
+    struct Bytes;
+    impl Strategy for Bytes {
+        type Value = Vec<u8>;
+        fn generate(&self, rng: &mut Rng) -> Vec<u8> {
+            let n = rng.below(4096) as usize;
+            (0..n)
+                .map(|_| {
+                    if rng.chance(0.7) {
+                        0u8
+                    } else {
+                        rng.next_u64() as u8
+                    }
+                })
+                .collect()
+        }
+        fn shrink(&self, v: &Vec<u8>) -> Vec<Vec<u8>> {
+            if v.is_empty() {
+                vec![]
+            } else {
+                vec![v[..v.len() / 2].to_vec(), v[1..].to_vec()]
+            }
+        }
+    }
+    check("rle decode . encode is identity", 100, Bytes, |data| {
+        rle_decode(&rle_encode(data)).map(|d| &d == data).unwrap_or(false)
+    });
+}
+
+#[test]
+fn prop_json_numeric_roundtrip() {
+    check(
+        "json dump/parse preserves numeric arrays",
+        200,
+        vec_f64(0, 32, -1e9..1e9),
+        |xs| {
+            let doc = json::Json::arr_f64(xs);
+            match json::parse(&doc.dump()) {
+                Ok(parsed) => {
+                    let back = parsed.to_f64_vec();
+                    back.len() == xs.len()
+                        && back
+                            .iter()
+                            .zip(xs)
+                            .all(|(a, b)| (a - b).abs() <= b.abs() * 1e-12 + 1e-12)
+                }
+                Err(_) => false,
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_workload_arrivals_sorted_positive() {
+    use elastic_gen::util::units::Secs;
+    use elastic_gen::workload::Workload;
+    check(
+        "workload arrivals are sorted and positive",
+        60,
+        Pair(F64Range(0.001..0.5), I64Range(1, 4)),
+        |(gap, kind)| {
+            let w = match kind {
+                1 => Workload::Periodic { period: Secs(*gap) },
+                2 => Workload::Poisson { mean_gap: Secs(*gap) },
+                3 => Workload::Bursty {
+                    burst_len: 4,
+                    intra_gap: Secs(gap / 4.0),
+                    burst_gap: Secs(*gap),
+                },
+                _ => Workload::Phased {
+                    fast_gap: Secs(gap / 2.0),
+                    slow_gap: Secs(gap * 3.0),
+                    phase_len: 5,
+                },
+            };
+            let a = w.arrivals(100, &mut Rng::new(9));
+            a.len() == 100 && a[0].value() > 0.0 && a.windows(2).all(|p| p[1] >= p[0])
+        },
+    );
+}
+
+#[test]
+fn prop_sim_energy_decomposition() {
+    use elastic_gen::elastic_node::Platform;
+    use elastic_gen::fpga::{device, ConfigController};
+    use elastic_gen::models::Topology;
+    use elastic_gen::rtl::composition::{build, BuildOpts};
+    use elastic_gen::sim::{cost_model, NodeSim};
+    use elastic_gen::strategy::{IdleWait, OnOff};
+    use elastic_gen::util::units::{Hertz, Secs};
+    use elastic_gen::workload::Workload;
+
+    let acc = build(Topology::MlpFluid, &BuildOpts::optimised(Q16_8));
+    let d = device("xc7s15").unwrap();
+    let cost = cost_model(
+        &acc,
+        d,
+        Hertz::from_mhz(100.0),
+        &Platform::default(),
+        &ConfigController::raw(d),
+    );
+    check(
+        "sim ledger components sum to total and all served",
+        30,
+        F64Range(0.02..2.0),
+        |period| {
+            let arrivals =
+                Workload::Periodic { period: Secs(*period) }.arrivals(40, &mut Rng::new(3));
+            let sim = NodeSim::new(cost);
+            let mut strategies: Vec<Box<dyn elastic_gen::strategy::Strategy>> =
+                vec![Box::new(OnOff), Box::new(IdleWait)];
+            strategies.iter_mut().all(|s| {
+                let r = sim.run(&arrivals, s.as_mut());
+                let sum = r.energy.config.value()
+                    + r.energy.busy.value()
+                    + r.energy.idle.value()
+                    + r.energy.off.value();
+                r.served == 40 && (sum - r.energy.total().value()).abs() < 1e-12
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_latency_monotone_in_clock() {
+    use elastic_gen::generator::design_space::enumerate;
+    use elastic_gen::generator::estimator::estimate;
+    use elastic_gen::generator::AppSpec;
+
+    let spec = AppSpec::soft_sensor();
+    let cands = enumerate(&["xc7s15"]);
+    let n = cands.len() as i64;
+    check(
+        "inference latency never increases with clock",
+        60,
+        I64Range(0, n - 1),
+        |i| {
+            let base = &cands[*i as usize];
+            let mut faster = base.clone();
+            faster.clock_mhz = base.clock_mhz * 2.0;
+            let a = estimate(&spec, base);
+            let b = estimate(&spec, &faster);
+            b.latency.value() <= a.latency.value() + 1e-12
+        },
+    );
+}
