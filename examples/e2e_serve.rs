@@ -1,15 +1,14 @@
-//! END-TO-END DRIVER (DESIGN.md §6): proves every layer composes on a
-//! real workload.
+//! END-TO-END DRIVER: proves every layer composes on a real workload.
 //!
 //!   Generator -> artifact selection (router) -> coordinator serving a
 //!   Poisson request stream with real PJRT inference per request ->
 //!   latency/throughput metrics -> strategy-level energy ledger replayed
 //!   through the discrete-event node simulation on the *observed* trace.
 //!
-//! Defaults to 2000 requests across two models; results are recorded in
-//! EXPERIMENTS.md.
+//! Defaults to 2000 requests across two models on two engine shards.
 //!
-//! Run with: `cargo run --release --example e2e_serve [-- --requests N]`
+//! Run with: `cargo run --release --example e2e_serve [-- --requests N]
+//!   [--shards N] [--queue-cap N] [--batch-max N] [--batch-window-us F]`
 
 use elastic_gen::coordinator::router::Policy;
 use elastic_gen::coordinator::{Coordinator, CoordinatorConfig, Router};
@@ -31,6 +30,11 @@ use std::time::Instant;
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let n_requests = args.get_usize("requests", 2000);
+    let shards = args.get_usize("shards", 2);
+    let queue_cap = args.get_usize("queue-cap", 512);
+    let batch_max = args.get_usize("batch-max", 16);
+    let batch_window =
+        std::time::Duration::from_secs_f64(args.get_f64("batch-window-us", 0.0) * 1e-6);
 
     let dir = elastic_gen::artifacts_dir();
     anyhow::ensure!(
@@ -51,14 +55,22 @@ fn main() -> anyhow::Result<()> {
         .clone();
     println!("routed: mlp_fluid -> {mlp}, lstm_har -> {lstm}");
 
-    // --- start the coordinator (engine thread compiles both artifacts) --
+    // --- start the coordinator (each shard compiles both artifacts) -----
     let t0 = Instant::now();
     let coord = Coordinator::start(CoordinatorConfig {
         artifacts_dir: dir.clone(),
         artifacts: vec![mlp.clone(), lstm.clone()],
-        batch_max: 16,
+        batch_max,
+        shards,
+        queue_cap,
+        batch_window,
+        ..CoordinatorConfig::default()
     })?;
-    println!("engine up in {:.2}s\n", t0.elapsed().as_secs_f64());
+    println!(
+        "{} engine shard(s) up in {:.2}s\n",
+        coord.shard_count(),
+        t0.elapsed().as_secs_f64()
+    );
 
     // --- generate the request stream (Poisson, 2 models interleaved) ----
     let workload = Workload::Poisson { mean_gap: Secs::from_ms(2.0) };
@@ -84,7 +96,8 @@ fn main() -> anyhow::Result<()> {
         let input: Vec<f32> = (0..len)
             .map(|_| (rng.range(-1.0, 1.0) * 256.0).floor() as f32 / 256.0)
             .collect();
-        pending.push(coord.submit(name, input));
+        // blocking submit: a full shard queue pushes back on the producer
+        pending.push(coord.submit(name, input)?);
     }
     let mut ok = 0u64;
     for rx in pending {

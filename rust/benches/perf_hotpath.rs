@@ -1,13 +1,14 @@
-//! Perf — hot-path microbenchmarks (EXPERIMENTS.md §Perf).
+//! Perf — hot-path microbenchmarks.
 //!
 //! The L3 hot paths: the Generator's estimator (DSE inner loop), the
-//! discrete-event node simulation, the behavioural executor, and — when
-//! artifacts are built — PJRT inference + the coordinator round-trip.
+//! discrete-event node simulation, the coordinator's shard scaling on a
+//! synthetic workload, and — when artifacts are built — the behavioural
+//! executor, engine inference + the coordinator round-trip.
 //! Run with BENCH_SECS=<f64> to change the per-bench wall budget.
 
 use elastic_gen::behav::{self, ExecConfig};
 use elastic_gen::bench::{bench, black_box, default_target};
-use elastic_gen::coordinator::{Coordinator, CoordinatorConfig};
+use elastic_gen::coordinator::{Coordinator, CoordinatorConfig, EngineSpec, ShardPolicy};
 use elastic_gen::elastic_node::Platform;
 use elastic_gen::fpga::{device, ConfigController};
 use elastic_gen::generator::design_space::enumerate;
@@ -16,18 +17,68 @@ use elastic_gen::generator::AppSpec;
 use elastic_gen::models::Topology;
 use elastic_gen::rtl::composition::{build, BuildOpts};
 use elastic_gen::rtl::fixed_point::Q16_8;
-use elastic_gen::runtime::Engine;
+use elastic_gen::runtime::{Engine, SyntheticSpec};
 use elastic_gen::sim::{cost_model, NodeSim};
 use elastic_gen::strategy::IdleWait;
 use elastic_gen::util::rng::Rng;
 use elastic_gen::util::units::{Hertz, Secs};
 use elastic_gen::workload::Workload;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Throughput of the sharded coordinator on a hermetic synthetic workload
+/// (8 artifacts, ~30us of deterministic CPU per request, 8 producer
+/// threads).  Demonstrates shard scaling without any built artifacts.
+fn coordinator_scaling() {
+    const PRODUCERS: usize = 8;
+    const PER_PRODUCER: usize = 256;
+    println!();
+    let mut base_rps = 0.0;
+    for &shards in &[1usize, 2, 4] {
+        let coord = Arc::new(
+            Coordinator::start(CoordinatorConfig {
+                shards,
+                queue_cap: 4096,
+                batch_max: 16,
+                shard_policy: ShardPolicy::RoundRobin,
+                engine: EngineSpec::Synthetic(SyntheticSpec::uniform(8, 16, 4, 30_000)),
+                ..CoordinatorConfig::default()
+            })
+            .unwrap(),
+        );
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for p in 0..PRODUCERS {
+            let coord = coord.clone();
+            handles.push(std::thread::spawn(move || {
+                let rxs: Vec<_> = (0..PER_PRODUCER)
+                    .map(|i| {
+                        coord
+                            .submit(&format!("syn.{}", (p + i) % 8), vec![0.25; 16])
+                            .unwrap()
+                    })
+                    .collect();
+                rxs.into_iter().filter(|rx| rx.recv().unwrap().is_ok()).count()
+            }));
+        }
+        let served: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        let wall = t0.elapsed().as_secs_f64();
+        let rps = served as f64 / wall;
+        if shards == 1 {
+            base_rps = rps;
+        }
+        println!(
+            "coordinator-scaling/{shards}-shard: {served} reqs in {wall:.3}s = {rps:.0} req/s ({:.2}x vs 1 shard)",
+            rps / base_rps
+        );
+    }
+}
 
 fn main() {
     elastic_gen::bench::banner(
         "PERF",
         "hot-path microbenchmarks",
-        "DSE estimator, DES engine, behavioural exec, PJRT inference, coordinator",
+        "DSE estimator, DES engine, shard scaling, behavioural exec, coordinator",
     );
     let target = default_target();
     let mut results = Vec::new();
@@ -60,6 +111,9 @@ fn main() {
         black_box(r.served);
     }));
 
+    // --- coordinator shard scaling (hermetic, synthetic engine) ------------
+    coordinator_scaling();
+
     // --- behavioural executor ----------------------------------------------
     let dir = elastic_gen::artifacts_dir();
     let have_artifacts = dir.join("manifest.json").exists();
@@ -78,19 +132,19 @@ fn main() {
         };
         let input: Vec<f64> = (0..144).map(|i| ((i % 7) as f64 - 3.0) / 4.0).collect();
         results.push(bench("behav/lstm_har_full_inference", target, || {
-            let y = behav::run_model(Topology::LstmHar, &weights, &cfg, &input);
+            let y = behav::run_model(Topology::LstmHar, &weights, &cfg, &input).unwrap();
             black_box(y[0]);
         }));
 
-        // --- PJRT inference + the L2 scan-vs-unroll ablation --------------------
+        // --- engine inference + the L2 scan-vs-unroll ablation ------------------
         let engine =
             Engine::load(&dir, &["lstm_har.opt", "lstm_har.unroll", "mlp_fluid.hard"]).unwrap();
         let x_lstm: Vec<f32> = (0..144).map(|i| ((i % 7) as f32 - 3.0) / 4.0).collect();
         let x_mlp: Vec<f32> = (0..8).map(|i| (i as f32 - 4.0) / 4.0).collect();
-        results.push(bench("pjrt/lstm_har.opt_inference(scan)", target, || {
+        results.push(bench("engine/lstm_har.opt_inference(scan)", target, || {
             black_box(engine.infer("lstm_har.opt", &x_lstm).unwrap());
         }));
-        results.push(bench("pjrt/lstm_har.unroll_inference", target, || {
+        results.push(bench("engine/lstm_har.unroll_inference", target, || {
             black_box(engine.infer("lstm_har.unroll", &x_lstm).unwrap());
         }));
         // the two lowerings must agree bit-for-bit
@@ -98,7 +152,7 @@ fn main() {
             engine.infer("lstm_har.opt", &x_lstm).unwrap(),
             engine.infer("lstm_har.unroll", &x_lstm).unwrap()
         );
-        results.push(bench("pjrt/mlp_fluid.hard_inference", target, || {
+        results.push(bench("engine/mlp_fluid.hard_inference", target, || {
             black_box(engine.infer("mlp_fluid.hard", &x_mlp).unwrap());
         }));
 
@@ -107,13 +161,15 @@ fn main() {
             artifacts_dir: dir.clone(),
             artifacts: vec!["mlp_fluid.hard".into()],
             batch_max: 16,
+            shards: 1,
+            ..CoordinatorConfig::default()
         })
         .unwrap();
         results.push(bench("coordinator/mlp_round_trip", target, || {
             black_box(coord.infer("mlp_fluid.hard", x_mlp.clone()).unwrap());
         }));
     } else {
-        println!("(artifacts not built; skipping behav/pjrt/coordinator benches)");
+        println!("(artifacts not built; skipping behav/engine/coordinator benches)");
     }
 
     println!();
@@ -121,7 +177,7 @@ fn main() {
         println!("{}", r.report_line());
     }
 
-    // derived throughput figures for EXPERIMENTS.md §Perf
+    // derived throughput figures
     if let Some(des) = results.iter().find(|r| r.name.starts_with("des/")) {
         let req_per_s = 1000.0 / des.per_iter.mean;
         println!("\nDES throughput: {:.2} M simulated requests/s", req_per_s / 1e6);

@@ -23,6 +23,43 @@ pub struct ExecConfig {
     pub tanh: ActVariant,
 }
 
+/// Typed execution failure: malformed artifacts surface as errors the
+/// serving loop can answer per-request instead of crashing on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ExecError {
+    /// Input vector length does not match the topology.
+    InputLen { expected: usize, got: usize },
+    /// The weight bundle does not belong to the requested topology.
+    WeightsTopologyMismatch {
+        topology: &'static str,
+        weights: &'static str,
+    },
+}
+
+impl std::fmt::Display for ExecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecError::InputLen { expected, got } => {
+                write!(f, "input length {got} != expected {expected}")
+            }
+            ExecError::WeightsTopologyMismatch { topology, weights } => {
+                write!(f, "weights/topology mismatch: {weights} weights for {topology} model")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ExecError {}
+
+fn weights_kind(w: &ModelWeights) -> &'static str {
+    match w {
+        ModelWeights::Mlp(_) => "mlp",
+        ModelWeights::Lstm(_) => "lstm",
+        ModelWeights::Cnn(_) => "cnn",
+        ModelWeights::Attn(_) => "attn",
+    }
+}
+
 fn qmat(t: &Tensor2, fmt: QFormat) -> Vec<i64> {
     t.data.iter().map(|&x| fmt.quantize(x)).collect()
 }
@@ -219,14 +256,21 @@ fn proj(xq: &[i64], wq: &[i64], t: usize, d_in: usize, d_out: usize, fmt: QForma
 }
 
 /// Execute a full model on a flat f64 input; returns the dequantised flat
-/// output.  Mirrors `model.build_from_config` exactly.
+/// output.  Mirrors `model.build_from_config` exactly.  Malformed inputs
+/// (wrong length, weights from another topology) come back as `ExecError`
+/// so a bad artifact cannot crash the serving loop.
 pub fn run_model(
     topology: Topology,
     weights: &ModelWeights,
     cfg: &ExecConfig,
     input: &[f64],
-) -> Vec<f64> {
-    assert_eq!(input.len(), topology.input_len(), "input length");
+) -> Result<Vec<f64>, ExecError> {
+    if input.len() != topology.input_len() {
+        return Err(ExecError::InputLen {
+            expected: topology.input_len(),
+            got: input.len(),
+        });
+    }
     let fmt = cfg.fmt;
     let xq = qvec(input, fmt);
     let out_q = match (topology, weights) {
@@ -234,9 +278,14 @@ pub fn run_model(
         (Topology::LstmHar, ModelWeights::Lstm(w)) => run_lstm(w, cfg, xq),
         (Topology::CnnEcg, ModelWeights::Cnn(w)) => run_cnn(w, cfg, xq),
         (Topology::AttnTiny, ModelWeights::Attn(w)) => run_attn(w, cfg, xq),
-        _ => panic!("weights/topology mismatch"),
+        _ => {
+            return Err(ExecError::WeightsTopologyMismatch {
+                topology: topology.name(),
+                weights: weights_kind(weights),
+            })
+        }
     };
-    out_q.iter().map(|&q| fmt.dequantize(q)).collect()
+    Ok(out_q.iter().map(|&q| fmt.dequantize(q)).collect())
 }
 
 fn run_mlp(w: &MlpWeights, cfg: &ExecConfig, mut xq: Vec<i64>) -> Vec<i64> {
@@ -437,9 +486,23 @@ mod tests {
     #[test]
     fn run_model_checks_input_len() {
         let w = ModelWeights::Mlp(super::super::weights::MlpWeights { layers: vec![] });
-        let r = std::panic::catch_unwind(|| {
-            run_model(Topology::MlpFluid, &w, &hard_cfg(), &[0.0]);
-        });
-        assert!(r.is_err());
+        let r = run_model(Topology::MlpFluid, &w, &hard_cfg(), &[0.0]);
+        assert_eq!(r, Err(ExecError::InputLen { expected: 8, got: 1 }));
+    }
+
+    #[test]
+    fn run_model_rejects_mismatched_weights() {
+        // MLP weights presented as an LSTM artifact: an error, not a panic
+        let w = ModelWeights::Mlp(super::super::weights::MlpWeights { layers: vec![] });
+        let input = vec![0.0; Topology::LstmHar.input_len()];
+        let r = run_model(Topology::LstmHar, &w, &hard_cfg(), &input);
+        assert_eq!(
+            r,
+            Err(ExecError::WeightsTopologyMismatch {
+                topology: "lstm_har",
+                weights: "mlp",
+            })
+        );
+        assert!(r.unwrap_err().to_string().contains("mismatch"));
     }
 }

@@ -7,5 +7,5 @@
 pub mod exec;
 pub mod weights;
 
-pub use exec::{run_model, ExecConfig};
+pub use exec::{run_model, ExecConfig, ExecError};
 pub use weights::{load, ModelWeights};

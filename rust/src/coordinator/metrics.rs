@@ -1,10 +1,12 @@
-//! Serving metrics: per-artifact latency/throughput accounting, shared
-//! between the worker thread and observers.
+//! Serving metrics: per-artifact latency/throughput accounting plus
+//! per-shard counters (queue depth, batch fill, admission rejects),
+//! shared between the shard worker threads and observers.
 
 use crate::util::stats::Summary;
 use crate::util::table::{num, Table};
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicIsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 #[derive(Debug, Default)]
@@ -16,24 +18,55 @@ struct ArtifactStats {
     e2e_s: Vec<f64>,
 }
 
-/// Thread-safe metrics sink.
-#[derive(Debug)]
-pub struct Metrics {
-    inner: Mutex<BTreeMap<String, ArtifactStats>>,
-    start: Instant,
+#[derive(Debug, Default)]
+struct ShardStats {
+    submitted: u64,
+    rejected: u64,
+    served: u64,
+    failed: u64,
+    batches: u64,
+    batch_fill_sum: f64,
+    exec_s: Vec<f64>,
+    e2e_s: Vec<f64>,
 }
 
-impl Default for Metrics {
-    fn default() -> Self {
-        Metrics {
-            inner: Mutex::new(BTreeMap::new()),
-            start: Instant::now(),
-        }
-    }
+/// Thread-safe metrics sink.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<BTreeMap<String, ArtifactStats>>,
+    shards: Mutex<Vec<ShardStats>>,
+    /// Live queue-depth gauges, one per shard (shared with the submit
+    /// path; isize because producer increments and worker decrements race
+    /// benignly).
+    depth_gauges: Mutex<Vec<Arc<AtomicIsize>>>,
+    start: Mutex<Option<Instant>>,
 }
 
 impl Metrics {
+    /// Register the shard layout.  Called once by `Coordinator::start`.
+    pub fn init_shards(&self, gauges: Vec<Arc<AtomicIsize>>) {
+        {
+            let mut shards = self.shards.lock().unwrap();
+            *shards = Vec::new();
+            shards.resize_with(gauges.len(), ShardStats::default);
+        }
+        *self.depth_gauges.lock().unwrap() = gauges;
+        *self.start.lock().unwrap() = Some(Instant::now());
+    }
+
+    fn elapsed_s(&self) -> f64 {
+        self.start
+            .lock()
+            .unwrap()
+            .get_or_insert_with(Instant::now)
+            .elapsed()
+            .as_secs_f64()
+    }
+
+    /// Record one served/failed request against its artifact.
     pub fn record(&self, artifact: &str, ok: bool, queue_wait_s: f64, exec_s: f64) {
+        // pin the epoch on first use so throughput reflects serving time
+        self.elapsed_s();
         let mut m = self.inner.lock().unwrap();
         let s = m.entry(artifact.to_string()).or_default();
         if ok {
@@ -46,9 +79,56 @@ impl Metrics {
         }
     }
 
+    /// Record one executed request against both its artifact and shard.
+    pub fn record_shard(
+        &self,
+        shard: usize,
+        artifact: &str,
+        ok: bool,
+        queue_wait_s: f64,
+        exec_s: f64,
+    ) {
+        self.record(artifact, ok, queue_wait_s, exec_s);
+        let mut shards = self.shards.lock().unwrap();
+        if let Some(s) = shards.get_mut(shard) {
+            if ok {
+                s.served += 1;
+                s.exec_s.push(exec_s);
+                s.e2e_s.push(queue_wait_s + exec_s);
+            } else {
+                s.failed += 1;
+            }
+        }
+    }
+
+    /// An admitted request was enqueued on `shard`.
+    pub fn record_submit(&self, shard: usize) {
+        let mut shards = self.shards.lock().unwrap();
+        if let Some(s) = shards.get_mut(shard) {
+            s.submitted += 1;
+        }
+    }
+
+    /// Admission control rejected a request bound for `shard`.
+    pub fn record_reject(&self, shard: usize) {
+        let mut shards = self.shards.lock().unwrap();
+        if let Some(s) = shards.get_mut(shard) {
+            s.rejected += 1;
+        }
+    }
+
+    /// One micro-batch of `fill` requests drained (window `cap`).
+    pub fn record_batch(&self, shard: usize, fill: usize, cap: usize) {
+        let mut shards = self.shards.lock().unwrap();
+        if let Some(s) = shards.get_mut(shard) {
+            s.batches += 1;
+            s.batch_fill_sum += fill as f64 / cap.max(1) as f64;
+        }
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
+        let elapsed = self.elapsed_s();
         let m = self.inner.lock().unwrap();
-        let elapsed = self.start.elapsed().as_secs_f64();
         let rows = m
             .iter()
             .map(|(name, s)| ArtifactSnapshot {
@@ -61,9 +141,37 @@ impl Metrics {
                 e2e: maybe_summary(&s.e2e_s),
             })
             .collect();
+        let gauges = self.depth_gauges.lock().unwrap();
+        let shards = self
+            .shards
+            .lock()
+            .unwrap()
+            .iter()
+            .enumerate()
+            .map(|(i, s)| ShardSnapshot {
+                shard: i,
+                submitted: s.submitted,
+                rejected: s.rejected,
+                served: s.served,
+                failed: s.failed,
+                queue_depth: gauges
+                    .get(i)
+                    .map(|g| g.load(Ordering::Relaxed).max(0) as usize)
+                    .unwrap_or(0),
+                batches: s.batches,
+                batch_fill: if s.batches == 0 {
+                    0.0
+                } else {
+                    s.batch_fill_sum / s.batches as f64
+                },
+                exec: maybe_summary(&s.exec_s),
+                e2e: maybe_summary(&s.e2e_s),
+            })
+            .collect();
         MetricsSnapshot {
             elapsed_s: elapsed,
             rows,
+            shards,
         }
     }
 }
@@ -87,10 +195,28 @@ pub struct ArtifactSnapshot {
     pub e2e: Option<Summary>,
 }
 
+/// Point-in-time view of one engine shard.
+#[derive(Debug)]
+pub struct ShardSnapshot {
+    pub shard: usize,
+    pub submitted: u64,
+    pub rejected: u64,
+    pub served: u64,
+    pub failed: u64,
+    /// Requests currently waiting in the shard's bounded queue.
+    pub queue_depth: usize,
+    pub batches: u64,
+    /// Mean micro-batch fill ratio in [0, 1] (drained / batch_max).
+    pub batch_fill: f64,
+    pub exec: Option<Summary>,
+    pub e2e: Option<Summary>,
+}
+
 #[derive(Debug)]
 pub struct MetricsSnapshot {
     pub elapsed_s: f64,
     pub rows: Vec<ArtifactSnapshot>,
+    pub shards: Vec<ShardSnapshot>,
 }
 
 impl MetricsSnapshot {
@@ -98,15 +224,19 @@ impl MetricsSnapshot {
         self.rows.iter().map(|r| r.served).sum()
     }
 
+    pub fn total_rejected(&self) -> u64 {
+        self.shards.iter().map(|s| s.rejected).sum()
+    }
+
     pub fn render(&self) -> String {
+        let p = |s: &Option<Summary>, f: fn(&Summary) -> f64| {
+            s.as_ref().map(|s| num(f(s) * 1e3, 3)).unwrap_or_else(|| "-".into())
+        };
         let mut t = Table::new(&[
             "artifact", "served", "fail", "rps", "p50 ms", "p99 ms", "exec p50 ms",
         ])
         .with_title(&format!("Serving metrics ({:.1}s)", self.elapsed_s));
         for r in &self.rows {
-            let p = |s: &Option<Summary>, f: fn(&Summary) -> f64| {
-                s.as_ref().map(|s| num(f(s) * 1e3, 3)).unwrap_or_else(|| "-".into())
-            };
             t.row(&[
                 r.artifact.clone(),
                 r.served.to_string(),
@@ -117,7 +247,30 @@ impl MetricsSnapshot {
                 p(&r.exec, |s| s.p50),
             ]);
         }
-        t.render()
+        let mut out = t.render();
+        if !self.shards.is_empty() {
+            let mut st = Table::new(&[
+                "shard", "submitted", "rejected", "served", "fail", "depth", "batch fill",
+                "p50 ms", "p99 ms",
+            ])
+            .with_title("Per-shard counters");
+            for s in &self.shards {
+                st.row(&[
+                    s.shard.to_string(),
+                    s.submitted.to_string(),
+                    s.rejected.to_string(),
+                    s.served.to_string(),
+                    s.failed.to_string(),
+                    s.queue_depth.to_string(),
+                    num(s.batch_fill, 2),
+                    p(&s.e2e, |x| x.p50),
+                    p(&s.e2e, |x| x.p99),
+                ]);
+            }
+            out.push('\n');
+            out.push_str(&st.render());
+        }
+        out
     }
 }
 
@@ -140,5 +293,49 @@ mod tests {
         assert_eq!(a.failed, 1);
         assert!((a.e2e.as_ref().unwrap().mean - 0.0035).abs() < 1e-9);
         assert!(s.render().contains("Serving metrics"));
+    }
+
+    #[test]
+    fn per_shard_accounting() {
+        let m = Metrics::default();
+        let gauges: Vec<Arc<AtomicIsize>> =
+            (0..2).map(|_| Arc::new(AtomicIsize::new(0))).collect();
+        gauges[1].store(3, Ordering::Relaxed);
+        m.init_shards(gauges);
+
+        m.record_submit(0);
+        m.record_submit(1);
+        m.record_submit(1);
+        m.record_reject(1);
+        m.record_batch(0, 4, 16);
+        m.record_batch(0, 8, 16);
+        m.record_shard(0, "a", true, 0.001, 0.002);
+        m.record_shard(1, "a", false, 0.0, 0.0);
+
+        let s = m.snapshot();
+        assert_eq!(s.shards.len(), 2);
+        assert_eq!(s.shards[0].submitted, 1);
+        assert_eq!(s.shards[0].served, 1);
+        assert!((s.shards[0].batch_fill - 0.375).abs() < 1e-9);
+        assert_eq!(s.shards[1].submitted, 2);
+        assert_eq!(s.shards[1].rejected, 1);
+        assert_eq!(s.shards[1].failed, 1);
+        assert_eq!(s.shards[1].queue_depth, 3);
+        assert_eq!(s.total_rejected(), 1);
+        // shard execution also feeds the per-artifact table
+        assert_eq!(s.total_served(), 1);
+        assert!(s.render().contains("Per-shard counters"));
+    }
+
+    #[test]
+    fn out_of_range_shard_ignored() {
+        let m = Metrics::default();
+        // no init_shards: per-shard calls must not panic
+        m.record_submit(5);
+        m.record_reject(5);
+        m.record_batch(5, 1, 1);
+        m.record_shard(5, "a", true, 0.0, 0.001);
+        assert_eq!(m.snapshot().total_served(), 1);
+        assert!(m.snapshot().shards.is_empty());
     }
 }

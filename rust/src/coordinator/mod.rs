@@ -1,18 +1,20 @@
-//! L3 serving coordinator: request routing, micro-batching, a dedicated
-//! PJRT worker thread, and serving metrics.
+//! L3 serving coordinator: request routing, micro-batching, a pool of
+//! engine shard threads, and serving metrics.
 //!
 //! The paper's deployment shape is a single FPGA behind an MCU; the
-//! software twin is a single engine thread owning the PJRT client (the
-//! executables hold raw runtime handles and stay on one thread), fed
-//! through an MPSC queue.  Batching amortises dispatch overhead the way
-//! the MCU batches sensor windows.
+//! software twin generalises it to N engine shards (one accelerator
+//! emulation per shard thread), each owning its engine exclusively — PJRT
+//! executables hold raw runtime handles and stay on one thread.  Requests
+//! affinitise to shards by artifact hash, queue in bounded per-shard
+//! channels with admission control, and drain in micro-batches the way
+//! the MCU batches sensor windows.  See DESIGN.md §Coordinator.
 
 pub mod metrics;
 pub mod request;
 pub mod router;
 pub mod server;
 
-pub use metrics::{Metrics, MetricsSnapshot};
-pub use request::{Request, Response};
-pub use router::Router;
-pub use server::{Coordinator, CoordinatorConfig};
+pub use metrics::{Metrics, MetricsSnapshot, ShardSnapshot};
+pub use request::{Request, Response, SubmitError};
+pub use router::{Router, ShardPolicy, ShardRouter};
+pub use server::{Coordinator, CoordinatorConfig, EngineSpec};

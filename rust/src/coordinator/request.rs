@@ -1,4 +1,4 @@
-//! Request/response types crossing the coordinator queue.
+//! Request/response types crossing the coordinator's shard queues.
 
 use std::sync::mpsc::Sender;
 use std::time::Instant;
@@ -18,6 +18,8 @@ pub struct Request {
 pub struct Response {
     pub id: u64,
     pub artifact: String,
+    /// Engine shard that executed the request.
+    pub shard: usize,
     pub output: Result<Vec<f32>, String>,
     /// Time spent queued before the engine picked the request up.
     pub queue_wait_s: f64,
@@ -34,3 +36,26 @@ impl Response {
         self.output.is_ok()
     }
 }
+
+/// Admission-control rejection: the coordinator refuses a request with a
+/// reason instead of letting queues grow without bound.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The selected shard's bounded queue is at capacity.
+    QueueFull { shard: usize, capacity: usize },
+    /// The coordinator is draining; no new work is admitted.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull { shard, capacity } => {
+                write!(f, "shard {shard} queue full (capacity {capacity})")
+            }
+            SubmitError::ShuttingDown => write!(f, "coordinator is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}

@@ -1,9 +1,78 @@
-//! Variant routing: choose which compiled accelerator artifact serves a
-//! model request, using the same application knowledge the Generator
-//! consumed (precision budget, energy preference).
+//! Routing: (a) variant routing — choose which compiled accelerator
+//! artifact serves a model request, using the same application knowledge
+//! the Generator consumed (precision budget, energy preference); and
+//! (b) shard routing — choose which engine shard executes an admitted
+//! request.
 
 use crate::runtime::{ArtifactMeta, Manifest};
+use crate::util::rng::fnv1a;
 use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// How requests map to engine shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardPolicy {
+    /// Hash the artifact name to a home shard: every request for one
+    /// artifact lands on the same engine (warm executable, predictable
+    /// batching).  The default.
+    Affinity,
+    /// Send to the shard with the shallowest queue (work stealing for
+    /// skewed artifact popularity).
+    LeastLoaded,
+    /// Rotate across shards regardless of artifact (maximum spread; used
+    /// by the scaling benchmarks).
+    RoundRobin,
+}
+
+/// Maps admitted requests to engine shards under a [`ShardPolicy`].
+#[derive(Debug)]
+pub struct ShardRouter {
+    policy: ShardPolicy,
+    shards: usize,
+    rr: AtomicUsize,
+}
+
+impl ShardRouter {
+    pub fn new(policy: ShardPolicy, shards: usize) -> ShardRouter {
+        assert!(shards > 0, "shard count must be positive");
+        ShardRouter {
+            policy,
+            shards,
+            rr: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Whether `pick` consults queue depths (lets the submit hot path
+    /// skip gathering them for depth-blind policies).
+    pub fn needs_depths(&self) -> bool {
+        self.policy == ShardPolicy::LeastLoaded
+    }
+
+    /// The artifact's home shard (stable across processes: FNV-1a).
+    pub fn home(&self, artifact: &str) -> usize {
+        (fnv1a(artifact) % self.shards as u64) as usize
+    }
+
+    /// Pick the shard for one request.  `depths` are the current queue
+    /// depths, indexed by shard (only consulted by `LeastLoaded`).
+    pub fn pick(&self, artifact: &str, depths: &[usize]) -> usize {
+        match self.policy {
+            ShardPolicy::Affinity => self.home(artifact),
+            ShardPolicy::RoundRobin => self.rr.fetch_add(1, Ordering::Relaxed) % self.shards,
+            ShardPolicy::LeastLoaded => depths
+                .iter()
+                .enumerate()
+                .take(self.shards)
+                .min_by_key(|(_, &d)| d)
+                .map(|(i, _)| i)
+                .unwrap_or_else(|| self.home(artifact)),
+        }
+    }
+}
 
 /// Routing policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -172,5 +241,40 @@ mod tests {
     fn unknown_model_errors() {
         assert!(router().route("nope", Policy::Named).is_err());
         let _ = PathBuf::new(); // silence unused import on some cfgs
+    }
+
+    #[test]
+    fn affinity_is_stable_and_in_range() {
+        let r = ShardRouter::new(ShardPolicy::Affinity, 4);
+        for name in ["mlp_fluid.hard", "lstm_har.opt", "cnn_ecg.base", "syn.7"] {
+            let s = r.pick(name, &[]);
+            assert!(s < 4);
+            assert_eq!(s, r.pick(name, &[9, 9, 9, 9]), "{name} must be sticky");
+            assert_eq!(s, r.home(name));
+        }
+    }
+
+    #[test]
+    fn affinity_spreads_across_shards() {
+        let r = ShardRouter::new(ShardPolicy::Affinity, 4);
+        let mut hit = [false; 4];
+        for i in 0..64 {
+            hit[r.home(&format!("artifact.{i}"))] = true;
+        }
+        assert!(hit.iter().all(|&h| h), "64 names must cover 4 shards: {hit:?}");
+    }
+
+    #[test]
+    fn round_robin_rotates() {
+        let r = ShardRouter::new(ShardPolicy::RoundRobin, 3);
+        let picks: Vec<usize> = (0..6).map(|_| r.pick("same", &[])).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_takes_shallowest_queue() {
+        let r = ShardRouter::new(ShardPolicy::LeastLoaded, 3);
+        assert_eq!(r.pick("x", &[5, 1, 3]), 1);
+        assert_eq!(r.pick("x", &[0, 0, 0]), 0); // tie -> lowest index
     }
 }

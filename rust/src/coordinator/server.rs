@@ -1,20 +1,35 @@
-//! The coordinator server: a client handle + a dedicated engine thread.
+//! The sharded coordinator: a client handle + N engine shard threads.
 //!
-//! The PJRT executables hold raw runtime handles, so the engine lives on
-//! exactly one thread; requests arrive over an MPSC queue, get
-//! micro-batched per artifact, executed, and answered over per-request
-//! reply channels.
+//! Each shard owns one `Engine` (PJRT executables hold raw runtime
+//! handles and must stay on the thread that compiled them), fed by its own
+//! **bounded** queue.  Requests hash/affinitise to shards via
+//! [`ShardRouter`]; each worker drains micro-batches up to `batch_max`,
+//! optionally waiting `batch_window` to let a batch fill.  Admission
+//! control rejects with a reason ([`SubmitError`]) instead of letting
+//! queues grow without bound, and shutdown drains: every admitted request
+//! is answered before the workers exit.
 
 use super::metrics::Metrics;
-use super::request::{Request, Response};
-use crate::runtime::Engine;
+use super::request::{Request, Response, SubmitError};
+use super::router::{ShardPolicy, ShardRouter};
+use crate::runtime::{Engine, Manifest, SyntheticSpec};
 use anyhow::{anyhow, Result};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicIsize, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// Which engine each shard loads.
+#[derive(Debug, Clone)]
+pub enum EngineSpec {
+    /// Compiled artifacts from `artifacts_dir` (PJRT under the `pjrt`
+    /// feature, the behavioural executor otherwise).
+    Artifacts,
+    /// Manifest-free synthetic artifacts (hermetic tests / benchmarks).
+    Synthetic(SyntheticSpec),
+}
 
 /// Coordinator tuning knobs.
 #[derive(Debug, Clone)]
@@ -24,6 +39,16 @@ pub struct CoordinatorConfig {
     pub artifacts: Vec<String>,
     /// Maximum micro-batch drained per engine pass.
     pub batch_max: usize,
+    /// Engine shard count; 0 = one per CPU core, capped at 4.
+    pub shards: usize,
+    /// Per-shard queue bound; admission control rejects beyond this.
+    pub queue_cap: usize,
+    /// How long a worker waits for a micro-batch to fill once the first
+    /// request arrives.  Zero = drain whatever is already queued.
+    pub batch_window: Duration,
+    /// How requests map to shards.
+    pub shard_policy: ShardPolicy,
+    pub engine: EngineSpec,
 }
 
 impl Default for CoordinatorConfig {
@@ -32,50 +57,204 @@ impl Default for CoordinatorConfig {
             artifacts_dir: crate::artifacts_dir(),
             artifacts: vec![],
             batch_max: 16,
+            shards: 0,
+            queue_cap: 256,
+            batch_window: Duration::ZERO,
+            shard_policy: ShardPolicy::Affinity,
+            engine: EngineSpec::Artifacts,
         }
     }
 }
 
-/// Client handle; cloneable across request-producer threads.
+fn default_shards() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .clamp(1, 4)
+}
+
+/// The engine one shard loads: its artifact group, resolved at startup.
+enum ShardEngine {
+    Artifacts { names: Vec<String> },
+    Synthetic(SyntheticSpec),
+}
+
+/// Resolve the per-shard artifact groups.  Under `Affinity` each shard
+/// loads only the artifacts that hash home to it (no request for another
+/// artifact can ever reach it); `LeastLoaded` and `RoundRobin` can route
+/// any artifact anywhere, so every shard loads the full set.
+fn shard_engines(config: &CoordinatorConfig, router: &ShardRouter) -> Result<Vec<ShardEngine>> {
+    let n = router.shards();
+    match &config.engine {
+        EngineSpec::Synthetic(spec) => Ok((0..n)
+            .map(|shard| {
+                let artifacts = if config.shard_policy == ShardPolicy::Affinity {
+                    spec.artifacts
+                        .iter()
+                        .filter(|a| router.home(&a.name) == shard)
+                        .cloned()
+                        .collect()
+                } else {
+                    spec.artifacts.clone()
+                };
+                ShardEngine::Synthetic(SyntheticSpec { artifacts })
+            })
+            .collect()),
+        EngineSpec::Artifacts => {
+            let names: Vec<String> = if config.artifacts.is_empty() {
+                Manifest::load(&config.artifacts_dir)
+                    .map_err(|e| anyhow!("engine startup failed: {e:#}"))?
+                    .models()
+                    .map(|a| a.name.clone())
+                    .collect()
+            } else {
+                config.artifacts.clone()
+            };
+            Ok((0..n)
+                .map(|shard| {
+                    let names = if config.shard_policy == ShardPolicy::Affinity {
+                        names
+                            .iter()
+                            .filter(|name| router.home(name.as_str()) == shard)
+                            .cloned()
+                            .collect()
+                    } else {
+                        names.clone()
+                    };
+                    ShardEngine::Artifacts { names }
+                })
+                .collect())
+        }
+    }
+}
+
+struct Shard {
+    /// `None` once draining: the worker exits after serving the backlog.
+    tx: Mutex<Option<SyncSender<Request>>>,
+    depth: Arc<AtomicIsize>,
+}
+
+/// Client handle; shareable across request-producer threads.
 pub struct Coordinator {
-    tx: Sender<Request>,
+    shards: Vec<Shard>,
+    router: ShardRouter,
     metrics: Arc<Metrics>,
-    next_id: Arc<AtomicU64>,
-    worker: Option<JoinHandle<()>>,
+    next_id: AtomicU64,
+    draining: AtomicBool,
+    queue_cap: usize,
+    workers: Mutex<Vec<JoinHandle<()>>>,
 }
 
 impl Coordinator {
-    /// Start the engine thread.  Fails (via the first request) if the
-    /// artifacts cannot be loaded; `start` itself waits for engine
-    /// readiness so callers get load errors eagerly.
+    /// Start the shard workers.  `start` waits for every shard's engine
+    /// to load so callers get artifact errors eagerly.
     pub fn start(config: CoordinatorConfig) -> Result<Coordinator> {
-        let (tx, rx) = channel::<Request>();
+        let n = if config.shards == 0 {
+            default_shards()
+        } else {
+            config.shards
+        };
+        let queue_cap = config.queue_cap.max(1);
         let metrics = Arc::new(Metrics::default());
-        let m2 = metrics.clone();
-        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let config = Arc::new(CoordinatorConfig {
+            batch_max: config.batch_max.max(1),
+            ..config
+        });
+        let router = ShardRouter::new(config.shard_policy, n);
+        let engines = shard_engines(&config, &router)?;
 
-        let worker = std::thread::Builder::new()
-            .name("elastic-engine".into())
-            .spawn(move || worker_loop(config, rx, m2, ready_tx))
-            .expect("spawn engine thread");
-
-        match ready_rx.recv() {
-            Ok(Ok(())) => Ok(Coordinator {
-                tx,
-                metrics,
-                next_id: Arc::new(AtomicU64::new(1)),
-                worker: Some(worker),
-            }),
-            Ok(Err(e)) => {
-                let _ = worker.join();
-                Err(anyhow!("engine startup failed: {e}"))
-            }
-            Err(_) => Err(anyhow!("engine thread died during startup")),
+        let mut shards = Vec::with_capacity(n);
+        let mut workers = Vec::with_capacity(n);
+        let mut readies = Vec::with_capacity(n);
+        for (shard_id, engine) in engines.into_iter().enumerate() {
+            let (tx, rx) = sync_channel::<Request>(queue_cap);
+            let depth = Arc::new(AtomicIsize::new(0));
+            let (ready_tx, ready_rx) = channel::<std::result::Result<(), String>>();
+            let worker = std::thread::Builder::new()
+                .name(format!("elastic-shard-{shard_id}"))
+                .spawn({
+                    let config = config.clone();
+                    let depth = depth.clone();
+                    let metrics = metrics.clone();
+                    move || worker_loop(shard_id, &config, engine, rx, depth, metrics, ready_tx)
+                })
+                .expect("spawn shard worker");
+            shards.push(Shard {
+                tx: Mutex::new(Some(tx)),
+                depth,
+            });
+            workers.push(worker);
+            readies.push(ready_rx);
         }
+
+        let coordinator = Coordinator {
+            router,
+            metrics: metrics.clone(),
+            next_id: AtomicU64::new(1),
+            draining: AtomicBool::new(false),
+            queue_cap,
+            shards,
+            workers: Mutex::new(workers),
+        };
+        for (shard_id, ready) in readies.into_iter().enumerate() {
+            let outcome = match ready.recv() {
+                Ok(Ok(())) => Ok(()),
+                Ok(Err(e)) => Err(anyhow!("shard {shard_id} engine startup failed: {e}")),
+                Err(_) => Err(anyhow!("shard {shard_id} engine thread died during startup")),
+            };
+            if let Err(e) = outcome {
+                coordinator.shutdown();
+                return Err(e);
+            }
+        }
+        metrics.init_shards(coordinator.shards.iter().map(|s| s.depth.clone()).collect());
+        Ok(coordinator)
     }
 
-    /// Submit a request; returns the receiver for its response.
-    pub fn submit(&self, artifact: &str, input: Vec<f32>) -> Receiver<Response> {
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Submit a request, waiting for queue space if the target shard is
+    /// at capacity; returns the receiver for its response.
+    pub fn submit(
+        &self,
+        artifact: &str,
+        input: Vec<f32>,
+    ) -> std::result::Result<Receiver<Response>, SubmitError> {
+        self.enqueue(artifact, input, true)
+    }
+
+    /// Submit without blocking: a full shard queue rejects with
+    /// [`SubmitError::QueueFull`] (admission control for bursty load).
+    pub fn try_submit(
+        &self,
+        artifact: &str,
+        input: Vec<f32>,
+    ) -> std::result::Result<Receiver<Response>, SubmitError> {
+        self.enqueue(artifact, input, false)
+    }
+
+    fn enqueue(
+        &self,
+        artifact: &str,
+        input: Vec<f32>,
+        blocking: bool,
+    ) -> std::result::Result<Receiver<Response>, SubmitError> {
+        if self.draining.load(Ordering::SeqCst) {
+            return Err(SubmitError::ShuttingDown);
+        }
+        // gather queue depths only for depth-aware policies; the default
+        // affinity path stays allocation-free
+        let depths: Vec<usize> = if self.router.needs_depths() {
+            self.shards
+                .iter()
+                .map(|s| s.depth.load(Ordering::Relaxed).max(0) as usize)
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let shard = self.router.pick(artifact, &depths);
         let (reply, rx) = channel();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
@@ -84,73 +263,143 @@ impl Coordinator {
             enqueued: Instant::now(),
             reply,
         };
-        // send fails only if the worker died; the caller sees it as a
-        // disconnected reply channel
-        let _ = self.tx.send(req);
-        rx
+        // clone the sender out of the lock: a blocking send must not hold
+        // the mutex, or it would stall shutdown and sibling producers
+        let tx = match self.shards[shard].tx.lock().unwrap().as_ref() {
+            Some(tx) => tx.clone(),
+            None => return Err(SubmitError::ShuttingDown),
+        };
+        if blocking {
+            // count the waiting producer as queue pressure
+            self.shards[shard].depth.fetch_add(1, Ordering::Relaxed);
+            if tx.send(req).is_err() {
+                self.shards[shard].depth.fetch_sub(1, Ordering::Relaxed);
+                return Err(SubmitError::ShuttingDown);
+            }
+            self.metrics.record_submit(shard);
+        } else {
+            match tx.try_send(req) {
+                Ok(()) => {
+                    self.shards[shard].depth.fetch_add(1, Ordering::Relaxed);
+                    self.metrics.record_submit(shard);
+                }
+                Err(TrySendError::Full(_)) => {
+                    self.metrics.record_reject(shard);
+                    return Err(SubmitError::QueueFull {
+                        shard,
+                        capacity: self.queue_cap,
+                    });
+                }
+                Err(TrySendError::Disconnected(_)) => return Err(SubmitError::ShuttingDown),
+            }
+        }
+        Ok(rx)
     }
 
     /// Submit and wait.
     ///
-    /// Perf note (EXPERIMENTS.md §Perf): spin-before-park variants of this
-    /// path and of the worker's dequeue were tried and *regressed* the
-    /// round-trip 7x on this host — the spinners steal cycles from the
-    /// PJRT engine thread.  Plain blocking channels are the optimum here.
+    /// Perf note: spin-before-park variants of this path and of the
+    /// worker's dequeue were tried and *regressed* the round-trip 7x on
+    /// this host — the spinners steal cycles from the engine threads.
+    /// Plain blocking channels are the optimum here.
     pub fn infer(&self, artifact: &str, input: Vec<f32>) -> Result<Response> {
-        self.submit(artifact, input)
+        self.submit(artifact, input)?
             .recv()
-            .map_err(|_| anyhow!("engine thread gone"))
+            .map_err(|_| anyhow!("engine shard died before replying"))
     }
 
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
     }
-}
 
-impl Drop for Coordinator {
-    fn drop(&mut self) {
-        // closing the queue stops the worker
-        let (dummy_tx, _) = channel::<Request>();
-        let tx = std::mem::replace(&mut self.tx, dummy_tx);
-        drop(tx);
-        if let Some(h) = self.worker.take() {
-            let _ = h.join();
+    /// Stop admitting work, drain every shard queue, and join the
+    /// workers.  Every already-admitted request still receives its
+    /// response (the bounded channels deliver their backlog before
+    /// disconnecting).  Idempotent.
+    pub fn shutdown(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+        for shard in &self.shards {
+            shard.tx.lock().unwrap().take();
+        }
+        let workers = std::mem::take(&mut *self.workers.lock().unwrap());
+        for handle in workers {
+            let _ = handle.join();
         }
     }
 }
 
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn build_engine(config: &CoordinatorConfig, engine: ShardEngine) -> Result<Engine> {
+    match engine {
+        ShardEngine::Artifacts { names } => {
+            let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+            Engine::load_exact(&config.artifacts_dir, &refs)
+        }
+        ShardEngine::Synthetic(spec) => Ok(Engine::synthetic(spec)),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
-    config: CoordinatorConfig,
+    shard_id: usize,
+    config: &CoordinatorConfig,
+    shard_engine: ShardEngine,
     rx: Receiver<Request>,
+    depth: Arc<AtomicIsize>,
     metrics: Arc<Metrics>,
-    ready: Sender<Result<(), String>>,
+    ready: std::sync::mpsc::Sender<std::result::Result<(), String>>,
 ) {
-    let names: Vec<&str> = config.artifacts.iter().map(|s| s.as_str()).collect();
-    let engine = match Engine::load(&config.artifacts_dir, &names) {
+    let engine = match build_engine(config, shard_engine) {
         Ok(e) => {
             let _ = ready.send(Ok(()));
             e
         }
         Err(e) => {
-            let _ = ready.send(Err(e.to_string()));
+            let _ = ready.send(Err(format!("{e:#}")));
             return;
         }
     };
 
     loop {
-        // block for the first request, then drain a micro-batch
+        // block for the first request, then gather a micro-batch
         let first = match rx.recv() {
             Ok(r) => r,
-            Err(_) => return, // all handles dropped: shut down
+            Err(_) => return, // queue drained + all handles dropped
         };
+        depth.fetch_sub(1, Ordering::Relaxed);
         let mut batch = vec![first];
-        while batch.len() < config.batch_max {
-            match rx.try_recv() {
-                Ok(r) => batch.push(r),
-                Err(TryRecvError::Empty) => break,
-                Err(TryRecvError::Disconnected) => break,
+        if config.batch_window.is_zero() {
+            while batch.len() < config.batch_max {
+                match rx.try_recv() {
+                    Ok(r) => {
+                        depth.fetch_sub(1, Ordering::Relaxed);
+                        batch.push(r);
+                    }
+                    Err(_) => break,
+                }
+            }
+        } else {
+            let deadline = Instant::now() + config.batch_window;
+            while batch.len() < config.batch_max {
+                let now = Instant::now();
+                let Some(remaining) = deadline.checked_duration_since(now) else {
+                    break;
+                };
+                match rx.recv_timeout(remaining) {
+                    Ok(r) => {
+                        depth.fetch_sub(1, Ordering::Relaxed);
+                        batch.push(r);
+                    }
+                    Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
+                }
             }
         }
+        metrics.record_batch(shard_id, batch.len(), config.batch_max);
 
         for req in batch {
             let picked_up = Instant::now();
@@ -158,10 +407,11 @@ fn worker_loop(
             let result = engine.infer(&req.artifact, &req.input);
             let exec = picked_up.elapsed().as_secs_f64();
             let ok = result.is_ok();
-            metrics.record(&req.artifact, ok, queue_wait, exec);
+            metrics.record_shard(shard_id, &req.artifact, ok, queue_wait, exec);
             let _ = req.reply.send(Response {
                 id: req.id,
                 artifact: req.artifact,
+                shard: shard_id,
                 output: result.map_err(|e| e.to_string()),
                 queue_wait_s: queue_wait,
                 exec_s: exec,
@@ -170,5 +420,48 @@ fn worker_loop(
     }
 }
 
-// Integration coverage lives in rust/tests/integration_runtime.rs (needs
-// built artifacts).
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synthetic_config(shards: usize) -> CoordinatorConfig {
+        CoordinatorConfig {
+            shards,
+            engine: EngineSpec::Synthetic(SyntheticSpec::uniform(4, 8, 2, 50)),
+            ..CoordinatorConfig::default()
+        }
+    }
+
+    #[test]
+    fn synthetic_round_trip() {
+        let coord = Coordinator::start(synthetic_config(2)).unwrap();
+        assert_eq!(coord.shard_count(), 2);
+        let resp = coord.infer("syn.0", vec![0.5; 8]).unwrap();
+        assert!(resp.is_ok());
+        assert!(resp.shard < 2);
+        assert!(resp.total_s() >= 0.0);
+        assert_eq!(coord.metrics().snapshot().total_served(), 1);
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_rejected() {
+        let coord = Coordinator::start(synthetic_config(1)).unwrap();
+        coord.shutdown();
+        assert_eq!(
+            coord.submit("syn.0", vec![0.0; 8]).unwrap_err(),
+            SubmitError::ShuttingDown
+        );
+        coord.shutdown(); // idempotent
+    }
+
+    #[test]
+    fn startup_failure_reports_shard() {
+        let cfg = CoordinatorConfig {
+            artifacts_dir: PathBuf::from("/definitely/missing"),
+            shards: 2,
+            ..CoordinatorConfig::default()
+        };
+        let err = Coordinator::start(cfg).unwrap_err().to_string();
+        assert!(err.contains("startup failed"), "{err}");
+    }
+}

@@ -12,11 +12,12 @@
 //!   workload-aware strategies × application constraints), every substrate
 //!   it needs (FPGA device models, EDA estimation, behavioural simulation,
 //!   discrete-event energy simulation, the Elastic Node testbed emulation)
-//!   and a serving coordinator that executes the compiled artifacts via
-//!   the PJRT CPU client.
+//!   and a sharded serving coordinator that executes the compiled
+//!   artifacts (PJRT CPU client under the `pjrt` feature, the bit-true
+//!   behavioural executor otherwise).
 //!
-//! See DESIGN.md for the module inventory and the experiment index
-//! (E1-E8), EXPERIMENTS.md for paper-vs-measured results.
+//! See DESIGN.md for the module inventory, the serving architecture, and
+//! the experiment index (E1-E8, benches/).
 
 pub mod behav;
 pub mod bench;

@@ -12,7 +12,7 @@
 //! * `verify`   — cross-check PJRT execution and the behavioural
 //!   simulator against the golden vectors.
 
-use elastic_gen::coordinator::{Coordinator, CoordinatorConfig};
+use elastic_gen::coordinator::{Coordinator, CoordinatorConfig, EngineSpec};
 use elastic_gen::eda;
 use elastic_gen::elastic_node::Platform;
 use elastic_gen::fpga::{device, ConfigController, DEVICES};
@@ -60,7 +60,8 @@ fn print_usage() {
            report    --model <mlp_fluid|lstm_har|cnn_ecg|attn_tiny> --device <name>\n\
                      [--clock-mhz 100] [--optimised]\n\
            simulate  --period-ms <f> [--requests N] [--device <name>]\n\
-           serve     [--requests N] [--artifact <name>]\n\
+           serve     [--requests N] [--artifact <name>] [--shards N]\n\
+                     [--queue-cap N] [--batch-max N] [--synthetic]\n\
            verify    [--artifact <name>]\n\
            devices"
     );
@@ -186,16 +187,47 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let n = args.get_usize("requests", 200);
-    let coord = Coordinator::start(CoordinatorConfig::default())?;
-    let manifest = Manifest::load(&elastic_gen::artifacts_dir())?;
-    let artifact = args.get_or("artifact", "lstm_har.opt").to_string();
-    let meta = manifest
-        .get(&artifact)
-        .ok_or_else(|| anyhow::anyhow!("unknown artifact '{artifact}'"))?;
+    let base = CoordinatorConfig {
+        shards: args.get_usize("shards", 0),
+        queue_cap: args.get_usize("queue-cap", 256),
+        batch_max: args.get_usize("batch-max", 16),
+        ..CoordinatorConfig::default()
+    };
+    // --synthetic serves the manifest-free CPU-burner artifacts, so the
+    // sharded serving path can be demonstrated without `make artifacts`
+    let (config, artifact, input_len) = if args.has_flag("synthetic") {
+        let spec = elastic_gen::runtime::SyntheticSpec::uniform(4, 16, 4, 50_000);
+        let artifact = args.get_or("artifact", "syn.0").to_string();
+        let meta = spec
+            .artifacts
+            .iter()
+            .find(|a| a.name == artifact)
+            .ok_or_else(|| anyhow::anyhow!("unknown synthetic artifact '{artifact}'"))?;
+        let input_len = meta.input_len;
+        (
+            CoordinatorConfig {
+                engine: EngineSpec::Synthetic(spec),
+                ..base
+            },
+            artifact,
+            input_len,
+        )
+    } else {
+        let manifest = Manifest::load(&elastic_gen::artifacts_dir())?;
+        let artifact = args.get_or("artifact", "lstm_har.opt").to_string();
+        let meta = manifest
+            .get(&artifact)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact '{artifact}'"))?;
+        (base, artifact, meta.input_len())
+    };
+    let coord = Coordinator::start(config)?;
     let mut rng = Rng::new(7);
-    println!("serving {n} requests against '{artifact}' ...");
+    println!(
+        "serving {n} requests against '{artifact}' on {} shard(s) ...",
+        coord.shard_count()
+    );
     for _ in 0..n {
-        let input: Vec<f32> = (0..meta.input_len())
+        let input: Vec<f32> = (0..input_len)
             .map(|_| (rng.range(-2.0, 2.0) * 256.0).floor() as f32 / 256.0)
             .collect();
         let resp = coord.infer(&artifact, input)?;

@@ -203,7 +203,12 @@ pub fn tanh_pla(q: i64, fmt: QFormat) -> i64 {
     fmt.saturate(2 * s - one)
 }
 
-/// BRAM table contents (mirrors activations.py::lut_table).
+/// BRAM table contents (mirrors activations.py::lut_table for the
+/// sigmoid/tanh kinds).  Hard variants get the sampled hard function — the
+/// generator's DSE may enumerate (hard kind, LUT impl) points, and table
+/// construction must not panic on them.  (The python kernels never emit
+/// hard LUTs; `ActVariant::eval` keeps routing hard kinds through the
+/// 1-cycle shift+clamp datapath.)
 pub fn lut_table(kind: ActKind, fmt: QFormat) -> Vec<i64> {
     let step = (LUT_HI - LUT_LO) / LUT_SIZE as f64;
     (0..LUT_SIZE)
@@ -212,7 +217,8 @@ pub fn lut_table(kind: ActKind, fmt: QFormat) -> Vec<i64> {
             let f = match kind {
                 ActKind::Sigmoid => sigmoid_f64(mid),
                 ActKind::Tanh => mid.tanh(),
-                _ => panic!("no LUT for hard variants"),
+                ActKind::HardSigmoid => (mid / 4.0 + 0.5).clamp(0.0, 1.0),
+                ActKind::HardTanh => mid.clamp(-1.0, 1.0),
             };
             (f * fmt.scale() as f64 + 0.5)
                 .floor()
@@ -315,6 +321,26 @@ mod tests {
         assert_eq!(t[0], 0);
         assert_eq!(t[LUT_SIZE - 1], F.scale());
         assert!(t.windows(2).all(|w| w[1] >= w[0]));
+    }
+
+    #[test]
+    fn hard_variant_lut_tables_defined() {
+        // reachable from generator DSE: must be a real table, not a panic
+        let hs = lut_table(ActKind::HardSigmoid, F);
+        assert_eq!(hs[0], 0);
+        assert_eq!(hs[LUT_SIZE - 1], F.scale());
+        assert!(hs.windows(2).all(|w| w[1] >= w[0]));
+        let ht = lut_table(ActKind::HardTanh, F);
+        assert_eq!(ht[0], -F.scale());
+        assert_eq!(ht[LUT_SIZE - 1], F.scale());
+        assert!(ht.windows(2).all(|w| w[1] >= w[0]));
+        // each cell is the hard function sampled at the cell midpoint
+        let step = (LUT_HI - LUT_LO) / LUT_SIZE as f64;
+        for (i, (&s, &t)) in hs.iter().zip(&ht).enumerate() {
+            let mid = i as f64 * step + LUT_LO + step / 2.0;
+            assert_eq!(s, F.quantize((mid / 4.0 + 0.5).clamp(0.0, 1.0)), "hs[{i}]");
+            assert_eq!(t, F.quantize(mid.clamp(-1.0, 1.0)), "ht[{i}]");
+        }
     }
 
     #[test]

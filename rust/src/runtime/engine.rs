@@ -1,77 +1,206 @@
-//! PJRT execution engine: loads the HLO-text artifacts, compiles them once
-//! on the CPU PJRT client, and serves inference calls.
+//! Execution engine facade: one `Engine` type over three backends.
 //!
-//! HLO **text** is the interchange format — jax >= 0.5 serialises protos
-//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see /opt/xla-example/README.md and
-//! python/compile/aot.py).  Lowering used `return_tuple=True`, so results
-//! unwrap with `to_tuple1`.
+//! * **pjrt** (feature `pjrt`) — the compiled HLO artifacts on the PJRT
+//!   CPU client (`runtime/pjrt.rs`).  Needs the `xla` bindings, which are
+//!   not on crates.io; see the feature note in Cargo.toml.
+//! * **behavioural** (default) — the bit-true fixed-point executor
+//!   (`behav::run_model`) over the same artifact manifest and exported
+//!   weights.  Pure-integer activation variants match the compiled HLO
+//!   bit-for-bit, so the serving stack behaves identically from a clean
+//!   checkout with no native XLA install.
+//! * **synthetic** — manifest-free artifacts burning a deterministic
+//!   amount of CPU per request; the hermetic workload for coordinator
+//!   tests and the shard-scaling benchmarks.
 //!
 //! Python never runs here: after `make artifacts` the binary is
 //! self-contained.
 
 use super::artifact::{ArtifactMeta, Manifest};
+use crate::behav::{self, ExecConfig, ModelWeights};
+use crate::models::Topology;
+use crate::rtl::activation::ActVariant;
+use crate::rtl::fixed_point::Q16_8;
+use crate::util::rng::fnv1a;
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
-/// A compiled-and-loaded artifact set bound to one PJRT client.
+/// A loaded artifact set ready to serve inference calls.
 pub struct Engine {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    backend: Backend,
+}
+
+enum Backend {
+    #[cfg(feature = "pjrt")]
+    Pjrt(super::pjrt::PjrtEngine),
+    Behav(BehavBackend),
+    Synthetic(SyntheticBackend),
 }
 
 impl Engine {
-    /// Load and compile the named artifacts (all model artifacts when
-    /// `names` is empty).  Compilation happens once, up front.
+    /// Load the named artifacts (all model artifacts when `names` is
+    /// empty).  Uses PJRT when the `pjrt` feature is enabled, the
+    /// behavioural executor otherwise.  Loading/compilation happens once,
+    /// up front, so callers get artifact errors eagerly.
     pub fn load(artifacts_dir: &Path, names: &[&str]) -> Result<Engine> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e}"))?;
-        let mut executables = HashMap::new();
-        let selected: Vec<String> = if names.is_empty() {
-            manifest.models().map(|a| a.name.clone()).collect()
-        } else {
-            names.iter().map(|s| s.to_string()).collect()
-        };
-        for name in &selected {
-            let meta = manifest
-                .get(name)
-                .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
-            let path = manifest.hlo_path(meta);
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compiling {name}: {e}"))?;
-            executables.insert(name.clone(), exe);
+        Engine::load_impl(artifacts_dir, names, true)
+    }
+
+    /// Like [`Engine::load`], but an empty `names` list loads *no*
+    /// artifacts — used by the affinity-sharded coordinator, where a
+    /// shard may own an empty artifact group.
+    pub fn load_exact(artifacts_dir: &Path, names: &[&str]) -> Result<Engine> {
+        Engine::load_impl(artifacts_dir, names, false)
+    }
+
+    fn load_impl(artifacts_dir: &Path, names: &[&str], empty_means_all: bool) -> Result<Engine> {
+        #[cfg(feature = "pjrt")]
+        {
+            Ok(Engine {
+                backend: Backend::Pjrt(super::pjrt::PjrtEngine::load_with(
+                    artifacts_dir,
+                    names,
+                    empty_means_all,
+                )?),
+            })
         }
-        Ok(Engine {
-            client,
-            manifest,
-            executables,
-        })
+        #[cfg(not(feature = "pjrt"))]
+        {
+            Ok(Engine {
+                backend: Backend::Behav(BehavBackend::load(
+                    artifacts_dir,
+                    names,
+                    empty_means_all,
+                )?),
+            })
+        }
+    }
+
+    /// A manifest-free engine serving the synthetic artifacts in `spec`.
+    pub fn synthetic(spec: SyntheticSpec) -> Engine {
+        Engine {
+            backend: Backend::Synthetic(SyntheticBackend::new(spec)),
+        }
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        match &self.backend {
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(e) => e.platform(),
+            Backend::Behav(_) => "behav-cpu".to_string(),
+            Backend::Synthetic(_) => "synthetic-cpu".to_string(),
+        }
     }
 
     pub fn manifest(&self) -> &Manifest {
-        &self.manifest
+        match &self.backend {
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(e) => e.manifest(),
+            Backend::Behav(e) => &e.manifest,
+            Backend::Synthetic(e) => &e.manifest,
+        }
     }
 
     pub fn loaded(&self) -> Vec<&str> {
-        self.executables.keys().map(|s| s.as_str()).collect()
+        match &self.backend {
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(e) => e.loaded(),
+            Backend::Behav(e) => e.kernels.keys().map(|s| s.as_str()).collect(),
+            Backend::Synthetic(e) => e.by_name.keys().map(|s| s.as_str()).collect(),
+        }
     }
 
     pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
-        self.manifest.get(name)
+        self.manifest().get(name)
     }
 
     /// Run one inference: flat f32 input -> flat f32 output.
     pub fn infer(&self, name: &str, input: &[f32]) -> Result<Vec<f32>> {
+        match &self.backend {
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(e) => e.infer(name, input),
+            Backend::Behav(e) => e.infer(name, input),
+            Backend::Synthetic(e) => e.infer(name, input),
+        }
+    }
+
+    /// Run a batch sequentially (single-FPGA semantics: the accelerator is
+    /// one physical engine; batching amortises dispatch, not compute).
+    pub fn infer_batch(&self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        inputs.iter().map(|x| self.infer(name, x)).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// behavioural backend
+// ---------------------------------------------------------------------------
+
+struct BehavBackend {
+    manifest: Manifest,
+    kernels: HashMap<String, BehavKernel>,
+}
+
+enum BehavKernel {
+    Model {
+        topology: Topology,
+        weights: Arc<ModelWeights>,
+        cfg: ExecConfig,
+    },
+    /// E2 activation micro-kernels: the variant applied elementwise.
+    Activation { variant: ActVariant },
+}
+
+impl BehavBackend {
+    fn load(artifacts_dir: &Path, names: &[&str], empty_means_all: bool) -> Result<BehavBackend> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let selected: Vec<String> = if names.is_empty() && empty_means_all {
+            manifest.models().map(|a| a.name.clone()).collect()
+        } else {
+            names.iter().map(|s| s.to_string()).collect()
+        };
+        let mut weights_cache: HashMap<String, Arc<ModelWeights>> = HashMap::new();
+        let mut kernels = HashMap::new();
+        for name in &selected {
+            let meta = manifest
+                .get(name)
+                .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+            let act = meta.sigmoid_variant().ok_or_else(|| {
+                anyhow!(
+                    "artifact '{name}': unknown activation '{}/{}'",
+                    meta.act,
+                    meta.act_impl
+                )
+            })?;
+            let kernel = if meta.kind == "activation" {
+                BehavKernel::Activation { variant: act }
+            } else {
+                let topology = Topology::parse(&meta.model)
+                    .ok_or_else(|| anyhow!("artifact '{name}': unknown model '{}'", meta.model))?;
+                let weights = match weights_cache.get(&meta.model) {
+                    Some(w) => w.clone(),
+                    None => {
+                        let w = Arc::new(behav::load(artifacts_dir, &meta.model)?);
+                        weights_cache.insert(meta.model.clone(), w.clone());
+                        w
+                    }
+                };
+                BehavKernel::Model {
+                    topology,
+                    weights,
+                    cfg: ExecConfig {
+                        fmt: meta.fmt,
+                        act,
+                        tanh: meta.tanh_variant().unwrap_or(act),
+                    },
+                }
+            };
+            kernels.insert(name.clone(), kernel);
+        }
+        Ok(BehavBackend { manifest, kernels })
+    }
+
+    fn infer(&self, name: &str, input: &[f32]) -> Result<Vec<f32>> {
         let meta = self
             .manifest
             .get(name)
@@ -83,40 +212,142 @@ impl Engine {
                 meta.input_len()
             ));
         }
-        let exe = self
-            .executables
+        let kernel = self
+            .kernels
             .get(name)
             .ok_or_else(|| anyhow!("artifact '{name}' not loaded"))?;
-
-        let dims: Vec<i64> = meta.input_shape.iter().map(|&d| d as i64).collect();
-        let lit = xla::Literal::vec1(input)
-            .reshape(&dims)
-            .map_err(|e| anyhow!("reshape input: {e}"))?;
-        let result = exe
-            .execute::<xla::Literal>(&[lit])
-            .map_err(|e| anyhow!("execute {name}: {e}"))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e}"))?
-            .to_tuple1()
-            .map_err(|e| anyhow!("unwrap tuple: {e}"))?;
-        let v = out
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("read result: {e}"))?;
-        if v.len() != meta.output_len() {
-            return Err(anyhow!(
-                "{name}: output length {} != expected {}",
-                v.len(),
-                meta.output_len()
-            ));
+        match kernel {
+            BehavKernel::Model {
+                topology,
+                weights,
+                cfg,
+            } => {
+                let x: Vec<f64> = input.iter().map(|&v| v as f64).collect();
+                let y = behav::run_model(*topology, weights, cfg, &x)
+                    .with_context(|| format!("executing {name}"))?;
+                Ok(y.into_iter().map(|v| v as f32).collect())
+            }
+            BehavKernel::Activation { variant } => {
+                let fmt = meta.fmt;
+                Ok(input
+                    .iter()
+                    .map(|&x| fmt.dequantize(variant.eval(fmt.quantize(x as f64), fmt)) as f32)
+                    .collect())
+            }
         }
-        Ok(v)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// synthetic backend
+// ---------------------------------------------------------------------------
+
+/// One synthetic artifact: a named endpoint burning a deterministic amount
+/// of CPU per request (`work_iters` rounds of an integer mix function).
+#[derive(Debug, Clone)]
+pub struct SyntheticArtifact {
+    pub name: String,
+    pub input_len: usize,
+    pub output_len: usize,
+    pub work_iters: u64,
+}
+
+/// Spec for a manifest-free engine (coordinator tests / scaling benches).
+#[derive(Debug, Clone)]
+pub struct SyntheticSpec {
+    pub artifacts: Vec<SyntheticArtifact>,
+}
+
+impl SyntheticSpec {
+    /// `count` identical artifacts named `syn.0` .. `syn.{count-1}`.
+    pub fn uniform(count: usize, input_len: usize, output_len: usize, work_iters: u64) -> Self {
+        SyntheticSpec {
+            artifacts: (0..count)
+                .map(|i| SyntheticArtifact {
+                    name: format!("syn.{i}"),
+                    input_len,
+                    output_len,
+                    work_iters,
+                })
+                .collect(),
+        }
     }
 
-    /// Run a batch sequentially (single-FPGA semantics: the accelerator is
-    /// one physical engine; batching amortises dispatch, not compute).
-    pub fn infer_batch(&self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        inputs.iter().map(|x| self.infer(name, x)).collect()
+    pub fn names(&self) -> Vec<String> {
+        self.artifacts.iter().map(|a| a.name.clone()).collect()
+    }
+}
+
+struct SyntheticBackend {
+    manifest: Manifest,
+    by_name: HashMap<String, SyntheticArtifact>,
+}
+
+impl SyntheticBackend {
+    fn new(spec: SyntheticSpec) -> SyntheticBackend {
+        let artifacts = spec
+            .artifacts
+            .iter()
+            .map(|a| ArtifactMeta {
+                name: a.name.clone(),
+                file: String::new(),
+                kind: "model".to_string(),
+                model: a.name.clone(),
+                fmt: Q16_8,
+                act: "sigmoid".to_string(),
+                act_impl: "hard".to_string(),
+                tanh_impl: String::new(),
+                pipelined: false,
+                alus: 1,
+                input_shape: vec![a.input_len],
+                output_shape: vec![a.output_len],
+                note: "synthetic".to_string(),
+            })
+            .collect();
+        SyntheticBackend {
+            manifest: Manifest {
+                dir: PathBuf::new(),
+                artifacts,
+            },
+            by_name: spec
+                .artifacts
+                .into_iter()
+                .map(|a| (a.name.clone(), a))
+                .collect(),
+        }
+    }
+
+    fn infer(&self, name: &str, input: &[f32]) -> Result<Vec<f32>> {
+        let art = self
+            .by_name
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        if input.len() != art.input_len {
+            return Err(anyhow!(
+                "{name}: input length {} != expected {}",
+                input.len(),
+                art.input_len
+            ));
+        }
+        // absorb the input, then spin a multiply-rotate chain the optimiser
+        // cannot collapse — deterministic per (artifact, input)
+        let mut acc: u64 = 0xcbf2_9ce4_8422_2325 ^ fnv1a(name);
+        for (i, &x) in input.iter().enumerate() {
+            acc ^= (x.to_bits() as u64).wrapping_add(i as u64);
+            acc = acc.wrapping_mul(0x100_0000_01b3);
+        }
+        for _ in 0..art.work_iters {
+            acc = acc
+                .rotate_left(7)
+                .wrapping_mul(0x5851_f42d_4c95_7f2d)
+                .wrapping_add(0x1405_7b7e_f767_814f);
+        }
+        Ok((0..art.output_len)
+            .map(|j| {
+                let h = acc.wrapping_add((j as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+                ((h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)) as f32
+            })
+            .collect())
     }
 }
 
@@ -131,5 +362,38 @@ pub fn load_default() -> Result<Engine> {
     })
 }
 
-// Engine executes on a single PJRT CPU client; the coordinator owns it
-// from one worker thread (see coordinator::server).
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_engine_serves_deterministically() {
+        let engine = Engine::synthetic(SyntheticSpec::uniform(2, 4, 3, 100));
+        assert_eq!(engine.platform(), "synthetic-cpu");
+        assert_eq!(engine.loaded().len(), 2);
+        let x = vec![0.25, -0.5, 1.0, 0.0];
+        let a = engine.infer("syn.0", &x).unwrap();
+        let b = engine.infer("syn.0", &x).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 3);
+        // different artifact or input -> different digest
+        assert_ne!(a, engine.infer("syn.1", &x).unwrap());
+        assert_ne!(a, engine.infer("syn.0", &[0.25, -0.5, 1.0, 0.5]).unwrap());
+    }
+
+    #[test]
+    fn synthetic_engine_validates_requests() {
+        let engine = Engine::synthetic(SyntheticSpec::uniform(1, 4, 1, 10));
+        assert!(engine.infer("syn.0", &[0.0; 3]).is_err());
+        assert!(engine.infer("nope", &[0.0; 4]).is_err());
+        assert!(engine.meta("syn.0").is_some());
+        assert_eq!(engine.meta("syn.0").unwrap().input_len(), 4);
+    }
+
+    #[test]
+    fn behav_engine_errors_without_artifacts() {
+        // empty dir: manifest load must fail, not panic
+        let r = Engine::load(Path::new("/definitely/missing"), &[]);
+        assert!(r.is_err());
+    }
+}

@@ -1,8 +1,13 @@
-//! Runtime: artifact manifest + the PJRT CPU execution engine that runs
-//! the AOT-compiled HLO artifacts on the request path (no Python).
+//! Runtime: artifact manifest + the execution engine that runs the
+//! AOT-compiled artifacts on the request path (no Python).  The engine
+//! dispatches to PJRT (feature `pjrt`), the bit-true behavioural executor
+//! (default), or a synthetic CPU-burner backend for hermetic serving
+//! tests — see `engine.rs`.
 
 pub mod artifact;
 pub mod engine;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
 pub use artifact::{ArtifactMeta, Golden, Manifest};
-pub use engine::{load_default, Engine};
+pub use engine::{load_default, Engine, SyntheticArtifact, SyntheticSpec};

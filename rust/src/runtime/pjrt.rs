@@ -1,0 +1,125 @@
+//! PJRT execution backend (feature `pjrt`): loads the HLO-text artifacts,
+//! compiles them once on the CPU PJRT client, and serves inference calls.
+//!
+//! HLO **text** is the interchange format — jax >= 0.5 serialises protos
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md and
+//! python/compile/aot.py).  Lowering used `return_tuple=True`, so results
+//! unwrap with `to_tuple1`.
+//!
+//! The executables hold raw runtime handles, so a `PjrtEngine` must stay
+//! on the thread that created it — each coordinator shard owns one.
+
+use super::artifact::{ArtifactMeta, Manifest};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A compiled-and-loaded artifact set bound to one PJRT client.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtEngine {
+    /// Load and compile the named artifacts (all model artifacts when
+    /// `names` is empty).  Compilation happens once, up front.
+    pub fn load(artifacts_dir: &Path, names: &[&str]) -> Result<PjrtEngine> {
+        PjrtEngine::load_with(artifacts_dir, names, true)
+    }
+
+    /// As `load`; `empty_means_all` distinguishes "all models" from an
+    /// intentionally empty artifact group (affinity-sharded coordinator).
+    pub fn load_with(
+        artifacts_dir: &Path,
+        names: &[&str],
+        empty_means_all: bool,
+    ) -> Result<PjrtEngine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e}"))?;
+        let mut executables = HashMap::new();
+        let selected: Vec<String> = if names.is_empty() && empty_means_all {
+            manifest.models().map(|a| a.name.clone()).collect()
+        } else {
+            names.iter().map(|s| s.to_string()).collect()
+        };
+        for name in &selected {
+            let meta = manifest
+                .get(name)
+                .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+            let path = manifest.hlo_path(meta);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+            executables.insert(name.clone(), exe);
+        }
+        Ok(PjrtEngine {
+            client,
+            manifest,
+            executables,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn loaded(&self) -> Vec<&str> {
+        self.executables.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.manifest.get(name)
+    }
+
+    /// Run one inference: flat f32 input -> flat f32 output.
+    pub fn infer(&self, name: &str, input: &[f32]) -> Result<Vec<f32>> {
+        let meta = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        if input.len() != meta.input_len() {
+            return Err(anyhow!(
+                "{name}: input length {} != expected {}",
+                input.len(),
+                meta.input_len()
+            ));
+        }
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not loaded"))?;
+
+        let dims: Vec<i64> = meta.input_shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape input: {e}"))?;
+        let result = exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow!("execute {name}: {e}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e}"))?
+            .to_tuple1()
+            .map_err(|e| anyhow!("unwrap tuple: {e}"))?;
+        let v = out
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("read result: {e}"))?;
+        if v.len() != meta.output_len() {
+            return Err(anyhow!(
+                "{name}: output length {} != expected {}",
+                v.len(),
+                meta.output_len()
+            ));
+        }
+        Ok(v)
+    }
+}

@@ -5,6 +5,18 @@
 //! seed so experiments are exactly reproducible.  The generator is
 //! xoshiro256++ seeded via SplitMix64 (the reference seeding procedure).
 
+/// FNV-1a over a string: a stable, platform-independent 64-bit hash
+/// (std's `DefaultHasher` is randomly seeded per process, which would make
+/// shard affinity non-reproducible across runs).
+pub fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
 /// xoshiro256++ PRNG.
 #[derive(Debug, Clone)]
 pub struct Rng {
@@ -227,6 +239,13 @@ mod tests {
         let mut sorted = v.clone();
         sorted.sort_unstable();
         assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fnv1a_stable_and_distinct() {
+        assert_eq!(fnv1a(""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a("mlp_fluid.hard"), fnv1a("mlp_fluid.hard"));
+        assert_ne!(fnv1a("mlp_fluid.hard"), fnv1a("lstm_har.opt"));
     }
 
     #[test]

@@ -1,10 +1,174 @@
-//! Integration: the serving coordinator over the real PJRT engine
-//! (requires `make artifacts`).
+//! Integration: the sharded serving coordinator.
+//!
+//! The shard/batching/backpressure machinery is exercised hermetically on
+//! the synthetic engine backend (no artifacts needed); the artifact-gated
+//! tests at the bottom additionally cross-check real compiled artifacts
+//! when `make artifacts` has run.
 
 use elastic_gen::coordinator::router::Policy;
-use elastic_gen::coordinator::{Coordinator, CoordinatorConfig, Router};
-use elastic_gen::runtime::{Golden, Manifest};
+use elastic_gen::coordinator::{
+    Coordinator, CoordinatorConfig, EngineSpec, Router, ShardPolicy, SubmitError,
+};
+use elastic_gen::runtime::{Golden, Manifest, SyntheticSpec};
 use elastic_gen::util::rng::Rng;
+use std::sync::Arc;
+
+fn synthetic(shards: usize, policy: ShardPolicy, work_iters: u64) -> CoordinatorConfig {
+    CoordinatorConfig {
+        shards,
+        shard_policy: policy,
+        queue_cap: 1024,
+        engine: EngineSpec::Synthetic(SyntheticSpec::uniform(8, 16, 4, work_iters)),
+        ..CoordinatorConfig::default()
+    }
+}
+
+#[test]
+fn concurrent_clients_across_shards() {
+    let coord = Arc::new(
+        Coordinator::start(synthetic(4, ShardPolicy::RoundRobin, 2_000)).unwrap(),
+    );
+    assert_eq!(coord.shard_count(), 4);
+    let mut handles = Vec::new();
+    for t in 0..8u64 {
+        let coord = coord.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(t);
+            let mut rxs = Vec::new();
+            for _ in 0..50 {
+                let name = format!("syn.{}", rng.below(8));
+                let input: Vec<f32> = (0..16).map(|_| rng.range(-1.0, 1.0) as f32).collect();
+                rxs.push(coord.submit(&name, input).unwrap());
+            }
+            rxs.into_iter().filter(|rx| rx.recv().unwrap().is_ok()).count()
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, 400);
+
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.total_served(), 400);
+    assert_eq!(snap.shards.len(), 4);
+    assert_eq!(snap.shards.iter().map(|s| s.served).sum::<u64>(), 400);
+    let active = snap.shards.iter().filter(|s| s.served > 0).count();
+    assert!(active >= 2, "round-robin must spread over >= 2 shards, got {active}");
+    for s in &snap.shards {
+        assert_eq!(s.submitted, s.served + s.failed);
+        assert!(s.batches > 0 && s.batch_fill > 0.0);
+    }
+}
+
+#[test]
+fn affinity_pins_an_artifact_to_one_shard() {
+    let coord = Coordinator::start(synthetic(4, ShardPolicy::Affinity, 500)).unwrap();
+    for name in ["syn.0", "syn.5"] {
+        let shards: Vec<usize> = (0..20)
+            .map(|_| coord.infer(name, vec![0.1; 16]).unwrap().shard)
+            .collect();
+        assert!(
+            shards.iter().all(|&s| s == shards[0]),
+            "{name} wandered across shards: {shards:?}"
+        );
+    }
+}
+
+#[test]
+fn backpressure_rejects_with_reason_when_queue_full() {
+    // one slow shard (~ms per request), tiny queue, no batching
+    let coord = Coordinator::start(CoordinatorConfig {
+        shards: 1,
+        queue_cap: 2,
+        batch_max: 1,
+        engine: EngineSpec::Synthetic(SyntheticSpec::uniform(1, 8, 2, 2_000_000)),
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+
+    let mut accepted = Vec::new();
+    let mut rejected = 0usize;
+    for _ in 0..64 {
+        match coord.try_submit("syn.0", vec![0.2; 8]) {
+            Ok(rx) => accepted.push(rx),
+            Err(e) => {
+                assert!(
+                    matches!(e, SubmitError::QueueFull { shard: 0, capacity: 2 }),
+                    "unexpected rejection reason: {e}"
+                );
+                rejected += 1;
+            }
+        }
+    }
+    assert!(rejected > 0, "flooding a capacity-2 queue must reject");
+    assert!(!accepted.is_empty());
+    // every admitted request is still answered
+    for rx in accepted {
+        assert!(rx.recv().unwrap().is_ok());
+    }
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.total_rejected(), rejected as u64);
+    assert_eq!(snap.shards[0].rejected, rejected as u64);
+}
+
+#[test]
+fn shutdown_drains_admitted_requests() {
+    let coord = Coordinator::start(synthetic(2, ShardPolicy::RoundRobin, 200_000)).unwrap();
+    let rxs: Vec<_> = (0..40)
+        .map(|i| coord.submit(&format!("syn.{}", i % 8), vec![0.3; 16]).unwrap())
+        .collect();
+    // initiate shutdown while the backlog is still deep
+    coord.shutdown();
+    // draining: no new work admitted...
+    assert_eq!(
+        coord.submit("syn.0", vec![0.3; 16]).unwrap_err(),
+        SubmitError::ShuttingDown
+    );
+    // ...but every admitted request was served before the workers exited
+    let mut ok = 0;
+    for rx in rxs {
+        let resp = rx.recv().expect("admitted request dropped during drain");
+        if resp.is_ok() {
+            ok += 1;
+        }
+    }
+    assert_eq!(ok, 40);
+    assert_eq!(coord.metrics().snapshot().total_served(), 40);
+}
+
+#[test]
+fn error_responses_keep_shards_alive() {
+    let coord = Coordinator::start(synthetic(2, ShardPolicy::Affinity, 500)).unwrap();
+    // wrong input length -> error response, not a crash
+    let resp = coord.infer("syn.0", vec![0.0; 3]).unwrap();
+    assert!(resp.output.is_err());
+    // unknown artifact -> error response from whichever shard it hashed to
+    let resp = coord.infer("missing.artifact", vec![0.0; 16]).unwrap();
+    assert!(resp.output.is_err());
+    // coordinator still alive afterwards
+    assert!(coord.infer("syn.0", vec![0.25; 16]).unwrap().is_ok());
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.rows.iter().map(|r| r.failed).sum::<u64>(), 2);
+}
+
+#[test]
+fn metrics_percentiles_populated() {
+    let coord = Coordinator::start(synthetic(2, ShardPolicy::RoundRobin, 5_000)).unwrap();
+    for _ in 0..30 {
+        assert!(coord.infer("syn.1", vec![0.5; 16]).unwrap().is_ok());
+    }
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.total_served(), 30);
+    let row = &snap.rows[0];
+    let e2e = row.e2e.as_ref().unwrap();
+    assert!(e2e.p99 >= e2e.p50);
+    assert!(e2e.p50 > 0.0);
+    let shard_e2e: Vec<_> = snap.shards.iter().filter_map(|s| s.e2e.as_ref()).collect();
+    assert!(!shard_e2e.is_empty());
+    assert!(shard_e2e.iter().all(|s| s.p99 >= s.p50));
+}
+
+// ---------------------------------------------------------------------------
+// artifact-gated tests (require `make artifacts`)
+// ---------------------------------------------------------------------------
 
 fn artifacts() -> Option<std::path::PathBuf> {
     let dir = elastic_gen::artifacts_dir();
@@ -25,15 +189,12 @@ macro_rules! require_artifacts {
 
 fn coordinator(artifacts: &[&str]) -> Coordinator {
     Coordinator::start(CoordinatorConfig {
-        artifacts_dir: artifacts_dir_checked(),
         artifacts: artifacts.iter().map(|s| s.to_string()).collect(),
         batch_max: 8,
+        shards: 2,
+        ..CoordinatorConfig::default()
     })
     .unwrap()
-}
-
-fn artifacts_dir_checked() -> std::path::PathBuf {
-    elastic_gen::artifacts_dir()
 }
 
 #[test]
@@ -55,8 +216,8 @@ fn serves_correct_results() {
 #[test]
 fn concurrent_producers_all_served() {
     let _dir = require_artifacts!();
-    let coord = std::sync::Arc::new(coordinator(&["mlp_fluid.hard", "lstm_har.opt"]));
-    let manifest = Manifest::load(&artifacts_dir_checked()).unwrap();
+    let coord = Arc::new(coordinator(&["mlp_fluid.hard", "lstm_har.opt"]));
+    let manifest = Manifest::load(&elastic_gen::artifacts_dir()).unwrap();
     let mut handles = Vec::new();
     for t in 0..4 {
         let coord = coord.clone();
@@ -70,9 +231,10 @@ fn concurrent_producers_all_served() {
             let mut rng = Rng::new(t as u64);
             let mut rxs = Vec::new();
             for _ in 0..25 {
-                let input: Vec<f32> =
-                    (0..len).map(|_| (rng.range(-1.0, 1.0) * 256.0).floor() as f32 / 256.0).collect();
-                rxs.push(coord.submit(name, input));
+                let input: Vec<f32> = (0..len)
+                    .map(|_| (rng.range(-1.0, 1.0) * 256.0).floor() as f32 / 256.0)
+                    .collect();
+                rxs.push(coord.submit(name, input).unwrap());
             }
             rxs.into_iter().filter(|rx| rx.recv().unwrap().is_ok()).count()
         }));
@@ -101,35 +263,4 @@ fn router_policies_on_real_manifest() {
     assert!(precise.act_impl == "exact" || precise.act_impl == "hard");
 
     assert!(router.route("lstm_har", Policy::Named).is_ok());
-}
-
-#[test]
-fn error_responses_for_bad_requests() {
-    let _dir = require_artifacts!();
-    let coord = coordinator(&["mlp_fluid.hard"]);
-    // wrong input length -> error response, not a crash
-    let resp = coord.infer("mlp_fluid.hard", vec![0.0; 3]).unwrap();
-    assert!(resp.output.is_err());
-    // unknown artifact
-    let resp = coord.infer("missing.artifact", vec![0.0; 8]).unwrap();
-    assert!(resp.output.is_err());
-    // coordinator still alive afterwards
-    let manifest = Manifest::load(&artifacts_dir_checked()).unwrap();
-    let n = manifest.get("mlp_fluid.hard").unwrap().input_len();
-    assert!(coord.infer("mlp_fluid.hard", vec![0.25; n]).unwrap().is_ok());
-}
-
-#[test]
-fn metrics_percentiles_populated() {
-    let _dir = require_artifacts!();
-    let coord = coordinator(&["mlp_fluid.hard"]);
-    for _ in 0..30 {
-        let _ = coord.infer("mlp_fluid.hard", vec![0.5; 8]).unwrap();
-    }
-    let snap = coord.metrics().snapshot();
-    let row = &snap.rows[0];
-    assert_eq!(row.served, 30);
-    let e2e = row.e2e.as_ref().unwrap();
-    assert!(e2e.p99 >= e2e.p50);
-    assert!(e2e.p50 > 0.0);
 }

@@ -42,8 +42,14 @@ fn pjrt_executes_every_artifact_against_golden() {
     let manifest = Manifest::load(&dir).unwrap();
     let names: Vec<&str> = manifest.artifacts.iter().map(|a| a.name.as_str()).collect();
     let engine = Engine::load(&dir, &names).unwrap();
-    assert_eq!(engine.platform().to_lowercase().contains("cpu"), true);
+    assert!(engine.platform().to_lowercase().contains("cpu"));
 
+    // golden vectors were produced by the same computation in jax; on the
+    // PJRT backend only XLA-version differences reach transcendentals, so
+    // 1.5 LSB is a conservative envelope (integer paths match exactly).
+    // The behavioural fallback routes exact variants through f64, which
+    // drifts a few LSBs after stacked layers.
+    let lsb_budget = if engine.platform() == "behav-cpu" { 4.0 } else { 1.5 };
     for meta in &manifest.artifacts {
         let golden = Golden::load(&dir, &meta.name).unwrap();
         assert!(!golden.cases.is_empty());
@@ -51,10 +57,7 @@ fn pjrt_executes_every_artifact_against_golden() {
             let input: Vec<f32> = case.input.iter().map(|&x| x as f32).collect();
             let got = engine.infer(&meta.name, &input).unwrap();
             assert_eq!(got.len(), case.output.len());
-            // golden vectors were produced by the same computation in jax;
-            // XLA-version differences only reach transcendentals, so 1.5
-            // LSB is a conservative envelope (integer paths match exactly)
-            let tol = 1.5 * meta.fmt.resolution();
+            let tol = lsb_budget * meta.fmt.resolution();
             for (j, (g, w)) in got.iter().zip(&case.output).enumerate() {
                 assert!(
                     (*g as f64 - w).abs() <= tol,
@@ -114,7 +117,7 @@ fn behavioural_sim_matches_pjrt_on_integer_models() {
         };
         let golden = Golden::load(&dir, name).unwrap();
         for (ci, case) in golden.cases.iter().enumerate() {
-            let got = behav::run_model(topo, &weights, &cfg, &case.input);
+            let got = behav::run_model(topo, &weights, &cfg, &case.input).unwrap();
             for (j, (g, w)) in got.iter().zip(&case.output).enumerate() {
                 assert_eq!(
                     *g, *w,
@@ -146,7 +149,7 @@ fn behavioural_sim_close_on_exact_models() {
         let golden = Golden::load(&dir, name).unwrap();
         let tol = 4.0 * meta.fmt.resolution();
         for case in &golden.cases {
-            let got = behav::run_model(topo, &weights, &cfg, &case.input);
+            let got = behav::run_model(topo, &weights, &cfg, &case.input).unwrap();
             for (g, w) in got.iter().zip(&case.output) {
                 assert!((g - w).abs() <= tol, "{name}: {} vs {}", g, w);
             }
@@ -177,7 +180,7 @@ fn attention_artifact_tolerance() {
     // softmax f32-vs-f64: a couple of LSBs through two matmuls
     let tol = 4.0 * meta.fmt.resolution();
     for case in &golden.cases {
-        let got = behav::run_model(Topology::AttnTiny, &weights, &cfg, &case.input);
+        let got = behav::run_model(Topology::AttnTiny, &weights, &cfg, &case.input).unwrap();
         for (g, w) in got.iter().zip(&case.output) {
             assert!((g - w).abs() <= tol, "attn: {} vs {}", g, w);
         }
