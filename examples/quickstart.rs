@@ -9,9 +9,7 @@
 //! (build `make artifacts` first for step 4; steps 1-3 work without).
 
 use elastic_gen::eda;
-use elastic_gen::generator::design_space::enumerate;
-use elastic_gen::generator::search::exhaustive::Exhaustive;
-use elastic_gen::generator::{AppSpec, Searcher};
+use elastic_gen::generator::{default_threads, generate, generate_portfolio, AppSpec};
 use elastic_gen::rtl::composition::build;
 use elastic_gen::runtime::Engine;
 use elastic_gen::util::units::Hertz;
@@ -26,20 +24,32 @@ fn main() -> anyhow::Result<()> {
         spec.goal
     );
 
-    // 2. the Generator
-    let space = enumerate(&[]);
-    let result = Exhaustive.search(&spec, &space);
+    // 2. the Generator: a host-parallel exhaustive sweep (the pool shards
+    //    estimates across workers; results are identical at any count)
+    let result = generate(&spec);
     let best = result.best.expect("no feasible configuration");
     println!(
-        "explored {} candidates -> best: {}",
+        "explored {} candidates on {} workers -> best: {}",
         result.evaluations,
+        default_threads(),
         best.candidate.describe()
     );
     println!(
-        "  energy/item {:.3} mJ | inference {:.1} us | {:.2} GOPS/s/W\n",
+        "  energy/item {:.3} mJ | inference {:.1} us | {:.2} GOPS/s/W",
         best.energy_per_item.mj(),
         best.latency.us(),
         best.gops_per_watt
+    );
+
+    // 2b. or skip the full sweep: the heuristic portfolio runs greedy,
+    //     annealing and genetic concurrently and merges the results
+    let folio = generate_portfolio(&spec, default_threads(), None);
+    let heuristic = folio.best.expect("portfolio found nothing");
+    println!(
+        "portfolio: best {} at {} evaluations ({} on the Pareto front)\n",
+        heuristic.candidate.describe(),
+        folio.evaluations,
+        folio.front.len()
     );
 
     // 3. EDA-style report of the winning design

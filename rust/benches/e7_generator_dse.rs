@@ -10,12 +10,10 @@ use elastic_gen::fpga::ConfigController;
 use elastic_gen::generator::design_space::{enumerate, StrategyKind};
 use elastic_gen::generator::estimator::estimate;
 use elastic_gen::generator::search::annealing::Annealing;
-use elastic_gen::generator::search::exhaustive::{rank, Exhaustive};
+use elastic_gen::generator::search::exhaustive::{rank_with, Exhaustive};
 use elastic_gen::generator::search::genetic::Genetic;
 use elastic_gen::generator::search::greedy::Greedy;
-use elastic_gen::generator::search::pareto;
-use elastic_gen::generator::search::Searcher;
-use elastic_gen::generator::AppSpec;
+use elastic_gen::generator::{default_threads, generate_portfolio, AppSpec, EvalPool, Searcher};
 use elastic_gen::rtl::composition::build;
 use elastic_gen::rtl::ActImpl;
 use elastic_gen::sim::{cost_model, NodeSim};
@@ -42,8 +40,21 @@ fn main() {
         "Generator DSE: generated vs naive, closed-form vs DES, searcher ablation",
         "application knowledge yields the most energy-efficient accelerator (RQ3)",
     );
+    // BENCH_SECS<=1 is the CI smoke mode: same sweeps, lighter DES traces
+    let quick = std::env::var("BENCH_SECS")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .map(|s| s <= 1.0)
+        .unwrap_or(false);
+    let des_requests = if quick { 200 } else { 1000 };
+    let jobs = default_threads();
     let space = enumerate(&[]);
-    println!("design space: {} candidates\n", space.len());
+    println!(
+        "design space: {} candidates ({} eval workers{})\n",
+        space.len(),
+        jobs,
+        if quick { ", quick mode" } else { "" }
+    );
 
     // --- per-scenario: generated vs naive + DES validation ---------------
     let mut t = Table::new(&[
@@ -51,7 +62,8 @@ fn main() {
         "gain", "DES E/item (mJ)", "Pareto size",
     ]);
     for spec in AppSpec::scenarios() {
-        let ranked = rank(&spec, &space);
+        let mut pool = EvalPool::new(jobs);
+        let ranked = rank_with(&spec, &space, &mut pool);
         let best = &ranked[0];
         let naive = space
             .iter()
@@ -77,11 +89,11 @@ fn main() {
             &Platform::default(),
             &ConfigController::raw(best.candidate.device),
         );
-        let arrivals = spec.workload.arrivals(1000, &mut Rng::new(3));
+        let arrivals = spec.workload.arrivals(des_requests, &mut Rng::new(3));
         let mut strat = strategy_for(best.candidate.strategy);
         let des = NodeSim::new(cost).run(&arrivals, strat.as_mut());
 
-        let front = pareto::front(&ranked);
+        // the streaming front the pool maintained during the sweep
         t.row(&[
             spec.name.clone(),
             best.candidate.describe(),
@@ -89,7 +101,7 @@ fn main() {
             num(naive.energy_per_item.mj(), 4),
             format!("{:.1}x", naive.energy_per_item.value() / best.energy_per_item.value()),
             num(des.energy_per_item().mj(), 4),
-            front.len().to_string(),
+            pool.front().len().to_string(),
         ]);
     }
     println!("{}", t.render());
@@ -98,17 +110,18 @@ fn main() {
     let mut t = Table::new(&[
         "searcher", "scenario", "E/item (mJ)", "vs optimum", "evaluations", "time (ms)",
     ])
-    .with_title("Search-algorithm ablation");
+    .with_title(&format!("Search-algorithm ablation ({jobs} eval workers)"));
     for spec in AppSpec::scenarios() {
         let t0 = Instant::now();
-        let opt = Exhaustive.search(&spec, &space).best.unwrap();
+        let r_ex = Exhaustive.search_with(&spec, &space, &mut EvalPool::new(jobs));
+        let opt = r_ex.best.unwrap();
         let t_ex = t0.elapsed().as_secs_f64() * 1e3;
         t.row(&[
             "exhaustive".into(),
             spec.name.clone(),
             num(opt.energy_per_item.mj(), 4),
             "1.00x".into(),
-            space.len().to_string(),
+            r_ex.evaluations.to_string(),
             num(t_ex, 0),
         ]);
         let mut searchers: Vec<Box<dyn Searcher>> = vec![
@@ -133,10 +146,28 @@ fn main() {
                 num(ms, 0),
             ]);
         }
+        // the concurrent heuristic portfolio (merged best-of + front)
+        let t0 = Instant::now();
+        let folio = generate_portfolio(&spec, jobs, None);
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        let got = folio.best.expect("portfolio found nothing");
+        t.row(&[
+            "portfolio(3)".into(),
+            spec.name.clone(),
+            num(got.energy_per_item.mj(), 4),
+            format!(
+                "{:.2}x",
+                got.energy_per_item.value() / opt.energy_per_item.value()
+            ),
+            format!("{} (front {})", folio.evaluations, folio.front.len()),
+            num(ms, 0),
+        ]);
     }
     println!("{}", t.render());
     println!("notes: all heuristics reach the exhaustive optimum at <10% of the evaluation");
-    println!("budget on this space.  Greedy requires the per-device warm starts (fast +");
-    println!("slow/low-ALU): plain random-restart coordinate ascent is ridge-trapped by the");
-    println!("device x ALU capacity interaction (up to 16x off optimum in earlier revisions).");
+    println!("budget on this space, and every estimate is memoised per candidate (duplicate");
+    println!("genomes are free).  Greedy requires the per-device warm starts (fast +");
+    println!("slow/low-ALU, derived from the axes): plain random-restart coordinate ascent");
+    println!("is ridge-trapped by the device x ALU capacity interaction (up to 16x off");
+    println!("optimum in earlier revisions).");
 }

@@ -13,7 +13,8 @@ use elastic_gen::elastic_node::Platform;
 use elastic_gen::fpga::{device, ConfigController};
 use elastic_gen::generator::design_space::enumerate;
 use elastic_gen::generator::estimator::estimate;
-use elastic_gen::generator::AppSpec;
+use elastic_gen::generator::search::exhaustive::Exhaustive;
+use elastic_gen::generator::{AppSpec, EvalPool, Searcher};
 use elastic_gen::models::Topology;
 use elastic_gen::rtl::composition::{build, BuildOpts};
 use elastic_gen::rtl::fixed_point::Q16_8;
@@ -74,6 +75,39 @@ fn coordinator_scaling() {
     }
 }
 
+/// Full-space DSE sweep wall-clock at 1/2/4 pool workers.  Each thread
+/// count gets a fresh pool (no memo carry-over) and must reproduce the
+/// single-thread best exactly — the pool merges in submission order, so
+/// parallelism only changes wall-clock.
+fn dse_scaling() {
+    let spec = AppSpec::soft_sensor();
+    let space = enumerate(&[]);
+    println!();
+    let mut base_wall = 0.0;
+    let mut base_score: Option<f64> = None;
+    for &threads in &[1usize, 2, 4] {
+        let mut pool = EvalPool::new(threads);
+        let t0 = Instant::now();
+        let r = Exhaustive.search_with(&spec, &space, &mut pool);
+        let wall = t0.elapsed().as_secs_f64();
+        let best = r.best.expect("sweep found nothing feasible");
+        let score = best.score(spec.goal);
+        match base_score {
+            None => {
+                base_wall = wall;
+                base_score = Some(score);
+            }
+            Some(s) => assert_eq!(s, score, "thread count changed the sweep result"),
+        }
+        println!(
+            "dse-scaling/{threads}-thread: {} evals in {wall:.3}s = {:.0} cand/s ({:.2}x vs 1 thread)",
+            r.evaluations,
+            r.evaluations as f64 / wall,
+            base_wall / wall
+        );
+    }
+}
+
 fn main() {
     elastic_gen::bench::banner(
         "PERF",
@@ -110,6 +144,9 @@ fn main() {
         let r = sim.run(&arrivals, &mut IdleWait);
         black_box(r.served);
     }));
+
+    // --- DSE sweep scaling across pool workers ------------------------------
+    dse_scaling();
 
     // --- coordinator shard scaling (hermetic, synthetic engine) ------------
     coordinator_scaling();

@@ -1,0 +1,342 @@
+//! Parallel, budget-aware candidate evaluation — the engine under every
+//! searcher (§2.2 "Exploration and Estimation").
+//!
+//! [`EvalPool`] shards batch evaluation across `std::thread::scope`
+//! workers, each with its own [`EstimatorCache`], and memoises finished
+//! estimates by candidate key so no candidate is ever estimated twice
+//! within a search run (the genetic searcher's duplicate children and
+//! greedy's re-probed axes become free).  Results are merged in
+//! submission order, so a sweep at N threads is bit-identical to the
+//! single-threaded sweep — threads only change wall-clock.
+//!
+//! The pool also carries an optional evaluation budget (estimator calls,
+//! memo hits are free) and a streaming [`ParetoFront`] over every
+//! feasible estimate it produces.
+
+use std::collections::{HashMap, HashSet};
+
+use super::constraints::AppSpec;
+use super::design_space::{Candidate, StrategyKind};
+use super::estimator::{estimate_cached, Estimate, EstimatorCache};
+use super::search::pareto::ParetoFront;
+use crate::rtl::activation::ActVariant;
+use crate::util::rng::fnv1a;
+
+/// Common evaluation interface the searchers run against: a shared
+/// cache/memo with explicit budget accounting.
+pub trait Evaluator {
+    /// Evaluate one candidate; `None` only once the budget is exhausted.
+    fn evaluate(&mut self, spec: &AppSpec, c: &Candidate) -> Option<Estimate>;
+
+    /// Evaluate a batch, preserving order; entries are `None` only for
+    /// candidates the budget ran out before reaching.
+    fn evaluate_batch(&mut self, spec: &AppSpec, cands: &[Candidate]) -> Vec<Option<Estimate>>;
+
+    /// Estimator evaluations actually spent (memo hits are free).
+    fn evaluations(&self) -> usize;
+
+    /// Total evaluation requests, including memo hits.
+    fn requests(&self) -> usize;
+
+    fn budget_exhausted(&self) -> bool;
+}
+
+/// Memo key: one entry per distinct (application, design point).  The
+/// genome axes all round-trip through these fields, so two genomes that
+/// materialise the same candidate share one estimate.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+struct CandKey {
+    spec: u64,
+    device: &'static str,
+    fmt: (u32, u32),
+    sigmoid: ActVariant,
+    tanh: ActVariant,
+    alus: u32,
+    pipelined: bool,
+    clock_bits: u64,
+    strategy: StrategyKind,
+}
+
+/// Fingerprint of every spec field the estimator reads, so a pool fed
+/// two specs that differ in constraints (even under one name) never
+/// shares estimates between them.  The goal is deliberately excluded:
+/// it only affects `score()`, which callers compute, not the `Estimate`.
+fn spec_key(spec: &AppSpec) -> u64 {
+    let mut h = fnv1a(&spec.name);
+    let mut mix = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    };
+    mix(spec.topology as u64);
+    mix(spec.workload.mean_gap().value().to_bits());
+    mix(spec.max_latency.map(|s| s.value().to_bits()).unwrap_or(1));
+    mix(spec.max_act_error_lsb.map(|e| e.to_bits()).unwrap_or(2));
+    for d in &spec.device_allowlist {
+        mix(fnv1a(d));
+    }
+    h
+}
+
+fn cand_key(spec: &AppSpec, c: &Candidate) -> CandKey {
+    CandKey {
+        spec: spec_key(spec),
+        device: c.device.name,
+        fmt: (c.fmt.total_bits, c.fmt.frac_bits),
+        sigmoid: c.sigmoid,
+        tanh: c.tanh,
+        alus: c.alus,
+        pipelined: c.pipelined,
+        clock_bits: c.clock_mhz.to_bits(),
+        strategy: c.strategy,
+    }
+}
+
+/// Worker count for host-sized pools (the estimator is compute-bound and
+/// memory-light; beyond ~8 workers the sweep is scheduling-dominated).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .clamp(1, 8)
+}
+
+/// The parallel evaluation engine (see module docs).
+pub struct EvalPool {
+    threads: usize,
+    budget: Option<usize>,
+    evaluations: usize,
+    requests: usize,
+    budget_exhausted: bool,
+    memo: HashMap<CandKey, Estimate>,
+    seq_cache: EstimatorCache,
+    front: ParetoFront,
+}
+
+impl EvalPool {
+    pub fn new(threads: usize) -> EvalPool {
+        EvalPool {
+            threads: threads.max(1),
+            budget: None,
+            evaluations: 0,
+            requests: 0,
+            budget_exhausted: false,
+            memo: HashMap::new(),
+            seq_cache: EstimatorCache::new(),
+            front: ParetoFront::new(),
+        }
+    }
+
+    /// Pool sized to the host.
+    pub fn with_host_threads() -> EvalPool {
+        EvalPool::new(default_threads())
+    }
+
+    /// Cap the number of estimator evaluations this pool will spend.
+    pub fn with_budget(mut self, budget: usize) -> EvalPool {
+        self.budget = Some(budget);
+        self
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Distinct candidates estimated so far (== `evaluations()`: the memo
+    /// guarantees one paid estimate per unique candidate).
+    pub fn memo_len(&self) -> usize {
+        self.memo.len()
+    }
+
+    /// Streaming Pareto front over every feasible estimate produced.
+    pub fn front(&self) -> &ParetoFront {
+        &self.front
+    }
+
+    pub fn take_front(&mut self) -> ParetoFront {
+        std::mem::take(&mut self.front)
+    }
+
+    fn remaining(&self) -> usize {
+        match self.budget {
+            Some(b) => b.saturating_sub(self.evaluations),
+            None => usize::MAX,
+        }
+    }
+
+    fn record(&mut self, key: CandKey, e: Estimate) {
+        self.evaluations += 1;
+        self.front.insert(&e);
+        self.memo.insert(key, e);
+    }
+}
+
+impl Evaluator for EvalPool {
+    fn evaluate(&mut self, spec: &AppSpec, c: &Candidate) -> Option<Estimate> {
+        self.requests += 1;
+        let key = cand_key(spec, c);
+        if let Some(e) = self.memo.get(&key) {
+            return Some(e.clone());
+        }
+        if self.remaining() == 0 {
+            self.budget_exhausted = true;
+            return None;
+        }
+        let e = estimate_cached(spec, c, &mut self.seq_cache);
+        self.record(key, e.clone());
+        Some(e)
+    }
+
+    fn evaluate_batch(&mut self, spec: &AppSpec, cands: &[Candidate]) -> Vec<Option<Estimate>> {
+        self.requests += cands.len();
+        let keys: Vec<CandKey> = cands.iter().map(|c| cand_key(spec, c)).collect();
+
+        // unique memo misses, in first-seen order, capped by the budget
+        let mut jobs: Vec<usize> = Vec::new();
+        let mut scheduled: HashSet<CandKey> = HashSet::new();
+        let budget_left = self.remaining();
+        for (i, k) in keys.iter().enumerate() {
+            if self.memo.contains_key(k) || scheduled.contains(k) {
+                continue;
+            }
+            if jobs.len() >= budget_left {
+                self.budget_exhausted = true;
+                break;
+            }
+            scheduled.insert(*k);
+            jobs.push(i);
+        }
+
+        // Small batches (greedy's per-axis probes, single stragglers) stay
+        // on the pool's persistent sequential cache: spawning workers with
+        // cold template caches for a handful of candidates costs more than
+        // the overlap buys (the estimator docs cite ~3x from template
+        // reuse across candidates differing only in clock/strategy).
+        const MIN_PARALLEL_BATCH: usize = 16;
+        if self.threads == 1 || jobs.len() < MIN_PARALLEL_BATCH {
+            for &i in &jobs {
+                let e = estimate_cached(spec, &cands[i], &mut self.seq_cache);
+                self.record(keys[i], e);
+            }
+        } else {
+            let workers = self.threads.min(jobs.len());
+            let chunk = jobs.len().div_ceil(workers);
+            let mut results: Vec<Option<Estimate>> = vec![None; jobs.len()];
+            std::thread::scope(|s| {
+                for (slots, idxs) in results.chunks_mut(chunk).zip(jobs.chunks(chunk)) {
+                    s.spawn(move || {
+                        let mut cache = EstimatorCache::new();
+                        for (slot, &i) in slots.iter_mut().zip(idxs) {
+                            *slot = Some(estimate_cached(spec, &cands[i], &mut cache));
+                        }
+                    });
+                }
+            });
+            // merge in submission order so the memo and the streaming
+            // front are independent of thread scheduling
+            for (&i, e) in jobs.iter().zip(results) {
+                self.record(keys[i], e.expect("worker filled its slot"));
+            }
+        }
+
+        keys.iter().map(|k| self.memo.get(k).cloned()).collect()
+    }
+
+    fn evaluations(&self) -> usize {
+        self.evaluations
+    }
+
+    fn requests(&self) -> usize {
+        self.requests
+    }
+
+    fn budget_exhausted(&self) -> bool {
+        self.budget_exhausted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generator::design_space::enumerate;
+
+    #[test]
+    fn memo_pays_once_per_unique_candidate() {
+        let spec = AppSpec::soft_sensor();
+        let space = enumerate(&["xc7s6"]);
+        let mut pool = EvalPool::new(1);
+        let a = pool.evaluate(&spec, &space[0]).unwrap();
+        let b = pool.evaluate(&spec, &space[0]).unwrap();
+        assert_eq!(pool.evaluations(), 1);
+        assert_eq!(pool.requests(), 2);
+        assert_eq!(a.score(spec.goal), b.score(spec.goal));
+
+        // in-batch duplicates are also deduplicated
+        let batch = vec![space[1].clone(), space[2].clone(), space[1].clone()];
+        let out = pool.evaluate_batch(&spec, &batch);
+        assert_eq!(pool.evaluations(), 3);
+        assert_eq!(pool.memo_len(), 3);
+        assert!(out.iter().all(|e| e.is_some()));
+        assert_eq!(
+            out[0].as_ref().unwrap().candidate.describe(),
+            out[2].as_ref().unwrap().candidate.describe()
+        );
+    }
+
+    #[test]
+    fn memo_distinguishes_specs_with_same_name() {
+        // two specs sharing a name but differing in constraints must not
+        // share memo entries — the key fingerprints the estimator inputs
+        let spec = AppSpec::soft_sensor();
+        let mut tight = AppSpec::soft_sensor();
+        tight.max_latency = Some(crate::util::units::Secs(1e-6));
+        let c = &enumerate(&["xc7s15"])[0];
+        let mut pool = EvalPool::new(1);
+        let _ = pool.evaluate(&spec, c).unwrap();
+        let b = pool.evaluate(&tight, c).unwrap();
+        assert_eq!(pool.evaluations(), 2, "specs shared a memo entry");
+        // a 1us response bound is unsatisfiable for an on-off candidate
+        assert!(!b.feasible);
+    }
+
+    #[test]
+    fn parallel_batch_matches_sequential() {
+        let spec = AppSpec::ecg_monitor();
+        let cands: Vec<Candidate> = enumerate(&["xc7s15"]).into_iter().take(200).collect();
+        let seq = EvalPool::new(1).evaluate_batch(&spec, &cands);
+        let par = EvalPool::new(4).evaluate_batch(&spec, &cands);
+        assert_eq!(seq.len(), par.len());
+        for (a, b) in seq.iter().zip(&par) {
+            let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+            assert_eq!(a.feasible, b.feasible);
+            assert_eq!(a.score(spec.goal), b.score(spec.goal));
+            assert_eq!(a.energy_per_item.value(), b.energy_per_item.value());
+        }
+    }
+
+    #[test]
+    fn budget_caps_spending_and_flags_exhaustion() {
+        let spec = AppSpec::soft_sensor();
+        let cands: Vec<Candidate> = enumerate(&["xc7s6"]).into_iter().take(50).collect();
+        let mut pool = EvalPool::new(2).with_budget(10);
+        let out = pool.evaluate_batch(&spec, &cands);
+        assert!(pool.budget_exhausted());
+        assert_eq!(pool.evaluations(), 10);
+        assert_eq!(out.iter().filter(|e| e.is_some()).count(), 10);
+        // memo hits stay free after exhaustion, new candidates are refused
+        assert!(pool.evaluate(&spec, &cands[0]).is_some());
+        assert!(pool.evaluate(&spec, &cands[20]).is_none());
+        assert_eq!(pool.evaluations(), 10);
+    }
+
+    #[test]
+    fn front_tracks_feasible_estimates() {
+        let spec = AppSpec::soft_sensor();
+        let cands = enumerate(&["xc7s15"]);
+        let mut pool = EvalPool::new(2);
+        let out = pool.evaluate_batch(&spec, &cands);
+        let feasible = out.iter().flatten().filter(|e| e.feasible).count();
+        assert!(feasible > 0);
+        assert!(!pool.front().is_empty());
+        assert!(pool.front().len() <= feasible);
+    }
+}

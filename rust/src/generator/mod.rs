@@ -5,14 +5,18 @@
 //! * [`constraints`] — application scenario specs (goal + constraints).
 //! * [`design_space`] — the candidate cross-product and its axis view.
 //! * [`estimator`] — analytical evaluation + constraint pruning.
-//! * [`search`] — exhaustive / greedy / annealing / genetic + Pareto.
+//! * [`eval`] — the parallel, budget-aware evaluation engine (EvalPool).
+//! * [`search`] — exhaustive / greedy / annealing / genetic + Pareto,
+//!   plus the concurrent heuristic portfolio driver.
 
 pub mod constraints;
 pub mod design_space;
 pub mod estimator;
+pub mod eval;
 pub mod search;
 
 pub use constraints::{AppSpec, Goal};
 pub use design_space::{Candidate, StrategyKind};
 pub use estimator::{estimate, Estimate};
-pub use search::{generate, SearchResult, Searcher};
+pub use eval::{default_threads, EvalPool, Evaluator};
+pub use search::{generate, generate_portfolio, Portfolio, SearchResult, Searcher};

@@ -1,11 +1,19 @@
 //! Exhaustive sweep: evaluate every candidate, keep the best feasible one.
 //! On the pruned space (~10^4 points) this completes in well under a
 //! second and serves as the optimality reference for the heuristics.
+//! Batches are pushed through the [`Evaluator`] in shards, so a parallel
+//! pool overlaps the estimates and a budget cut still reports the best
+//! candidate seen so far.
 
 use super::{SearchResult, Searcher};
 use crate::generator::constraints::AppSpec;
 use crate::generator::design_space::Candidate;
-use crate::generator::estimator::{estimate_cached, Estimate, EstimatorCache};
+use crate::generator::estimator::Estimate;
+use crate::generator::eval::{EvalPool, Evaluator};
+
+/// Shard size per `evaluate_batch` call: large enough to amortise worker
+/// spawn, small enough that budget cuts land promptly.
+const SHARD: usize = 512;
 
 #[derive(Debug, Default)]
 pub struct Exhaustive;
@@ -15,42 +23,54 @@ impl Searcher for Exhaustive {
         "exhaustive"
     }
 
-    fn search(&mut self, spec: &AppSpec, space: &[Candidate]) -> SearchResult {
+    fn search_with(
+        &mut self,
+        spec: &AppSpec,
+        space: &[Candidate],
+        eval: &mut dyn Evaluator,
+    ) -> SearchResult {
+        let start = eval.evaluations();
         let mut best: Option<Estimate> = None;
-        let mut cache = EstimatorCache::new();
-        for c in space {
-            let e = estimate_cached(spec, c, &mut cache);
-            if !e.feasible {
-                continue;
+        for shard in space.chunks(SHARD) {
+            for e in eval.evaluate_batch(spec, shard).into_iter().flatten() {
+                if !e.feasible {
+                    continue;
+                }
+                let better = match &best {
+                    None => true,
+                    Some(b) => e.score(spec.goal) > b.score(spec.goal),
+                };
+                if better {
+                    best = Some(e);
+                }
             }
-            let better = match &best {
-                None => true,
-                Some(b) => e.score(spec.goal) > b.score(spec.goal),
-            };
-            if better {
-                best = Some(e);
+            if eval.budget_exhausted() {
+                break;
             }
         }
         SearchResult {
             best,
-            evaluations: space.len(),
+            evaluations: eval.evaluations() - start,
+            budget_exhausted: eval.budget_exhausted(),
         }
     }
 }
 
 /// Full ranking (used by the Pareto analysis and reports).
 pub fn rank(spec: &AppSpec, space: &[Candidate]) -> Vec<Estimate> {
-    let mut cache = EstimatorCache::new();
-    let mut es: Vec<Estimate> = space
-        .iter()
-        .map(|c| estimate_cached(spec, c, &mut cache))
+    rank_with(spec, space, &mut EvalPool::new(1))
+}
+
+/// Pool-backed full ranking: parallel when the pool is, and truncated at
+/// the pool's budget.
+pub fn rank_with(spec: &AppSpec, space: &[Candidate], eval: &mut dyn Evaluator) -> Vec<Estimate> {
+    let mut es: Vec<Estimate> = eval
+        .evaluate_batch(spec, space)
+        .into_iter()
+        .flatten()
         .filter(|e| e.feasible)
         .collect();
-    es.sort_by(|a, b| {
-        b.score(spec.goal)
-            .partial_cmp(&a.score(spec.goal))
-            .unwrap_or(std::cmp::Ordering::Equal)
-    });
+    es.sort_by(|a, b| b.score(spec.goal).total_cmp(&a.score(spec.goal)));
     es
 }
 
@@ -66,6 +86,7 @@ mod tests {
             let r = Exhaustive.search(&spec, &space);
             let best = r.best.expect(&spec.name);
             assert!(best.feasible);
+            assert!(!r.budget_exhausted);
             assert_eq!(r.evaluations, space.len());
         }
     }
@@ -76,9 +97,9 @@ mod tests {
         let space = enumerate(&["xc7s6", "xc7s15"]);
         let ranked = rank(&spec, &space);
         assert!(!ranked.is_empty());
-        assert!(ranked.windows(2).all(|w| {
-            w[0].score(spec.goal) >= w[1].score(spec.goal)
-        }));
+        assert!(ranked
+            .windows(2)
+            .all(|w| { w[0].score(spec.goal) >= w[1].score(spec.goal) }));
     }
 
     #[test]
@@ -88,5 +109,15 @@ mod tests {
         let best = Exhaustive.search(&spec, &space).best.unwrap();
         let head = &rank(&spec, &space)[0];
         assert_eq!(best.score(spec.goal), head.score(spec.goal));
+    }
+
+    #[test]
+    fn budgeted_sweep_stops_early_with_partial_best() {
+        let spec = AppSpec::soft_sensor();
+        let space = enumerate(&["xc7s6"]);
+        let mut pool = EvalPool::new(2).with_budget(40);
+        let r = Exhaustive.search_with(&spec, &space, &mut pool);
+        assert!(r.budget_exhausted);
+        assert_eq!(r.evaluations, 40);
     }
 }

@@ -1,11 +1,14 @@
 //! Genetic search: tournament selection, uniform crossover, per-axis
 //! mutation, elitism.  Genomes are the 7-axis index vectors of
-//! `design_space::Axes`.
+//! `design_space::Axes`.  Each generation's offspring cohort is bred
+//! first and then evaluated as one batch, so a parallel pool overlaps
+//! the estimates and the memo never re-pays for duplicate children.
 
 use super::{SearchResult, Searcher};
 use crate::generator::constraints::AppSpec;
 use crate::generator::design_space::{Axes, Candidate, N_AXES};
-use crate::generator::estimator::{estimate, Estimate};
+use crate::generator::estimator::Estimate;
+use crate::generator::eval::Evaluator;
 use crate::util::rng::Rng;
 
 pub struct Genetic {
@@ -43,32 +46,50 @@ impl Searcher for Genetic {
         "genetic"
     }
 
-    fn search(&mut self, spec: &AppSpec, _space: &[Candidate]) -> SearchResult {
-        let axes = Axes::new(&[]);
+    fn search_with(
+        &mut self,
+        spec: &AppSpec,
+        _space: &[Candidate],
+        eval: &mut dyn Evaluator,
+    ) -> SearchResult {
+        let axes = Axes::new(&spec.device_allowlist);
         let dims = axes.dims();
+        let start_evals = eval.evaluations();
         let mut rng = Rng::new(self.seed);
-        let mut evals = 0usize;
 
-        let eval = |g: &Genome, evals: &mut usize| -> (Estimate, f64) {
-            let e = estimate(spec, &axes.candidate(g));
-            *evals += 1;
-            let f = fitness(&e, spec);
-            (e, f)
-        };
-
-        let mut pop: Vec<(Genome, Estimate, f64)> = (0..self.population)
-            .map(|_| {
-                let g = axes.random(&mut rng);
-                let (e, f) = eval(&g, &mut evals);
-                (g, e, f)
+        // initial population: genomes first, then one batched evaluation
+        let genomes: Vec<Genome> = (0..self.population).map(|_| axes.random(&mut rng)).collect();
+        let cands: Vec<Candidate> = genomes.iter().map(|g| axes.candidate(g)).collect();
+        let results = eval.evaluate_batch(spec, &cands);
+        let mut pop: Vec<(Genome, Estimate, f64)> = genomes
+            .into_iter()
+            .zip(results)
+            .filter_map(|(g, e)| {
+                e.map(|e| {
+                    let f = fitness(&e, spec);
+                    (g, e, f)
+                })
             })
             .collect();
 
-        for _ in 0..self.generations {
-            pop.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap_or(std::cmp::Ordering::Equal));
-            let mut next: Vec<(Genome, Estimate, f64)> = pop[..self.elite.min(pop.len())].to_vec();
+        if pop.is_empty() {
+            return SearchResult {
+                best: None,
+                evaluations: eval.evaluations() - start_evals,
+                budget_exhausted: eval.budget_exhausted(),
+            };
+        }
 
-            while next.len() < self.population {
+        for _ in 0..self.generations {
+            if eval.budget_exhausted() {
+                break;
+            }
+            pop.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap_or(std::cmp::Ordering::Equal));
+            let elite = self.elite.min(pop.len());
+
+            // breed the whole offspring cohort, then evaluate it as a batch
+            let mut children: Vec<Genome> = Vec::with_capacity(self.population - elite);
+            while children.len() + elite < self.population {
                 // tournament of 3 for each parent
                 let pick = |rng: &mut Rng| -> usize {
                     (0..3)
@@ -86,15 +107,28 @@ impl Searcher for Genetic {
                         child[i] = rng.below(dims[i] as u64) as usize;
                     }
                 }
-                let (e, f) = eval(&child, &mut evals);
-                next.push((child, e, f));
+                children.push(child);
+            }
+
+            let cands: Vec<Candidate> = children.iter().map(|g| axes.candidate(g)).collect();
+            let results = eval.evaluate_batch(spec, &cands);
+            let mut next: Vec<(Genome, Estimate, f64)> = pop[..elite].to_vec();
+            for (g, e) in children.into_iter().zip(results) {
+                if let Some(e) = e {
+                    let f = fitness(&e, spec);
+                    next.push((g, e, f));
+                }
             }
             pop = next;
         }
 
         pop.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap_or(std::cmp::Ordering::Equal));
         let best = pop.into_iter().map(|(_, e, _)| e).find(|e| e.feasible);
-        SearchResult { best, evaluations: evals }
+        SearchResult {
+            best,
+            evaluations: eval.evaluations() - start_evals,
+            budget_exhausted: eval.budget_exhausted(),
+        }
     }
 }
 

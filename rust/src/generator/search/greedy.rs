@@ -1,11 +1,14 @@
-//! Greedy coordinate ascent: from a random feasible seed, repeatedly sweep
+//! Greedy coordinate ascent: from a warm or random seed, repeatedly sweep
 //! the axes, moving each coordinate to the best value with the others
-//! held fixed, until a full pass yields no improvement.
+//! held fixed, until a full pass yields no improvement.  Axis probes are
+//! batched through the evaluator, so a parallel pool overlaps them and
+//! the memo makes re-probed values free.
 
 use super::{SearchResult, Searcher};
 use crate::generator::constraints::AppSpec;
-use crate::generator::design_space::{Axes, Candidate, N_AXES};
-use crate::generator::estimator::{estimate, Estimate};
+use crate::generator::design_space::{Axes, Candidate, StrategyKind, N_AXES};
+use crate::generator::estimator::Estimate;
+use crate::generator::eval::Evaluator;
 use crate::util::rng::Rng;
 
 pub struct Greedy {
@@ -29,60 +32,118 @@ fn soft_score(e: &Estimate, spec: &AppSpec) -> f64 {
     }
 }
 
+/// Warm-start genomes derived from the axis contents — never hard-coded
+/// indices, and every coordinate is clamped against the actual axis
+/// sizes, so a shrunken `Axes` (device allowlists, pruned clock sets)
+/// cannot push a start out of bounds.  Per device: a *fast* operating
+/// point (clock nearest 100 MHz, threshold strategy, max ALUs) and a
+/// *slow* one (lowest clock, idle-wait, modest ALUs so the start stays
+/// feasible on DSP-poor devices) — the slow start is what lets the
+/// ascent keep low-fmax devices (iCE40) instead of being ridge-trapped
+/// by the clock axis.
+pub fn warm_starts(axes: &Axes) -> Vec<[usize; N_AXES]> {
+    let dims = axes.dims();
+    let clamp = |i: usize, axis: usize| i.min(dims[axis].saturating_sub(1));
+    let fast_clock = axes
+        .clocks_mhz
+        .iter()
+        .enumerate()
+        .min_by(|(_, a), (_, b)| (*a - 100.0).abs().total_cmp(&(*b - 100.0).abs()))
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    let slow_clock = axes
+        .clocks_mhz
+        .iter()
+        .enumerate()
+        .min_by(|(_, a), (_, b)| a.total_cmp(b))
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    let strat = |k: StrategyKind| axes.strategies.iter().position(|s| *s == k).unwrap_or(0);
+    let precise_fmt = 0;
+    let hard_acts = clamp(axes.act_pairs.len().saturating_sub(1), 2);
+    let max_alus = clamp(axes.alus.len().saturating_sub(1), 3);
+    let modest_alus = clamp(1, 3);
+    let pipelined = clamp(1, 4);
+
+    let mut warm = Vec::with_capacity(2 * dims[0]);
+    for dev in 0..dims[0] {
+        warm.push([
+            dev,
+            precise_fmt,
+            hard_acts,
+            max_alus,
+            pipelined,
+            clamp(fast_clock, 5),
+            clamp(strat(StrategyKind::PredefinedThreshold), 6),
+        ]);
+        warm.push([
+            dev,
+            precise_fmt,
+            hard_acts,
+            modest_alus,
+            pipelined,
+            clamp(slow_clock, 5),
+            clamp(strat(StrategyKind::IdleWait), 6),
+        ]);
+    }
+    warm
+}
+
 impl Searcher for Greedy {
     fn name(&self) -> &'static str {
         "greedy"
     }
 
-    fn search(&mut self, spec: &AppSpec, _space: &[Candidate]) -> SearchResult {
-        let axes = Axes::new(&[]);
+    fn search_with(
+        &mut self,
+        spec: &AppSpec,
+        _space: &[Candidate],
+        eval: &mut dyn Evaluator,
+    ) -> SearchResult {
+        let axes = Axes::new(&spec.device_allowlist);
         let dims = axes.dims();
+        let start_evals = eval.evaluations();
         let mut rng = Rng::new(self.seed);
-        let mut evals = 0usize;
         let mut best: Option<(f64, Estimate)> = None;
+        let warm = warm_starts(&axes);
 
-        // warm starts: per device, at both a fast (100 MHz, threshold
-        // strategy) and a slow (lowest clock, idle-wait) operating point —
-        // the slow start is what lets the ascent keep low-fmax devices
-        // (iCE40) instead of being ridge-trapped by the clock axis.
-        // Remaining restarts are random.
-        let mut warm: Vec<[usize; N_AXES]> = Vec::new();
-        for dev in 0..dims[0] {
-            warm.push([dev, 0, dims[2] - 1, dims[3] - 1, 1, 2, 3]);
-            // slow start keeps ALUs modest so it is feasible on the
-            // DSP-poorest devices (the ascent can still grow them)
-            warm.push([dev, 0, dims[2] - 1, 1, 1, 0, 1]);
-        }
-
-        for restart in 0..(warm.len() + self.restarts) {
+        'restarts: for restart in 0..(warm.len() + self.restarts) {
             let mut g = if restart < warm.len() {
                 warm[restart]
             } else {
                 axes.random(&mut rng)
             };
-            let mut cur = estimate(spec, &axes.candidate(&g));
-            evals += 1;
+            let Some(mut cur) = eval.evaluate(spec, &axes.candidate(&g)) else {
+                break 'restarts;
+            };
             let mut cur_score = soft_score(&cur, spec);
 
             loop {
                 let mut improved = false;
                 for axis in 0..N_AXES {
+                    // batch-probe every alternative value on this axis
+                    let probes: Vec<(usize, Candidate)> = (0..dims[axis])
+                        .filter(|v| *v != g[axis])
+                        .map(|v| {
+                            let mut p = g;
+                            p[axis] = v;
+                            (v, axes.candidate(&p))
+                        })
+                        .collect();
+                    let cands: Vec<Candidate> =
+                        probes.iter().map(|(_, c)| c.clone()).collect();
+                    let results = eval.evaluate_batch(spec, &cands);
+
                     let mut best_v = g[axis];
                     let mut best_s = cur_score;
                     let mut best_e: Option<Estimate> = None;
-                    for v in 0..dims[axis] {
-                        if v == g[axis] {
-                            continue;
-                        }
-                        let mut probe = g;
-                        probe[axis] = v;
-                        let e = estimate(spec, &axes.candidate(&probe));
-                        evals += 1;
-                        let s = soft_score(&e, spec);
+                    for ((v, _), e) in probes.iter().zip(&results) {
+                        let Some(e) = e else { continue };
+                        let s = soft_score(e, spec);
                         if s > best_s {
                             best_s = s;
-                            best_v = v;
-                            best_e = Some(e);
+                            best_v = *v;
+                            best_e = Some(e.clone());
                         }
                     }
                     if let Some(e) = best_e {
@@ -91,8 +152,11 @@ impl Searcher for Greedy {
                         cur = e;
                         improved = true;
                     }
+                    if eval.budget_exhausted() {
+                        break;
+                    }
                 }
-                if !improved {
+                if !improved || eval.budget_exhausted() {
                     break;
                 }
             }
@@ -106,11 +170,15 @@ impl Searcher for Greedy {
                     best = Some((cur_score, cur));
                 }
             }
+            if eval.budget_exhausted() {
+                break 'restarts;
+            }
         }
 
         SearchResult {
             best: best.map(|(_, e)| e),
-            evaluations: evals,
+            evaluations: eval.evaluations() - start_evals,
+            budget_exhausted: eval.budget_exhausted(),
         }
     }
 }
@@ -118,8 +186,10 @@ impl Searcher for Greedy {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::generator::design_space::enumerate;
+    use crate::fpga::DEVICES;
+    use crate::generator::design_space::{enumerate, sigmoid_variants, tanh_variants};
     use crate::generator::search::exhaustive::Exhaustive;
+    use crate::rtl::fixed_point::Q16_8;
 
     #[test]
     fn greedy_reaches_near_optimum() {
@@ -137,5 +207,52 @@ mod tests {
         let space = enumerate(&[]);
         let r = Greedy::default().search(&spec, &space);
         assert!(r.evaluations < space.len() / 2, "{}", r.evaluations);
+    }
+
+    #[test]
+    fn warm_starts_stay_in_bounds_when_axes_shrink() {
+        // a pruned axis view (single device/format/ALU/clock, no
+        // threshold strategies) must still produce valid warm starts —
+        // the old hard-coded index vectors went out of bounds here
+        let axes = Axes {
+            devices: DEVICES.iter().take(1).collect(),
+            formats: vec![Q16_8],
+            act_pairs: sigmoid_variants()
+                .into_iter()
+                .zip(tanh_variants())
+                .take(2)
+                .collect(),
+            alus: vec![1],
+            pipelined: vec![false],
+            clocks_mhz: vec![25.0],
+            strategies: vec![StrategyKind::OnOff, StrategyKind::IdleWait],
+        };
+        let dims = axes.dims();
+        let warm = warm_starts(&axes);
+        assert_eq!(warm.len(), 2);
+        for g in warm {
+            for (gi, d) in g.iter().zip(dims) {
+                assert!(*gi < d, "warm start {g:?} out of bounds for dims {dims:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn warm_starts_derive_operating_points_from_axes() {
+        let axes = Axes::new(&[]);
+        let warm = warm_starts(&axes);
+        assert_eq!(warm.len(), 2 * axes.devices.len());
+        let fast = &warm[0];
+        let slow = &warm[1];
+        // fast: clock nearest 100 MHz, threshold strategy, max ALUs
+        assert_eq!(axes.clocks_mhz[fast[5]], 100.0);
+        assert_eq!(
+            axes.strategies[fast[6]],
+            StrategyKind::PredefinedThreshold
+        );
+        assert_eq!(axes.alus[fast[3]], *axes.alus.iter().max().unwrap());
+        // slow: lowest clock, idle-wait
+        assert_eq!(axes.clocks_mhz[slow[5]], 25.0);
+        assert_eq!(axes.strategies[slow[6]], StrategyKind::IdleWait);
     }
 }

@@ -8,8 +8,13 @@
 //! * [`annealing`] — simulated annealing with per-axis neighbour moves.
 //! * [`genetic`] — a small GA (tournament selection, uniform crossover).
 //!
-//! The ablation bench (E7) reports how close each heuristic gets to the
-//! exhaustive optimum at what fraction of the evaluation budget.
+//! All four route their estimates through an [`Evaluator`] — normally an
+//! [`EvalPool`], which memoises per candidate, shards batches across
+//! threads, and enforces the evaluation budget.  [`generate_portfolio`]
+//! runs the heuristics concurrently and merges best-of plus a streaming
+//! Pareto front.  The ablation bench (E7) reports how close each
+//! heuristic gets to the exhaustive optimum at what fraction of the
+//! evaluation budget.
 
 pub mod annealing;
 pub mod exhaustive;
@@ -20,24 +25,119 @@ pub mod pareto;
 use super::constraints::AppSpec;
 use super::design_space::Candidate;
 use super::estimator::Estimate;
+use super::eval::{EvalPool, Evaluator};
+use pareto::ParetoFront;
 
 /// Result of one search run.
 #[derive(Debug, Clone)]
 pub struct SearchResult {
     pub best: Option<Estimate>,
-    /// Number of estimator evaluations spent.
+    /// Number of estimator evaluations spent (memoised hits are free).
     pub evaluations: usize,
+    /// True when the run stopped early because the evaluation budget ran
+    /// out (the best seen so far is still reported).
+    pub budget_exhausted: bool,
 }
 
 /// Common interface so benches can sweep searchers uniformly.
 pub trait Searcher {
     fn name(&self) -> &'static str;
-    fn search(&mut self, spec: &AppSpec, space: &[Candidate]) -> SearchResult;
+
+    /// Run against an explicit evaluation engine (shared cache/memo,
+    /// optional budget, optional worker pool).
+    fn search_with(
+        &mut self,
+        spec: &AppSpec,
+        space: &[Candidate],
+        eval: &mut dyn Evaluator,
+    ) -> SearchResult;
+
+    /// Convenience: fresh single-threaded, unbudgeted engine.  A pool
+    /// with more workers returns bit-identical results, only faster.
+    fn search(&mut self, spec: &AppSpec, space: &[Candidate]) -> SearchResult {
+        self.search_with(spec, space, &mut EvalPool::new(1))
+    }
 }
 
-/// Convenience: the generator's default pipeline — exhaustive search over
-/// the (already small) pruned space.
+/// Convenience: the generator's default pipeline — a host-parallel
+/// exhaustive sweep over the (already small) pruned space, restricted to
+/// the spec's device allowlist like every other entry point.
 pub fn generate(spec: &AppSpec) -> SearchResult {
-    let space = super::design_space::enumerate(&[]);
-    exhaustive::Exhaustive.search(spec, &space)
+    let space = super::design_space::enumerate(&spec.device_allowlist);
+    exhaustive::Exhaustive.search_with(spec, &space, &mut EvalPool::with_host_threads())
+}
+
+/// Outcome of [`generate_portfolio`]: the heuristic searchers run
+/// concurrently, merged.
+pub struct Portfolio {
+    /// Best estimate across all searchers (by the spec's goal score).
+    pub best: Option<Estimate>,
+    /// Per-searcher results, in a fixed deterministic order.
+    pub runs: Vec<(&'static str, SearchResult)>,
+    /// Merged streaming Pareto front over every feasible candidate any
+    /// searcher evaluated.
+    pub front: ParetoFront,
+    /// Total estimator evaluations across the portfolio.
+    pub evaluations: usize,
+}
+
+/// Run the heuristic searchers (greedy, annealing, genetic) concurrently,
+/// one thread and one [`EvalPool`] each, and merge best-of plus the
+/// streaming Pareto front.  `threads` is the overall worker target
+/// (divided between the searchers' pools); `budget` caps estimator
+/// evaluations per searcher.
+pub fn generate_portfolio(spec: &AppSpec, threads: usize, budget: Option<usize>) -> Portfolio {
+    let space = super::design_space::enumerate(&spec.device_allowlist);
+    let mut searchers: Vec<Box<dyn Searcher + Send>> = vec![
+        Box::new(greedy::Greedy::default()),
+        Box::new(annealing::Annealing::default()),
+        Box::new(genetic::Genetic::default()),
+    ];
+    let per_pool = (threads.max(1) / searchers.len()).max(1);
+
+    let results: Vec<(&'static str, SearchResult, ParetoFront)> = std::thread::scope(|s| {
+        let space = &space;
+        let handles: Vec<_> = searchers
+            .iter_mut()
+            .map(|searcher| {
+                s.spawn(move || {
+                    let mut pool = match budget {
+                        Some(b) => EvalPool::new(per_pool).with_budget(b),
+                        None => EvalPool::new(per_pool),
+                    };
+                    let r = searcher.search_with(spec, space, &mut pool);
+                    (searcher.name(), r, pool.take_front())
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("searcher thread panicked"))
+            .collect()
+    });
+
+    let mut front = ParetoFront::new();
+    let mut best: Option<Estimate> = None;
+    let mut evaluations = 0usize;
+    let mut runs = Vec::new();
+    for (name, r, f) in results {
+        front.merge(&f);
+        evaluations += r.evaluations;
+        if let Some(e) = &r.best {
+            let better = match &best {
+                None => true,
+                Some(b) => e.score(spec.goal) > b.score(spec.goal),
+            };
+            if better {
+                best = Some(e.clone());
+            }
+        }
+        runs.push((name, r));
+    }
+    Portfolio {
+        best,
+        runs,
+        front,
+        evaluations,
+    }
 }

@@ -28,21 +28,68 @@ pub fn dominates(a: &[f64; 3], b: &[f64; 3]) -> bool {
     strictly
 }
 
-/// Non-dominated subset (simple O(n^2), fine at this scale).
+/// Streaming Pareto front: incremental dominance filtering with an
+/// O(|front|) insert, so a DSE sweep maintains the front as candidates
+/// are estimated instead of re-scanning the whole result set (the old
+/// O(n^2) batch pass).  Membership is identical to the batch scan:
+/// infeasible and dominated offers are rejected, and members newly
+/// dominated by an insert are evicted.
+#[derive(Debug, Clone, Default)]
+pub struct ParetoFront {
+    members: Vec<(Estimate, [f64; 3])>,
+}
+
+impl ParetoFront {
+    pub fn new() -> ParetoFront {
+        ParetoFront::default()
+    }
+
+    /// Offer an estimate; returns true if it joined the front.
+    pub fn insert(&mut self, e: &Estimate) -> bool {
+        if !e.feasible {
+            return false;
+        }
+        let o = objectives(e);
+        if self.members.iter().any(|(_, m)| dominates(m, &o)) {
+            return false;
+        }
+        self.members.retain(|(_, m)| !dominates(&o, m));
+        self.members.push((e.clone(), o));
+        true
+    }
+
+    /// Fold another front in (used to merge per-searcher fronts).
+    pub fn merge(&mut self, other: &ParetoFront) {
+        for (e, _) in &other.members {
+            self.insert(e);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Estimate> {
+        self.members.iter().map(|(e, _)| e)
+    }
+
+    pub fn into_members(self) -> Vec<Estimate> {
+        self.members.into_iter().map(|(e, _)| e).collect()
+    }
+}
+
+/// Non-dominated subset of a batch (delegates to the streaming front;
+/// output preserves the input order of surviving members).
 pub fn front(estimates: &[Estimate]) -> Vec<Estimate> {
-    let objs: Vec<[f64; 3]> = estimates.iter().map(objectives).collect();
-    estimates
-        .iter()
-        .enumerate()
-        .filter(|(i, e)| {
-            e.feasible
-                && !objs
-                    .iter()
-                    .enumerate()
-                    .any(|(j, o)| j != *i && estimates[j].feasible && dominates(o, &objs[*i]))
-        })
-        .map(|(_, e)| e.clone())
-        .collect()
+    let mut f = ParetoFront::new();
+    for e in estimates {
+        f.insert(e);
+    }
+    f.into_members()
 }
 
 #[cfg(test)]
@@ -50,7 +97,15 @@ mod tests {
     use super::*;
     use crate::generator::constraints::AppSpec;
     use crate::generator::design_space::enumerate;
-    use crate::generator::estimator::estimate;
+    use crate::generator::eval::{EvalPool, Evaluator};
+
+    fn estimates(spec: &AppSpec, devices: &[&str]) -> Vec<Estimate> {
+        let mut pool = EvalPool::new(2);
+        pool.evaluate_batch(spec, &enumerate(devices))
+            .into_iter()
+            .flatten()
+            .collect()
+    }
 
     #[test]
     fn dominates_semantics() {
@@ -62,19 +117,15 @@ mod tests {
     #[test]
     fn front_is_nondominated_and_nonempty() {
         let spec = AppSpec::soft_sensor();
-        let es: Vec<Estimate> = enumerate(&["xc7s6", "xc7s15"])
-            .iter()
-            .map(|c| estimate(&spec, c))
-            .collect();
+        let es = estimates(&spec, &["xc7s6", "xc7s15"]);
         let f = front(&es);
         assert!(!f.is_empty());
         assert!(f.len() < es.iter().filter(|e| e.feasible).count());
         // no member dominates another
-        for a in &f {
-            for b in &f {
-                let (oa, ob) = (objectives(a), objectives(b));
-                if oa != ob {
-                    assert!(!dominates(&oa, &ob) || !dominates(&ob, &oa));
+        for (i, a) in f.iter().enumerate() {
+            for (j, b) in f.iter().enumerate() {
+                if i != j {
+                    assert!(!dominates(&objectives(a), &objectives(b)));
                 }
             }
         }
@@ -83,10 +134,42 @@ mod tests {
     #[test]
     fn front_members_feasible() {
         let spec = AppSpec::ecg_monitor();
-        let es: Vec<Estimate> = enumerate(&["xc7s15"])
-            .iter()
-            .map(|c| estimate(&spec, c))
-            .collect();
+        let es = estimates(&spec, &["xc7s15"]);
         assert!(front(&es).iter().all(|e| e.feasible));
+    }
+
+    #[test]
+    fn streaming_front_matches_batch_membership() {
+        let spec = AppSpec::soft_sensor();
+        let es = estimates(&spec, &["xc7s6"]);
+        let batch = front(&es);
+        // insert in reverse order: membership must not depend on order
+        let mut reversed = ParetoFront::new();
+        for e in es.iter().rev() {
+            reversed.insert(e);
+        }
+        let key = |e: &Estimate| e.candidate.describe();
+        let mut a: Vec<String> = batch.iter().map(key).collect();
+        let mut b: Vec<String> = reversed.iter().map(key).collect();
+        a.sort();
+        b.sort();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn insert_evicts_dominated_members() {
+        let spec = AppSpec::soft_sensor();
+        let es = estimates(&spec, &["xc7s6", "xc7s15"]);
+        let full = front(&es);
+        // a front seeded with every feasible estimate (dominated ones
+        // included, one by one) must converge to the same membership
+        let mut f = ParetoFront::new();
+        let mut offered = 0usize;
+        for e in es.iter().filter(|e| e.feasible) {
+            f.insert(e);
+            offered += 1;
+        }
+        assert!(offered > f.len(), "nothing was ever evicted/rejected");
+        assert_eq!(f.len(), full.len());
     }
 }

@@ -16,8 +16,10 @@ use elastic_gen::coordinator::{Coordinator, CoordinatorConfig, EngineSpec};
 use elastic_gen::eda;
 use elastic_gen::elastic_node::Platform;
 use elastic_gen::fpga::{device, ConfigController, DEVICES};
-use elastic_gen::generator::search::exhaustive::rank;
-use elastic_gen::generator::{design_space, AppSpec};
+use elastic_gen::generator::search::exhaustive::{rank_with, Exhaustive};
+use elastic_gen::generator::{
+    default_threads, design_space, generate_portfolio, AppSpec, EvalPool, Evaluator, Searcher,
+};
 use elastic_gen::models::Topology;
 use elastic_gen::rtl::composition::{build, BuildOpts};
 use elastic_gen::rtl::fixed_point::QFormat;
@@ -57,6 +59,8 @@ fn print_usage() {
          USAGE: elastic-gen <subcommand> [--options]\n\n\
          SUBCOMMANDS\n\
            generate  --app <soft-sensor|ecg-monitor|har-wearable> [--top N]\n\
+                     [--jobs N] [--budget N]\n\
+           generate  --all [--jobs N] [--budget N]   (cross-scenario sweep)\n\
            report    --model <mlp_fluid|lstm_har|cnn_ecg|attn_tiny> --device <name>\n\
                      [--clock-mhz 100] [--optimised]\n\
            simulate  --period-ms <f> [--requests N] [--device <name>]\n\
@@ -75,6 +79,11 @@ fn scenario(name: &str) -> anyhow::Result<AppSpec> {
 }
 
 fn cmd_generate(args: &Args) -> anyhow::Result<()> {
+    let jobs = args.get_usize("jobs", default_threads());
+    let budget = args.get_usize("budget", 0);
+    if args.has_flag("all") {
+        return cmd_generate_all(jobs, budget);
+    }
     let spec = scenario(args.get_or("app", "soft-sensor"))?;
     let top = args.get_usize("top", 5);
     println!(
@@ -83,12 +92,23 @@ fn cmd_generate(args: &Args) -> anyhow::Result<()> {
         spec.workload.describe(),
         spec.goal
     );
-    let space = design_space::enumerate(&[]);
-    let ranked = rank(&spec, &space);
+    let space = design_space::enumerate(&spec.device_allowlist);
+    let mut pool = EvalPool::new(jobs);
+    if budget > 0 {
+        pool = pool.with_budget(budget);
+    }
+    let ranked = rank_with(&spec, &space, &mut pool);
     println!(
-        "design space: {} candidates, {} feasible\n",
+        "design space: {} candidates, {} feasible, Pareto front {} ({} jobs{})\n",
         space.len(),
-        ranked.len()
+        ranked.len(),
+        pool.front().len(),
+        jobs,
+        if pool.budget_exhausted() {
+            ", budget exhausted"
+        } else {
+            ""
+        }
     );
     let mut t = Table::new(&[
         "#", "configuration", "E/item (mJ)", "latency (us)", "GOPS/s/W", "util %",
@@ -113,6 +133,103 @@ fn cmd_generate(args: &Args) -> anyhow::Result<()> {
             Hertz::from_mhz(best.candidate.clock_mhz),
         );
         println!("{}", rep.render());
+    }
+    Ok(())
+}
+
+/// Multi-scenario sweep: every `AppSpec::scenarios()` entry evaluated in
+/// parallel (one thread + one worker pool each), rendered as a
+/// cross-scenario comparison of the full sweep and the heuristic
+/// portfolio.
+fn cmd_generate_all(jobs: usize, budget: usize) -> anyhow::Result<()> {
+    let scenarios = AppSpec::scenarios();
+    let per = (jobs / scenarios.len()).max(1);
+    println!(
+        "Sweeping {} scenarios in parallel ({} jobs total, {} per scenario) ...\n",
+        scenarios.len(),
+        jobs,
+        per
+    );
+
+    type Row = (
+        AppSpec,
+        elastic_gen::generator::SearchResult, // full sweep
+        usize,                                // sweep Pareto size
+        elastic_gen::generator::Portfolio,    // heuristic portfolio
+        std::time::Duration,
+    );
+    let rows: Vec<Row> = std::thread::scope(|s| {
+        let handles: Vec<_> = scenarios
+            .iter()
+            .map(|spec| {
+                s.spawn(move || {
+                    let t0 = std::time::Instant::now();
+                    let space = design_space::enumerate(&spec.device_allowlist);
+                    let mut pool = EvalPool::new(per);
+                    if budget > 0 {
+                        pool = pool.with_budget(budget);
+                    }
+                    let sweep = Exhaustive.search_with(spec, &space, &mut pool);
+                    // the portfolio budget is per searcher; split the
+                    // user's cap three ways so the two evals columns are
+                    // comparable under the same total spend
+                    let folio = generate_portfolio(
+                        spec,
+                        per,
+                        if budget > 0 { Some((budget / 3).max(1)) } else { None },
+                    );
+                    (spec.clone(), sweep, pool.front().len(), folio, t0.elapsed())
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("scenario thread panicked"))
+            .collect()
+    });
+
+    let mut t = Table::new(&[
+        "scenario", "workload", "best configuration", "E/item (mJ)", "GOPS/s/W", "Pareto",
+        "sweep evals", "portfolio evals", "heuristic gap", "time (ms)",
+    ])
+    .with_title("Cross-scenario sweep");
+    for (spec, sweep, front_len, folio, wall) in &rows {
+        let best = sweep
+            .best
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("{}: no feasible configuration", spec.name))?;
+        let gap = folio
+            .best
+            .as_ref()
+            .map(|h| {
+                format!(
+                    "{:.2}x",
+                    h.energy_per_item.value() / best.energy_per_item.value()
+                )
+            })
+            .unwrap_or_else(|| "-".into());
+        t.row(&[
+            spec.name.clone(),
+            spec.workload.describe(),
+            best.candidate.describe(),
+            num(best.energy_per_item.mj(), 4),
+            num(best.gops_per_watt, 2),
+            front_len.to_string(),
+            format!(
+                "{}{}",
+                sweep.evaluations,
+                if sweep.budget_exhausted { "!" } else { "" }
+            ),
+            folio.evaluations.to_string(),
+            gap,
+            num(wall.as_secs_f64() * 1e3, 0),
+        ]);
+    }
+    println!("{}", t.render());
+    if rows.iter().any(|(_, s, _, f, _)| {
+        s.budget_exhausted || f.runs.iter().any(|(_, r)| r.budget_exhausted)
+    }) {
+        println!("(! = evaluation budget exhausted before the full space was swept)");
     }
     Ok(())
 }

@@ -80,8 +80,12 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// True when `--name` was given at all.  A flag followed by a
+    /// positional token (`serve --synthetic 200`) parses as an option
+    /// with that value; it must still count as the flag being set rather
+    /// than being silently dropped.
     pub fn has_flag(&self, name: &str) -> bool {
-        self.flags.iter().any(|f| f == name)
+        self.flags.iter().any(|f| f == name) || self.options.contains_key(name)
     }
 }
 
@@ -121,5 +125,14 @@ mod tests {
     fn trailing_flag() {
         let a = Args::parse(&toks("cmd --flag"));
         assert!(a.has_flag("flag"));
+    }
+
+    #[test]
+    fn flag_followed_by_positional_still_counts() {
+        let a = Args::parse(&toks("serve --synthetic 200"));
+        assert!(a.has_flag("synthetic"));
+        let b = Args::parse(&toks("generate --all --jobs 4"));
+        assert!(b.has_flag("all"));
+        assert_eq!(b.get_usize("jobs", 1), 4);
     }
 }

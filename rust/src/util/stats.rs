@@ -2,13 +2,22 @@
 //! emulation and the evaluation reports.
 
 /// Streaming mean/variance via Welford's algorithm plus min/max.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct OnlineStats {
     n: u64,
     mean: f64,
     m2: f64,
     min: f64,
     max: f64,
+}
+
+// Hand-written so `default()` seeds min/max with the ±inf sentinels; the
+// derived impl zeroed them, silently pinning min() at 0 for any
+// all-positive series pushed through a default-constructed instance.
+impl Default for OnlineStats {
+    fn default() -> Self {
+        OnlineStats::new()
+    }
 }
 
 impl OnlineStats {
@@ -56,12 +65,23 @@ impl OnlineStats {
         self.variance().sqrt()
     }
 
+    /// Smallest sample, or 0.0 for an empty series (never leaks the
+    /// +inf seeding sentinel into reports).
     pub fn min(&self) -> f64 {
-        self.min
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
     }
 
+    /// Largest sample, or 0.0 for an empty series.
     pub fn max(&self) -> f64 {
-        self.max
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
     }
 }
 
@@ -82,7 +102,9 @@ impl Summary {
     pub fn of(samples: &[f64]) -> Summary {
         assert!(!samples.is_empty(), "Summary::of on empty sample set");
         let mut v: Vec<f64> = samples.to_vec();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: NaN samples (zero-duration timing artifacts) sort to
+        // the end instead of panicking the percentile path
+        v.sort_by(|a, b| a.total_cmp(b));
         let n = v.len();
         let mean = v.iter().sum::<f64>() / n as f64;
         let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
@@ -174,5 +196,36 @@ mod tests {
     #[should_panic]
     fn summary_empty_panics() {
         Summary::of(&[]);
+    }
+
+    #[test]
+    fn summary_tolerates_nan_and_inf() {
+        // reachable from metrics rendering on a zero-duration timing
+        // sample — must degrade (NaN-tailed order) rather than panic
+        let s = Summary::of(&[2.0, f64::NAN, 1.0, f64::INFINITY]);
+        assert_eq!(s.n, 4);
+        assert_eq!(s.min, 1.0);
+        assert!(s.mean.is_nan());
+        let neg = Summary::of(&[f64::NEG_INFINITY, 0.5, f64::NAN]);
+        assert_eq!(neg.min, f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn online_stats_empty_series_bounds() {
+        let o = OnlineStats::new();
+        assert_eq!(o.min(), 0.0);
+        assert_eq!(o.max(), 0.0);
+        assert_eq!(o.mean(), 0.0);
+    }
+
+    #[test]
+    fn online_stats_default_tracks_extremes() {
+        // the derived Default seeded min/max at 0.0, pinning min() there
+        // for all-positive series — the handwritten impl must not
+        let mut o = OnlineStats::default();
+        o.push(5.0);
+        o.push(3.0);
+        assert_eq!(o.min(), 3.0);
+        assert_eq!(o.max(), 5.0);
     }
 }

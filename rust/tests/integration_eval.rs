@@ -1,0 +1,170 @@
+//! Integration: the parallel evaluation engine — thread-count
+//! determinism, per-candidate memoisation, budget accounting, and the
+//! concurrent heuristic portfolio.
+
+use elastic_gen::generator::design_space::enumerate;
+use elastic_gen::generator::search::exhaustive::Exhaustive;
+use elastic_gen::generator::search::genetic::Genetic;
+use elastic_gen::generator::search::pareto;
+use elastic_gen::generator::{generate_portfolio, AppSpec, EvalPool, Evaluator, Searcher};
+
+/// The headline determinism contract: for every scenario, a 1-thread and
+/// an N-thread pool return the identical best score and the identical
+/// Pareto-front membership — parallelism only changes wall-clock.
+#[test]
+fn pool_thread_count_never_changes_results() {
+    for spec in AppSpec::scenarios() {
+        let space = enumerate(&spec.device_allowlist);
+        let mut p1 = EvalPool::new(1);
+        let r1 = Exhaustive.search_with(&spec, &space, &mut p1);
+        let mut p4 = EvalPool::new(4);
+        let r4 = Exhaustive.search_with(&spec, &space, &mut p4);
+
+        let b1 = r1.best.expect(&spec.name);
+        let b4 = r4.best.expect(&spec.name);
+        assert_eq!(b1.score(spec.goal), b4.score(spec.goal), "{}", spec.name);
+        assert_eq!(
+            b1.candidate.describe(),
+            b4.candidate.describe(),
+            "{}",
+            spec.name
+        );
+        assert_eq!(r1.evaluations, r4.evaluations, "{}", spec.name);
+
+        let mut f1: Vec<String> = p1.front().iter().map(|e| e.candidate.describe()).collect();
+        let mut f4: Vec<String> = p4.front().iter().map(|e| e.candidate.describe()).collect();
+        f1.sort();
+        f4.sort();
+        assert_eq!(
+            f1, f4,
+            "{}: Pareto membership differs across thread counts",
+            spec.name
+        );
+    }
+}
+
+/// The pool's streaming front must agree with the batch extraction over
+/// the same estimates.
+#[test]
+fn streaming_front_matches_batch_front() {
+    let spec = AppSpec::soft_sensor();
+    let space = enumerate(&["xc7s6", "xc7s15"]);
+    let mut pool = EvalPool::new(2);
+    let es: Vec<_> = pool
+        .evaluate_batch(&spec, &space)
+        .into_iter()
+        .flatten()
+        .collect();
+    let mut batch: Vec<String> = pareto::front(&es)
+        .iter()
+        .map(|e| e.candidate.describe())
+        .collect();
+    let mut stream: Vec<String> = pool.front().iter().map(|e| e.candidate.describe()).collect();
+    batch.sort();
+    stream.sort();
+    assert_eq!(batch, stream);
+}
+
+/// `evaluations` must track unique genomes, not requests: an identical
+/// re-run through the same pool is answered entirely from the memo, so
+/// the genetic searcher never re-pays for duplicate children.
+#[test]
+fn genetic_evaluations_bounded_by_unique_genomes() {
+    let spec = AppSpec::soft_sensor();
+    let space = enumerate(&[]);
+    let mut pool = EvalPool::new(2);
+
+    let r1 = Genetic::default().search_with(&spec, &space, &mut pool);
+    let best1 = r1.best.expect("genetic found nothing");
+    // the GA requests every child it breeds; converged populations breed
+    // duplicate children, and those must be memo hits, not paid estimates
+    assert!(
+        pool.requests() > r1.evaluations,
+        "genetic bred no duplicate genomes ({} requests, {} paid) — \
+         either the GA stopped converging or duplicates were re-paid",
+        pool.requests(),
+        r1.evaluations
+    );
+
+    let spent = pool.evaluations();
+    let r2 = Genetic::default().search_with(&spec, &space, &mut pool);
+    let best2 = r2.best.expect("genetic rerun found nothing");
+    assert_eq!(
+        pool.evaluations(),
+        spent,
+        "identical rerun re-paid for memoised genomes"
+    );
+    assert_eq!(r2.evaluations, 0);
+    assert_eq!(best1.candidate.describe(), best2.candidate.describe());
+}
+
+#[test]
+fn budget_exhaustion_is_reported_and_respected() {
+    let spec = AppSpec::soft_sensor();
+    let space = enumerate(&["xc7s6"]);
+
+    let mut capped = EvalPool::new(2).with_budget(25);
+    let r = Exhaustive.search_with(&spec, &space, &mut capped);
+    assert!(r.budget_exhausted);
+    assert_eq!(r.evaluations, 25);
+    assert_eq!(capped.evaluations(), 25);
+
+    let mut free = EvalPool::new(2);
+    let rf = Exhaustive.search_with(&spec, &space, &mut free);
+    assert!(!rf.budget_exhausted);
+    assert_eq!(rf.evaluations, space.len());
+}
+
+#[test]
+fn portfolio_merges_heuristics_and_front() {
+    let spec = AppSpec::ecg_monitor();
+    let folio = generate_portfolio(&spec, 2, None);
+    let best = folio.best.expect("portfolio found nothing");
+    assert!(best.feasible);
+    assert_eq!(folio.runs.len(), 3);
+    assert!(folio.evaluations > 0);
+
+    // the merged best is at least as good as every individual searcher
+    for (name, r) in &folio.runs {
+        if let Some(e) = &r.best {
+            assert!(
+                best.score(spec.goal) >= e.score(spec.goal),
+                "portfolio best is worse than {name}"
+            );
+        }
+    }
+
+    // merged front: non-empty, feasible, mutually non-dominated
+    assert!(!folio.front.is_empty());
+    let members: Vec<_> = folio.front.iter().collect();
+    for (i, a) in members.iter().enumerate() {
+        assert!(a.feasible);
+        for (j, b) in members.iter().enumerate() {
+            if i != j {
+                assert!(
+                    !pareto::dominates(&pareto::objectives(a), &pareto::objectives(b)),
+                    "front member {i} dominates member {j}"
+                );
+            }
+        }
+    }
+}
+
+/// Budgeted portfolio: each searcher stops at its cap and says so.
+#[test]
+fn budgeted_portfolio_reports_exhaustion() {
+    let spec = AppSpec::soft_sensor();
+    let folio = generate_portfolio(&spec, 2, Some(60));
+    for (name, r) in &folio.runs {
+        assert!(
+            r.evaluations <= 60,
+            "{name} exceeded its budget: {}",
+            r.evaluations
+        );
+    }
+    // at least one of the searchers wants more than 60 evaluations
+    assert!(
+        folio.runs.iter().any(|(_, r)| r.budget_exhausted),
+        "no searcher reported exhaustion at a 60-evaluation budget"
+    );
+}
