@@ -7,6 +7,7 @@
 
 use elastic_gen::elastic_node::Platform;
 use elastic_gen::fpga::ConfigController;
+use elastic_gen::generator::calibrate::{calibrate_finalists, CalibrateOpts};
 use elastic_gen::generator::design_space::{enumerate, StrategyKind};
 use elastic_gen::generator::estimator::estimate;
 use elastic_gen::generator::search::annealing::Annealing;
@@ -17,22 +18,10 @@ use elastic_gen::generator::{default_threads, generate_portfolio, AppSpec, EvalP
 use elastic_gen::rtl::composition::build;
 use elastic_gen::rtl::ActImpl;
 use elastic_gen::sim::{cost_model, NodeSim};
-use elastic_gen::strategy::learnable::LearnableThreshold;
-use elastic_gen::strategy::{ClockScale, IdleWait, OnOff, PredefinedThreshold, Strategy};
 use elastic_gen::util::rng::Rng;
 use elastic_gen::util::table::{num, Table};
 use elastic_gen::util::units::Hertz;
 use std::time::Instant;
-
-fn strategy_for(kind: StrategyKind) -> Box<dyn Strategy> {
-    match kind {
-        StrategyKind::OnOff => Box::new(OnOff),
-        StrategyKind::IdleWait => Box::new(IdleWait),
-        StrategyKind::ClockScale => Box::new(ClockScale),
-        StrategyKind::PredefinedThreshold => Box::new(PredefinedThreshold::breakeven()),
-        StrategyKind::LearnableThreshold => Box::new(LearnableThreshold::default_grid()),
-    }
-}
 
 fn main() {
     elastic_gen::bench::banner(
@@ -59,7 +48,7 @@ fn main() {
     // --- per-scenario: generated vs naive + DES validation ---------------
     let mut t = Table::new(&[
         "scenario", "generated configuration", "E/item gen (mJ)", "E/item naive (mJ)",
-        "gain", "DES E/item (mJ)", "Pareto size",
+        "gain", "DES E/item (mJ)", "Pareto size", "tau pre", "tau post",
     ]);
     for spec in AppSpec::scenarios() {
         let mut pool = EvalPool::new(jobs);
@@ -90,10 +79,18 @@ fn main() {
             &ConfigController::raw(best.candidate.device),
         );
         let arrivals = spec.workload.arrivals(des_requests, &mut Rng::new(3));
-        let mut strat = strategy_for(best.candidate.strategy);
+        let mut strat = best.candidate.strategy.instantiate();
         let des = NodeSim::new(cost).run(&arrivals, strat.as_mut());
 
-        // the streaming front the pool maintained during the sweep
+        // rank agreement on the streaming front the pool maintained
+        // during the sweep, before and after the calibration fit
+        let finalists = pool.take_front().into_members();
+        let front_len = finalists.len();
+        let cal = calibrate_finalists(
+            &spec,
+            finalists,
+            &CalibrateOpts { threads: jobs, requests: des_requests, ..Default::default() },
+        );
         t.row(&[
             spec.name.clone(),
             best.candidate.describe(),
@@ -101,8 +98,15 @@ fn main() {
             num(naive.energy_per_item.mj(), 4),
             format!("{:.1}x", naive.energy_per_item.value() / best.energy_per_item.value()),
             num(des.energy_per_item().mj(), 4),
-            pool.front().len().to_string(),
+            front_len.to_string(),
+            num(cal.before.tau, 3),
+            num(cal.after.tau, 3),
         ]);
+        assert!(
+            cal.after.tau + 1e-9 >= cal.before.tau,
+            "{}: calibration regressed rank agreement",
+            spec.name
+        );
     }
     println!("{}", t.render());
 

@@ -1,9 +1,10 @@
 //! Perf — hot-path microbenchmarks.
 //!
 //! The L3 hot paths: the Generator's estimator (DSE inner loop), the
-//! discrete-event node simulation, the coordinator's shard scaling on a
-//! synthetic workload, and — when artifacts are built — the behavioural
-//! executor, engine inference + the coordinator round-trip.
+//! discrete-event node simulation, the calibration loop's parallel DES
+//! replay stage, the coordinator's shard scaling on a synthetic
+//! workload, and — when artifacts are built — the behavioural executor,
+//! engine inference + the coordinator round-trip.
 //! Run with BENCH_SECS=<f64> to change the per-bench wall budget.
 
 use elastic_gen::behav::{self, ExecConfig};
@@ -11,10 +12,11 @@ use elastic_gen::bench::{bench, black_box, default_target};
 use elastic_gen::coordinator::{Coordinator, CoordinatorConfig, EngineSpec, ShardPolicy};
 use elastic_gen::elastic_node::Platform;
 use elastic_gen::fpga::{device, ConfigController};
+use elastic_gen::generator::calibrate::{calibrate_finalists, replay_all, CalibrateOpts};
 use elastic_gen::generator::design_space::enumerate;
 use elastic_gen::generator::estimator::estimate;
 use elastic_gen::generator::search::exhaustive::Exhaustive;
-use elastic_gen::generator::{AppSpec, EvalPool, Searcher};
+use elastic_gen::generator::{default_threads, AppSpec, EvalPool, Searcher};
 use elastic_gen::models::Topology;
 use elastic_gen::rtl::composition::{build, BuildOpts};
 use elastic_gen::rtl::fixed_point::Q16_8;
@@ -108,11 +110,60 @@ fn dse_scaling() {
     }
 }
 
+/// The calibration loop's DES replay stage at 1/2/4 worker threads, plus
+/// the fit + rank-agreement wall-clock.  Replays merge in submission
+/// order, so the summed simulated energy must be bit-identical across
+/// thread counts.
+fn calibration_scaling() {
+    let spec = AppSpec::ecg_monitor();
+    let space = enumerate(&spec.device_allowlist);
+    let mut pool = EvalPool::new(default_threads());
+    Exhaustive.search_with(&spec, &space, &mut pool);
+    let mut finalists = pool.take_front().into_members();
+    finalists.sort_by(|a, b| a.candidate.describe().cmp(&b.candidate.describe()));
+    let arrivals = spec.workload.arrivals(400, &mut Rng::new(11));
+    println!();
+    let mut base_wall = 0.0;
+    let mut base_total: Option<f64> = None;
+    for &threads in &[1usize, 2, 4] {
+        let t0 = Instant::now();
+        let replays = replay_all(&finalists, &arrivals, threads);
+        let wall = t0.elapsed().as_secs_f64();
+        let total: f64 = replays.iter().map(|r| r.sim_energy_per_item.value()).sum();
+        match base_total {
+            None => {
+                base_wall = wall;
+                base_total = Some(total);
+            }
+            Some(t) => assert_eq!(t, total, "thread count changed DES replay results"),
+        }
+        println!(
+            "calibration/replay-{threads}-thread: {} finalists x {} reqs in {wall:.3}s ({:.2}x vs 1 thread)",
+            finalists.len(),
+            arrivals.len(),
+            base_wall / wall
+        );
+    }
+    let t0 = Instant::now();
+    let cal = calibrate_finalists(
+        &spec,
+        finalists,
+        &CalibrateOpts { threads: default_threads(), requests: 400, ..Default::default() },
+    );
+    println!(
+        "calibration/fit+tau: {} finalists, tau {:.3} -> {:.3} in {:.3}s",
+        cal.replays.len(),
+        cal.before.tau,
+        cal.after.tau,
+        t0.elapsed().as_secs_f64()
+    );
+}
+
 fn main() {
     elastic_gen::bench::banner(
         "PERF",
         "hot-path microbenchmarks",
-        "DSE estimator, DES engine, shard scaling, behavioural exec, coordinator",
+        "DSE estimator, DES engine, calibration replay, shard scaling, behavioural exec",
     );
     let target = default_target();
     let mut results = Vec::new();
@@ -147,6 +198,9 @@ fn main() {
 
     // --- DSE sweep scaling across pool workers ------------------------------
     dse_scaling();
+
+    // --- calibration: parallel DES replay + fit -----------------------------
+    calibration_scaling();
 
     // --- coordinator shard scaling (hermetic, synthetic engine) ------------
     coordinator_scaling();

@@ -102,7 +102,10 @@ pub struct FpgaDevice {
     pub powerup_s: f64,
     /// Fabric speed ceiling for simple pipelined logic at this node.
     pub fmax_ceiling: Hertz,
-    /// Dynamic power per MHz per 1000 LUTs toggling (calibration constant).
+    /// Dynamic power per MHz per 1000 LUTs toggling (calibration
+    /// constant).  Fitted **per device**, so it is pre-scaled for the
+    /// process node: `power::power` must not apply the 28 nm node factor
+    /// to this term (only the shared DSP/BRAM surcharges scale by node).
     pub dyn_mw_per_mhz_per_klut: f64,
 }
 

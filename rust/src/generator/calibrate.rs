@@ -1,0 +1,475 @@
+//! The estimator↔simulator calibration loop (§2.2): the closed-form
+//! workload-energy model sweeps thousands of candidates, the
+//! discrete-event simulator validates the finalists — this module
+//! reconciles the two.
+//!
+//! Pipeline: sweep → Pareto finalists → DES replay of each finalist on
+//! the spec's workload trace (parallel via [`map_ordered`], bit-identical
+//! across thread counts) → per-component least-squares fit of the
+//! closed-form constants against the DES ledger → rank-agreement check
+//! (Kendall tau + crossover count) → corrected constants fed back into a
+//! [`CalibratedEstimator`] for an optional refinement sweep.
+//!
+//! The fit is one multiplier per energy term, in the DES ledger's own
+//! coordinates ([`EnergyComponents`]): `busy` corrects the dynamic-power
+//! chain (`dyn_mw_per_mhz_per_klut` and the DSP/BRAM surcharges fold
+//! into busy power together), `cold` corrects the cold-start energy, and
+//! `idle`/`off` correct the gap overheads.  A fit that does not improve
+//! rank agreement is discarded in favour of the identity scales, so
+//! calibration can never make the estimator's ranking worse.
+
+use super::constraints::AppSpec;
+use super::design_space::StrategyKind;
+use super::estimator::{
+    strategy_energy_components, strategy_energy_per_item, EnergyComponents, Estimate,
+};
+use super::eval::{default_threads, map_ordered, EvalPool, Evaluator};
+use super::search::exhaustive::Exhaustive;
+use super::search::{SearchResult, Searcher};
+use crate::sim::NodeSim;
+use crate::util::rng::Rng;
+use crate::util::units::{Joules, Secs};
+
+/// Multiplicative corrections to the closed-form model's energy
+/// constants, fitted against DES ledgers.  Identity = uncalibrated.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelScales {
+    /// Busy-power multiplier: corrects the `dyn_mw_per_mhz_per_klut` +
+    /// DSP/BRAM-surcharge chain (they enter busy power together).
+    pub busy: f64,
+    /// Idle-overhead multiplier (device static + board wait overhead).
+    pub idle: f64,
+    /// Off-overhead multiplier (MCU sleep).
+    pub off: f64,
+    /// Cold-start (power-up + configuration) energy multiplier.
+    pub cold: f64,
+}
+
+impl ModelScales {
+    pub fn identity() -> ModelScales {
+        ModelScales { busy: 1.0, idle: 1.0, off: 1.0, cold: 1.0 }
+    }
+
+    pub fn is_identity(&self) -> bool {
+        *self == ModelScales::identity()
+    }
+
+    /// Corrected closed-form energy per item for an estimate at mean gap
+    /// `g`: the scales are pushed into the cost model and the closed form
+    /// re-evaluated, so a threshold strategy may legitimately flip to the
+    /// other side of its (corrected) crossover.
+    pub fn energy_per_item(&self, e: &Estimate, g: Secs) -> Joules {
+        let cost = e.cost.with_corrections(self.busy, self.idle, self.off, self.cold);
+        strategy_energy_per_item(&cost, e.candidate.strategy, g)
+    }
+}
+
+impl Default for ModelScales {
+    fn default() -> ModelScales {
+        ModelScales::identity()
+    }
+}
+
+/// One finalist's DES replay outcome, with the simulated ledger reduced
+/// to per-served-item components in the closed form's coordinates.
+#[derive(Debug, Clone)]
+pub struct Replay {
+    pub estimate: Estimate,
+    pub sim_energy_per_item: Joules,
+    pub sim_components: EnergyComponents,
+    pub served: u64,
+    pub dropped: u64,
+}
+
+/// Replay one finalist through the DES on a shared workload trace.
+pub fn replay_one(e: &Estimate, arrivals: &[Secs]) -> Replay {
+    let mut strategy = e.candidate.strategy.instantiate();
+    let report = NodeSim::new(e.cost).run(arrivals, strategy.as_mut());
+    let per = |j: Joules| {
+        if report.served == 0 {
+            Joules(f64::INFINITY)
+        } else {
+            Joules(j.value() / report.served as f64)
+        }
+    };
+    Replay {
+        estimate: e.clone(),
+        sim_energy_per_item: report.energy_per_item(),
+        sim_components: EnergyComponents {
+            busy: per(report.energy.busy),
+            idle: per(report.energy.idle),
+            off: per(report.energy.off),
+            cold: per(report.energy.config),
+        },
+        served: report.served,
+        dropped: report.dropped,
+    }
+}
+
+/// Parallel DES replay of the finalists on one shared arrival trace.
+/// Chunk-sharded like `EvalPool` batches and merged in submission order,
+/// so the result is bit-identical across thread counts.
+pub fn replay_all(finalists: &[Estimate], arrivals: &[Secs], threads: usize) -> Vec<Replay> {
+    map_ordered(threads, finalists, |e| replay_one(e, arrivals))
+}
+
+/// Per-component least squares of `sim = θ · closed_form` over the
+/// replayed finalists: θ_k = Σ pred·sim / Σ pred² is the exact
+/// one-parameter solution per component, computed independently for
+/// busy/idle/off/cold.  Components the finalists never exercise (zero
+/// predicted everywhere) keep the identity scale.  Clock-scaling
+/// finalists are excluded: their DES ledger books the stretched window's
+/// static share as busy energy, which the closed form's coordinates
+/// split differently — they still count for the rank-agreement check.
+pub fn fit(spec: &AppSpec, replays: &[Replay]) -> ModelScales {
+    let g = spec.workload.mean_gap();
+    let mut num = [0.0f64; 4];
+    let mut den = [0.0f64; 4];
+    for r in replays {
+        if r.served == 0 || r.estimate.candidate.strategy == StrategyKind::ClockScale {
+            continue;
+        }
+        let p = strategy_energy_components(&r.estimate.cost, r.estimate.candidate.strategy, g);
+        let a = &r.sim_components;
+        let pairs = [
+            (p.busy, a.busy),
+            (p.idle, a.idle),
+            (p.off, a.off),
+            (p.cold, a.cold),
+        ];
+        for (k, (pv, av)) in pairs.into_iter().enumerate() {
+            num[k] += pv.value() * av.value();
+            den[k] += pv.value() * pv.value();
+        }
+    }
+    let theta = |k: usize| if den[k] > 1e-30 { num[k] / den[k] } else { 1.0 };
+    ModelScales {
+        busy: theta(0),
+        idle: theta(1),
+        off: theta(2),
+        cold: theta(3),
+    }
+}
+
+/// Rank agreement between two paired score lists.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RankAgreement {
+    /// Kendall tau-a in [-1, 1]; 1 = identical ranking.
+    pub tau: f64,
+    /// Discordant pairs: finalists the two metrics order oppositely.
+    pub crossovers: usize,
+    /// Total pairs compared, n·(n-1)/2.
+    pub pairs: usize,
+}
+
+/// Kendall tau-a over all pairs (ties count as neither concordant nor
+/// discordant), plus the crossover count.
+pub fn rank_agreement(a: &[f64], b: &[f64]) -> RankAgreement {
+    assert_eq!(a.len(), b.len(), "paired score lists differ in length");
+    let n = a.len();
+    if n < 2 {
+        return RankAgreement { tau: 1.0, crossovers: 0, pairs: 0 };
+    }
+    let mut concordant = 0usize;
+    let mut discordant = 0usize;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let s = (a[i] - a[j]) * (b[i] - b[j]);
+            if s > 0.0 {
+                concordant += 1;
+            } else if s < 0.0 {
+                discordant += 1;
+            }
+        }
+    }
+    let pairs = n * (n - 1) / 2;
+    RankAgreement {
+        tau: (concordant as f64 - discordant as f64) / pairs as f64,
+        crossovers: discordant,
+        pairs,
+    }
+}
+
+/// Knobs for the calibration pipeline.
+#[derive(Debug, Clone)]
+pub struct CalibrateOpts {
+    /// Worker threads for both the sweep and the DES replay stage.
+    pub threads: usize,
+    /// Length of the replayed arrival trace per finalist.
+    pub requests: usize,
+    /// Workload-trace seed (one trace shared by every finalist).
+    pub seed: u64,
+    /// Optional estimator-evaluation budget for the sweep.
+    pub budget: Option<usize>,
+}
+
+impl Default for CalibrateOpts {
+    fn default() -> CalibrateOpts {
+        CalibrateOpts {
+            threads: default_threads(),
+            requests: 600,
+            seed: 11,
+            budget: None,
+        }
+    }
+}
+
+/// Outcome of one scenario's calibration.
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    pub spec: AppSpec,
+    /// The scales in force after the guard (identity if the fit fell back).
+    pub scales: ModelScales,
+    /// True when the fitted scales were discarded because they did not
+    /// improve rank agreement.
+    pub fell_back: bool,
+    /// Per-finalist DES replays, in deterministic (describe-sorted) order.
+    pub replays: Vec<Replay>,
+    /// Agreement of the uncalibrated closed form vs the DES.
+    pub before: RankAgreement,
+    /// Agreement of the calibrated closed form vs the DES (== `before`
+    /// when the fit fell back).
+    pub after: RankAgreement,
+    /// Agreement of the *fitted* scales before the fallback guard —
+    /// equals `after` unless the fit fell back; kept so callers can
+    /// alert on a fit that regressed agreement even though the guard
+    /// discarded it.
+    pub fitted: RankAgreement,
+    /// Best estimate of the sweep that produced the finalists, if the
+    /// pipeline ran one (None when calibrating externally-supplied
+    /// finalists).
+    pub sweep_best: Option<Estimate>,
+}
+
+/// Calibrate against an explicit finalist set (e.g. the Pareto front a
+/// caller already swept).  Finalists are describe-sorted first so the
+/// outcome is independent of the order the sweep produced them in.
+pub fn calibrate_finalists(
+    spec: &AppSpec,
+    mut finalists: Vec<Estimate>,
+    opts: &CalibrateOpts,
+) -> Calibration {
+    finalists.sort_by(|a, b| a.candidate.describe().cmp(&b.candidate.describe()));
+    let arrivals = spec.workload.arrivals(opts.requests, &mut Rng::new(opts.seed));
+    let replays = replay_all(&finalists, &arrivals, opts.threads);
+    let g = spec.workload.mean_gap();
+
+    let sim: Vec<f64> = replays.iter().map(|r| r.sim_energy_per_item.value()).collect();
+    let est: Vec<f64> = replays
+        .iter()
+        .map(|r| r.estimate.energy_per_item.value())
+        .collect();
+    let before = rank_agreement(&est, &sim);
+
+    let fitted = fit(spec, &replays);
+    let est_cal: Vec<f64> = replays
+        .iter()
+        .map(|r| fitted.energy_per_item(&r.estimate, g).value())
+        .collect();
+    let fitted_after = rank_agreement(&est_cal, &sim);
+
+    // never ship a fit that worsens the ranking: fall back to identity
+    // (post-calibration agreement is then exactly the pre-calibration one)
+    let (scales, after, fell_back) = if fitted_after.tau + 1e-12 >= before.tau {
+        (fitted, fitted_after, false)
+    } else {
+        (ModelScales::identity(), before, true)
+    };
+
+    Calibration {
+        spec: spec.clone(),
+        scales,
+        fell_back,
+        replays,
+        before,
+        after,
+        fitted: fitted_after,
+        sweep_best: None,
+    }
+}
+
+/// The full pipeline for one scenario: exhaustive sweep (pool-parallel,
+/// optionally budgeted) → streaming Pareto front as the finalist set →
+/// [`calibrate_finalists`].
+pub fn calibrate(spec: &AppSpec, opts: &CalibrateOpts) -> Calibration {
+    calibrate_and_refine(spec, opts).0
+}
+
+/// [`calibrate`] plus the refinement sweep, sharing one [`EvalPool`]:
+/// the refinement re-ranks the space through a [`CalibratedEstimator`]
+/// wrapped around the *same* pool the calibration sweep populated, so
+/// every candidate is a memo hit and the second pass costs zero
+/// estimator evaluations (`refined.evaluations == 0` on an unbudgeted
+/// run).  A budget set in `opts` governs the combined spend.
+pub fn calibrate_and_refine(spec: &AppSpec, opts: &CalibrateOpts) -> (Calibration, SearchResult) {
+    let space = super::design_space::enumerate(&spec.device_allowlist);
+    let mut pool = EvalPool::new(opts.threads);
+    if let Some(b) = opts.budget {
+        pool = pool.with_budget(b);
+    }
+    let sweep = Exhaustive.search_with(spec, &space, &mut pool);
+    let finalists = pool.take_front().into_members();
+    let mut cal = calibrate_finalists(spec, finalists, opts);
+    cal.sweep_best = sweep.best;
+    let refined = refine_with(spec, &space, CalibratedEstimator::new(pool, cal.scales));
+    (cal, refined)
+}
+
+/// Re-rank `space` through a calibrated evaluator in one full-space
+/// batch.  Not `Exhaustive::search_with`: on a budget-cut pool the
+/// sticky `budget_exhausted` flag would make its shard loop break after
+/// the first shard, skipping memoized candidates that cost nothing to
+/// re-rank.  A single `evaluate_batch` serves every memo hit for free
+/// and only refuses candidates the budget never reached.
+pub fn refine_with(
+    spec: &AppSpec,
+    space: &[super::design_space::Candidate],
+    mut eval: CalibratedEstimator,
+) -> SearchResult {
+    let start = eval.evaluations();
+    let mut best: Option<Estimate> = None;
+    for e in eval.evaluate_batch(spec, space).into_iter().flatten() {
+        if !e.feasible {
+            continue;
+        }
+        let better = match &best {
+            None => true,
+            Some(b) => e.score(spec.goal) > b.score(spec.goal),
+        };
+        if better {
+            best = Some(e);
+        }
+    }
+    SearchResult {
+        best,
+        evaluations: eval.evaluations() - start,
+        budget_exhausted: eval.budget_exhausted(),
+    }
+}
+
+/// An [`Evaluator`] that feeds corrected constants back into the sweep:
+/// it reuses an inner [`EvalPool`] (memo, budget accounting, worker
+/// threads — DES-fitted scales change joules, not which candidates are
+/// worth estimating) and replaces each estimate's closed-form
+/// energy-per-item with the calibration-corrected value.  Latency and
+/// GOPS/s/W are untouched: calibration corrects the workload-energy
+/// model only.
+pub struct CalibratedEstimator {
+    pool: EvalPool,
+    scales: ModelScales,
+}
+
+impl CalibratedEstimator {
+    pub fn new(pool: EvalPool, scales: ModelScales) -> CalibratedEstimator {
+        CalibratedEstimator { pool, scales }
+    }
+
+    pub fn scales(&self) -> ModelScales {
+        self.scales
+    }
+
+    /// Recover the inner pool (e.g. for its memo statistics).  Note the
+    /// pool's streaming Pareto front holds *uncorrected* estimates.
+    pub fn into_pool(self) -> EvalPool {
+        self.pool
+    }
+
+    fn correct(&self, spec: &AppSpec, mut e: Estimate) -> Estimate {
+        e.energy_per_item = self.scales.energy_per_item(&e, spec.workload.mean_gap());
+        e
+    }
+}
+
+impl Evaluator for CalibratedEstimator {
+    fn evaluate(&mut self, spec: &AppSpec, c: &super::design_space::Candidate) -> Option<Estimate> {
+        self.pool.evaluate(spec, c).map(|e| self.correct(spec, e))
+    }
+
+    fn evaluate_batch(
+        &mut self,
+        spec: &AppSpec,
+        cands: &[super::design_space::Candidate],
+    ) -> Vec<Option<Estimate>> {
+        self.pool
+            .evaluate_batch(spec, cands)
+            .into_iter()
+            .map(|o| o.map(|e| self.correct(spec, e)))
+            .collect()
+    }
+
+    fn evaluations(&self) -> usize {
+        self.pool.evaluations()
+    }
+
+    fn requests(&self) -> usize {
+        self.pool.requests()
+    }
+
+    fn budget_exhausted(&self) -> bool {
+        self.pool.budget_exhausted()
+    }
+}
+
+/// Standalone refinement sweep under corrected constants, on a fresh
+/// pool: re-rank the scenario's space through a [`CalibratedEstimator`].
+/// Bit-identical across thread counts.  When you already ran the
+/// calibration sweep, prefer [`calibrate_and_refine`], which reuses its
+/// fully-memoized pool instead of re-estimating the space.
+pub fn refine(spec: &AppSpec, scales: ModelScales, threads: usize) -> SearchResult {
+    let space = super::design_space::enumerate(&spec.device_allowlist);
+    let mut eval = CalibratedEstimator::new(EvalPool::new(threads), scales);
+    Exhaustive.search_with(spec, &space, &mut eval)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kendall_tau_extremes() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let same = rank_agreement(&a, &[10.0, 20.0, 30.0, 40.0]);
+        assert_eq!(same.tau, 1.0);
+        assert_eq!(same.crossovers, 0);
+        assert_eq!(same.pairs, 6);
+        let rev = rank_agreement(&a, &[4.0, 3.0, 2.0, 1.0]);
+        assert_eq!(rev.tau, -1.0);
+        assert_eq!(rev.crossovers, 6);
+        // ties count as neither
+        let tied = rank_agreement(&[1.0, 1.0], &[1.0, 2.0]);
+        assert_eq!(tied.tau, 0.0);
+        assert_eq!(tied.crossovers, 0);
+    }
+
+    #[test]
+    fn identity_scales_reproduce_closed_form() {
+        let spec = AppSpec::soft_sensor();
+        let space = super::super::design_space::enumerate(&["xc7s6"]);
+        let mut pool = EvalPool::new(1);
+        let e = pool.evaluate(&spec, &space[0]).unwrap();
+        let id = ModelScales::identity();
+        assert!(id.is_identity());
+        let again = id.energy_per_item(&e, spec.workload.mean_gap());
+        assert_eq!(again.value(), e.energy_per_item.value());
+    }
+
+    #[test]
+    fn fit_is_finite_and_fallback_guard_holds() {
+        let spec = AppSpec::soft_sensor();
+        let cal = calibrate(
+            &spec,
+            &CalibrateOpts { threads: 2, requests: 200, ..Default::default() },
+        );
+        assert!(!cal.replays.is_empty(), "sweep produced no finalists");
+        for s in [cal.scales.busy, cal.scales.idle, cal.scales.off, cal.scales.cold] {
+            assert!(s.is_finite() && s >= 0.0, "bad fitted scale {s}");
+        }
+        assert!(
+            cal.after.tau + 1e-12 >= cal.before.tau,
+            "guard violated: {} < {}",
+            cal.after.tau,
+            cal.before.tau
+        );
+        assert!(cal.sweep_best.is_some());
+    }
+}

@@ -36,6 +36,22 @@ impl StrategyKind {
             StrategyKind::LearnableThreshold => "learnable-threshold",
         }
     }
+
+    /// Instantiate the runtime strategy this kind deploys with (one
+    /// factory shared by every DES validation path: the calibration
+    /// replays, E7's winner validation, `elastic-gen simulate`).
+    pub fn instantiate(&self) -> Box<dyn crate::strategy::Strategy> {
+        use crate::strategy::{ClockScale, IdleWait, OnOff, PredefinedThreshold};
+        match self {
+            StrategyKind::OnOff => Box::new(OnOff),
+            StrategyKind::IdleWait => Box::new(IdleWait),
+            StrategyKind::ClockScale => Box::new(ClockScale),
+            StrategyKind::PredefinedThreshold => Box::new(PredefinedThreshold::breakeven()),
+            StrategyKind::LearnableThreshold => {
+                Box::new(crate::strategy::learnable::LearnableThreshold::default_grid())
+            }
+        }
+    }
 }
 
 /// One point in the design space.

@@ -34,6 +34,11 @@ pub struct Estimate {
     pub energy_per_item: Joules,
     pub act_error_lsb: f64,
     pub utilization: f64,
+    /// The strategy-facing cost model the closed-form numbers were derived
+    /// from.  Carried so the calibration loop can replay the candidate
+    /// through the DES and re-derive corrected energies without rebuilding
+    /// the accelerator (`generator::calibrate`).
+    pub cost: CostModel,
 }
 
 impl Estimate {
@@ -57,30 +62,87 @@ pub fn candidate_cost_model(acc: &Accelerator, c: &Candidate) -> CostModel {
     sim::cost_model(acc, c.device, Hertz::from_mhz(c.clock_mhz), &platform, &config)
 }
 
-/// Closed-form mean energy per served item for a strategy at mean gap `g`.
-pub fn strategy_energy_per_item(cost: &CostModel, kind: StrategyKind, g: Secs) -> Joules {
+/// Per-item energy split of the closed-form workload model, in the DES
+/// ledger's coordinates (busy / idle / off / cold≡config).  The split is
+/// what the calibration loop fits per-component against simulated
+/// ledgers (`generator::calibrate`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EnergyComponents {
+    /// Inference energy (busy power × busy time).
+    pub busy: Joules,
+    /// Configured-and-waiting energy across the gap.
+    pub idle: Joules,
+    /// Powered-down energy across the gap.
+    pub off: Joules,
+    /// Cold-start (power-up + configuration) energy.
+    pub cold: Joules,
+}
+
+impl EnergyComponents {
+    pub fn total(&self) -> Joules {
+        self.busy + self.idle + self.off + self.cold
+    }
+}
+
+/// Closed-form per-item energy components for a strategy at mean gap `g`
+/// (see [`EnergyComponents`]); [`strategy_energy_per_item`] is their sum.
+pub fn strategy_energy_components(
+    cost: &CostModel,
+    kind: StrategyKind,
+    g: Secs,
+) -> EnergyComponents {
+    let zero = Joules(0.0);
     let busy = cost.busy_power * cost.busy_time;
     let idle_gap = Secs((g.value() - cost.busy_time.value()).max(0.0));
     let idle = cost.idle_power * idle_gap;
-    let onoff = cost.cold_energy + cost.off_power * idle_gap;
+    let off = cost.off_power * idle_gap;
     match kind {
-        StrategyKind::OnOff => busy + onoff,
-        StrategyKind::IdleWait => busy + idle,
+        StrategyKind::OnOff => EnergyComponents {
+            busy,
+            idle: zero,
+            off,
+            cold: cost.cold_energy,
+        },
+        StrategyKind::IdleWait => EnergyComponents {
+            busy,
+            idle,
+            off: zero,
+            cold: zero,
+        },
         StrategyKind::ClockScale => {
             // stretch the inference across ~the whole gap; dynamic energy is
-            // f-invariant to first order, static burns for the full gap
+            // f-invariant to first order, static burns for the full gap.
+            // The dynamic share is clamped at zero like the DES's
+            // `scaled_busy`: under calibration corrections busy power can
+            // be scaled below idle power, and an unclamped negative term
+            // would let a refinement sweep crown a bogus winner.
             let t = g.value().max(cost.busy_time.value());
-            let dyn_e = (cost.busy_power.value() - cost.idle_power.value())
+            let dyn_e = (cost.busy_power.value() - cost.idle_power.value()).max(0.0)
                 * cost.busy_time.value();
-            Joules(dyn_e + cost.idle_power.value() * t)
+            EnergyComponents {
+                busy: Joules(dyn_e),
+                idle: Joules(cost.idle_power.value() * t),
+                off: zero,
+                cold: zero,
+            }
         }
         // threshold switches: the oracle bound (they approach the better
         // side of the crossover; the learnable variant tracks it under
         // drift — E4 quantifies the gap to this bound)
         StrategyKind::PredefinedThreshold | StrategyKind::LearnableThreshold => {
-            busy + Joules(idle.value().min(onoff.value()))
+            let onoff = cost.cold_energy + off;
+            if idle.value() <= onoff.value() {
+                EnergyComponents { busy, idle, off: zero, cold: zero }
+            } else {
+                EnergyComponents { busy, idle: zero, off, cold: cost.cold_energy }
+            }
         }
     }
+}
+
+/// Closed-form mean energy per served item for a strategy at mean gap `g`.
+pub fn strategy_energy_per_item(cost: &CostModel, kind: StrategyKind, g: Secs) -> Joules {
+    strategy_energy_components(cost, kind, g).total()
 }
 
 /// Template-level cache key: candidates differing only in clock/strategy
@@ -187,6 +249,7 @@ fn estimate_with_acc(spec: &AppSpec, c: &Candidate, acc: &Accelerator) -> Estima
         energy_per_item,
         act_error_lsb,
         utilization: synth.utilization,
+        cost,
     }
 }
 

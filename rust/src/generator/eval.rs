@@ -91,6 +91,42 @@ fn cand_key(spec: &AppSpec, c: &Candidate) -> CandKey {
     }
 }
 
+/// Deterministic parallel map: shards `items` across `threads` scoped
+/// workers in contiguous chunks and merges results in submission order,
+/// so the output is bit-identical across thread counts (the same
+/// contract [`EvalPool::evaluate_batch`] gives the searchers).  Used by
+/// the calibration loop to parallelise DES replays of a sweep's Pareto
+/// finalists.
+pub fn map_ordered<T, R, F>(threads: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let threads = threads.max(1);
+    if threads == 1 || items.len() < 2 {
+        return items.iter().map(&f).collect();
+    }
+    let workers = threads.min(items.len());
+    let chunk = items.len().div_ceil(workers);
+    let mut results: Vec<Option<R>> = Vec::with_capacity(items.len());
+    results.resize_with(items.len(), || None);
+    let f = &f;
+    std::thread::scope(|s| {
+        for (slots, part) in results.chunks_mut(chunk).zip(items.chunks(chunk)) {
+            s.spawn(move || {
+                for (slot, item) in slots.iter_mut().zip(part) {
+                    *slot = Some(f(item));
+                }
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|r| r.expect("worker filled its slot"))
+        .collect()
+}
+
 /// Worker count for host-sized pools (the estimator is compute-bound and
 /// memory-light; beyond ~8 workers the sweep is scheduling-dominated).
 pub fn default_threads() -> usize {

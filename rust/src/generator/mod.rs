@@ -8,15 +8,23 @@
 //! * [`eval`] — the parallel, budget-aware evaluation engine (EvalPool).
 //! * [`search`] — exhaustive / greedy / annealing / genetic + Pareto,
 //!   plus the concurrent heuristic portfolio driver.
+//! * [`calibrate`] — the estimator↔simulator loop: DES replay of Pareto
+//!   finalists, least-squares constant fitting, rank-agreement checks,
+//!   and the calibrated refinement sweep.
 
+pub mod calibrate;
 pub mod constraints;
 pub mod design_space;
 pub mod estimator;
 pub mod eval;
 pub mod search;
 
+pub use calibrate::{
+    calibrate, calibrate_and_refine, calibrate_finalists, refine, refine_with, CalibrateOpts,
+    CalibratedEstimator, Calibration, ModelScales, RankAgreement,
+};
 pub use constraints::{AppSpec, Goal};
 pub use design_space::{Candidate, StrategyKind};
 pub use estimator::{estimate, Estimate};
-pub use eval::{default_threads, EvalPool, Evaluator};
+pub use eval::{default_threads, map_ordered, EvalPool, Evaluator};
 pub use search::{generate, generate_portfolio, Portfolio, SearchResult, Searcher};

@@ -104,8 +104,9 @@ fn scaled_busy(cost: &CostModel, f: Hertz) -> (Secs, Watts) {
 /// Single-server FIFO simulation of a request stream under `strategy`.
 pub struct NodeSim {
     pub cost: CostModel,
-    /// Requests queued beyond this bound are dropped (sensor buffers are
-    /// finite on the Elastic Node).
+    /// Maximum number of in-flight items (the one in service plus the
+    /// queued backlog); arrivals beyond this bound are dropped (sensor
+    /// buffers are finite on the Elastic Node).
     pub queue_capacity: usize,
     /// EMA weight of the gap predictor feeding the strategy.
     pub predictor_alpha: f64,
@@ -132,6 +133,11 @@ impl NodeSim {
         let mut powered_off = true;
         // time the server becomes free (configured or off per `powered_off`)
         let mut t_free = 0.0f64;
+        // time up to which idle/off gap energy has been accounted; it
+        // advances to every arrival *before* the admission check, so a
+        // dropped request never leaves the gap behind it uncharged (the
+        // node was burning idle or off power regardless of the drop)
+        let mut t_acct = 0.0f64;
         let mut served = 0u64;
         let mut dropped = 0u64;
         // completion times of in-flight/queued work, for queue accounting
@@ -146,19 +152,25 @@ impl NodeSim {
                     break;
                 }
             }
-            if completions.len() > self.queue_capacity {
-                dropped += 1;
-                continue;
-            }
 
-            // idle/off energy across the gap before this service starts
-            if a > t_free {
-                let gap = Secs(a - t_free);
+            // idle/off energy across any gap the node spent waiting before
+            // this arrival (charged whether or not the request is admitted)
+            if a > t_acct {
+                let gap = Secs(a - t_acct);
                 if powered_off {
                     ledger.off += cost.off_power * gap;
                 } else {
                     ledger.idle += cost.idle_power * gap;
                 }
+                t_acct = a;
+            }
+
+            // admission: at most `queue_capacity` items in flight,
+            // counting the one in service (`>=`, not `>` — the off-by-one
+            // admitted capacity + 1)
+            if completions.len() >= self.queue_capacity {
+                dropped += 1;
+                continue;
             }
             let mut t = a.max(t_free);
 
@@ -184,6 +196,7 @@ impl NodeSim {
             energy_at_completion.push(ledger.total().value());
             completions.push_back(t);
             t_free = t;
+            t_acct = t;
 
             // decide what to do until the next request
             match strategy.decide(cost, predicted) {
@@ -314,6 +327,21 @@ mod tests {
         assert!(idle.latencies.last().unwrap() < &0.01);
     }
 
+    /// Synthetic cost model with service times that make queue dynamics
+    /// exactly predictable on millisecond-spaced traces.
+    fn slow_cost() -> CostModel {
+        CostModel {
+            cold_energy: Joules::from_mj(5.0),
+            cold_time: Secs::from_ms(50.0),
+            idle_power: Watts::from_mw(30.0),
+            off_power: Watts::from_mw(0.9),
+            busy_time: Secs::from_ms(100.0),
+            busy_power: Watts::from_mw(80.0),
+            clock: Hertz::from_mhz(100.0),
+            min_clock: Hertz::from_mhz(5.0),
+        }
+    }
+
     #[test]
     fn overload_drops_requests() {
         let (sim, _) = fixture();
@@ -325,5 +353,67 @@ mod tests {
         let r = sim.run(&arrivals, &mut OnOff);
         assert!(r.dropped > 0, "expected drops");
         assert_eq!(r.served + r.dropped, 2000);
+
+        // pin the exact admitted count: 10 arrivals 1 ms apart against a
+        // 100 ms service time, so the first completion lands long after
+        // the last arrival and exactly `queue_capacity` items (the one in
+        // service plus the backlog) are admitted.  The old `>` bound
+        // admitted capacity + 1.
+        let mut sim = NodeSim::new(slow_cost());
+        sim.queue_capacity = 3;
+        let arrivals: Vec<Secs> = (1..=10).map(|i| Secs(i as f64 * 1e-3)).collect();
+        let r = sim.run(&arrivals, &mut IdleWait);
+        assert_eq!(r.served, 3, "queue bound admitted {} items", r.served);
+        assert_eq!(r.dropped, 7);
+    }
+
+    #[test]
+    fn dropped_arrivals_do_not_skip_gap_energy() {
+        // capacity 0: every request is dropped, each inside an off gap;
+        // the ledger must still charge the off power up to each arrival
+        // (the old code `continue`d before the gap accounting)
+        let cost = slow_cost();
+        let mut sim = NodeSim::new(cost);
+        sim.queue_capacity = 0;
+        let r = sim.run(&[Secs(1.0), Secs(2.0)], &mut OnOff);
+        assert_eq!(r.served, 0);
+        assert_eq!(r.dropped, 2);
+        let expect = cost.off_power.value() * 2.0;
+        assert!(
+            (r.energy.off.value() - expect).abs() < 1e-12,
+            "off ledger {} != {expect}",
+            r.energy.off.value()
+        );
+        assert_eq!(r.energy.total().value(), r.energy.off.value());
+    }
+
+    #[test]
+    fn drop_leaves_ledger_identical_to_trace_without_it() {
+        // a request dropped mid-run must not perturb the energy
+        // accounting of the admitted ones: the ledger of a trace with the
+        // drop equals the ledger of the same trace with the dropped
+        // arrival removed (on-off ignores the gap predictor, which is the
+        // only state a dropped arrival can influence)
+        let mut sim = NodeSim::new(slow_cost());
+        sim.queue_capacity = 1;
+        let with_drop = sim.run(&[Secs(0.01), Secs(0.05), Secs(3.0)], &mut OnOff);
+        let without = sim.run(&[Secs(0.01), Secs(3.0)], &mut OnOff);
+        assert_eq!(with_drop.served, 2);
+        assert_eq!(with_drop.dropped, 1);
+        assert_eq!(without.served, 2);
+        assert_eq!(without.dropped, 0);
+        for (name, a, b) in [
+            ("config", with_drop.energy.config, without.energy.config),
+            ("busy", with_drop.energy.busy, without.energy.busy),
+            ("idle", with_drop.energy.idle, without.energy.idle),
+            ("off", with_drop.energy.off, without.energy.off),
+        ] {
+            assert!(
+                (a.value() - b.value()).abs() < 1e-15,
+                "{name}: {} vs {}",
+                a.value(),
+                b.value()
+            );
+        }
     }
 }

@@ -65,6 +65,23 @@ impl CostModel {
             PostAction::PowerOff => self.cold_energy + self.off_power * g,
         }
     }
+
+    /// A copy with multiplicative calibration corrections applied to the
+    /// energy constants.  The estimator↔simulator calibration loop
+    /// (`generator::calibrate`) fits one multiplier per energy term —
+    /// busy power (the `dyn_mw_per_mhz_per_klut` + DSP/BRAM surcharge
+    /// share), idle overhead, off overhead, cold-start energy — against
+    /// DES ledgers and feeds them back through this hook.  Time constants
+    /// are left untouched: the fit corrects joules, not latency.
+    pub fn with_corrections(&self, busy: f64, idle: f64, off: f64, cold: f64) -> CostModel {
+        CostModel {
+            cold_energy: Joules(self.cold_energy.value() * cold),
+            idle_power: Watts(self.idle_power.value() * idle),
+            off_power: Watts(self.off_power.value() * off),
+            busy_power: Watts(self.busy_power.value() * busy),
+            ..*self
+        }
+    }
 }
 
 /// Strategy interface: consulted after each completed request.

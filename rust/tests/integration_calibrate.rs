@@ -1,0 +1,128 @@
+//! Integration: the estimator↔simulator calibration loop — rank
+//! agreement floors per scenario, the tau-improvement guarantee,
+//! thread-count determinism of the DES replay stage, and the calibrated
+//! refinement sweep.
+
+use elastic_gen::generator::calibrate::{calibrate, calibrate_and_refine, refine, CalibrateOpts};
+use elastic_gen::generator::AppSpec;
+
+fn opts(threads: usize) -> CalibrateOpts {
+    CalibrateOpts {
+        threads,
+        requests: 300,
+        ..Default::default()
+    }
+}
+
+/// The headline contract: for every scenario, the closed-form model and
+/// the DES rank the Pareto finalists with Kendall tau above a pinned
+/// floor, both before and after calibration, and calibration never
+/// lowers it.
+#[test]
+fn rank_agreement_floor_every_scenario() {
+    for spec in AppSpec::scenarios() {
+        let cal = calibrate(&spec, &opts(2));
+        assert!(
+            cal.replays.len() >= 3,
+            "{}: only {} finalists to rank",
+            spec.name,
+            cal.replays.len()
+        );
+        assert!(
+            cal.before.tau > 0.1,
+            "{}: pre-calibration tau {} under the floor",
+            spec.name,
+            cal.before.tau
+        );
+        assert!(
+            cal.after.tau + 1e-12 >= cal.before.tau,
+            "{}: calibration lowered tau ({} < {})",
+            spec.name,
+            cal.after.tau,
+            cal.before.tau
+        );
+        assert!(
+            cal.after.tau > 0.1,
+            "{}: post-calibration tau {} under the floor",
+            spec.name,
+            cal.after.tau
+        );
+        // the fitted scales are usable numbers (identity when a component
+        // was never exercised by the finalists)
+        for (name, s) in [
+            ("busy", cal.scales.busy),
+            ("idle", cal.scales.idle),
+            ("off", cal.scales.off),
+            ("cold", cal.scales.cold),
+        ] {
+            assert!(s.is_finite() && s >= 0.0, "{}: scale {name} = {s}", spec.name);
+        }
+        // every finalist replayed without starving: feasible candidates
+        // sustain the workload rate, so the DES must serve the trace
+        for r in &cal.replays {
+            assert!(
+                r.served > 0,
+                "{}: finalist {} served nothing",
+                spec.name,
+                r.estimate.candidate.describe()
+            );
+        }
+    }
+}
+
+/// The whole pipeline — sweep, finalist ordering, DES replays, fit, tau —
+/// is bit-identical across thread counts (same contract as EvalPool).
+#[test]
+fn calibration_deterministic_across_thread_counts() {
+    let spec = AppSpec::soft_sensor();
+    let c1 = calibrate(&spec, &opts(1));
+    let c4 = calibrate(&spec, &opts(4));
+    assert_eq!(c1.scales, c4.scales);
+    assert_eq!(c1.before, c4.before);
+    assert_eq!(c1.after, c4.after);
+    assert_eq!(c1.fell_back, c4.fell_back);
+    assert_eq!(c1.replays.len(), c4.replays.len());
+    for (a, b) in c1.replays.iter().zip(&c4.replays) {
+        assert_eq!(
+            a.estimate.candidate.describe(),
+            b.estimate.candidate.describe()
+        );
+        assert_eq!(a.sim_energy_per_item.value(), b.sim_energy_per_item.value());
+        assert_eq!(a.served, b.served);
+        assert_eq!(a.dropped, b.dropped);
+    }
+}
+
+/// The refinement sweep reuses the EvalPool machinery: it finds a
+/// feasible best and is bit-identical across thread counts.
+#[test]
+fn refinement_sweep_deterministic_and_feasible() {
+    let spec = AppSpec::ecg_monitor();
+    let cal = calibrate(&spec, &opts(2));
+    let r1 = refine(&spec, cal.scales, 1);
+    let r4 = refine(&spec, cal.scales, 4);
+    let b1 = r1.best.expect("refinement found nothing feasible");
+    let b4 = r4.best.expect("refinement found nothing feasible");
+    assert!(b1.feasible);
+    assert_eq!(b1.candidate.describe(), b4.candidate.describe());
+    assert_eq!(b1.energy_per_item.value(), b4.energy_per_item.value());
+    assert_eq!(r1.evaluations, r4.evaluations);
+    // the corrected energies stay physical
+    assert!(b1.energy_per_item.value() > 0.0);
+}
+
+/// The combined pipeline reuses the calibration sweep's pool for the
+/// refinement, so the second pass is answered entirely from the memo.
+#[test]
+fn combined_refinement_costs_zero_evaluations() {
+    let spec = AppSpec::har_wearable();
+    let (cal, refined) = calibrate_and_refine(&spec, &opts(2));
+    assert!(!cal.replays.is_empty());
+    assert_eq!(
+        refined.evaluations, 0,
+        "refinement re-paid estimator evaluations instead of hitting the memo"
+    );
+    let best = refined.best.expect("refinement found nothing feasible");
+    assert!(best.feasible);
+    assert!(best.energy_per_item.value() > 0.0);
+}
