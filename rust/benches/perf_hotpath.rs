@@ -159,11 +159,50 @@ fn calibration_scaling() {
     );
 }
 
+/// The distributed sweep at 1/2/4 in-process workers: shard planner →
+/// concurrent worker sweeps (each with its shard-local calibration fit)
+/// → calibration-guarded merge.  Every worker count must merge to a
+/// front bit-identical to the single-process sweep — the subsystem's
+/// determinism contract — and spend exactly the same evaluation count.
+fn dist_scaling() {
+    use elastic_gen::generator::dist::{
+        assert_front_parity, single_process_reference, DistOpts, DistSweep, WorkerMode,
+    };
+    let spec = AppSpec::har_wearable();
+    let (reference, _, ref_evals) = single_process_reference(&spec, None, default_threads());
+    println!();
+    let mut base_wall = 0.0;
+    for &workers in &[1usize, 2, 4] {
+        let t0 = Instant::now();
+        let out = DistSweep::new(DistOpts {
+            workers,
+            mode: WorkerMode::InProcess,
+            requests: 120,
+            ..DistOpts::default()
+        })
+        .run(&spec)
+        .expect("distributed sweep failed");
+        let wall = t0.elapsed().as_secs_f64();
+        assert_front_parity(&reference, &out.front)
+            .expect("merged front diverged from the single-process sweep");
+        assert_eq!(out.evaluations, ref_evals, "evaluation counts diverged");
+        if workers == 1 {
+            base_wall = wall;
+        }
+        println!(
+            "dist-scaling/{workers}-worker: {} evals, front {} in {wall:.3}s ({:.2}x vs 1 worker)",
+            out.evaluations,
+            out.front.len(),
+            base_wall / wall
+        );
+    }
+}
+
 fn main() {
     elastic_gen::bench::banner(
         "PERF",
         "hot-path microbenchmarks",
-        "DSE estimator, DES engine, calibration replay, shard scaling, behavioural exec",
+        "DSE estimator, DES engine, calibration replay, dist merge, shard scaling, behavioural exec",
     );
     let target = default_target();
     let mut results = Vec::new();
@@ -201,6 +240,9 @@ fn main() {
 
     // --- calibration: parallel DES replay + fit -----------------------------
     calibration_scaling();
+
+    // --- distributed sweep: shard + merge parity across worker counts -------
+    dist_scaling();
 
     // --- coordinator shard scaling (hermetic, synthetic engine) ------------
     coordinator_scaling();

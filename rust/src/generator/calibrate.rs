@@ -62,6 +62,34 @@ impl ModelScales {
         let cost = e.cost.with_corrections(self.busy, self.idle, self.off, self.cold);
         strategy_energy_per_item(&cost, e.candidate.strategy, g)
     }
+
+    /// Weighted mean of several fits, per component — how the distributed
+    /// DSE driver folds trusted shards' per-host scales into one
+    /// consensus correction (weights are each shard's replayed-finalist
+    /// count).  Zero total weight falls back to the identity.
+    pub fn weighted_mean(fits: &[(ModelScales, f64)]) -> ModelScales {
+        let mut acc = [0.0f64; 4];
+        let mut total = 0.0f64;
+        for (s, w) in fits {
+            if !w.is_finite() || *w <= 0.0 {
+                continue;
+            }
+            acc[0] += s.busy * w;
+            acc[1] += s.idle * w;
+            acc[2] += s.off * w;
+            acc[3] += s.cold * w;
+            total += w;
+        }
+        if total <= 0.0 {
+            return ModelScales::identity();
+        }
+        ModelScales {
+            busy: acc[0] / total,
+            idle: acc[1] / total,
+            off: acc[2] / total,
+            cold: acc[3] / total,
+        }
+    }
 }
 
 impl Default for ModelScales {
@@ -439,6 +467,20 @@ mod tests {
         let tied = rank_agreement(&[1.0, 1.0], &[1.0, 2.0]);
         assert_eq!(tied.tau, 0.0);
         assert_eq!(tied.crossovers, 0);
+    }
+
+    #[test]
+    fn weighted_mean_of_scales() {
+        let a = ModelScales { busy: 2.0, idle: 1.0, off: 1.0, cold: 4.0 };
+        let b = ModelScales { busy: 4.0, idle: 3.0, off: 1.0, cold: 0.0 };
+        let m = ModelScales::weighted_mean(&[(a, 1.0), (b, 3.0)]);
+        assert_eq!(m.busy, 3.5);
+        assert_eq!(m.idle, 2.5);
+        assert_eq!(m.off, 1.0);
+        assert_eq!(m.cold, 1.0);
+        // zero / non-finite weights are skipped; empty input -> identity
+        assert!(ModelScales::weighted_mean(&[]).is_identity());
+        assert!(ModelScales::weighted_mean(&[(a, 0.0), (b, f64::NAN)]).is_identity());
     }
 
     #[test]

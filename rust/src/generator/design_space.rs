@@ -37,6 +37,12 @@ impl StrategyKind {
         }
     }
 
+    /// Inverse of [`StrategyKind::name`] — the wire encoding used by the
+    /// distributed DSE shard protocol (`generator::dist`).
+    pub fn parse(name: &str) -> Option<StrategyKind> {
+        StrategyKind::all().iter().copied().find(|k| k.name() == name)
+    }
+
     /// Instantiate the runtime strategy this kind deploys with (one
     /// factory shared by every DES validation path: the calibration
     /// replays, E7's winner validation, `elastic-gen simulate`).
@@ -248,6 +254,14 @@ mod tests {
         let only = enumerate(&["xc7s6"]);
         assert!(only.iter().all(|c| c.device.name == "xc7s6"));
         assert!(!only.is_empty());
+    }
+
+    #[test]
+    fn strategy_names_roundtrip() {
+        for k in StrategyKind::all() {
+            assert_eq!(StrategyKind::parse(k.name()), Some(*k));
+        }
+        assert_eq!(StrategyKind::parse("warp-drive"), None);
     }
 
     #[test]

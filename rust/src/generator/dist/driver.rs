@@ -1,0 +1,398 @@
+//! [`DistSweep`]: the distributed-DSE driver.  Plans shards, runs them
+//! on N workers (subprocesses speaking the stdin/stdout JSON protocol,
+//! or in-process for hermetic tests and benches), reassigns
+//! crashed/timed-out shards, and performs the calibration-guarded merge
+//! into one streaming [`ParetoFront`].
+//!
+//! Determinism: dominance is always evaluated in the *uncorrected*
+//! closed form's coordinates — the common reference frame every host
+//! shares — and the driver re-derives each wire candidate's estimate
+//! with the same pure estimator the workers used, so the merged front is
+//! bit-identical to the single-process sweep for any worker count and
+//! any crash/reassignment history.  The calibration guard decides
+//! *trust*, not membership: a shard whose fitted tau clears the floor
+//! contributes its `ModelScales` to the consensus correction, while a
+//! disagreeing shard's finalists are re-ranked through a DES replay
+//! (ground-truth-first fold order) and its fit is quarantined.
+
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context};
+
+use crate::generator::calibrate::{replay_all, ModelScales};
+use crate::generator::constraints::AppSpec;
+use crate::generator::estimator::{estimate_cached, Estimate, EstimatorCache};
+use crate::generator::eval::{EvalPool, Evaluator};
+use crate::generator::search::exhaustive::Exhaustive;
+use crate::generator::search::pareto::ParetoFront;
+use crate::generator::search::Searcher;
+use crate::util::rng::Rng;
+
+use super::plan::plan_shards;
+use super::wire::ShardSpec;
+use super::worker::{run_shard, ShardResult};
+
+/// How shards are executed.
+#[derive(Debug, Clone)]
+pub enum WorkerMode {
+    /// Run shards inside this process (hermetic: tier-1 tests, benches).
+    InProcess,
+    /// Spawn `<exe> dse-worker` per shard — the production path.  Use
+    /// `std::env::current_exe()` to shard across copies of the running
+    /// binary.
+    Subprocess(PathBuf),
+}
+
+/// Knobs for a distributed sweep.
+#[derive(Debug, Clone)]
+pub struct DistOpts {
+    /// Shard / worker count.
+    pub workers: usize,
+    pub mode: WorkerMode,
+    /// Global evaluation budget (the planner splits it per stripe so the
+    /// union of shard prefixes equals the single-process prefix).
+    pub budget: Option<usize>,
+    /// Workload-trace seed shared by every shard's calibration replay.
+    pub seed: u64,
+    /// Replay trace length per finalist.
+    pub requests: usize,
+    /// Worker-local `EvalPool` width (keep at 1 when `workers` already
+    /// saturates the host — shards are the parallelism axis here).
+    pub threads: usize,
+    /// Kendall-tau floor a shard's shipped agreement must clear for its
+    /// fit to join the consensus; at or below it the shard counts as
+    /// disagreeing and its finalists are DES-replayed before folding.
+    pub tau_floor: f64,
+    /// Wall-clock cap per subprocess attempt before the worker is
+    /// killed and the shard retried/reassigned.
+    pub timeout: Duration,
+    /// Subprocess attempts per shard before in-process reassignment.
+    pub attempts: usize,
+}
+
+impl Default for DistOpts {
+    fn default() -> DistOpts {
+        DistOpts {
+            workers: 2,
+            mode: WorkerMode::InProcess,
+            budget: None,
+            seed: 11,
+            requests: 200,
+            threads: 1,
+            tau_floor: 0.0,
+            timeout: Duration::from_secs(300),
+            attempts: 2,
+        }
+    }
+}
+
+/// One shard's execution record inside a [`DistOutcome`].
+#[derive(Debug)]
+pub struct ShardRun {
+    pub result: ShardResult,
+    /// Worker attempts consumed (1 = first try succeeded; includes the
+    /// in-process reassignment when every subprocess attempt failed).
+    pub attempts: usize,
+    /// True when the shard was reassigned to an in-process worker after
+    /// its subprocess attempts failed or timed out.
+    pub reassigned: bool,
+    /// The last subprocess failure that forced the reassignment (spawn
+    /// error, timeout, bad exit, undecodable output) — `None` unless
+    /// `reassigned`.
+    pub failure: Option<String>,
+    /// True when the calibration guard tripped: the shard's finalists
+    /// were re-ranked through a DES replay before folding and its fit
+    /// was kept out of the consensus scales.
+    pub reranked: bool,
+}
+
+/// Outcome of a distributed sweep.
+#[derive(Debug)]
+pub struct DistOutcome {
+    pub spec: AppSpec,
+    /// Merged streaming front, in the uncorrected closed form's
+    /// coordinates — bit-identical to the single-process sweep.
+    pub front: ParetoFront,
+    /// Global best by the spec's goal (exact score ties broken by
+    /// global enumeration index, matching the local sweep).
+    pub best: Option<Estimate>,
+    pub shards: Vec<ShardRun>,
+    /// Estimator evaluations summed over all shards.
+    pub evaluations: usize,
+    /// Finalist-weighted mean of the trusted shards' fitted scales —
+    /// the correction a downstream refinement sweep should use.
+    pub consensus: ModelScales,
+    /// Shards that needed in-process reassignment.
+    pub reassigned: usize,
+    /// Shards whose calibration guard tripped.
+    pub reranked: usize,
+    /// True when any shard hit its budget slice.
+    pub budget_exhausted: bool,
+}
+
+/// The distributed sweep driver (see module docs).
+pub struct DistSweep {
+    opts: DistOpts,
+}
+
+impl DistSweep {
+    pub fn new(opts: DistOpts) -> DistSweep {
+        DistSweep { opts }
+    }
+
+    pub fn opts(&self) -> &DistOpts {
+        &self.opts
+    }
+
+    /// Plan, execute (workers in parallel), merge.
+    pub fn run(&self, spec: &AppSpec) -> anyhow::Result<DistOutcome> {
+        let o = &self.opts;
+        let plans = plan_shards(spec, o.workers, o.budget, o.seed, o.requests, o.threads);
+
+        let executed: Vec<anyhow::Result<Executed>> =
+            std::thread::scope(|s| {
+                let handles: Vec<_> = plans
+                    .iter()
+                    .map(|p| s.spawn(move || self.execute(p)))
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("shard thread panicked"))
+                    .collect()
+            });
+
+        // merge in shard order (membership is order-independent; the
+        // order only fixes which duplicate-free sequence the streaming
+        // front saw, for reproducible logs)
+        let mut front = ParetoFront::new();
+        let mut cache = EstimatorCache::new();
+        let mut fits: Vec<(ModelScales, f64)> = Vec::new();
+        let mut best: Option<(Estimate, usize)> = None;
+        let mut shards: Vec<ShardRun> = Vec::with_capacity(plans.len());
+        let mut evaluations = 0usize;
+        let mut budget_exhausted = false;
+        // the same shared trace the workers fitted against, for the
+        // guard's own replays
+        let arrivals = spec.workload.arrivals(o.requests, &mut Rng::new(o.seed));
+
+        for (p, outcome) in plans.iter().zip(executed) {
+            let (result, attempts, failure) =
+                outcome.with_context(|| format!("shard {}/{}", p.shard, p.of))?;
+            let reassigned = failure.is_some();
+            anyhow::ensure!(
+                result.app == spec.name && result.shard == p.shard && result.of == p.of,
+                "worker answered for the wrong shard: {}/{} of '{}'",
+                result.shard,
+                result.of,
+                result.app
+            );
+
+            // decode + deterministic re-estimation: the estimator is a
+            // pure function of (spec, candidate), so re-deriving each
+            // finalist locally reproduces the worker's exact numbers —
+            // the wire carries candidates, not floats to trust
+            let members: Vec<Estimate> = result
+                .front
+                .iter()
+                .map(|c| estimate_cached(spec, c, &mut cache))
+                .collect();
+
+            let trusted = result.post.pairs < 2 || result.post.tau > o.tau_floor;
+            if trusted {
+                if !result.fell_back && !result.front.is_empty() {
+                    fits.push((result.scales, result.front.len() as f64));
+                }
+                for e in &members {
+                    front.insert(e);
+                }
+            } else {
+                // calibration guard: this shard's estimator ranking
+                // disagrees with the DES, so validate before folding —
+                // replay its finalists (map_ordered under the hood) and
+                // fold them ground-truth-first; its fit stays out of
+                // the consensus
+                let replays = replay_all(&members, &arrivals, o.threads.max(1));
+                let mut order: Vec<usize> = (0..members.len()).collect();
+                order.sort_by(|&a, &b| {
+                    replays[a]
+                        .sim_energy_per_item
+                        .value()
+                        .total_cmp(&replays[b].sim_energy_per_item.value())
+                });
+                for i in order {
+                    front.insert(&members[i]);
+                }
+            }
+
+            if let (Some(c), Some(idx)) = (&result.best, result.best_index) {
+                let e = estimate_cached(spec, c, &mut cache);
+                let better = match &best {
+                    None => true,
+                    Some((b, bi)) => {
+                        let (sa, sb) = (e.score(spec.goal), b.score(spec.goal));
+                        sa > sb || (sa == sb && idx < *bi)
+                    }
+                };
+                if better {
+                    best = Some((e, idx));
+                }
+            }
+
+            evaluations += result.evaluations;
+            budget_exhausted |= result.budget_exhausted;
+            shards.push(ShardRun {
+                reranked: !trusted,
+                result,
+                attempts,
+                reassigned,
+                failure,
+            });
+        }
+
+        let consensus = ModelScales::weighted_mean(&fits);
+        Ok(DistOutcome {
+            spec: spec.clone(),
+            front,
+            best: best.map(|(e, _)| e),
+            evaluations,
+            consensus,
+            reassigned: shards.iter().filter(|s| s.reassigned).count(),
+            reranked: shards.iter().filter(|s| s.reranked).count(),
+            budget_exhausted,
+            shards,
+        })
+    }
+
+    /// Run one shard under the configured mode, with retry + in-process
+    /// reassignment for failed subprocess workers.  Returns
+    /// `(result, attempts, last_failure)` — `last_failure` is `Some`
+    /// exactly when the shard was reassigned in-process.
+    fn execute(&self, plan: &ShardSpec) -> anyhow::Result<Executed> {
+        match &self.opts.mode {
+            WorkerMode::InProcess => run_shard(plan).map(|r| (r, 1, None)),
+            WorkerMode::Subprocess(exe) => {
+                let payload = plan.to_json().dump();
+                let mut attempts = 0usize;
+                let mut last_err = String::new();
+                while attempts < self.opts.attempts.max(1) {
+                    attempts += 1;
+                    let decoded = spawn_worker(exe, &payload, self.opts.timeout)
+                        .and_then(|out| ShardResult::from_json_str(&out));
+                    match decoded {
+                        Ok(r) => return Ok((r, attempts, None)),
+                        Err(e) => last_err = format!("{e:#}"),
+                    }
+                }
+                // every subprocess attempt crashed, hung or spoke
+                // garbage: reassign the shard to an in-process worker so
+                // the sweep completes with an unchanged merged front,
+                // keeping the last failure as the reassignment cause
+                run_shard(plan).map(|r| (r, attempts + 1, Some(last_err)))
+            }
+        }
+    }
+}
+
+/// `execute`'s outcome: result, attempts, and — when the shard had to be
+/// reassigned in-process — the last subprocess failure.
+type Executed = (ShardResult, usize, Option<String>);
+
+/// Spawn `<exe> dse-worker`, feed it the shard spec, enforce the wall
+/// cap, and return its stdout.
+fn spawn_worker(exe: &Path, payload: &str, timeout: Duration) -> anyhow::Result<String> {
+    let mut child = Command::new(exe)
+        .arg("dse-worker")
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .with_context(|| format!("spawning worker {}", exe.display()))?;
+
+    // hand over the spec and close stdin so the worker sees EOF; a
+    // worker that already died yields a broken pipe here, which the
+    // exit-status check below reports as the real failure
+    if let Some(mut sin) = child.stdin.take() {
+        let _ = sin.write_all(payload.as_bytes());
+    }
+
+    // drain stdout on a helper thread so a large result cannot dead-lock
+    // against a full pipe while we poll for exit
+    let mut sout = child.stdout.take().expect("stdout was piped");
+    let reader = std::thread::spawn(move || {
+        let mut buf = String::new();
+        let _ = sout.read_to_string(&mut buf);
+        buf
+    });
+
+    let deadline = Instant::now() + timeout;
+    let status = loop {
+        match child.try_wait().context("polling worker")? {
+            Some(status) => break status,
+            None if Instant::now() >= deadline => {
+                let _ = child.kill();
+                let _ = child.wait();
+                let _ = reader.join();
+                anyhow::bail!("worker timed out after {timeout:?}");
+            }
+            None => std::thread::sleep(Duration::from_millis(5)),
+        }
+    };
+    let out = reader
+        .join()
+        .map_err(|_| anyhow!("worker stdout reader panicked"))?;
+    anyhow::ensure!(status.success(), "worker exited with {status}");
+    Ok(out)
+}
+
+/// The single-process reference sweep with identical budget semantics —
+/// what `generate` produces locally.  Returns the streaming front, the
+/// best estimate, and the evaluation count.
+pub fn single_process_reference(
+    spec: &AppSpec,
+    budget: Option<usize>,
+    threads: usize,
+) -> (ParetoFront, Option<Estimate>, usize) {
+    let space = crate::generator::design_space::enumerate(&spec.device_allowlist);
+    let mut pool = EvalPool::new(threads.max(1));
+    if let Some(b) = budget {
+        pool = pool.with_budget(b);
+    }
+    let r = Exhaustive.search_with(spec, &space, &mut pool);
+    let evaluations = pool.evaluations();
+    (pool.take_front(), r.best, evaluations)
+}
+
+/// Bit-identity check between a reference front and a merged one: same
+/// membership by describe key, bit-equal objective vectors per member.
+pub fn assert_front_parity(reference: &ParetoFront, merged: &ParetoFront) -> anyhow::Result<()> {
+    let key = |e: &Estimate| {
+        (
+            e.candidate.describe(),
+            e.energy_per_item.value().to_bits(),
+            e.response_latency.value().to_bits(),
+            e.utilization.to_bits(),
+        )
+    };
+    let mut a: Vec<_> = reference.iter().map(key).collect();
+    let mut b: Vec<_> = merged.iter().map(key).collect();
+    a.sort();
+    b.sort();
+    anyhow::ensure!(
+        a.len() == b.len(),
+        "front size differs: reference {} vs merged {}",
+        a.len(),
+        b.len()
+    );
+    for (x, y) in a.iter().zip(&b) {
+        anyhow::ensure!(
+            x == y,
+            "front member differs: reference '{}' vs merged '{}'",
+            x.0,
+            y.0
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Distributed DSE: process-sharded sweeps with calibration-guarded
+//! Pareto-front merging — the subsystem that turns the single-machine
+//! generator into a distributable exploration service.
+//!
+//! Pipeline (see DESIGN.md "Distributed DSE"):
+//!
+//! * [`plan`] — the shard planner: partitions a scenario's design space
+//!   into disjoint candidate stripes over the enumeration order (shard
+//!   `s` of `N` owns global indices `s, s+N, s+2N, …`), so shards carry
+//!   comparable estimator cost, and splits an evaluation budget so the
+//!   union of per-shard prefixes is exactly the single-process budget
+//!   prefix.
+//! * [`wire`] — the host-portable JSON protocol (`util::json`): shard
+//!   specs in, self-contained shard results out, candidates encoded by
+//!   their axis fields and keyed by `Candidate::describe()` (decode
+//!   re-derives the key and rejects mismatches, so a corrupt or
+//!   cross-version payload cannot silently fold into a front).
+//! * [`worker`] — one shard's work: stripe sweep through an `EvalPool`,
+//!   shard-local Pareto front, per-component `ModelScales` fitted on the
+//!   shard's finalists via DES replay, and Kendall-tau agreement — the
+//!   payload behind the `elastic-gen dse-worker` subcommand.
+//! * [`driver`] — [`DistSweep`]: spawns N workers (subprocesses or
+//!   in-process for hermetic tests), reassigns crashed/timed-out shards,
+//!   and performs the calibration-guarded merge into one streaming
+//!   `ParetoFront`.
+//!
+//! Determinism contract: dominance is always evaluated in the
+//! *uncorrected* closed form's coordinates — the common reference frame
+//! every host shares — so the merged front is bit-identical to the
+//! single-process sweep for any worker count (including one), and
+//! independent of which shards crashed and were reassigned.  Per-shard
+//! `ModelScales` travel with each front; shards whose fitted tau clears
+//! the floor contribute to the consensus correction, while a disagreeing
+//! shard's finalists are re-ranked through a DES replay
+//! (ground-truth-first fold order, surfaced per shard) and its fit is
+//! quarantined from the consensus.
+
+pub mod driver;
+pub mod plan;
+pub mod wire;
+pub mod worker;
+
+pub use driver::{
+    assert_front_parity, single_process_reference, DistOutcome, DistOpts, DistSweep, ShardRun,
+    WorkerMode,
+};
+pub use plan::{plan_shards, stripe, stripe_budget};
+pub use wire::ShardSpec;
+pub use worker::{run_shard, worker_stdio, ShardResult};

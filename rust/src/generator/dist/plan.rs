@@ -1,0 +1,125 @@
+//! The shard planner: disjoint, cost-balanced partitions of a scenario's
+//! design space plus the budget split that keeps a distributed sweep
+//! bit-identical to the single-process one.
+//!
+//! Shards are *striped* over the enumeration order — shard `s` of `N`
+//! owns global indices `s, s+N, s+2N, …` — rather than chunked, because
+//! the enumeration nests the expensive axes (device, format, activation
+//! pair) outermost: a contiguous chunk would hand one worker all the
+//! large-device candidates while another sweeps only cheap ones, and the
+//! sweep would run at the speed of the slowest chunk.  Striping
+//! interleaves every axis, so shard costs stay within one candidate of
+//! each other.
+
+use crate::generator::constraints::AppSpec;
+use crate::generator::design_space::Candidate;
+
+use super::wire::ShardSpec;
+
+/// The candidates shard `shard` of `of` owns, in enumeration order.
+pub fn stripe(space: &[Candidate], shard: usize, of: usize) -> Vec<Candidate> {
+    let of = of.max(1);
+    space
+        .iter()
+        .skip(shard)
+        .step_by(of)
+        .cloned()
+        .collect()
+}
+
+/// Portion of a global evaluation budget that lands on shard `shard` of
+/// `of`: the number of global enumeration indices `< total` congruent to
+/// `shard (mod of)`.  Because a budgeted `EvalPool` spends on the first
+/// candidates it sees, the union of every shard's budget prefix is then
+/// exactly the single-process sweep's first-`total` prefix — which is
+/// what keeps budgeted distributed sweeps bit-identical to local ones.
+pub fn stripe_budget(total: usize, shard: usize, of: usize) -> usize {
+    let of = of.max(1);
+    total / of + usize::from(shard < total % of)
+}
+
+/// Plan one shard spec per worker for a scenario.  `budget` is the
+/// *global* evaluation budget (split per stripe); `seed`/`requests`
+/// parameterise each worker's shard-local calibration replay; `threads`
+/// is the worker-local `EvalPool` width.
+pub fn plan_shards(
+    spec: &AppSpec,
+    workers: usize,
+    budget: Option<usize>,
+    seed: u64,
+    requests: usize,
+    threads: usize,
+) -> Vec<ShardSpec> {
+    let workers = workers.max(1);
+    (0..workers)
+        .map(|shard| ShardSpec {
+            app: spec.name.clone(),
+            shard,
+            of: workers,
+            budget: budget.map(|b| stripe_budget(b, shard, workers)),
+            seed,
+            requests,
+            threads,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generator::design_space::enumerate;
+
+    #[test]
+    fn stripes_partition_the_space() {
+        let space = enumerate(&["xc7s6", "xc7s15"]);
+        for of in [1usize, 2, 3, 4, 7] {
+            let mut seen = vec![false; space.len()];
+            let mut total = 0usize;
+            for shard in 0..of {
+                for (j, c) in stripe(&space, shard, of).iter().enumerate() {
+                    let global = shard + j * of;
+                    assert_eq!(c.describe(), space[global].describe());
+                    assert!(!seen[global], "index {global} assigned twice");
+                    seen[global] = true;
+                    total += 1;
+                }
+            }
+            assert_eq!(total, space.len(), "stripes at of={of} do not cover");
+        }
+    }
+
+    #[test]
+    fn stripe_sizes_balanced_within_one() {
+        let space = enumerate(&["xc7s15"]);
+        for of in [2usize, 3, 5] {
+            let sizes: Vec<usize> = (0..of).map(|s| stripe(&space, s, of).len()).collect();
+            let (lo, hi) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(hi - lo <= 1, "{sizes:?}");
+        }
+    }
+
+    #[test]
+    fn budget_split_sums_and_matches_prefix_counts() {
+        for (total, of) in [(0usize, 3usize), (1, 3), (7, 3), (100, 4), (101, 4), (5, 8)] {
+            let parts: Vec<usize> = (0..of).map(|s| stripe_budget(total, s, of)).collect();
+            assert_eq!(parts.iter().sum::<usize>(), total, "{total}/{of}");
+            // each part equals the count of indices < total in that stripe
+            for (s, p) in parts.iter().enumerate() {
+                let count = (0..total).filter(|j| j % of == s).count();
+                assert_eq!(*p, count, "total={total} of={of} shard={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_covers_workers_and_splits_budget() {
+        let spec = AppSpec::soft_sensor();
+        let plans = plan_shards(&spec, 4, Some(10), 7, 100, 1);
+        assert_eq!(plans.len(), 4);
+        assert!(plans.iter().all(|p| p.app == spec.name && p.of == 4));
+        let granted: usize = plans.iter().map(|p| p.budget.unwrap()).sum();
+        assert_eq!(granted, 10);
+        let unbudgeted = plan_shards(&spec, 2, None, 7, 100, 1);
+        assert!(unbudgeted.iter().all(|p| p.budget.is_none()));
+    }
+}

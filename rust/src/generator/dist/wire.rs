@@ -1,0 +1,454 @@
+//! The distributed-DSE wire format: JSON shard specs and shard results
+//! over stdin/stdout (`util::json` — serde is not in the vendored crate
+//! set).
+//!
+//! Candidates cross the wire as their axis fields plus a `key` field
+//! holding `Candidate::describe()`.  The decoder re-materialises the
+//! candidate from the fields and re-derives the key; a mismatch (corrupt
+//! payload, schema drift, a worker built from different axis tables)
+//! rejects the candidate instead of silently folding a wrong design
+//! point into a Pareto front.  Everything else on the wire is scalars,
+//! so a result decoded on any host is bit-identical to the worker's —
+//! the JSON writer prints f64s in shortest-round-trip form.
+
+use anyhow::{anyhow, Context};
+
+use crate::fpga::device;
+use crate::generator::calibrate::{ModelScales, RankAgreement};
+use crate::generator::design_space::{sigmoid_variants, tanh_variants, Candidate, StrategyKind};
+use crate::rtl::activation::{ActImpl, ActKind, ActVariant};
+use crate::rtl::fixed_point::QFormat;
+use crate::util::json::{parse, Json};
+
+use super::worker::ShardResult;
+
+/// Schema tags so a driver can reject a worker speaking another version.
+pub const SPEC_SCHEMA: &str = "elastic-gen/dse-shard-spec/v1";
+pub const RESULT_SCHEMA: &str = "elastic-gen/dse-shard-result/v1";
+
+/// One shard's work order: which stripe of which scenario's enumeration,
+/// under what budget, and how the shard-local calibration replay is
+/// parameterised.  This is what `elastic-gen dse-worker` reads on stdin.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// Scenario name (`AppSpec::scenarios()` entry).
+    pub app: String,
+    /// Stripe index in `0..of`.
+    pub shard: usize,
+    /// Total shard count.
+    pub of: usize,
+    /// Shard-local evaluation budget (already split by the planner).
+    pub budget: Option<usize>,
+    /// Workload-trace seed for the shard-local calibration replay (the
+    /// driver hands every shard the same seed).
+    pub seed: u64,
+    /// Replay trace length per finalist.
+    pub requests: usize,
+    /// Worker-local `EvalPool` width.
+    pub threads: usize,
+}
+
+// -- field accessors ---------------------------------------------------------
+
+fn num(j: &Json, k: &str) -> anyhow::Result<f64> {
+    j.get(k)
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| anyhow!("missing or non-numeric field '{k}'"))
+}
+
+fn uint(j: &Json, k: &str) -> anyhow::Result<usize> {
+    let x = num(j, k)?;
+    anyhow::ensure!(x >= 0.0 && x.fract() == 0.0, "field '{k}' is not a whole number: {x}");
+    Ok(x as usize)
+}
+
+fn string<'a>(j: &'a Json, k: &str) -> anyhow::Result<&'a str> {
+    j.get(k)
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("missing or non-string field '{k}'"))
+}
+
+fn boolean(j: &Json, k: &str) -> anyhow::Result<bool> {
+    j.get(k)
+        .and_then(|v| v.as_bool())
+        .ok_or_else(|| anyhow!("missing or non-bool field '{k}'"))
+}
+
+fn check_schema(j: &Json, want: &str) -> anyhow::Result<()> {
+    let got = string(j, "schema")?;
+    anyhow::ensure!(got == want, "schema mismatch: got '{got}', want '{want}'");
+    Ok(())
+}
+
+// -- candidate codec ---------------------------------------------------------
+
+fn act_kind_name(k: ActKind) -> &'static str {
+    match k {
+        ActKind::Sigmoid => "sigmoid",
+        ActKind::Tanh => "tanh",
+        ActKind::HardSigmoid => "hardsigmoid",
+        ActKind::HardTanh => "hardtanh",
+    }
+}
+
+fn act_impl_name(i: ActImpl) -> &'static str {
+    match i {
+        ActImpl::Exact => "exact",
+        ActImpl::Pla => "pla",
+        ActImpl::Lut => "lut",
+        ActImpl::Hard => "hard",
+    }
+}
+
+fn encode_act(v: ActVariant) -> Json {
+    Json::obj(vec![
+        ("kind", Json::Str(act_kind_name(v.kind).to_string())),
+        ("impl", Json::Str(act_impl_name(v.imp).to_string())),
+    ])
+}
+
+fn decode_act(j: &Json, field: &str) -> anyhow::Result<ActVariant> {
+    let obj = j.get(field).ok_or_else(|| anyhow!("missing field '{field}'"))?;
+    let kind = string(obj, "kind")?;
+    let imp = string(obj, "impl")?;
+    ActVariant::parse(kind, imp)
+        .ok_or_else(|| anyhow!("unknown activation variant {kind}/{imp} in '{field}'"))
+}
+
+/// Encode a candidate host-portably: axis fields plus the describe key.
+pub fn encode_candidate(c: &Candidate) -> Json {
+    Json::obj(vec![
+        ("key", Json::Str(c.describe())),
+        ("device", Json::Str(c.device.name.to_string())),
+        ("fmt", Json::Str(c.fmt.name())),
+        ("sigmoid", encode_act(c.sigmoid)),
+        ("tanh", encode_act(c.tanh)),
+        ("alus", Json::Num(c.alus as f64)),
+        ("pipelined", Json::Bool(c.pipelined)),
+        ("clock_mhz", Json::Num(c.clock_mhz)),
+        ("strategy", Json::Str(c.strategy.name().to_string())),
+    ])
+}
+
+/// Decode a candidate and verify its describe key round-trips.
+pub fn decode_candidate(j: &Json) -> anyhow::Result<Candidate> {
+    let key = string(j, "key")?;
+    let dev_name = string(j, "device")?;
+    let dev = device(dev_name).ok_or_else(|| anyhow!("unknown device '{dev_name}'"))?;
+    let fmt_name = string(j, "fmt")?;
+    let fmt = QFormat::parse(fmt_name).ok_or_else(|| anyhow!("bad format '{fmt_name}'"))?;
+    let strat_name = string(j, "strategy")?;
+    let strategy = StrategyKind::parse(strat_name)
+        .ok_or_else(|| anyhow!("unknown strategy '{strat_name}'"))?;
+    let c = Candidate {
+        device: dev,
+        fmt,
+        sigmoid: decode_act(j, "sigmoid")?,
+        tanh: decode_act(j, "tanh")?,
+        alus: uint(j, "alus")? as u32,
+        pipelined: boolean(j, "pipelined")?,
+        clock_mhz: num(j, "clock_mhz")?,
+        strategy,
+    };
+    anyhow::ensure!(
+        c.describe() == key,
+        "candidate key mismatch: wire '{key}' decodes to '{}'",
+        c.describe()
+    );
+    // the describe key covers every axis except the activation *kinds*
+    // (it prints only the impls), so pin the pair against the tied
+    // activation axis — a tampered kind with a valid impl must not fold
+    // an out-of-design-space candidate into a front
+    let pair_in_axes = sigmoid_variants()
+        .into_iter()
+        .zip(tanh_variants())
+        .any(|(s, t)| s == c.sigmoid && t == c.tanh);
+    anyhow::ensure!(
+        pair_in_axes,
+        "activation pair {:?}/{:?} + {:?}/{:?} is not a design-axis pair",
+        c.sigmoid.kind,
+        c.sigmoid.imp,
+        c.tanh.kind,
+        c.tanh.imp
+    );
+    Ok(c)
+}
+
+// -- scales / agreement codec ------------------------------------------------
+
+pub fn encode_scales(s: &ModelScales) -> Json {
+    Json::obj(vec![
+        ("busy", Json::Num(s.busy)),
+        ("idle", Json::Num(s.idle)),
+        ("off", Json::Num(s.off)),
+        ("cold", Json::Num(s.cold)),
+    ])
+}
+
+/// Decode fitted scales.  A component that arrives null/absent/non-finite
+/// degrades to the identity multiplier — the same fallback the
+/// calibration guard uses — so a worker whose fit produced a non-finite
+/// theta (serialized as null by the JSON writer) cannot poison a merge.
+pub fn decode_scales(j: &Json) -> ModelScales {
+    let get = |k: &str| {
+        j.get(k)
+            .and_then(|v| v.as_f64())
+            .filter(|x| x.is_finite())
+            .unwrap_or(1.0)
+    };
+    ModelScales {
+        busy: get("busy"),
+        idle: get("idle"),
+        off: get("off"),
+        cold: get("cold"),
+    }
+}
+
+pub fn encode_agreement(a: &RankAgreement) -> Json {
+    Json::obj(vec![
+        ("tau", Json::Num(a.tau)),
+        ("crossovers", Json::Num(a.crossovers as f64)),
+        ("pairs", Json::Num(a.pairs as f64)),
+    ])
+}
+
+pub fn decode_agreement(j: &Json, field: &str) -> anyhow::Result<RankAgreement> {
+    let obj = j.get(field).ok_or_else(|| anyhow!("missing field '{field}'"))?;
+    Ok(RankAgreement {
+        tau: num(obj, "tau")?,
+        crossovers: uint(obj, "crossovers")?,
+        pairs: uint(obj, "pairs")?,
+    })
+}
+
+// -- shard spec --------------------------------------------------------------
+
+impl ShardSpec {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::Str(SPEC_SCHEMA.to_string())),
+            ("app", Json::Str(self.app.clone())),
+            ("shard", Json::Num(self.shard as f64)),
+            ("of", Json::Num(self.of as f64)),
+            (
+                "budget",
+                match self.budget {
+                    Some(b) => Json::Num(b as f64),
+                    None => Json::Null,
+                },
+            ),
+            // strings, not f64: every u64 seed must cross exactly (an
+            // f64 would silently round seeds at or above 2^53)
+            ("seed", Json::Str(self.seed.to_string())),
+            ("requests", Json::Num(self.requests as f64)),
+            ("threads", Json::Num(self.threads as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<ShardSpec> {
+        check_schema(j, SPEC_SCHEMA)?;
+        let budget = match j.get("budget") {
+            None | Some(Json::Null) => None,
+            Some(_) => Some(uint(j, "budget")?),
+        };
+        let seed_text = string(j, "seed")?;
+        let seed = seed_text
+            .parse::<u64>()
+            .map_err(|_| anyhow!("bad seed '{seed_text}'"))?;
+        Ok(ShardSpec {
+            app: string(j, "app")?.to_string(),
+            shard: uint(j, "shard")?,
+            of: uint(j, "of")?,
+            budget,
+            seed,
+            requests: uint(j, "requests")?,
+            threads: uint(j, "threads")?,
+        })
+    }
+
+    pub fn from_json_str(text: &str) -> anyhow::Result<ShardSpec> {
+        let j = parse(text).map_err(|e| anyhow!("{e}")).context("parsing shard spec")?;
+        ShardSpec::from_json(&j)
+    }
+}
+
+// -- shard result ------------------------------------------------------------
+
+impl ShardResult {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::Str(RESULT_SCHEMA.to_string())),
+            ("app", Json::Str(self.app.clone())),
+            ("shard", Json::Num(self.shard as f64)),
+            ("of", Json::Num(self.of as f64)),
+            ("evaluations", Json::Num(self.evaluations as f64)),
+            ("eval_requests", Json::Num(self.eval_requests as f64)),
+            ("budget_exhausted", Json::Bool(self.budget_exhausted)),
+            (
+                "front",
+                Json::Arr(self.front.iter().map(encode_candidate).collect()),
+            ),
+            (
+                "best",
+                match &self.best {
+                    Some(c) => encode_candidate(c),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "best_index",
+                match self.best_index {
+                    Some(i) => Json::Num(i as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("scales", encode_scales(&self.scales)),
+            ("fell_back", Json::Bool(self.fell_back)),
+            ("tau_pre", encode_agreement(&self.pre)),
+            ("tau_post", encode_agreement(&self.post)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<ShardResult> {
+        check_schema(j, RESULT_SCHEMA)?;
+        let front_json = j
+            .get("front")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("missing 'front' array"))?;
+        let mut front = Vec::with_capacity(front_json.len());
+        for (i, c) in front_json.iter().enumerate() {
+            front.push(decode_candidate(c).with_context(|| format!("front member {i}"))?);
+        }
+        let best = match j.get("best") {
+            None | Some(Json::Null) => None,
+            Some(c) => Some(decode_candidate(c).context("best candidate")?),
+        };
+        let best_index = match j.get("best_index") {
+            None | Some(Json::Null) => None,
+            Some(_) => Some(uint(j, "best_index")?),
+        };
+        let scales = j
+            .get("scales")
+            .map(decode_scales)
+            .ok_or_else(|| anyhow!("missing 'scales'"))?;
+        Ok(ShardResult {
+            app: string(j, "app")?.to_string(),
+            shard: uint(j, "shard")?,
+            of: uint(j, "of")?,
+            evaluations: uint(j, "evaluations")?,
+            eval_requests: uint(j, "eval_requests")?,
+            budget_exhausted: boolean(j, "budget_exhausted")?,
+            front,
+            best,
+            best_index,
+            scales,
+            fell_back: boolean(j, "fell_back")?,
+            pre: decode_agreement(j, "tau_pre")?,
+            post: decode_agreement(j, "tau_post")?,
+        })
+    }
+
+    pub fn from_json_str(text: &str) -> anyhow::Result<ShardResult> {
+        let j = parse(text).map_err(|e| anyhow!("{e}")).context("parsing shard result")?;
+        ShardResult::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generator::design_space::enumerate;
+
+    #[test]
+    fn candidate_codec_roundtrips_every_strategy() {
+        let space = enumerate(&[]);
+        for kind in StrategyKind::all() {
+            let c = space
+                .iter()
+                .find(|c| c.strategy == *kind)
+                .expect("strategy present in space");
+            let j = encode_candidate(c);
+            let back = decode_candidate(&j).expect("decode");
+            assert_eq!(back.describe(), c.describe());
+            assert_eq!(back.clock_mhz.to_bits(), c.clock_mhz.to_bits());
+        }
+    }
+
+    #[test]
+    fn candidate_decode_rejects_key_mismatch() {
+        let c = &enumerate(&["xc7s15"])[0];
+        let j = encode_candidate(c);
+        // tamper with one axis but keep the original key
+        let tampered = match j {
+            Json::Obj(mut m) => {
+                m.insert("alus".into(), Json::Num(7.0));
+                Json::Obj(m)
+            }
+            _ => unreachable!(),
+        };
+        assert!(decode_candidate(&tampered).is_err());
+    }
+
+    #[test]
+    fn candidate_decode_rejects_off_axis_activation_kind() {
+        // the describe key prints only the activation impls, so a
+        // tampered *kind* with a valid impl would slip past the key
+        // check — the tied-pair axis validation must catch it
+        let c = enumerate(&["xc7s15"])
+            .into_iter()
+            .find(|c| c.sigmoid.imp == ActImpl::Pla)
+            .expect("pla candidate");
+        let tampered = match encode_candidate(&c) {
+            Json::Obj(mut m) => {
+                m.insert(
+                    "sigmoid".into(),
+                    Json::obj(vec![
+                        ("kind", Json::Str("tanh".into())),
+                        ("impl", Json::Str("pla".into())),
+                    ]),
+                );
+                Json::Obj(m)
+            }
+            _ => unreachable!(),
+        };
+        assert!(decode_candidate(&tampered).is_err());
+    }
+
+    #[test]
+    fn shard_spec_roundtrips() {
+        let spec = ShardSpec {
+            app: "soft-sensor".into(),
+            shard: 1,
+            of: 4,
+            budget: Some(123),
+            // above 2^53: an f64 wire encoding would silently round it
+            seed: u64::MAX - 1,
+            requests: 200,
+            threads: 2,
+        };
+        let text = spec.to_json().dump();
+        assert_eq!(ShardSpec::from_json_str(&text).unwrap(), spec);
+        let none = ShardSpec { budget: None, ..spec };
+        assert_eq!(
+            ShardSpec::from_json_str(&none.to_json().dump()).unwrap(),
+            none
+        );
+    }
+
+    #[test]
+    fn non_finite_scales_degrade_to_identity_on_the_wire() {
+        let bad = ModelScales {
+            busy: f64::NAN,
+            idle: f64::INFINITY,
+            off: 0.5,
+            cold: 1.25,
+        };
+        let text = encode_scales(&bad).dump();
+        // the writer's non-finite guard keeps the document parseable
+        let back = decode_scales(&crate::util::json::parse(&text).unwrap());
+        assert_eq!(back.busy, 1.0);
+        assert_eq!(back.idle, 1.0);
+        assert_eq!(back.off, 0.5);
+        assert_eq!(back.cold, 1.25);
+    }
+}

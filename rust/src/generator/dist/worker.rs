@@ -1,0 +1,211 @@
+//! One shard's work, shared by the `elastic-gen dse-worker` subprocess
+//! and the driver's hermetic in-process mode: sweep the shard's stripe
+//! through an [`EvalPool`], fit shard-local `ModelScales` on the
+//! stripe's Pareto finalists via DES replay, and package everything as a
+//! self-contained, host-portable [`ShardResult`].
+
+use std::io::Read;
+
+use anyhow::Context;
+
+use crate::generator::calibrate::{calibrate_finalists, CalibrateOpts, ModelScales, RankAgreement};
+use crate::generator::constraints::AppSpec;
+use crate::generator::design_space::{enumerate, Candidate};
+use crate::generator::eval::{EvalPool, Evaluator};
+use crate::generator::search::exhaustive::Exhaustive;
+use crate::generator::search::Searcher;
+
+use super::plan::stripe;
+use super::wire::ShardSpec;
+
+/// Everything one shard contributes to a distributed sweep.  Candidates
+/// only — estimates are re-derived deterministically on the driver from
+/// the decoded candidates, so the wire stays small and host-portable.
+#[derive(Debug, Clone)]
+pub struct ShardResult {
+    pub app: String,
+    pub shard: usize,
+    pub of: usize,
+    /// Estimator evaluations the shard paid (memo hits are free).
+    pub evaluations: usize,
+    /// Total evaluation requests including memo hits.
+    pub eval_requests: usize,
+    pub budget_exhausted: bool,
+    /// The shard's Pareto finalists, describe-sorted (canonical order).
+    pub front: Vec<Candidate>,
+    /// The shard's best candidate by the scenario goal, if any stripe
+    /// member was feasible.
+    pub best: Option<Candidate>,
+    /// Global enumeration index of `best` — the driver breaks exact
+    /// score ties by this, matching the single-process sweep's
+    /// first-in-enumeration-order winner.
+    pub best_index: Option<usize>,
+    /// Per-component `ModelScales` fitted on this shard's finalists
+    /// (identity when the fit fell back).
+    pub scales: ModelScales,
+    pub fell_back: bool,
+    /// Estimator↔DES rank agreement before the fit.
+    pub pre: RankAgreement,
+    /// Agreement under the shipped scales (== `pre` when fell back).
+    pub post: RankAgreement,
+}
+
+pub(crate) fn scenario(name: &str) -> anyhow::Result<AppSpec> {
+    AppSpec::scenarios()
+        .into_iter()
+        .find(|s| s.name == name)
+        .ok_or_else(|| anyhow::anyhow!("unknown scenario '{name}' in shard spec"))
+}
+
+/// Execute one shard: stripe sweep, shard-local calibration fit, result.
+pub fn run_shard(spec: &ShardSpec) -> anyhow::Result<ShardResult> {
+    anyhow::ensure!(spec.of >= 1, "shard count must be >= 1");
+    anyhow::ensure!(
+        spec.shard < spec.of,
+        "shard index {} out of range for {} shards",
+        spec.shard,
+        spec.of
+    );
+    let app = scenario(&spec.app)?;
+    let space = enumerate(&app.device_allowlist);
+    let mine = stripe(&space, spec.shard, spec.of);
+
+    let mut pool = EvalPool::new(spec.threads.max(1));
+    if let Some(b) = spec.budget {
+        pool = pool.with_budget(b);
+    }
+    let sweep = Exhaustive.search_with(&app, &mine, &mut pool);
+    let evaluations = pool.evaluations();
+    let eval_requests = pool.requests();
+    let budget_exhausted = pool.budget_exhausted();
+    let finalists = pool.take_front().into_members();
+
+    // shard-local calibration: DES replay of this stripe's finalists on
+    // the driver-issued trace, least-squares fit, tau agreement — the
+    // scales and agreement travel with the front so the driver can
+    // guard the merge without replaying every shard itself
+    let opts = CalibrateOpts {
+        threads: spec.threads.max(1),
+        requests: spec.requests,
+        seed: spec.seed,
+        budget: None,
+    };
+    let cal = calibrate_finalists(&app, finalists, &opts);
+    let front: Vec<Candidate> = cal
+        .replays
+        .iter()
+        .map(|r| r.estimate.candidate.clone())
+        .collect();
+
+    let (best, best_index) = match &sweep.best {
+        Some(b) => {
+            let key = b.candidate.describe();
+            let local = mine
+                .iter()
+                .position(|c| c.describe() == key)
+                .context("sweep best missing from its own stripe")?;
+            (
+                Some(b.candidate.clone()),
+                Some(spec.shard + local * spec.of),
+            )
+        }
+        None => (None, None),
+    };
+
+    Ok(ShardResult {
+        app: app.name.clone(),
+        shard: spec.shard,
+        of: spec.of,
+        evaluations,
+        eval_requests,
+        budget_exhausted,
+        front,
+        best,
+        best_index,
+        scales: cal.scales,
+        fell_back: cal.fell_back,
+        pre: cal.before,
+        post: cal.after,
+    })
+}
+
+/// The `elastic-gen dse-worker` body: shard spec JSON on stdin, shard
+/// result JSON on stdout (nothing else is written there).
+pub fn worker_stdio() -> anyhow::Result<()> {
+    let mut buf = String::new();
+    std::io::stdin()
+        .read_to_string(&mut buf)
+        .context("reading shard spec from stdin")?;
+    let spec = ShardSpec::from_json_str(&buf)?;
+    let result = run_shard(&spec)?;
+    println!("{}", result.to_json().dump());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_spec(shard: usize, of: usize) -> ShardSpec {
+        ShardSpec {
+            app: "har-wearable".into(),
+            shard,
+            of,
+            budget: None,
+            seed: 11,
+            requests: 60,
+            threads: 1,
+        }
+    }
+
+    #[test]
+    fn shard_result_is_self_consistent() {
+        let r = run_shard(&quick_spec(0, 2)).unwrap();
+        assert_eq!(r.app, "har-wearable");
+        assert_eq!((r.shard, r.of), (0, 2));
+        assert!(r.evaluations > 0);
+        assert!(!r.front.is_empty());
+        // canonical describe-sorted order
+        let keys: Vec<String> = r.front.iter().map(|c| c.describe()).collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted);
+        // best index points back at the best candidate in the stripe
+        let (best, idx) = (r.best.unwrap(), r.best_index.unwrap());
+        assert_eq!(idx % 2, 0, "index {idx} not in stripe 0 of 2");
+        let app = scenario("har-wearable").unwrap();
+        let space = enumerate(&app.device_allowlist);
+        assert_eq!(space[idx].describe(), best.describe());
+    }
+
+    #[test]
+    fn wire_roundtrip_preserves_the_result() {
+        let r = run_shard(&quick_spec(1, 3)).unwrap();
+        let back = ShardResult::from_json_str(&r.to_json().dump()).unwrap();
+        assert_eq!(back.app, r.app);
+        assert_eq!((back.shard, back.of), (r.shard, r.of));
+        assert_eq!(back.evaluations, r.evaluations);
+        assert_eq!(back.eval_requests, r.eval_requests);
+        assert_eq!(back.budget_exhausted, r.budget_exhausted);
+        assert_eq!(back.front.len(), r.front.len());
+        for (a, b) in back.front.iter().zip(&r.front) {
+            assert_eq!(a.describe(), b.describe());
+        }
+        assert_eq!(
+            back.best.map(|c| c.describe()),
+            r.best.as_ref().map(|c| c.describe())
+        );
+        assert_eq!(back.best_index, r.best_index);
+        assert_eq!(back.scales, r.scales);
+        assert_eq!(back.pre, r.pre);
+        assert_eq!(back.post, r.post);
+    }
+
+    #[test]
+    fn rejects_bad_shard_indices_and_apps() {
+        assert!(run_shard(&quick_spec(2, 2)).is_err());
+        let mut bad = quick_spec(0, 1);
+        bad.app = "no-such-app".into();
+        assert!(run_shard(&bad).is_err());
+    }
+}

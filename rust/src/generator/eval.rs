@@ -173,6 +173,19 @@ impl EvalPool {
         self
     }
 
+    /// Raise the evaluation cap by `extra` and clear the exhaustion flag,
+    /// so a budget-cut search can be resumed with a fresh installment
+    /// (the successive-halving portfolio scheduler's reallocation
+    /// primitive).  On an unbudgeted pool this *introduces* a cap of
+    /// `evaluations() + extra`.
+    pub fn grant(&mut self, extra: usize) {
+        match self.budget.as_mut() {
+            Some(b) => *b += extra,
+            None => self.budget = Some(self.evaluations + extra),
+        }
+        self.budget_exhausted = false;
+    }
+
     pub fn threads(&self) -> usize {
         self.threads
     }
@@ -362,6 +375,28 @@ mod tests {
         assert!(pool.evaluate(&spec, &cands[0]).is_some());
         assert!(pool.evaluate(&spec, &cands[20]).is_none());
         assert_eq!(pool.evaluations(), 10);
+    }
+
+    #[test]
+    fn grant_extends_an_exhausted_budget() {
+        let spec = AppSpec::soft_sensor();
+        let cands: Vec<Candidate> = enumerate(&["xc7s6"]).into_iter().take(30).collect();
+        let mut pool = EvalPool::new(1).with_budget(10);
+        pool.evaluate_batch(&spec, &cands);
+        assert!(pool.budget_exhausted());
+        assert_eq!(pool.evaluations(), 10);
+        pool.grant(5);
+        assert!(!pool.budget_exhausted());
+        pool.evaluate_batch(&spec, &cands);
+        assert_eq!(pool.evaluations(), 15);
+        assert!(pool.budget_exhausted());
+        // granting on an unbudgeted pool introduces a cap from "now"
+        let mut free = EvalPool::new(1);
+        free.evaluate(&spec, &cands[0]);
+        free.grant(2);
+        let out = free.evaluate_batch(&spec, &cands);
+        assert_eq!(out.iter().filter(|e| e.is_some()).count(), 3);
+        assert_eq!(free.evaluations(), 3);
     }
 
     #[test]

@@ -7,14 +7,18 @@
 //! * [`estimator`] — analytical evaluation + constraint pruning.
 //! * [`eval`] — the parallel, budget-aware evaluation engine (EvalPool).
 //! * [`search`] — exhaustive / greedy / annealing / genetic + Pareto,
-//!   plus the concurrent heuristic portfolio driver.
+//!   plus the successive-halving heuristic portfolio driver.
 //! * [`calibrate`] — the estimator↔simulator loop: DES replay of Pareto
 //!   finalists, least-squares constant fitting, rank-agreement checks,
 //!   and the calibrated refinement sweep.
+//! * [`dist`] — distributed DSE: process-sharded sweeps (shard planner,
+//!   JSON worker protocol, `DistSweep` driver) merged under a
+//!   calibration guard into one bit-identical Pareto front.
 
 pub mod calibrate;
 pub mod constraints;
 pub mod design_space;
+pub mod dist;
 pub mod estimator;
 pub mod eval;
 pub mod search;
@@ -25,6 +29,7 @@ pub use calibrate::{
 };
 pub use constraints::{AppSpec, Goal};
 pub use design_space::{Candidate, StrategyKind};
+pub use dist::{DistOpts, DistOutcome, DistSweep, WorkerMode};
 pub use estimator::{estimate, Estimate};
 pub use eval::{default_threads, map_ordered, EvalPool, Evaluator};
 pub use search::{generate, generate_portfolio, Portfolio, SearchResult, Searcher};

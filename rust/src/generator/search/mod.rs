@@ -12,9 +12,11 @@
 //! [`EvalPool`], which memoises per candidate, shards batches across
 //! threads, and enforces the evaluation budget.  [`generate_portfolio`]
 //! runs the heuristics concurrently and merges best-of plus a streaming
-//! Pareto front.  The ablation bench (E7) reports how close each
-//! heuristic gets to the exhaustive optimum at what fraction of the
-//! evaluation budget.
+//! Pareto front; under a budget it becomes a successive-halving
+//! scheduler ([`portfolio_bandit`]) that keeps moving the remaining
+//! budget to whichever searcher is still improving.  The ablation bench
+//! (E7) reports how close each heuristic gets to the exhaustive optimum
+//! at what fraction of the evaluation budget.
 
 pub mod annealing;
 pub mod exhaustive;
@@ -72,39 +74,78 @@ pub fn generate(spec: &AppSpec) -> SearchResult {
 pub struct Portfolio {
     /// Best estimate across all searchers (by the spec's goal score).
     pub best: Option<Estimate>,
-    /// Per-searcher results, in a fixed deterministic order.
+    /// Per-searcher results, in a fixed deterministic order.  Under a
+    /// budget, `evaluations` is each searcher's *cumulative* spend
+    /// across every scheduler round.
     pub runs: Vec<(&'static str, SearchResult)>,
     /// Merged streaming Pareto front over every feasible candidate any
     /// searcher evaluated.
     pub front: ParetoFront,
     /// Total estimator evaluations across the portfolio.
     pub evaluations: usize,
+    /// Searchers the budget scheduler retired for spending a full
+    /// installment without improving (empty on unbudgeted runs).
+    pub stalled: Vec<&'static str>,
 }
+
+/// A searcher constructor the portfolio scheduler can re-invoke each
+/// round.  The searchers are deterministic, so a fresh instance run
+/// against its previous (warm) pool replays its prior trajectory through
+/// the memo for free and *resumes* where the budget cut it.
+pub type SearcherFactory = fn() -> Box<dyn Searcher + Send>;
+
+fn make_greedy() -> Box<dyn Searcher + Send> {
+    Box::new(greedy::Greedy::default())
+}
+
+fn make_annealing() -> Box<dyn Searcher + Send> {
+    Box::new(annealing::Annealing::default())
+}
+
+fn make_genetic() -> Box<dyn Searcher + Send> {
+    Box::new(genetic::Genetic::default())
+}
+
+fn default_factories() -> Vec<SearcherFactory> {
+    vec![make_greedy, make_annealing, make_genetic]
+}
+
+/// Successive-halving rounds for the budgeted portfolio scheduler.
+pub const PORTFOLIO_ROUNDS: usize = 4;
 
 /// Run the heuristic searchers (greedy, annealing, genetic) concurrently,
 /// one thread and one [`EvalPool`] each, and merge best-of plus the
 /// streaming Pareto front.  `threads` is the overall worker target
-/// (divided between the searchers' pools); `budget` caps estimator
-/// evaluations per searcher.
+/// (divided between the searchers' pools).  `budget` is the *total*
+/// evaluation budget for the portfolio: instead of a fixed per-searcher
+/// split it is scheduled by [`portfolio_bandit`], which keeps
+/// reallocating the remainder to whichever searcher is still improving.
 pub fn generate_portfolio(spec: &AppSpec, threads: usize, budget: Option<usize>) -> Portfolio {
+    let factories = default_factories();
+    match budget {
+        Some(total) => portfolio_bandit(spec, threads, total, PORTFOLIO_ROUNDS, &factories),
+        None => portfolio_unbudgeted(spec, threads, &factories),
+    }
+}
+
+/// Unbudgeted portfolio: every searcher runs to natural convergence,
+/// concurrently, and the results merge.
+fn portfolio_unbudgeted(
+    spec: &AppSpec,
+    threads: usize,
+    factories: &[SearcherFactory],
+) -> Portfolio {
     let space = super::design_space::enumerate(&spec.device_allowlist);
-    let mut searchers: Vec<Box<dyn Searcher + Send>> = vec![
-        Box::new(greedy::Greedy::default()),
-        Box::new(annealing::Annealing::default()),
-        Box::new(genetic::Genetic::default()),
-    ];
-    let per_pool = (threads.max(1) / searchers.len()).max(1);
+    let per_pool = (threads.max(1) / factories.len().max(1)).max(1);
 
     let results: Vec<(&'static str, SearchResult, ParetoFront)> = std::thread::scope(|s| {
         let space = &space;
-        let handles: Vec<_> = searchers
-            .iter_mut()
-            .map(|searcher| {
+        let handles: Vec<_> = factories
+            .iter()
+            .map(|make| {
                 s.spawn(move || {
-                    let mut pool = match budget {
-                        Some(b) => EvalPool::new(per_pool).with_budget(b),
-                        None => EvalPool::new(per_pool),
-                    };
+                    let mut searcher = make();
+                    let mut pool = EvalPool::new(per_pool);
                     let r = searcher.search_with(spec, space, &mut pool);
                     (searcher.name(), r, pool.take_front())
                 })
@@ -115,7 +156,155 @@ pub fn generate_portfolio(spec: &AppSpec, threads: usize, budget: Option<usize>)
             .map(|h| h.join().expect("searcher thread panicked"))
             .collect()
     });
+    merge_portfolio(spec, results, Vec::new())
+}
 
+/// Successive-halving portfolio scheduler (the ROADMAP's bandit item):
+/// the total evaluation budget is granted in rounds, split across the
+/// still-active searchers.  A searcher that spends a full installment
+/// without improving its best score is **stalled** — it is retired and
+/// the budget it would have drawn in later rounds flows to the searchers
+/// still improving.  A searcher that converges naturally (stops before
+/// exhausting its grant) refunds the unspent remainder to the pot.  Each
+/// round re-instantiates the (deterministic) searcher against its own
+/// warm pool: the replayed prefix of its trajectory is answered by the
+/// memo for free, so a raised budget resumes the search where the last
+/// cut left it instead of starting over.
+pub fn portfolio_bandit(
+    spec: &AppSpec,
+    threads: usize,
+    total_budget: usize,
+    rounds: usize,
+    factories: &[SearcherFactory],
+) -> Portfolio {
+    struct Arm {
+        make: SearcherFactory,
+        name: &'static str,
+        pool: EvalPool,
+        granted: usize,
+        // best across every round: a re-run with a larger budget follows
+        // a different (deterministic) trajectory and may legitimately
+        // end somewhere worse, but the portfolio must never forget a
+        // winner an earlier round already found
+        best_score: Option<f64>,
+        best_estimate: Option<Estimate>,
+        last: Option<SearchResult>,
+        active: bool,
+        /// Granted something this round — only funded arms run and are
+        /// assessed (an arm the drained pot skipped must not be re-run
+        /// against its exhausted pool or counted as stalled).
+        funded: bool,
+    }
+
+    let space = super::design_space::enumerate(&spec.device_allowlist);
+    let per_pool = (threads.max(1) / factories.len().max(1)).max(1);
+    let mut arms: Vec<Arm> = factories
+        .iter()
+        .map(|make| Arm {
+            make: *make,
+            name: make().name(),
+            pool: EvalPool::new(per_pool).with_budget(0),
+            granted: 0,
+            best_score: None,
+            best_estimate: None,
+            last: None,
+            active: true,
+            funded: false,
+        })
+        .collect();
+
+    let mut pot = total_budget;
+    let mut stalled: Vec<&'static str> = Vec::new();
+    let rounds = rounds.max(1);
+    for round in 0..rounds {
+        let active = arms.iter().filter(|a| a.active).count();
+        if active == 0 || pot == 0 {
+            break;
+        }
+        // spread the pot over the remaining rounds; the last round (or a
+        // last surviving arm) drains whatever reallocation freed up
+        let installment = if round + 1 == rounds {
+            pot
+        } else {
+            (pot / (rounds - round)).max(1)
+        };
+        let share = (installment / active).max(1);
+        for arm in arms.iter_mut() {
+            arm.funded = false;
+        }
+        for arm in arms.iter_mut().filter(|a| a.active) {
+            let g = share.min(pot);
+            if g == 0 {
+                break;
+            }
+            pot -= g;
+            arm.granted += g;
+            arm.pool.grant(g);
+            arm.funded = true;
+        }
+
+        // run every funded arm concurrently against its warm pool (the
+        // scope joins them all before returning)
+        std::thread::scope(|s| {
+            let space = &space;
+            for arm in arms.iter_mut().filter(|a| a.active && a.funded) {
+                let _ = s.spawn(move || {
+                    let mut searcher = (arm.make)();
+                    let r = searcher.search_with(spec, space, &mut arm.pool);
+                    arm.last = Some(r);
+                });
+            }
+        });
+
+        // assess: refund converged arms, retire stalled ones
+        for arm in arms.iter_mut().filter(|a| a.active && a.funded) {
+            let r = arm.last.as_ref().expect("arm ran this round");
+            let score = r.best.as_ref().map(|e| e.score(spec.goal));
+            let improved = match (score, arm.best_score) {
+                (Some(s), Some(prev)) => s > prev,
+                (Some(_), None) => true,
+                (None, _) => false,
+            };
+            if improved {
+                arm.best_score = score;
+                arm.best_estimate = r.best.clone();
+            }
+            if !r.budget_exhausted {
+                // natural convergence: a deterministic re-run with more
+                // budget would retrace the same steps, so retire the arm
+                // and hand the unspent remainder back to the pot
+                pot += arm.granted.saturating_sub(arm.pool.evaluations());
+                arm.active = false;
+            } else if !improved && round > 0 {
+                arm.active = false;
+                stalled.push(arm.name);
+            }
+        }
+    }
+
+    let results: Vec<(&'static str, SearchResult, ParetoFront)> = arms
+        .into_iter()
+        .map(|mut arm| {
+            let mut r = arm.last.unwrap_or_else(|| SearchResult {
+                best: None,
+                evaluations: 0,
+                budget_exhausted: false,
+            });
+            // report the cumulative spend and the cross-round best, not
+            // the last round's delta/outcome
+            r.evaluations = arm.pool.evaluations();
+            r.best = arm.best_estimate;
+            (arm.name, r, arm.pool.take_front())
+        })
+        .collect();
+    merge_portfolio(spec, results, stalled)
+}
+
+fn merge_portfolio(
+    spec: &AppSpec,
+    results: Vec<(&'static str, SearchResult, ParetoFront)>,
+    stalled: Vec<&'static str>,
+) -> Portfolio {
     let mut front = ParetoFront::new();
     let mut best: Option<Estimate> = None;
     let mut evaluations = 0usize;
@@ -139,5 +328,6 @@ pub fn generate_portfolio(spec: &AppSpec, threads: usize, budget: Option<usize>)
         runs,
         front,
         evaluations,
+        stalled,
     }
 }

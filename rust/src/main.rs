@@ -4,6 +4,12 @@
 //!
 //! * `generate` — run the Generator for an application scenario and print
 //!   the winning configuration + its EDA report (Fig. 1 end-to-end).
+//!   `--distributed N` shards the sweep across N worker processes.
+//! * `dse` — the distributed sweep entry point: shard planner → worker
+//!   processes → calibration-guarded Pareto-front merge
+//!   (`--verify-parity` cross-checks against the single-process sweep).
+//! * `dse-worker` — internal worker protocol: JSON shard spec on stdin,
+//!   self-contained JSON shard result on stdout.
 //! * `calibrate` — close the estimator↔simulator loop: replay each
 //!   scenario's Pareto finalists through the DES, fit the closed-form
 //!   energy constants against the simulated ledgers, and report rank
@@ -22,6 +28,9 @@ use elastic_gen::elastic_node::Platform;
 use elastic_gen::fpga::{device, ConfigController, DEVICES};
 use elastic_gen::generator::calibrate::{
     calibrate_and_refine, calibrate_finalists, refine_with, CalibrateOpts, CalibratedEstimator,
+};
+use elastic_gen::generator::dist::{
+    assert_front_parity, single_process_reference, worker_stdio, DistOpts, DistSweep, WorkerMode,
 };
 use elastic_gen::generator::search::exhaustive::{rank_with, Exhaustive};
 use elastic_gen::generator::{
@@ -44,6 +53,8 @@ fn main() {
     let args = Args::from_env();
     let r = match args.subcommand() {
         Some("generate") => cmd_generate(&args),
+        Some("dse") => cmd_dse(&args),
+        Some("dse-worker") => worker_stdio(),
         Some("calibrate") => cmd_calibrate(&args),
         Some("report") => cmd_report(&args),
         Some("simulate") => cmd_simulate(&args),
@@ -67,8 +78,12 @@ fn print_usage() {
          USAGE: elastic-gen <subcommand> [--options]\n\n\
          SUBCOMMANDS\n\
            generate  --app <soft-sensor|ecg-monitor|har-wearable> [--top N]\n\
-                     [--jobs N] [--budget N] [--calibrate]\n\
+                     [--jobs N] [--budget N] [--calibrate] [--distributed N]\n\
            generate  --all [--jobs N] [--budget N]   (cross-scenario sweep)\n\
+           dse       --workers N [--app <name>] [--jobs N] [--budget N]\n\
+                     [--requests N] [--in-process] [--verify-parity]\n\
+                     (process-sharded sweep, calibration-guarded merge)\n\
+           dse-worker   (internal: JSON shard spec on stdin -> stdout)\n\
            calibrate [--app <name>] [--jobs N] [--requests N] [--budget N]\n\
                      [--quick]   (estimator vs DES: fit + rank agreement)\n\
            report    --model <mlp_fluid|lstm_har|cnn_ecg|attn_tiny> --device <name>\n\
@@ -93,6 +108,10 @@ fn cmd_generate(args: &Args) -> anyhow::Result<()> {
     let budget = args.get_usize("budget", 0);
     if args.has_flag("all") {
         return cmd_generate_all(jobs, budget);
+    }
+    if args.has_flag("distributed") {
+        // shard this sweep across worker processes instead
+        return cmd_dse(args);
     }
     let spec = scenario(args.get_or("app", "soft-sensor"))?;
     let top = args.get_usize("top", 5);
@@ -158,6 +177,140 @@ fn cmd_generate(args: &Args) -> anyhow::Result<()> {
         let mut t = Table::new(&calibration_columns()).with_title("Estimator↔DES calibration");
         t.row(&calibration_row(&cal, &refined)?);
         println!("{}", t.render());
+    }
+    Ok(())
+}
+
+/// `elastic-gen dse` / `generate --distributed N`: shard the scenario's
+/// sweep across N worker processes (or in-process workers with
+/// `--in-process`), merge the fronts under the calibration guard, and —
+/// with `--verify-parity` — fail unless the merged front is bit-identical
+/// to the single-process sweep (the CI smoke runs through this path).
+fn cmd_dse(args: &Args) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        !args.has_flag("calibrate"),
+        "--calibrate is not supported with the distributed sweep; run `elastic-gen calibrate` \
+         (the distributed merge already reports consensus scales)"
+    );
+    let spec = scenario(args.get_or("app", "soft-sensor"))?;
+    let workers = args
+        .get_usize("workers", args.get_usize("distributed", 2))
+        .max(1);
+    // --jobs is the host-wide worker target, like the other subcommands:
+    // split it across the shard processes' local pools
+    let threads = (args.get_usize("jobs", workers) / workers).max(1);
+    let budget = args.get_usize("budget", 0);
+    let budget_opt = if budget > 0 { Some(budget) } else { None };
+    let requests = args.get_usize("requests", 200);
+    let in_process = args.has_flag("in-process");
+    let mode = if in_process {
+        WorkerMode::InProcess
+    } else {
+        WorkerMode::Subprocess(std::env::current_exe()?)
+    };
+    println!(
+        "Distributed DSE for '{}': {} {} worker(s), {} replayed requests per finalist{}",
+        spec.name,
+        workers,
+        if in_process { "in-process" } else { "subprocess" },
+        requests,
+        if budget > 0 {
+            format!(", budget {budget}")
+        } else {
+            String::new()
+        },
+    );
+    let t0 = std::time::Instant::now();
+    let out = DistSweep::new(DistOpts {
+        workers,
+        mode,
+        budget: budget_opt,
+        requests,
+        threads,
+        ..DistOpts::default()
+    })
+    .run(&spec)?;
+    let wall = t0.elapsed();
+
+    let mut t = Table::new(&[
+        "shard", "evals", "finalists", "θ busy", "θ cold", "tau post", "status",
+    ])
+    .with_title("Shards");
+    for s in &out.shards {
+        let r = &s.result;
+        let mut status: Vec<String> = Vec::new();
+        if s.reassigned {
+            status.push(match &s.failure {
+                Some(cause) => format!("reassigned ({cause})"),
+                None => "reassigned".into(),
+            });
+        }
+        if s.reranked {
+            status.push("reranked".into());
+        }
+        if r.fell_back {
+            status.push("fit fell back".into());
+        }
+        if r.budget_exhausted {
+            status.push("budget!".into());
+        }
+        if status.is_empty() {
+            status.push("ok".into());
+        }
+        t.row(&[
+            format!("{}/{}", r.shard, r.of),
+            r.evaluations.to_string(),
+            r.front.len().to_string(),
+            num(r.scales.busy, 3),
+            num(r.scales.cold, 3),
+            num(r.post.tau, 3),
+            status.join(", "),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let best = out
+        .best
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("{}: no feasible configuration", spec.name))?;
+    println!(
+        "merged front: {} members, best {} at {} mJ/item, {} evaluations in {:.2}s",
+        out.front.len(),
+        best.candidate.describe(),
+        num(best.energy_per_item.mj(), 4),
+        out.evaluations,
+        wall.as_secs_f64(),
+    );
+    println!(
+        "consensus scales: busy {:.3} idle {:.3} off {:.3} cold {:.3} ({} shard(s) reranked, {} reassigned)",
+        out.consensus.busy,
+        out.consensus.idle,
+        out.consensus.off,
+        out.consensus.cold,
+        out.reranked,
+        out.reassigned
+    );
+
+    if args.has_flag("verify-parity") {
+        let (reference, ref_best, ref_evals) =
+            single_process_reference(&spec, budget_opt, default_threads());
+        assert_front_parity(&reference, &out.front)?;
+        anyhow::ensure!(
+            out.evaluations == ref_evals,
+            "evaluation counts differ: distributed {} vs single-process {}",
+            out.evaluations,
+            ref_evals
+        );
+        let a = ref_best.as_ref().map(|e| e.candidate.describe());
+        let b = out.best.as_ref().map(|e| e.candidate.describe());
+        anyhow::ensure!(
+            a == b,
+            "best configuration differs: single-process {a:?} vs distributed {b:?}"
+        );
+        println!(
+            "parity verified: merged front bit-identical to the single-process sweep ({} members)",
+            out.front.len()
+        );
     }
     Ok(())
 }
@@ -302,13 +455,15 @@ fn cmd_generate_all(jobs: usize, budget: usize) -> anyhow::Result<()> {
                         pool = pool.with_budget(budget);
                     }
                     let sweep = Exhaustive.search_with(spec, &space, &mut pool);
-                    // the portfolio budget is per searcher; split the
-                    // user's cap three ways so the two evals columns are
-                    // comparable under the same total spend
+                    // the portfolio budget is a total: the successive-
+                    // halving scheduler splits it across the heuristics
+                    // and keeps reallocating toward whichever is still
+                    // improving, so the two evals columns compare under
+                    // the same total spend
                     let folio = generate_portfolio(
                         spec,
                         per,
-                        if budget > 0 { Some((budget / 3).max(1)) } else { None },
+                        if budget > 0 { Some(budget) } else { None },
                     );
                     (spec.clone(), sweep, pool.front().len(), folio, t0.elapsed())
                 })

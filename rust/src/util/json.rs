@@ -128,7 +128,17 @@ impl Json {
             Json::Bool(true) => out.push_str("true"),
             Json::Bool(false) => out.push_str("false"),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
+                // JSON has no NaN/Infinity literal; `format!("{x}")` would
+                // emit one and make the document unparseable (empty-series
+                // stats reach here via bench dumps).  Emit null instead.
+                // -0.0 must skip the integer fast-path: `0` would parse
+                // back as +0.0 and break bit-exact round-trips.
+                if !x.is_finite() {
+                    out.push_str("null");
+                } else if x.fract() == 0.0
+                    && x.abs() < 1e15
+                    && !(*x == 0.0 && x.is_sign_negative())
+                {
                     out.push_str(&format!("{}", *x as i64));
                 } else {
                     out.push_str(&format!("{x}"));
@@ -285,8 +295,35 @@ impl<'a> Parser<'a> {
                                     msg: "bad \\u escape".into(),
                                     pos: self.i,
                                 })?;
-                            s.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
                             self.i += 4;
+                            if (0xD800..0xDC00).contains(&code) {
+                                // high surrogate: JSON encodes astral-plane
+                                // chars as UTF-16 pairs — combine with an
+                                // immediately following \uDC00..\uDFFF
+                                // escape into the real code point
+                                let lo = (self.b.get(self.i + 1) == Some(&b'\\')
+                                    && self.b.get(self.i + 2) == Some(&b'u')
+                                    && self.i + 6 < self.b.len())
+                                    .then(|| {
+                                        std::str::from_utf8(&self.b[self.i + 3..self.i + 7]).ok()
+                                    })
+                                    .flatten()
+                                    .and_then(|h| u32::from_str_radix(h, 16).ok())
+                                    .filter(|c| (0xDC00..0xE000).contains(c));
+                                match lo {
+                                    Some(lo) => {
+                                        let c =
+                                            0x10000 + ((code - 0xD800) << 10) + (lo - 0xDC00);
+                                        s.push(char::from_u32(c).unwrap_or('\u{FFFD}'));
+                                        self.i += 6;
+                                    }
+                                    // lone high surrogate: replacement char
+                                    None => s.push('\u{FFFD}'),
+                                }
+                            } else {
+                                // lone low surrogates also land on FFFD here
+                                s.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                            }
                         }
                         _ => return self.err("bad escape"),
                     }
@@ -441,5 +478,54 @@ mod tests {
     fn empty_containers() {
         assert_eq!(parse("[]").unwrap(), Json::Arr(vec![]));
         assert_eq!(parse("{}").unwrap(), Json::Obj(Default::default()));
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        // format!("{x}") would emit "NaN"/"inf", which parse() rejects —
+        // the writer must degrade to null so dumps stay valid JSON
+        assert_eq!(Json::Num(f64::NAN).dump(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).dump(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).dump(), "null");
+        let doc = Json::obj(vec![("min", Json::Num(f64::INFINITY)), ("n", Json::Num(0.0))]);
+        let back = parse(&doc.dump()).expect("non-finite dump must stay parseable");
+        assert_eq!(back.path(&["min"]), &Json::Null);
+        assert_eq!(back.path(&["n"]).as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn finite_f64_roundtrips_bit_exactly() {
+        for x in [1.0 / 3.0, 1e-300, -0.0, 123456.789, f64::MIN_POSITIVE] {
+            let back = parse(&Json::Num(x).dump()).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{x}");
+        }
+    }
+
+    #[test]
+    fn surrogate_pairs_combine() {
+        // U+1F600 escapes to the UTF-16 pair \ud83d\ude00 in JSON; the
+        // old parser decoded it as two U+FFFD replacement chars
+        let pair = r#""\ud83d\ude00""#;
+        assert_eq!(parse(pair).unwrap().as_str(), Some("\u{1F600}"));
+        let mixed = r#""x\ud83d\ude00y""#;
+        assert_eq!(parse(mixed).unwrap().as_str(), Some("x\u{1F600}y"));
+        // raw astral chars round-trip through dump -> parse
+        let j = Json::Str("a\u{1F600}b".into());
+        assert_eq!(parse(&j.dump()).unwrap(), j);
+    }
+
+    #[test]
+    fn lone_surrogates_fall_back_to_replacement() {
+        // high surrogate with no continuation
+        assert_eq!(parse(r#""\ud83dx""#).unwrap().as_str(), Some("\u{FFFD}x"));
+        // high surrogate followed by an ordinary character stays lone
+        assert_eq!(
+            parse(r#""\ud83dA""#).unwrap().as_str(),
+            Some("\u{FFFD}A")
+        );
+        // lone low surrogate
+        assert_eq!(parse(r#""\ude00""#).unwrap().as_str(), Some("\u{FFFD}"));
+        // high surrogate at end of input must not read out of bounds
+        assert_eq!(parse(r#""\ud83d""#).unwrap().as_str(), Some("\u{FFFD}"));
     }
 }

@@ -1,0 +1,209 @@
+//! Integration: the distributed DSE subsystem — shard planning, the JSON
+//! worker protocol (in-process and real subprocess workers), crash
+//! reassignment, and the calibration-guarded merge's bit-parity
+//! contract: `generate --distributed N` must produce a merged Pareto
+//! front bit-identical to the single-process sweep at any worker count.
+
+use std::path::PathBuf;
+
+use elastic_gen::generator::design_space::enumerate;
+use elastic_gen::generator::dist::{
+    assert_front_parity, run_shard, single_process_reference, DistOpts, DistSweep, ShardResult,
+    ShardSpec, WorkerMode,
+};
+use elastic_gen::generator::{AppSpec, ModelScales, RankAgreement, StrategyKind};
+
+fn in_process(workers: usize, budget: Option<usize>) -> DistOpts {
+    DistOpts {
+        workers,
+        mode: WorkerMode::InProcess,
+        budget,
+        requests: 80,
+        ..DistOpts::default()
+    }
+}
+
+/// The headline contract: for N ∈ {1, 2, 4} in-process workers the
+/// merged front, the best configuration and the total evaluation count
+/// are bit-identical to the single-process sweep.
+#[test]
+fn merged_front_parity_across_worker_counts() {
+    for spec in [AppSpec::har_wearable(), AppSpec::soft_sensor()] {
+        let (reference, ref_best, ref_evals) = single_process_reference(&spec, None, 4);
+        let ref_key = ref_best.expect(&spec.name).candidate.describe();
+        for workers in [1usize, 2, 4] {
+            let out = DistSweep::new(in_process(workers, None))
+                .run(&spec)
+                .unwrap_or_else(|e| panic!("{} at {workers} workers: {e:#}", spec.name));
+            assert_front_parity(&reference, &out.front)
+                .unwrap_or_else(|e| panic!("{} at {workers} workers: {e:#}", spec.name));
+            assert_eq!(
+                out.best.as_ref().expect("no best").candidate.describe(),
+                ref_key,
+                "{} at {workers} workers: best diverged",
+                spec.name
+            );
+            assert_eq!(out.evaluations, ref_evals, "{}", spec.name);
+            assert_eq!(out.shards.len(), workers);
+            assert_eq!(out.reassigned, 0);
+            assert!(!out.budget_exhausted);
+        }
+    }
+}
+
+/// Budgeted parity: the planner splits a global budget so the union of
+/// per-shard prefixes is exactly the single-process budget prefix.
+#[test]
+fn budgeted_distributed_sweep_matches_single_process() {
+    let spec = AppSpec::soft_sensor();
+    let budget = 400usize;
+    let (reference, ref_best, ref_evals) = single_process_reference(&spec, Some(budget), 2);
+    assert_eq!(ref_evals, budget);
+    for workers in [2usize, 3] {
+        let out = DistSweep::new(in_process(workers, Some(budget)))
+            .run(&spec)
+            .expect("budgeted distributed sweep");
+        assert_front_parity(&reference, &out.front).expect("budgeted parity");
+        assert_eq!(out.evaluations, budget);
+        assert!(out.budget_exhausted);
+        assert_eq!(
+            out.best.as_ref().map(|e| e.candidate.describe()),
+            ref_best.as_ref().map(|e| e.candidate.describe())
+        );
+    }
+}
+
+/// Real subprocess workers: spawn the built `elastic-gen` binary with
+/// the `dse-worker` protocol and merge its JSON results.
+#[test]
+fn subprocess_workers_end_to_end() {
+    let spec = AppSpec::har_wearable();
+    let exe = PathBuf::from(env!("CARGO_BIN_EXE_elastic-gen"));
+    let out = DistSweep::new(DistOpts {
+        workers: 2,
+        mode: WorkerMode::Subprocess(exe),
+        requests: 60,
+        ..DistOpts::default()
+    })
+    .run(&spec)
+    .expect("subprocess sweep");
+    assert_eq!(out.reassigned, 0, "healthy workers were reassigned");
+    assert!(out.shards.iter().all(|s| s.attempts == 1));
+    let (reference, _, ref_evals) = single_process_reference(&spec, None, 4);
+    assert_front_parity(&reference, &out.front).expect("subprocess parity");
+    assert_eq!(out.evaluations, ref_evals);
+}
+
+/// A killed/unspawnable worker's shard is reassigned (in-process) and
+/// the final front is unchanged.
+#[test]
+fn killed_worker_shard_is_reassigned_and_front_unchanged() {
+    let spec = AppSpec::har_wearable();
+    let out = DistSweep::new(DistOpts {
+        workers: 2,
+        mode: WorkerMode::Subprocess(PathBuf::from("/nonexistent/elastic-gen-worker")),
+        attempts: 1,
+        requests: 60,
+        ..DistOpts::default()
+    })
+    .run(&spec)
+    .expect("sweep with dead workers");
+    assert_eq!(out.reassigned, 2, "both shards should have been reassigned");
+    assert!(out
+        .shards
+        .iter()
+        .all(|s| s.reassigned && s.attempts == 2));
+    let (reference, _, _) = single_process_reference(&spec, None, 4);
+    assert_front_parity(&reference, &out.front)
+        .expect("reassigned sweep must still merge to the identical front");
+}
+
+/// Wire-format property: dump → parse → identical front / ModelScales /
+/// agreement, with candidates from every strategy kind on the front.
+#[test]
+fn wire_roundtrip_property() {
+    use elastic_gen::util::proptest::{check, F64Range, Pair};
+    let space = enumerate(&[]);
+    let per_kind: Vec<_> = StrategyKind::all()
+        .iter()
+        .map(|k| {
+            space
+                .iter()
+                .find(|c| c.strategy == *k)
+                .expect("strategy in space")
+                .clone()
+        })
+        .collect();
+    check(
+        "shard result wire roundtrip",
+        40,
+        Pair(F64Range(-1.0..1.0), F64Range(0.0..3.0)),
+        |pair| {
+            let (tau, scale) = *pair;
+            let result = ShardResult {
+                app: "soft-sensor".into(),
+                shard: 1,
+                of: 3,
+                evaluations: 123,
+                eval_requests: 456,
+                budget_exhausted: true,
+                front: per_kind.clone(),
+                best: Some(per_kind[0].clone()),
+                best_index: Some(42),
+                scales: ModelScales { busy: scale, idle: 1.0, off: 0.0, cold: 2.5 },
+                fell_back: false,
+                pre: RankAgreement { tau, crossovers: 3, pairs: 10 },
+                post: RankAgreement { tau: 0.5, crossovers: 1, pairs: 10 },
+            };
+            let back = match ShardResult::from_json_str(&result.to_json().dump()) {
+                Ok(b) => b,
+                Err(_) => return false,
+            };
+            back.scales == result.scales
+                && back.pre == result.pre
+                && back.post == result.post
+                && back.front.len() == result.front.len()
+                && back
+                    .front
+                    .iter()
+                    .zip(&result.front)
+                    .all(|(a, b)| a.describe() == b.describe())
+                && back.best_index == result.best_index
+                && back.evaluations == result.evaluations
+                && back.eval_requests == result.eval_requests
+                && back.budget_exhausted == result.budget_exhausted
+        },
+    );
+}
+
+/// Non-finite fitted scales serialize as null (the JSON writer's
+/// non-finite guard) and decode back to the identity multiplier instead
+/// of poisoning a merge.
+#[test]
+fn non_finite_scales_survive_the_wire_as_identity() {
+    let mut r = run_shard(&ShardSpec {
+        app: "har-wearable".into(),
+        shard: 0,
+        of: 4,
+        budget: None,
+        seed: 11,
+        requests: 40,
+        threads: 1,
+    })
+    .expect("shard run");
+    r.scales = ModelScales {
+        busy: f64::NAN,
+        idle: f64::INFINITY,
+        off: 1.5,
+        cold: 1.0,
+    };
+    let text = r.to_json().dump();
+    let back = ShardResult::from_json_str(&text).expect("non-finite dump must stay parseable");
+    assert_eq!(back.scales.busy, 1.0);
+    assert_eq!(back.scales.idle, 1.0);
+    assert_eq!(back.scales.off, 1.5);
+    assert_eq!(back.scales.cold, 1.0);
+    // everything else is untouched
+    assert_eq!(back.front.len(), r.front.len());
+    assert_eq!(back.evaluations, r.evaluations);
+}

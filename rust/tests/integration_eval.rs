@@ -1,12 +1,16 @@
 //! Integration: the parallel evaluation engine — thread-count
 //! determinism, per-candidate memoisation, budget accounting, and the
-//! concurrent heuristic portfolio.
+//! concurrent heuristic portfolio (including the successive-halving
+//! budget scheduler's reallocation semantics).
 
-use elastic_gen::generator::design_space::enumerate;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use elastic_gen::generator::design_space::{enumerate, Candidate};
 use elastic_gen::generator::search::exhaustive::Exhaustive;
 use elastic_gen::generator::search::genetic::Genetic;
 use elastic_gen::generator::search::pareto;
-use elastic_gen::generator::{generate_portfolio, AppSpec, EvalPool, Evaluator, Searcher};
+use elastic_gen::generator::search::{portfolio_bandit, SearchResult, SearcherFactory};
+use elastic_gen::generator::{generate_portfolio, AppSpec, Estimate, EvalPool, Evaluator, Searcher};
 
 /// The headline determinism contract: for every scenario, a 1-thread and
 /// an N-thread pool return the identical best score and the identical
@@ -150,21 +154,161 @@ fn portfolio_merges_heuristics_and_front() {
     }
 }
 
-/// Budgeted portfolio: each searcher stops at its cap and says so.
+/// Budgeted portfolio: the budget is a portfolio-wide total, scheduled
+/// in successive-halving rounds; no searcher can overdraw it and a cut
+/// searcher says so.
 #[test]
 fn budgeted_portfolio_reports_exhaustion() {
     let spec = AppSpec::soft_sensor();
     let folio = generate_portfolio(&spec, 2, Some(60));
+    assert!(
+        folio.evaluations <= 60,
+        "portfolio overdrew its total budget: {}",
+        folio.evaluations
+    );
     for (name, r) in &folio.runs {
         assert!(
             r.evaluations <= 60,
-            "{name} exceeded its budget: {}",
+            "{name} exceeded the total budget: {}",
             r.evaluations
         );
     }
-    // at least one of the searchers wants more than 60 evaluations
+    // at least one of the searchers wants more than its grants
     assert!(
         folio.runs.iter().any(|(_, r)| r.budget_exhausted),
         "no searcher reported exhaustion at a 60-evaluation budget"
     );
+}
+
+// --- successive-halving scheduler instrumentation ---------------------------
+
+/// Sweeps the space in order and always reports the *first* feasible
+/// estimate it ever saw: it keeps spending every installment in full but
+/// its best never improves after round 0, so the scheduler must classify
+/// it as stalled and move the budget it would have drawn elsewhere.
+struct Stall;
+
+impl Searcher for Stall {
+    fn name(&self) -> &'static str {
+        "stall"
+    }
+
+    fn search_with(
+        &mut self,
+        spec: &AppSpec,
+        space: &[Candidate],
+        eval: &mut dyn Evaluator,
+    ) -> SearchResult {
+        let start = eval.evaluations();
+        let mut first: Option<Estimate> = None;
+        for shard in space.chunks(64) {
+            for e in eval.evaluate_batch(spec, shard).into_iter().flatten() {
+                if first.is_none() && e.feasible {
+                    first = Some(e);
+                }
+            }
+            if eval.budget_exhausted() {
+                break;
+            }
+        }
+        SearchResult {
+            best: first,
+            evaluations: eval.evaluations() - start,
+            budget_exhausted: eval.budget_exhausted(),
+        }
+    }
+}
+
+static CLIMB_CALLS: AtomicUsize = AtomicUsize::new(0);
+
+/// Spends every installment in full and reports a strictly better best
+/// each scheduler round (the k-th distinct feasible score, ascending,
+/// for round k), so it keeps qualifying for reallocated budget.
+struct Climber;
+
+impl Searcher for Climber {
+    fn name(&self) -> &'static str {
+        "climber"
+    }
+
+    fn search_with(
+        &mut self,
+        spec: &AppSpec,
+        space: &[Candidate],
+        eval: &mut dyn Evaluator,
+    ) -> SearchResult {
+        let round = CLIMB_CALLS.fetch_add(1, Ordering::SeqCst);
+        let start = eval.evaluations();
+        let mut paid: Vec<Estimate> = Vec::new();
+        for shard in space.chunks(64) {
+            paid.extend(eval.evaluate_batch(spec, shard).into_iter().flatten());
+            if eval.budget_exhausted() {
+                break;
+            }
+        }
+        let mut scores: Vec<(f64, usize)> = paid
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.feasible)
+            .map(|(i, e)| (e.score(spec.goal), i))
+            .collect();
+        scores.sort_by(|a, b| a.0.total_cmp(&b.0));
+        scores.dedup_by(|a, b| a.0 == b.0);
+        let best = if scores.is_empty() {
+            None
+        } else {
+            let idx = round.min(scores.len() - 1);
+            Some(paid[scores[idx].1].clone())
+        };
+        SearchResult {
+            best,
+            evaluations: eval.evaluations() - start,
+            budget_exhausted: eval.budget_exhausted(),
+        }
+    }
+}
+
+fn make_stall() -> Box<dyn Searcher + Send> {
+    Box::new(Stall)
+}
+
+fn make_climber() -> Box<dyn Searcher + Send> {
+    Box::new(Climber)
+}
+
+/// The ROADMAP's bandit item, pinned: a searcher that spends a full
+/// installment without improving is retired and the budget it would
+/// have drawn in later rounds flows to the searcher still improving —
+/// under a fixed per-searcher split both would have spent 600 here.
+#[test]
+fn stalled_searcher_budget_is_reallocated() {
+    let spec = AppSpec::soft_sensor();
+    let factories: Vec<SearcherFactory> = vec![make_stall, make_climber];
+    let folio = portfolio_bandit(&spec, 2, 1200, 4, &factories);
+
+    assert!(
+        folio.stalled.contains(&"stall"),
+        "stall was not retired: {:?}",
+        folio.stalled
+    );
+    let spent = |name: &str| {
+        folio
+            .runs
+            .iter()
+            .find(|(n, _)| *n == name)
+            .unwrap_or_else(|| panic!("no run for {name}"))
+            .1
+            .evaluations
+    };
+    let (s, c) = (spent("stall"), spent("climber"));
+    assert!(
+        s < 600,
+        "stall kept its even split of the 1200 budget: spent {s}"
+    );
+    assert!(
+        c >= 2 * s,
+        "stalled budget was not reallocated: stall spent {s}, climber {c}"
+    );
+    assert!(folio.evaluations <= 1200, "overdraw: {}", folio.evaluations);
+    assert_eq!(folio.evaluations, s + c);
 }
