@@ -198,11 +198,66 @@ fn dist_scaling() {
     }
 }
 
+/// The distributed calibrated-refinement phase at 1/2/4 in-process
+/// workers: sweep → driver-side fit on the merged front → re-shard under
+/// the corrected constants → refinement merge in the corrected
+/// coordinates.  Every worker count must land bit-identically on the
+/// single-process `calibrate_and_refine` — scales, refined front and
+/// refined best — so refinement scaling stays on the bench trajectory
+/// without ever drifting from the local loop.
+fn dist_refine_scaling() {
+    use elastic_gen::generator::calibrate::calibrate_and_refine_dist;
+    use elastic_gen::generator::dist::{assert_front_parity, DistOpts, WorkerMode};
+    let spec = AppSpec::har_wearable();
+    let copts = CalibrateOpts { threads: 2, requests: 120, seed: 11, budget: None };
+    let (ref_cal, ref_refined) = elastic_gen::generator::calibrate::calibrate_and_refine(
+        &spec, &copts,
+    );
+    println!();
+    let mut base_wall = 0.0;
+    for &workers in &[1usize, 2, 4] {
+        let t0 = Instant::now();
+        let out = calibrate_and_refine_dist(
+            &spec,
+            &copts,
+            &DistOpts {
+                workers,
+                mode: WorkerMode::InProcess,
+                ..DistOpts::default()
+            },
+        )
+        .expect("distributed calibrated refinement failed");
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(
+            out.calibration.scales.to_bits(),
+            ref_cal.scales.to_bits(),
+            "fitted scales diverged from the single-process calibration"
+        );
+        assert_front_parity(&ref_refined.front, &out.refined.front)
+            .expect("refined front diverged from the single-process refinement");
+        assert_eq!(
+            out.refined.best.as_ref().map(|e| e.candidate.describe()),
+            ref_refined.best.as_ref().map(|e| e.candidate.describe()),
+            "refined best diverged"
+        );
+        if workers == 1 {
+            base_wall = wall;
+        }
+        println!(
+            "dist-refine/{workers}-worker: {} sweep + {} refine evals, refined front {} in {wall:.3}s ({:.2}x vs 1 worker)",
+            out.sweep.evaluations,
+            out.refined.evaluations,
+            out.refined.front.len(),
+            base_wall / wall
+        );
+    }
+}
+
 fn main() {
     elastic_gen::bench::banner(
         "PERF",
         "hot-path microbenchmarks",
-        "DSE estimator, DES engine, calibration replay, dist merge, shard scaling, behavioural exec",
+        "DSE estimator, DES engine, calibration replay, dist merge + refine, shard scaling, behavioural exec",
     );
     let target = default_target();
     let mut results = Vec::new();
@@ -243,6 +298,9 @@ fn main() {
 
     // --- distributed sweep: shard + merge parity across worker counts -------
     dist_scaling();
+
+    // --- distributed calibrated refinement: two-phase parity + scaling ------
+    dist_refine_scaling();
 
     // --- coordinator shard scaling (hermetic, synthetic engine) ------------
     coordinator_scaling();

@@ -21,13 +21,22 @@ impl BenchResult {
     }
 
     pub fn report_line(&self) -> String {
+        // a non-zero dropped count means some timing samples were
+        // non-finite (clock artifacts) — surface it rather than letting
+        // an all-zero summary read as a perfect result
+        let dropped = if self.per_iter.dropped > 0 {
+            format!(", dropped {}", self.per_iter.dropped)
+        } else {
+            String::new()
+        };
         format!(
-            "{:<40} {:>12.3} us/iter (p50 {:.3}, p99 {:.3}, n={})",
+            "{:<40} {:>12.3} us/iter (p50 {:.3}, p99 {:.3}, n={}{})",
             self.name,
             self.per_iter.mean * 1e6,
             self.per_iter.p50 * 1e6,
             self.per_iter.p99 * 1e6,
-            self.iterations
+            self.iterations,
+            dropped
         )
     }
 }

@@ -25,7 +25,8 @@ use super::estimator::{
 };
 use super::eval::{default_threads, map_ordered, EvalPool, Evaluator};
 use super::search::exhaustive::Exhaustive;
-use super::search::{SearchResult, Searcher};
+use super::search::pareto::ParetoFront;
+use super::search::Searcher;
 use crate::sim::NodeSim;
 use crate::util::rng::Rng;
 use crate::util::units::{Joules, Secs};
@@ -54,6 +55,18 @@ impl ModelScales {
         *self == ModelScales::identity()
     }
 
+    /// The four components as raw bits — the single parity predicate the
+    /// driver's refinement merge, the CLI parity checks, the tests and
+    /// the benches all compare with (bit equality, never approximate).
+    pub fn to_bits(&self) -> [u64; 4] {
+        [
+            self.busy.to_bits(),
+            self.idle.to_bits(),
+            self.off.to_bits(),
+            self.cold.to_bits(),
+        ]
+    }
+
     /// Corrected closed-form energy per item for an estimate at mean gap
     /// `g`: the scales are pushed into the cost model and the closed form
     /// re-evaluated, so a threshold strategy may legitimately flip to the
@@ -61,6 +74,17 @@ impl ModelScales {
     pub fn energy_per_item(&self, e: &Estimate, g: Secs) -> Joules {
         let cost = e.cost.with_corrections(self.busy, self.idle, self.off, self.cold);
         strategy_energy_per_item(&cost, e.candidate.strategy, g)
+    }
+
+    /// Apply this correction to an estimate: replace its closed-form
+    /// energy per item with the corrected value for the spec's workload.
+    /// This is the single definition of "corrected coordinates" — the
+    /// [`CalibratedEstimator`] and the distributed refinement merge both
+    /// go through here, so a driver re-deriving a worker's corrected
+    /// estimate reproduces it bit-for-bit.
+    pub fn correct_estimate(&self, spec: &AppSpec, mut e: Estimate) -> Estimate {
+        e.energy_per_item = self.energy_per_item(&e, spec.workload.mean_gap());
+        e
     }
 
     /// Weighted mean of several fits, per component — how the distributed
@@ -323,13 +347,32 @@ pub fn calibrate(spec: &AppSpec, opts: &CalibrateOpts) -> Calibration {
     calibrate_and_refine(spec, opts).0
 }
 
+/// Outcome of a refinement sweep under corrected constants: the best
+/// configuration by the spec's goal plus the Pareto front, both in the
+/// *corrected* closed form's coordinates.
+#[derive(Debug, Clone)]
+pub struct Refinement {
+    /// Best corrected estimate by the spec's goal (ties in a distributed
+    /// merge are broken by global enumeration index, matching the
+    /// first-in-enumeration-order winner of this single-process sweep).
+    pub best: Option<Estimate>,
+    /// Pareto front over the corrected estimates.
+    pub front: ParetoFront,
+    /// Fresh estimator evaluations the refinement paid (zero when the
+    /// sweep pool's memo already covered the space).
+    pub evaluations: usize,
+    /// Evaluation requests including memo hits.
+    pub requests: usize,
+    pub budget_exhausted: bool,
+}
+
 /// [`calibrate`] plus the refinement sweep, sharing one [`EvalPool`]:
 /// the refinement re-ranks the space through a [`CalibratedEstimator`]
 /// wrapped around the *same* pool the calibration sweep populated, so
 /// every candidate is a memo hit and the second pass costs zero
 /// estimator evaluations (`refined.evaluations == 0` on an unbudgeted
 /// run).  A budget set in `opts` governs the combined spend.
-pub fn calibrate_and_refine(spec: &AppSpec, opts: &CalibrateOpts) -> (Calibration, SearchResult) {
+pub fn calibrate_and_refine(spec: &AppSpec, opts: &CalibrateOpts) -> (Calibration, Refinement) {
     let space = super::design_space::enumerate(&spec.device_allowlist);
     let mut pool = EvalPool::new(opts.threads);
     if let Some(b) = opts.budget {
@@ -343,6 +386,27 @@ pub fn calibrate_and_refine(spec: &AppSpec, opts: &CalibrateOpts) -> (Calibratio
     (cal, refined)
 }
 
+/// [`calibrate_and_refine`], distributed: the sweep *and* the refinement
+/// both run process-sharded across `dopts.workers` workers
+/// ([`DistSweep::run_calibrated`]), with `opts` supplying the replay
+/// trace (`seed`/`requests`) and the evaluation budget so the outcome is
+/// bit-identical to the single-process `calibrate_and_refine(spec,
+/// opts)` — same fitted scales, same agreement, same refined front/best
+/// — at any worker count, crashes included.
+pub fn calibrate_and_refine_dist(
+    spec: &AppSpec,
+    opts: &CalibrateOpts,
+    dopts: &super::dist::DistOpts,
+) -> anyhow::Result<super::dist::DistCalOutcome> {
+    let merged = super::dist::DistOpts {
+        budget: opts.budget,
+        seed: opts.seed,
+        requests: opts.requests,
+        ..dopts.clone()
+    };
+    super::dist::DistSweep::new(merged).run_calibrated(spec)
+}
+
 /// Re-rank `space` through a calibrated evaluator in one full-space
 /// batch.  Not `Exhaustive::search_with`: on a budget-cut pool the
 /// sticky `budget_exhausted` flag would make its shard loop break after
@@ -353,13 +417,16 @@ pub fn refine_with(
     spec: &AppSpec,
     space: &[super::design_space::Candidate],
     mut eval: CalibratedEstimator,
-) -> SearchResult {
-    let start = eval.evaluations();
+) -> Refinement {
+    let start_evals = eval.evaluations();
+    let start_requests = eval.requests();
     let mut best: Option<Estimate> = None;
+    let mut front = ParetoFront::new();
     for e in eval.evaluate_batch(spec, space).into_iter().flatten() {
         if !e.feasible {
             continue;
         }
+        front.insert(&e);
         let better = match &best {
             None => true,
             Some(b) => e.score(spec.goal) > b.score(spec.goal),
@@ -368,9 +435,11 @@ pub fn refine_with(
             best = Some(e);
         }
     }
-    SearchResult {
+    Refinement {
         best,
-        evaluations: eval.evaluations() - start,
+        front,
+        evaluations: eval.evaluations() - start_evals,
+        requests: eval.requests() - start_requests,
         budget_exhausted: eval.budget_exhausted(),
     }
 }
@@ -402,9 +471,8 @@ impl CalibratedEstimator {
         self.pool
     }
 
-    fn correct(&self, spec: &AppSpec, mut e: Estimate) -> Estimate {
-        e.energy_per_item = self.scales.energy_per_item(&e, spec.workload.mean_gap());
-        e
+    fn correct(&self, spec: &AppSpec, e: Estimate) -> Estimate {
+        self.scales.correct_estimate(spec, e)
     }
 }
 
@@ -443,10 +511,10 @@ impl Evaluator for CalibratedEstimator {
 /// Bit-identical across thread counts.  When you already ran the
 /// calibration sweep, prefer [`calibrate_and_refine`], which reuses its
 /// fully-memoized pool instead of re-estimating the space.
-pub fn refine(spec: &AppSpec, scales: ModelScales, threads: usize) -> SearchResult {
+pub fn refine(spec: &AppSpec, scales: ModelScales, threads: usize) -> Refinement {
     let space = super::design_space::enumerate(&spec.device_allowlist);
-    let mut eval = CalibratedEstimator::new(EvalPool::new(threads), scales);
-    Exhaustive.search_with(spec, &space, &mut eval)
+    let eval = CalibratedEstimator::new(EvalPool::new(threads), scales);
+    refine_with(spec, &space, eval)
 }
 
 #[cfg(test)]

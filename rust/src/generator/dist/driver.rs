@@ -4,16 +4,37 @@
 //! crashed/timed-out shards, and performs the calibration-guarded merge
 //! into one streaming [`ParetoFront`].
 //!
-//! Determinism: dominance is always evaluated in the *uncorrected*
-//! closed form's coordinates — the common reference frame every host
-//! shares — and the driver re-derives each wire candidate's estimate
-//! with the same pure estimator the workers used, so the merged front is
-//! bit-identical to the single-process sweep for any worker count and
-//! any crash/reassignment history.  The calibration guard decides
-//! *trust*, not membership: a shard whose fitted tau clears the floor
-//! contributes its `ModelScales` to the consensus correction, while a
-//! disagreeing shard's finalists are re-ranked through a DES replay
-//! (ground-truth-first fold order) and its fit is quarantined.
+//! Two phases share the worker fleet:
+//!
+//! * **sweep** ([`DistSweep::run`]) — the exploration pass.  Dominance is
+//!   evaluated in the *uncorrected* closed form's coordinates — the
+//!   common reference frame every host shares — and the driver
+//!   re-derives each wire candidate's estimate with the same pure
+//!   estimator the workers used, so the merged front is bit-identical to
+//!   the single-process sweep for any worker count and any
+//!   crash/reassignment history.  The calibration guard decides *trust*,
+//!   not membership: a shard whose fitted tau clears the floor
+//!   contributes its `ModelScales` to the consensus correction, while a
+//!   disagreeing shard's finalists are re-ranked through a DES replay
+//!   (ground-truth-first fold order) and its fit is quarantined.
+//! * **refinement** ([`DistSweep::run_refine`]) — the correction pass.
+//!   The space is re-sharded with the corrected constants riding on each
+//!   [`ShardSpec`]; workers re-rank their stripes through a
+//!   `CalibratedEstimator`, and the driver merges in the *corrected*
+//!   closed form's coordinates (exact score ties broken by global
+//!   enumeration index), so the refined front/best are bit-identical to
+//!   the single-process `refine_with` under the same scales — again for
+//!   any worker count, crashes included.
+//!
+//! [`DistSweep::run_calibrated`] chains them into the full distributed
+//! estimator↔simulator loop: sweep → driver-side fit on the *merged*
+//! front (the same finalist set the single-process `calibrate_finalists`
+//! sees, so the fitted scales are bit-identical to the local loop's) →
+//! distributed refinement under those scales.  The per-shard consensus
+//! (`DistOutcome::consensus`) remains the cheap cross-host trust signal;
+//! the merged-front fit is the canonical correction, because bit-parity
+//! with `calibrate_and_refine` demands the exact least-squares system
+//! the single process solves.
 
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
@@ -22,8 +43,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context};
 
-use crate::generator::calibrate::{replay_all, ModelScales};
+use crate::generator::calibrate::{
+    calibrate_finalists, replay_all, CalibrateOpts, Calibration, ModelScales,
+};
 use crate::generator::constraints::AppSpec;
+use crate::generator::design_space::Candidate;
 use crate::generator::estimator::{estimate_cached, Estimate, EstimatorCache};
 use crate::generator::eval::{EvalPool, Evaluator};
 use crate::generator::search::exhaustive::Exhaustive;
@@ -65,6 +89,8 @@ pub struct DistOpts {
     /// Kendall-tau floor a shard's shipped agreement must clear for its
     /// fit to join the consensus; at or below it the shard counts as
     /// disagreeing and its finalists are DES-replayed before folding.
+    /// The same floor guards both phases — a refinement shard sitting at
+    /// or below it is folded ground-truth-first too.
     pub tau_floor: f64,
     /// Wall-clock cap per subprocess attempt before the worker is
     /// killed and the shard retried/reassigned.
@@ -122,8 +148,12 @@ pub struct DistOutcome {
     pub shards: Vec<ShardRun>,
     /// Estimator evaluations summed over all shards.
     pub evaluations: usize,
-    /// Finalist-weighted mean of the trusted shards' fitted scales —
-    /// the correction a downstream refinement sweep should use.
+    /// Finalist-weighted mean of the trusted shards' fitted scales — the
+    /// cross-host trust signal.  The canonical correction a refinement
+    /// uses is the driver-side fit on the merged front
+    /// ([`DistSweep::run_calibrated`]), which is bit-identical to the
+    /// single-process fit; this consensus is what the merge guard
+    /// produced from per-shard fits alone.
     pub consensus: ModelScales,
     /// Shards that needed in-process reassignment.
     pub reassigned: usize,
@@ -131,6 +161,56 @@ pub struct DistOutcome {
     pub reranked: usize,
     /// True when any shard hit its budget slice.
     pub budget_exhausted: bool,
+}
+
+/// Outcome of the distributed refinement phase: the merged re-ranking of
+/// the space in the *corrected* closed form's coordinates.
+#[derive(Debug)]
+pub struct RefineOutcome {
+    /// The corrected constants every worker (and the driver's local
+    /// re-estimation) applied.
+    pub scales: ModelScales,
+    /// Merged refinement front in corrected coordinates — bit-identical
+    /// to the single-process `refine_with` front under the same scales.
+    pub front: ParetoFront,
+    /// Best corrected estimate by the spec's goal (exact score ties
+    /// broken by global enumeration index).
+    pub best: Option<Estimate>,
+    pub shards: Vec<ShardRun>,
+    /// Estimator evaluations the refinement paid across all shards
+    /// (fresh worker pools cannot reuse the sweep memo across process
+    /// boundaries, so a distributed refinement re-pays the stripe
+    /// estimates the single-process pipeline served from its memo).
+    pub evaluations: usize,
+    pub reassigned: usize,
+    /// Shards whose corrected-model agreement sat at or below the tau
+    /// floor and were folded ground-truth-first.
+    pub reranked: usize,
+    pub budget_exhausted: bool,
+}
+
+/// The full distributed estimator↔simulator loop:
+/// sweep → driver-side fit on the merged front → distributed refinement.
+#[derive(Debug)]
+pub struct DistCalOutcome {
+    pub sweep: DistOutcome,
+    /// Fitted on the merged front's finalists — the same least-squares
+    /// system the single-process `calibrate_finalists` solves, so
+    /// scales/agreement/fallback are bit-identical to the local loop.
+    pub calibration: Calibration,
+    pub refined: RefineOutcome,
+}
+
+/// What a shared merge pass produces before phase-specific packaging.
+struct Merged {
+    front: ParetoFront,
+    best: Option<(Estimate, usize)>,
+    shards: Vec<ShardRun>,
+    evaluations: usize,
+    budget_exhausted: bool,
+    /// Trusted shards' (scales, finalist-count) fits — empty on the
+    /// refinement phase, which never folds a consensus.
+    fits: Vec<(ModelScales, f64)>,
 }
 
 /// The distributed sweep driver (see module docs).
@@ -147,26 +227,107 @@ impl DistSweep {
         &self.opts
     }
 
-    /// Plan, execute (workers in parallel), merge.
+    /// Plan, execute (workers in parallel), merge — the sweep phase.
     pub fn run(&self, spec: &AppSpec) -> anyhow::Result<DistOutcome> {
         let o = &self.opts;
-        let plans = plan_shards(spec, o.workers, o.budget, o.seed, o.requests, o.threads);
+        let plans = plan_shards(spec, o.workers, o.budget, o.seed, o.requests, o.threads, None);
+        let executed = self.execute_all(&plans);
+        let m = self.merge_shards(spec, &plans, executed, None)?;
+        let consensus = ModelScales::weighted_mean(&m.fits);
+        Ok(DistOutcome {
+            spec: spec.clone(),
+            front: m.front,
+            best: m.best.map(|(e, _)| e),
+            evaluations: m.evaluations,
+            consensus,
+            reassigned: m.shards.iter().filter(|s| s.reassigned).count(),
+            reranked: m.shards.iter().filter(|s| s.reranked).count(),
+            budget_exhausted: m.budget_exhausted,
+            shards: m.shards,
+        })
+    }
 
-        let executed: Vec<anyhow::Result<Executed>> =
-            std::thread::scope(|s| {
-                let handles: Vec<_> = plans
-                    .iter()
-                    .map(|p| s.spawn(move || self.execute(p)))
-                    .collect();
-                handles
-                    .into_iter()
-                    .map(|h| h.join().expect("shard thread panicked"))
-                    .collect()
-            });
+    /// The refinement phase: re-shard the space with `scales` riding on
+    /// each spec, re-rank every stripe through a calibrated estimator on
+    /// the same worker fleet (same crash/timeout reassignment), and
+    /// merge in the corrected closed form's coordinates.
+    pub fn run_refine(&self, spec: &AppSpec, scales: ModelScales) -> anyhow::Result<RefineOutcome> {
+        let o = &self.opts;
+        let plans = plan_shards(
+            spec,
+            o.workers,
+            o.budget,
+            o.seed,
+            o.requests,
+            o.threads,
+            Some(scales),
+        );
+        let executed = self.execute_all(&plans);
+        let m = self.merge_shards(spec, &plans, executed, Some(scales))?;
+        Ok(RefineOutcome {
+            scales,
+            front: m.front,
+            best: m.best.map(|(e, _)| e),
+            evaluations: m.evaluations,
+            reassigned: m.shards.iter().filter(|s| s.reassigned).count(),
+            reranked: m.shards.iter().filter(|s| s.reranked).count(),
+            budget_exhausted: m.budget_exhausted,
+            shards: m.shards,
+        })
+    }
 
-        // merge in shard order (membership is order-independent; the
-        // order only fixes which duplicate-free sequence the streaming
-        // front saw, for reproducible logs)
+    /// The full distributed estimator↔simulator loop.  The calibration
+    /// is fitted by the driver on the *merged* front — the identical
+    /// finalist set the single-process `calibrate_finalists` sees — so
+    /// the scales, agreement and fallback decision are bit-identical to
+    /// `calibrate_and_refine` with the same seed/requests/budget, and
+    /// the refinement that follows inherits that parity.
+    pub fn run_calibrated(&self, spec: &AppSpec) -> anyhow::Result<DistCalOutcome> {
+        let o = &self.opts;
+        let sweep = self.run(spec)?;
+        let opts = CalibrateOpts {
+            threads: o.threads.max(1),
+            requests: o.requests,
+            seed: o.seed,
+            budget: None,
+        };
+        let finalists: Vec<Estimate> = sweep.front.iter().cloned().collect();
+        let mut cal = calibrate_finalists(spec, finalists, &opts);
+        cal.sweep_best = sweep.best.clone();
+        let refined = self.run_refine(spec, cal.scales)?;
+        Ok(DistCalOutcome { sweep, calibration: cal, refined })
+    }
+
+    /// Execute every planned shard on its own thread (subprocess workers
+    /// run concurrently; in-process workers use the thread directly).
+    fn execute_all(&self, plans: &[ShardSpec]) -> Vec<anyhow::Result<Executed>> {
+        std::thread::scope(|s| {
+            let handles: Vec<_> = plans
+                .iter()
+                .map(|p| s.spawn(move || self.execute(p)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("shard thread panicked"))
+                .collect()
+        })
+    }
+
+    /// The shared merge pass.  `correction: None` merges in the
+    /// uncorrected coordinates (sweep phase, consensus fits collected);
+    /// `Some(scales)` re-derives every wire candidate in the corrected
+    /// coordinates (refinement phase).  Either way membership is
+    /// fold-order independent and exact best-score ties break by global
+    /// enumeration index, which is what makes the merge bit-identical to
+    /// the corresponding single-process pass.
+    fn merge_shards(
+        &self,
+        spec: &AppSpec,
+        plans: &[ShardSpec],
+        executed: Vec<anyhow::Result<Executed>>,
+        correction: Option<ModelScales>,
+    ) -> anyhow::Result<Merged> {
+        let o = &self.opts;
         let mut front = ParetoFront::new();
         let mut cache = EstimatorCache::new();
         let mut fits: Vec<(ModelScales, f64)> = Vec::new();
@@ -177,6 +338,13 @@ impl DistSweep {
         // the same shared trace the workers fitted against, for the
         // guard's own replays
         let arrivals = spec.workload.arrivals(o.requests, &mut Rng::new(o.seed));
+        let derive = |c: &Candidate, cache: &mut EstimatorCache| {
+            let e = estimate_cached(spec, c, cache);
+            match &correction {
+                Some(s) => s.correct_estimate(spec, e),
+                None => e,
+            }
+        };
 
         for (p, outcome) in plans.iter().zip(executed) {
             let (result, attempts, failure) =
@@ -189,31 +357,49 @@ impl DistSweep {
                 result.of,
                 result.app
             );
+            // a refinement worker echoes the correction it applied; a
+            // worker that ignored the shipped scales (version skew — an
+            // old binary decodes the spec but drops the unknown field
+            // and runs the sweep phase) must not fold sweep-phase
+            // results into the refined front
+            if let Some(s) = &correction {
+                anyhow::ensure!(
+                    result.scales.to_bits() == s.to_bits(),
+                    "refinement shard {}/{} did not apply the shipped correction \
+                     (echoed {:?}, want {:?}) — version-skewed worker?",
+                    result.shard,
+                    result.of,
+                    result.scales,
+                    s
+                );
+            }
 
             // decode + deterministic re-estimation: the estimator is a
-            // pure function of (spec, candidate), so re-deriving each
-            // finalist locally reproduces the worker's exact numbers —
+            // pure function of (spec, candidate) — and the correction a
+            // pure function of (scales, estimate) — so re-deriving each
+            // finalist locally reproduces the worker's exact numbers;
             // the wire carries candidates, not floats to trust
             let members: Vec<Estimate> = result
                 .front
                 .iter()
-                .map(|c| estimate_cached(spec, c, &mut cache))
+                .map(|c| derive(c, &mut cache))
                 .collect();
 
             let trusted = result.post.pairs < 2 || result.post.tau > o.tau_floor;
             if trusted {
-                if !result.fell_back && !result.front.is_empty() {
+                if correction.is_none() && !result.fell_back && !result.front.is_empty() {
                     fits.push((result.scales, result.front.len() as f64));
                 }
                 for e in &members {
                     front.insert(e);
                 }
             } else {
-                // calibration guard: this shard's estimator ranking
+                // calibration guard: this shard's ranking (uncorrected
+                // model on the sweep, corrected model on the refinement)
                 // disagrees with the DES, so validate before folding —
                 // replay its finalists (map_ordered under the hood) and
-                // fold them ground-truth-first; its fit stays out of
-                // the consensus
+                // fold them ground-truth-first; a sweep shard's fit
+                // stays out of the consensus
                 let replays = replay_all(&members, &arrivals, o.threads.max(1));
                 let mut order: Vec<usize> = (0..members.len()).collect();
                 order.sort_by(|&a, &b| {
@@ -228,7 +414,7 @@ impl DistSweep {
             }
 
             if let (Some(c), Some(idx)) = (&result.best, result.best_index) {
-                let e = estimate_cached(spec, c, &mut cache);
+                let e = derive(c, &mut cache);
                 let better = match &best {
                     None => true,
                     Some((b, bi)) => {
@@ -252,17 +438,13 @@ impl DistSweep {
             });
         }
 
-        let consensus = ModelScales::weighted_mean(&fits);
-        Ok(DistOutcome {
-            spec: spec.clone(),
+        Ok(Merged {
             front,
-            best: best.map(|(e, _)| e),
-            evaluations,
-            consensus,
-            reassigned: shards.iter().filter(|s| s.reassigned).count(),
-            reranked: shards.iter().filter(|s| s.reranked).count(),
-            budget_exhausted,
+            best,
             shards,
+            evaluations,
+            budget_exhausted,
+            fits,
         })
     }
 
@@ -280,7 +462,21 @@ impl DistSweep {
                 while attempts < self.opts.attempts.max(1) {
                     attempts += 1;
                     let decoded = spawn_worker(exe, &payload, self.opts.timeout)
-                        .and_then(|out| ShardResult::from_json_str(&out));
+                        .and_then(|out| ShardResult::from_json_str(&out))
+                        .and_then(|r| {
+                            // a refinement worker echoes the correction it
+                            // applied; an old binary that dropped the
+                            // unknown scales field ran the sweep phase
+                            // instead — treat it like any other bad
+                            // worker so the shard is retried/reassigned
+                            if let Some(s) = &plan.scales {
+                                anyhow::ensure!(
+                                    r.scales.to_bits() == s.to_bits(),
+                                    "worker did not apply the shipped correction (version skew?)"
+                                );
+                            }
+                            Ok(r)
+                        });
                     match decoded {
                         Ok(r) => return Ok((r, attempts, None)),
                         Err(e) => last_err = format!("{e:#}"),
@@ -311,12 +507,19 @@ fn spawn_worker(exe: &Path, payload: &str, timeout: Duration) -> anyhow::Result<
         .spawn()
         .with_context(|| format!("spawning worker {}", exe.display()))?;
 
-    // hand over the spec and close stdin so the worker sees EOF; a
-    // worker that already died yields a broken pipe here, which the
-    // exit-status check below reports as the real failure
-    if let Some(mut sin) = child.stdin.take() {
-        let _ = sin.write_all(payload.as_bytes());
-    }
+    // hand over the spec on a helper thread so the deadline below covers
+    // the write too: a worker that never reads stdin plus a payload
+    // larger than the OS pipe buffer would otherwise block write_all on
+    // this thread forever, before the timeout loop ever started.  The
+    // thread closes stdin on drop (EOF for the worker); a worker that
+    // already died yields a broken pipe, which the exit-status check
+    // below reports as the real failure.
+    let writer = child.stdin.take().map(|mut sin| {
+        let payload = payload.to_owned();
+        std::thread::spawn(move || {
+            let _ = sin.write_all(payload.as_bytes());
+        })
+    });
 
     // drain stdout on a helper thread so a large result cannot dead-lock
     // against a full pipe while we poll for exit
@@ -332,14 +535,22 @@ fn spawn_worker(exe: &Path, payload: &str, timeout: Duration) -> anyhow::Result<
         match child.try_wait().context("polling worker")? {
             Some(status) => break status,
             None if Instant::now() >= deadline => {
+                // killing the child closes its pipe ends, unblocking
+                // both helper threads
                 let _ = child.kill();
                 let _ = child.wait();
+                if let Some(w) = writer {
+                    let _ = w.join();
+                }
                 let _ = reader.join();
                 anyhow::bail!("worker timed out after {timeout:?}");
             }
             None => std::thread::sleep(Duration::from_millis(5)),
         }
     };
+    if let Some(w) = writer {
+        let _ = w.join();
+    }
     let out = reader
         .join()
         .map_err(|_| anyhow!("worker stdout reader panicked"))?;
@@ -367,6 +578,8 @@ pub fn single_process_reference(
 
 /// Bit-identity check between a reference front and a merged one: same
 /// membership by describe key, bit-equal objective vectors per member.
+/// Works for both phases — corrected fronts compare against corrected
+/// references.
 pub fn assert_front_parity(reference: &ParetoFront, merged: &ParetoFront) -> anyhow::Result<()> {
     let key = |e: &Estimate| {
         (
@@ -395,4 +608,40 @@ pub fn assert_front_parity(reference: &ParetoFront, merged: &ParetoFront) -> any
         );
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Regression: a worker that never reads stdin combined with a
+    /// payload larger than the OS pipe buffer used to block the driver
+    /// thread inside `write_all` *before* the timeout poll loop started,
+    /// hanging the sweep forever.  The stdin hand-over now runs on a
+    /// helper thread covered by the same deadline.
+    #[test]
+    #[cfg(unix)]
+    fn oversized_payload_to_a_stuck_worker_times_out() {
+        use std::os::unix::fs::PermissionsExt;
+        let script = std::env::temp_dir()
+            .join(format!("elastic-gen-stuck-worker-{}.sh", std::process::id()));
+        {
+            let mut f = std::fs::File::create(&script).unwrap();
+            // sleeps without ever reading stdin
+            f.write_all(b"#!/bin/sh\nsleep 30\n").unwrap();
+        }
+        std::fs::set_permissions(&script, std::fs::Permissions::from_mode(0o755)).unwrap();
+        // far larger than any OS pipe buffer (Linux default is 64 KiB)
+        let payload = "x".repeat(1 << 20);
+        let t0 = Instant::now();
+        let err = spawn_worker(&script, &payload, Duration::from_millis(400))
+            .expect_err("a stuck worker must time out, not hang the driver");
+        assert!(format!("{err:#}").contains("timed out"), "{err:#}");
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "driver blocked on the stdin write for {:?}",
+            t0.elapsed()
+        );
+        let _ = std::fs::remove_file(&script);
+    }
 }

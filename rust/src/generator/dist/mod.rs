@@ -1,6 +1,8 @@
 //! Distributed DSE: process-sharded sweeps with calibration-guarded
-//! Pareto-front merging — the subsystem that turns the single-machine
-//! generator into a distributable exploration service.
+//! Pareto-front merging, plus the distributed calibrated-refinement
+//! phase — the subsystem that turns the single-machine generator into a
+//! distributable exploration service running the full
+//! estimator↔simulator loop.
 //!
 //! Pipeline (see DESIGN.md "Distributed DSE"):
 //!
@@ -9,31 +11,37 @@
 //!   `s` of `N` owns global indices `s, s+N, s+2N, …`), so shards carry
 //!   comparable estimator cost, and splits an evaluation budget so the
 //!   union of per-shard prefixes is exactly the single-process budget
-//!   prefix.
+//!   prefix — on the sweep *and* on the refinement re-shard.
 //! * [`wire`] — the host-portable JSON protocol (`util::json`): shard
 //!   specs in, self-contained shard results out, candidates encoded by
 //!   their axis fields and keyed by `Candidate::describe()` (decode
 //!   re-derives the key and rejects mismatches, so a corrupt or
-//!   cross-version payload cannot silently fold into a front).
-//! * [`worker`] — one shard's work: stripe sweep through an `EvalPool`,
-//!   shard-local Pareto front, per-component `ModelScales` fitted on the
-//!   shard's finalists via DES replay, and Kendall-tau agreement — the
-//!   payload behind the `elastic-gen dse-worker` subcommand.
+//!   cross-version payload cannot silently fold into a front).  A spec
+//!   optionally carries `ModelScales`, which turns the shard into a
+//!   refinement shard.
+//! * [`worker`] — one shard's work: stripe sweep through an `EvalPool`
+//!   with a shard-local `ModelScales` fit (sweep phase), or a
+//!   re-ranking of the stripe through a `CalibratedEstimator` under the
+//!   driver's corrected constants (refinement phase) — the payload
+//!   behind the `elastic-gen dse-worker` subcommand.
 //! * [`driver`] — [`DistSweep`]: spawns N workers (subprocesses or
 //!   in-process for hermetic tests), reassigns crashed/timed-out shards,
-//!   and performs the calibration-guarded merge into one streaming
-//!   `ParetoFront`.
+//!   and merges into one streaming `ParetoFront`.  `run` is the sweep,
+//!   `run_refine` the refinement, and `run_calibrated` chains them with
+//!   a driver-side fit on the merged front into the full distributed
+//!   estimator↔simulator loop.
 //!
-//! Determinism contract: dominance is always evaluated in the
-//! *uncorrected* closed form's coordinates — the common reference frame
-//! every host shares — so the merged front is bit-identical to the
-//! single-process sweep for any worker count (including one), and
-//! independent of which shards crashed and were reassigned.  Per-shard
-//! `ModelScales` travel with each front; shards whose fitted tau clears
-//! the floor contribute to the consensus correction, while a disagreeing
-//! shard's finalists are re-ranked through a DES replay
-//! (ground-truth-first fold order, surfaced per shard) and its fit is
-//! quarantined from the consensus.
+//! Determinism contract: sweep dominance is evaluated in the
+//! *uncorrected* closed form's coordinates and refinement dominance in
+//! the *corrected* ones — in both cases a coordinate frame every host
+//! shares, with exact best-score ties broken by global enumeration
+//! index — so each phase's merged front/best is bit-identical to the
+//! corresponding single-process pass for any worker count (including
+//! one), and independent of which shards crashed and were reassigned.
+//! The calibration guard decides trust, not membership: a shard whose
+//! shipped tau sits at or below the floor has its finalists re-ranked
+//! through a DES replay before folding (and, on the sweep, its fit
+//! quarantined from the consensus).
 
 pub mod driver;
 pub mod plan;
@@ -41,8 +49,8 @@ pub mod wire;
 pub mod worker;
 
 pub use driver::{
-    assert_front_parity, single_process_reference, DistOutcome, DistOpts, DistSweep, ShardRun,
-    WorkerMode,
+    assert_front_parity, single_process_reference, DistCalOutcome, DistOutcome, DistOpts,
+    DistSweep, RefineOutcome, ShardRun, WorkerMode,
 };
 pub use plan::{plan_shards, stripe, stripe_budget};
 pub use wire::ShardSpec;

@@ -11,6 +11,7 @@
 //! interleaves every axis, so shard costs stay within one candidate of
 //! each other.
 
+use crate::generator::calibrate::ModelScales;
 use crate::generator::constraints::AppSpec;
 use crate::generator::design_space::Candidate;
 
@@ -41,7 +42,13 @@ pub fn stripe_budget(total: usize, shard: usize, of: usize) -> usize {
 /// Plan one shard spec per worker for a scenario.  `budget` is the
 /// *global* evaluation budget (split per stripe); `seed`/`requests`
 /// parameterise each worker's shard-local calibration replay; `threads`
-/// is the worker-local `EvalPool` width.
+/// is the worker-local `EvalPool` width.  A `Some(scales)` plans the
+/// *refinement* phase: workers re-rank their stripes under these
+/// corrected constants, and the budget split is the same stripe prefix —
+/// so the union of per-shard refinement prefixes is exactly the
+/// candidate prefix the single-process calibration sweep memoized, which
+/// is what keeps a budgeted distributed refinement bit-identical to
+/// `refine_with` on the budget-cut pool.
 pub fn plan_shards(
     spec: &AppSpec,
     workers: usize,
@@ -49,6 +56,7 @@ pub fn plan_shards(
     seed: u64,
     requests: usize,
     threads: usize,
+    scales: Option<ModelScales>,
 ) -> Vec<ShardSpec> {
     let workers = workers.max(1);
     (0..workers)
@@ -60,6 +68,7 @@ pub fn plan_shards(
             seed,
             requests,
             threads,
+            scales,
         })
         .collect()
 }
@@ -114,12 +123,28 @@ mod tests {
     #[test]
     fn plan_covers_workers_and_splits_budget() {
         let spec = AppSpec::soft_sensor();
-        let plans = plan_shards(&spec, 4, Some(10), 7, 100, 1);
+        let plans = plan_shards(&spec, 4, Some(10), 7, 100, 1, None);
         assert_eq!(plans.len(), 4);
         assert!(plans.iter().all(|p| p.app == spec.name && p.of == 4));
+        assert!(plans.iter().all(|p| p.scales.is_none()));
         let granted: usize = plans.iter().map(|p| p.budget.unwrap()).sum();
         assert_eq!(granted, 10);
-        let unbudgeted = plan_shards(&spec, 2, None, 7, 100, 1);
+        let unbudgeted = plan_shards(&spec, 2, None, 7, 100, 1, None);
         assert!(unbudgeted.iter().all(|p| p.budget.is_none()));
+    }
+
+    #[test]
+    fn refinement_plan_carries_scales_and_the_same_budget_split() {
+        let spec = AppSpec::soft_sensor();
+        let scales = ModelScales { busy: 1.5, idle: 1.0, off: 1.0, cold: 0.5 };
+        let sweep = plan_shards(&spec, 3, Some(11), 7, 100, 1, None);
+        let refine = plan_shards(&spec, 3, Some(11), 7, 100, 1, Some(scales));
+        assert!(refine.iter().all(|p| p.scales == Some(scales)));
+        // budget-prefix parity: the refinement stripes spend on exactly
+        // the same global enumeration prefix as the sweep stripes
+        for (a, b) in sweep.iter().zip(&refine) {
+            assert_eq!(a.budget, b.budget);
+            assert_eq!((a.shard, a.of), (b.shard, b.of));
+        }
     }
 }

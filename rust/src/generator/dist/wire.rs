@@ -29,7 +29,13 @@ pub const RESULT_SCHEMA: &str = "elastic-gen/dse-shard-result/v1";
 /// One shard's work order: which stripe of which scenario's enumeration,
 /// under what budget, and how the shard-local calibration replay is
 /// parameterised.  This is what `elastic-gen dse-worker` reads on stdin.
-#[derive(Debug, Clone, PartialEq, Eq)]
+///
+/// `scales` selects the phase: `None` is a calibration-sweep shard
+/// (stripe sweep + shard-local fit), `Some` is a *refinement* shard —
+/// the worker re-ranks its stripe through a `CalibratedEstimator`
+/// carrying exactly these corrected constants, so every worker (and the
+/// driver's local re-estimation) shares one corrected coordinate frame.
+#[derive(Debug, Clone, PartialEq)]
 pub struct ShardSpec {
     /// Scenario name (`AppSpec::scenarios()` entry).
     pub app: String,
@@ -46,6 +52,10 @@ pub struct ShardSpec {
     pub requests: usize,
     /// Worker-local `EvalPool` width.
     pub threads: usize,
+    /// Corrected constants for a refinement shard; `None` on the plain
+    /// calibration sweep.  Absent on the wire when `None`, so v1 specs
+    /// round-trip unchanged.
+    pub scales: Option<ModelScales>,
 }
 
 // -- field accessors ---------------------------------------------------------
@@ -225,7 +235,7 @@ pub fn decode_agreement(j: &Json, field: &str) -> anyhow::Result<RankAgreement> 
 
 impl ShardSpec {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("schema", Json::Str(SPEC_SCHEMA.to_string())),
             ("app", Json::Str(self.app.clone())),
             ("shard", Json::Num(self.shard as f64)),
@@ -242,7 +252,11 @@ impl ShardSpec {
             ("seed", Json::Str(self.seed.to_string())),
             ("requests", Json::Num(self.requests as f64)),
             ("threads", Json::Num(self.threads as f64)),
-        ])
+        ];
+        if let Some(s) = &self.scales {
+            fields.push(("scales", encode_scales(s)));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> anyhow::Result<ShardSpec> {
@@ -255,6 +269,10 @@ impl ShardSpec {
         let seed = seed_text
             .parse::<u64>()
             .map_err(|_| anyhow!("bad seed '{seed_text}'"))?;
+        let scales = match j.get("scales") {
+            None | Some(Json::Null) => None,
+            Some(s) => Some(decode_scales(s)),
+        };
         Ok(ShardSpec {
             app: string(j, "app")?.to_string(),
             shard: uint(j, "shard")?,
@@ -263,6 +281,7 @@ impl ShardSpec {
             seed,
             requests: uint(j, "requests")?,
             threads: uint(j, "threads")?,
+            scales,
         })
     }
 
@@ -425,13 +444,25 @@ mod tests {
             seed: u64::MAX - 1,
             requests: 200,
             threads: 2,
+            scales: None,
         };
         let text = spec.to_json().dump();
+        // sweep-phase specs don't carry a scales field at all (v1 shape)
+        assert!(!text.contains("scales"));
         assert_eq!(ShardSpec::from_json_str(&text).unwrap(), spec);
-        let none = ShardSpec { budget: None, ..spec };
+        let none = ShardSpec { budget: None, ..spec.clone() };
         assert_eq!(
             ShardSpec::from_json_str(&none.to_json().dump()).unwrap(),
             none
+        );
+        // a refinement spec round-trips its corrected constants exactly
+        let refine = ShardSpec {
+            scales: Some(ModelScales { busy: 1.25, idle: 0.5, off: 2.0, cold: 0.75 }),
+            ..spec
+        };
+        assert_eq!(
+            ShardSpec::from_json_str(&refine.to_json().dump()).unwrap(),
+            refine
         );
     }
 

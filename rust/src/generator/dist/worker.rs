@@ -1,19 +1,35 @@
 //! One shard's work, shared by the `elastic-gen dse-worker` subprocess
-//! and the driver's hermetic in-process mode: sweep the shard's stripe
-//! through an [`EvalPool`], fit shard-local `ModelScales` on the
-//! stripe's Pareto finalists via DES replay, and package everything as a
-//! self-contained, host-portable [`ShardResult`].
+//! and the driver's hermetic in-process mode.  Two phases share the
+//! protocol, selected by `ShardSpec::scales`:
+//!
+//! * **sweep** (`scales: None`) — sweep the shard's stripe through an
+//!   [`EvalPool`], fit shard-local `ModelScales` on the stripe's Pareto
+//!   finalists via DES replay.
+//! * **refinement** (`scales: Some`) — re-rank the stripe through a
+//!   [`CalibratedEstimator`] carrying the driver's corrected constants,
+//!   ship the corrected-coordinate Pareto finalists, and report the
+//!   corrected model's DES rank agreement on them (the driver's guard
+//!   signal; no new fit — the shipped scales echo the correction in
+//!   force).
+//!
+//! Either way the result is a self-contained, host-portable
+//! [`ShardResult`].
 
 use std::io::Read;
 
 use anyhow::Context;
 
-use crate::generator::calibrate::{calibrate_finalists, CalibrateOpts, ModelScales, RankAgreement};
+use crate::generator::calibrate::{
+    calibrate_finalists, rank_agreement, refine_with, replay_all, CalibrateOpts,
+    CalibratedEstimator, ModelScales, RankAgreement,
+};
 use crate::generator::constraints::AppSpec;
 use crate::generator::design_space::{enumerate, Candidate};
+use crate::generator::estimator::Estimate;
 use crate::generator::eval::{EvalPool, Evaluator};
 use crate::generator::search::exhaustive::Exhaustive;
 use crate::generator::search::Searcher;
+use crate::util::rng::Rng;
 
 use super::plan::stripe;
 use super::wire::ShardSpec;
@@ -57,7 +73,9 @@ pub(crate) fn scenario(name: &str) -> anyhow::Result<AppSpec> {
         .ok_or_else(|| anyhow::anyhow!("unknown scenario '{name}' in shard spec"))
 }
 
-/// Execute one shard: stripe sweep, shard-local calibration fit, result.
+/// Execute one shard: stripe sweep (shard-local calibration fit) or, when
+/// the spec carries corrected constants, the calibrated refinement
+/// re-rank of the stripe.
 pub fn run_shard(spec: &ShardSpec) -> anyhow::Result<ShardResult> {
     anyhow::ensure!(spec.of >= 1, "shard count must be >= 1");
     anyhow::ensure!(
@@ -73,6 +91,9 @@ pub fn run_shard(spec: &ShardSpec) -> anyhow::Result<ShardResult> {
     let mut pool = EvalPool::new(spec.threads.max(1));
     if let Some(b) = spec.budget {
         pool = pool.with_budget(b);
+    }
+    if let Some(scales) = spec.scales {
+        return run_refine_shard(spec, &app, &mine, pool, scales);
     }
     let sweep = Exhaustive.search_with(&app, &mine, &mut pool);
     let evaluations = pool.evaluations();
@@ -97,20 +118,7 @@ pub fn run_shard(spec: &ShardSpec) -> anyhow::Result<ShardResult> {
         .map(|r| r.estimate.candidate.clone())
         .collect();
 
-    let (best, best_index) = match &sweep.best {
-        Some(b) => {
-            let key = b.candidate.describe();
-            let local = mine
-                .iter()
-                .position(|c| c.describe() == key)
-                .context("sweep best missing from its own stripe")?;
-            (
-                Some(b.candidate.clone()),
-                Some(spec.shard + local * spec.of),
-            )
-        }
-        None => (None, None),
-    };
+    let (best, best_index) = best_with_index(spec, &mine, &sweep.best)?;
 
     Ok(ShardResult {
         app: app.name.clone(),
@@ -126,6 +134,68 @@ pub fn run_shard(spec: &ShardSpec) -> anyhow::Result<ShardResult> {
         fell_back: cal.fell_back,
         pre: cal.before,
         post: cal.after,
+    })
+}
+
+/// Map a stripe-local best back to (candidate, global enumeration index)
+/// — the driver breaks exact score ties by this index, matching the
+/// single-process first-in-enumeration-order winner.
+fn best_with_index(
+    spec: &ShardSpec,
+    mine: &[Candidate],
+    best: &Option<Estimate>,
+) -> anyhow::Result<(Option<Candidate>, Option<usize>)> {
+    match best {
+        Some(b) => {
+            let key = b.candidate.describe();
+            let local = mine
+                .iter()
+                .position(|c| c.describe() == key)
+                .context("best missing from its own stripe")?;
+            let global = spec.shard + local * spec.of;
+            Ok((Some(b.candidate.clone()), Some(global)))
+        }
+        None => Ok((None, None)),
+    }
+}
+
+/// The refinement phase of one shard: re-rank the stripe through a
+/// [`CalibratedEstimator`] carrying the driver's corrected constants and
+/// ship the corrected-coordinate Pareto finalists.  No new fit happens
+/// here — the shipped scales echo the correction in force, and the
+/// pre/post agreement is the corrected model's DES rank agreement on
+/// this stripe's finalists (what the driver's tau-floor guard reads).
+fn run_refine_shard(
+    spec: &ShardSpec,
+    app: &AppSpec,
+    mine: &[Candidate],
+    pool: EvalPool,
+    scales: ModelScales,
+) -> anyhow::Result<ShardResult> {
+    let refined = refine_with(app, mine, CalibratedEstimator::new(pool, scales));
+    // corrected-coordinate finalists, describe-sorted (canonical order)
+    let mut finalists: Vec<Estimate> = refined.front.into_members();
+    finalists.sort_by(|a, b| a.candidate.describe().cmp(&b.candidate.describe()));
+    let arrivals = app.workload.arrivals(spec.requests, &mut Rng::new(spec.seed));
+    let replays = replay_all(&finalists, &arrivals, spec.threads.max(1));
+    let est: Vec<f64> = finalists.iter().map(|e| e.energy_per_item.value()).collect();
+    let sim: Vec<f64> = replays.iter().map(|r| r.sim_energy_per_item.value()).collect();
+    let agreement = rank_agreement(&est, &sim);
+    let (best, best_index) = best_with_index(spec, mine, &refined.best)?;
+    Ok(ShardResult {
+        app: app.name.clone(),
+        shard: spec.shard,
+        of: spec.of,
+        evaluations: refined.evaluations,
+        eval_requests: refined.requests,
+        budget_exhausted: refined.budget_exhausted,
+        front: finalists.iter().map(|e| e.candidate.clone()).collect(),
+        best,
+        best_index,
+        scales,
+        fell_back: false,
+        pre: agreement,
+        post: agreement,
     })
 }
 
@@ -155,6 +225,7 @@ mod tests {
             seed: 11,
             requests: 60,
             threads: 1,
+            scales: None,
         }
     }
 
@@ -207,5 +278,34 @@ mod tests {
         let mut bad = quick_spec(0, 1);
         bad.app = "no-such-app".into();
         assert!(run_shard(&bad).is_err());
+    }
+
+    #[test]
+    fn refinement_shard_reranks_under_the_shipped_scales() {
+        let scales = ModelScales { busy: 1.3, idle: 0.8, off: 1.0, cold: 0.6 };
+        let mut spec = quick_spec(0, 2);
+        spec.scales = Some(scales);
+        let r = run_shard(&spec).unwrap();
+        // the shipped scales echo the correction in force; nothing fits
+        // (or falls back) during refinement
+        assert_eq!(r.scales, scales);
+        assert!(!r.fell_back);
+        assert_eq!(r.pre, r.post);
+        assert!(!r.front.is_empty());
+        // a full-space refinement shard (of=1) reproduces the
+        // single-process refine() front and best exactly
+        let mut full = quick_spec(0, 1);
+        full.scales = Some(scales);
+        let dist = run_shard(&full).unwrap();
+        let app = scenario("har-wearable").unwrap();
+        let local = crate::generator::calibrate::refine(&app, scales, 1);
+        let mut keys: Vec<String> = local.front.iter().map(|e| e.candidate.describe()).collect();
+        keys.sort();
+        let dist_keys: Vec<String> = dist.front.iter().map(|c| c.describe()).collect();
+        assert_eq!(dist_keys, keys);
+        assert_eq!(
+            dist.best.map(|c| c.describe()),
+            local.best.map(|e| e.candidate.describe())
+        );
     }
 }

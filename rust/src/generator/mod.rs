@@ -24,12 +24,13 @@ pub mod eval;
 pub mod search;
 
 pub use calibrate::{
-    calibrate, calibrate_and_refine, calibrate_finalists, refine, refine_with, CalibrateOpts,
-    CalibratedEstimator, Calibration, ModelScales, RankAgreement,
+    calibrate, calibrate_and_refine, calibrate_and_refine_dist, calibrate_finalists, refine,
+    refine_with, CalibrateOpts, CalibratedEstimator, Calibration, ModelScales, RankAgreement,
+    Refinement,
 };
 pub use constraints::{AppSpec, Goal};
 pub use design_space::{Candidate, StrategyKind};
-pub use dist::{DistOpts, DistOutcome, DistSweep, WorkerMode};
+pub use dist::{DistCalOutcome, DistOpts, DistOutcome, DistSweep, RefineOutcome, WorkerMode};
 pub use estimator::{estimate, Estimate};
 pub use eval::{default_threads, map_ordered, EvalPool, Evaluator};
 pub use search::{generate, generate_portfolio, Portfolio, SearchResult, Searcher};

@@ -22,16 +22,20 @@
 //! * `verify`   — cross-check PJRT execution and the behavioural
 //!   simulator against the golden vectors.
 
+use anyhow::Context as _;
 use elastic_gen::coordinator::{Coordinator, CoordinatorConfig, EngineSpec};
 use elastic_gen::eda;
 use elastic_gen::elastic_node::Platform;
 use elastic_gen::fpga::{device, ConfigController, DEVICES};
 use elastic_gen::generator::calibrate::{
-    calibrate_and_refine, calibrate_finalists, refine_with, CalibrateOpts, CalibratedEstimator,
+    calibrate_and_refine, calibrate_and_refine_dist, calibrate_finalists, refine_with,
+    CalibrateOpts, CalibratedEstimator, ModelScales,
 };
 use elastic_gen::generator::dist::{
-    assert_front_parity, single_process_reference, worker_stdio, DistOpts, DistSweep, WorkerMode,
+    assert_front_parity, single_process_reference, worker_stdio, DistCalOutcome, DistOpts,
+    DistSweep, ShardRun, WorkerMode,
 };
+use elastic_gen::generator::estimator::Estimate;
 use elastic_gen::generator::search::exhaustive::{rank_with, Exhaustive};
 use elastic_gen::generator::{
     default_threads, design_space, generate_portfolio, AppSpec, Calibration, EvalPool, Evaluator,
@@ -79,13 +83,18 @@ fn print_usage() {
          SUBCOMMANDS\n\
            generate  --app <soft-sensor|ecg-monitor|har-wearable> [--top N]\n\
                      [--jobs N] [--budget N] [--calibrate] [--distributed N]\n\
+                     (--distributed + --calibrate = distributed refinement)\n\
            generate  --all [--jobs N] [--budget N]   (cross-scenario sweep)\n\
            dse       --workers N [--app <name>] [--jobs N] [--budget N]\n\
                      [--requests N] [--in-process] [--verify-parity]\n\
-                     (process-sharded sweep, calibration-guarded merge)\n\
+                     [--calibrate]  (process-sharded sweep, calibration-\n\
+                     guarded merge; --calibrate adds the fit + the\n\
+                     distributed refinement re-rank)\n\
            dse-worker   (internal: JSON shard spec on stdin -> stdout)\n\
            calibrate [--app <name>] [--jobs N] [--requests N] [--budget N]\n\
-                     [--quick]   (estimator vs DES: fit + rank agreement)\n\
+                     [--quick] [--workers N [--in-process] [--verify-parity]]\n\
+                     (estimator vs DES: fit + rank agreement; --workers\n\
+                     runs the sweep AND the refinement process-sharded)\n\
            report    --model <mlp_fluid|lstm_har|cnn_ecg|attn_tiny> --device <name>\n\
                      [--clock-mhz 100] [--optimised]\n\
            simulate  --period-ms <f> [--requests N] [--device <name>]\n\
@@ -175,68 +184,19 @@ fn cmd_generate(args: &Args) -> anyhow::Result<()> {
         cal.sweep_best = ranked.first().cloned();
         let refined = refine_with(&spec, &space, CalibratedEstimator::new(pool, cal.scales));
         let mut t = Table::new(&calibration_columns()).with_title("Estimator↔DES calibration");
-        t.row(&calibration_row(&cal, &refined)?);
+        t.row(&calibration_row(&cal, refined.best.as_ref())?);
         println!("{}", t.render());
     }
     Ok(())
 }
 
-/// `elastic-gen dse` / `generate --distributed N`: shard the scenario's
-/// sweep across N worker processes (or in-process workers with
-/// `--in-process`), merge the fronts under the calibration guard, and —
-/// with `--verify-parity` — fail unless the merged front is bit-identical
-/// to the single-process sweep (the CI smoke runs through this path).
-fn cmd_dse(args: &Args) -> anyhow::Result<()> {
-    anyhow::ensure!(
-        !args.has_flag("calibrate"),
-        "--calibrate is not supported with the distributed sweep; run `elastic-gen calibrate` \
-         (the distributed merge already reports consensus scales)"
-    );
-    let spec = scenario(args.get_or("app", "soft-sensor"))?;
-    let workers = args
-        .get_usize("workers", args.get_usize("distributed", 2))
-        .max(1);
-    // --jobs is the host-wide worker target, like the other subcommands:
-    // split it across the shard processes' local pools
-    let threads = (args.get_usize("jobs", workers) / workers).max(1);
-    let budget = args.get_usize("budget", 0);
-    let budget_opt = if budget > 0 { Some(budget) } else { None };
-    let requests = args.get_usize("requests", 200);
-    let in_process = args.has_flag("in-process");
-    let mode = if in_process {
-        WorkerMode::InProcess
-    } else {
-        WorkerMode::Subprocess(std::env::current_exe()?)
-    };
-    println!(
-        "Distributed DSE for '{}': {} {} worker(s), {} replayed requests per finalist{}",
-        spec.name,
-        workers,
-        if in_process { "in-process" } else { "subprocess" },
-        requests,
-        if budget > 0 {
-            format!(", budget {budget}")
-        } else {
-            String::new()
-        },
-    );
-    let t0 = std::time::Instant::now();
-    let out = DistSweep::new(DistOpts {
-        workers,
-        mode,
-        budget: budget_opt,
-        requests,
-        threads,
-        ..DistOpts::default()
-    })
-    .run(&spec)?;
-    let wall = t0.elapsed();
-
+/// Render one phase's per-shard table (sweep or refinement).
+fn shard_table(title: &str, shards: &[ShardRun]) -> String {
     let mut t = Table::new(&[
         "shard", "evals", "finalists", "θ busy", "θ cold", "tau post", "status",
     ])
-    .with_title("Shards");
-    for s in &out.shards {
+    .with_title(title);
+    for s in shards {
         let r = &s.result;
         let mut status: Vec<String> = Vec::new();
         if s.reassigned {
@@ -267,29 +227,95 @@ fn cmd_dse(args: &Args) -> anyhow::Result<()> {
             status.join(", "),
         ]);
     }
-    println!("{}", t.render());
+    t.render()
+}
 
-    let best = out
-        .best
-        .as_ref()
-        .ok_or_else(|| anyhow::anyhow!("{}: no feasible configuration", spec.name))?;
-    println!(
-        "merged front: {} members, best {} at {} mJ/item, {} evaluations in {:.2}s",
-        out.front.len(),
-        best.candidate.describe(),
-        num(best.energy_per_item.mj(), 4),
-        out.evaluations,
-        wall.as_secs_f64(),
+/// Bitwise equality of two fitted scale sets — the parity checks compare
+/// corrected constants exactly, not approximately.
+fn ensure_scales_bit_equal(a: &ModelScales, b: &ModelScales) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        a.to_bits() == b.to_bits(),
+        "fitted scales differ: {a:?} vs {b:?}"
     );
+    Ok(())
+}
+
+/// `elastic-gen dse` / `generate --distributed N`: shard the scenario's
+/// sweep across N worker processes (or in-process workers with
+/// `--in-process`), merge the fronts under the calibration guard, and —
+/// with `--verify-parity` — fail unless the merged front is bit-identical
+/// to the single-process sweep (the CI smoke runs through this path).
+/// With `--calibrate` the driver fits the corrected constants on the
+/// merged front and re-shards the space for a distributed refinement
+/// re-rank, bit-identical to the single-process `calibrate_and_refine`.
+fn cmd_dse(args: &Args) -> anyhow::Result<()> {
+    let spec = scenario(args.get_or("app", "soft-sensor"))?;
+    let workers = args
+        .get_usize("workers", args.get_usize("distributed", 2))
+        .max(1);
+    // --jobs is the host-wide worker target, like the other subcommands:
+    // split it across the shard processes' local pools
+    let threads = (args.get_usize("jobs", workers) / workers).max(1);
+    let budget = args.get_usize("budget", 0);
+    let budget_opt = if budget > 0 { Some(budget) } else { None };
+    let requests = args.get_usize("requests", 200);
+    let in_process = args.has_flag("in-process");
+    let calibrated = args.has_flag("calibrate");
+    let mode = if in_process {
+        WorkerMode::InProcess
+    } else {
+        WorkerMode::Subprocess(std::env::current_exe()?)
+    };
     println!(
-        "consensus scales: busy {:.3} idle {:.3} off {:.3} cold {:.3} ({} shard(s) reranked, {} reassigned)",
-        out.consensus.busy,
-        out.consensus.idle,
-        out.consensus.off,
-        out.consensus.cold,
-        out.reranked,
-        out.reassigned
+        "Distributed DSE for '{}': {} {} worker(s), {} replayed requests per finalist{}{}",
+        spec.name,
+        workers,
+        if in_process { "in-process" } else { "subprocess" },
+        requests,
+        if budget > 0 {
+            format!(", budget {budget}")
+        } else {
+            String::new()
+        },
+        if calibrated {
+            " + distributed calibrated refinement"
+        } else {
+            ""
+        },
     );
+    let t0 = std::time::Instant::now();
+    let dopts = DistOpts {
+        workers,
+        mode,
+        budget: budget_opt,
+        requests,
+        threads,
+        ..DistOpts::default()
+    };
+    if calibrated {
+        let copts = CalibrateOpts {
+            threads: default_threads(),
+            requests,
+            budget: budget_opt,
+            ..Default::default()
+        };
+        let out = calibrate_and_refine_dist(&spec, &copts, &dopts)?;
+        let wall = t0.elapsed();
+        // the wall below covers the whole pipeline, not the sweep alone
+        print_dist_sweep(&spec, &out.sweep, None)?;
+        print_dist_refinement(&out)?;
+        println!(
+            "distributed pipeline (sweep + fit + refinement) completed in {:.2}s",
+            wall.as_secs_f64()
+        );
+        if args.has_flag("verify-parity") {
+            verify_calibrated_parity(&spec, &copts, &out)?;
+        }
+        return Ok(());
+    }
+    let out = DistSweep::new(dopts).run(&spec)?;
+    let wall = t0.elapsed();
+    print_dist_sweep(&spec, &out, Some(wall))?;
 
     if args.has_flag("verify-parity") {
         let (reference, ref_best, ref_evals) =
@@ -315,6 +341,96 @@ fn cmd_dse(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Print the sweep phase: per-shard table, merged front, consensus.
+/// `wall` is printed only when it covers the sweep alone — the
+/// calibrated pipeline reports its total separately.
+fn print_dist_sweep(
+    spec: &AppSpec,
+    out: &elastic_gen::generator::DistOutcome,
+    wall: Option<std::time::Duration>,
+) -> anyhow::Result<()> {
+    println!("{}", shard_table("Shards (sweep)", &out.shards));
+    let best = out
+        .best
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("{}: no feasible configuration", spec.name))?;
+    println!(
+        "merged front: {} members, best {} at {} mJ/item, {} evaluations{}",
+        out.front.len(),
+        best.candidate.describe(),
+        num(best.energy_per_item.mj(), 4),
+        out.evaluations,
+        match wall {
+            Some(w) => format!(" in {:.2}s", w.as_secs_f64()),
+            None => String::new(),
+        },
+    );
+    println!(
+        "consensus scales: busy {:.3} idle {:.3} off {:.3} cold {:.3} ({} shard(s) reranked, {} reassigned)",
+        out.consensus.busy,
+        out.consensus.idle,
+        out.consensus.off,
+        out.consensus.cold,
+        out.reranked,
+        out.reassigned
+    );
+    Ok(())
+}
+
+/// Print the calibration fit + distributed refinement phase.
+fn print_dist_refinement(out: &DistCalOutcome) -> anyhow::Result<()> {
+    let mut t =
+        Table::new(&calibration_columns()).with_title("Estimator↔DES calibration (distributed)");
+    t.row(&calibration_row(&out.calibration, out.refined.best.as_ref())?);
+    println!("{}", t.render());
+    println!("{}", shard_table("Shards (refinement)", &out.refined.shards));
+    println!(
+        "refined front: {} members in the corrected coordinates, {} evaluations ({} shard(s) reranked, {} reassigned)",
+        out.refined.front.len(),
+        out.refined.evaluations,
+        out.refined.reranked,
+        out.refined.reassigned
+    );
+    Ok(())
+}
+
+/// `--verify-parity` for the calibrated pipeline: the distributed fit,
+/// agreement, refined front and refined best must all be bit-identical
+/// to the single-process `calibrate_and_refine`.
+fn verify_calibrated_parity(
+    spec: &AppSpec,
+    copts: &CalibrateOpts,
+    out: &DistCalOutcome,
+) -> anyhow::Result<()> {
+    let (ref_cal, ref_refined) = calibrate_and_refine(spec, copts);
+    ensure_scales_bit_equal(&ref_cal.scales, &out.calibration.scales)?;
+    anyhow::ensure!(
+        ref_cal.before == out.calibration.before && ref_cal.after == out.calibration.after,
+        "{}: rank agreement differs from the single-process calibration",
+        spec.name
+    );
+    anyhow::ensure!(
+        ref_cal.fell_back == out.calibration.fell_back,
+        "{}: fallback decision differs from the single-process calibration",
+        spec.name
+    );
+    assert_front_parity(&ref_refined.front, &out.refined.front)
+        .with_context(|| format!("{}: refined front parity", spec.name))?;
+    let a = ref_refined.best.as_ref().map(|e| e.candidate.describe());
+    let b = out.refined.best.as_ref().map(|e| e.candidate.describe());
+    anyhow::ensure!(
+        a == b,
+        "{}: refined best differs: single-process {a:?} vs distributed {b:?}",
+        spec.name
+    );
+    println!(
+        "parity verified: distributed calibration + refinement bit-identical to the \
+         single-process loop ({} refined front members)",
+        out.refined.front.len()
+    );
+    Ok(())
+}
+
 /// Shared column set of the calibration agreement tables.
 fn calibration_columns() -> [&'static str; 10] {
     [
@@ -330,10 +446,12 @@ fn calibration_columns() -> [&'static str; 10] {
 /// the closed form no longer correlates with simulated ground truth).
 /// The CI smoke runs through here, so those conditions fail the
 /// pipeline; a fit the guard discarded is surfaced in the finalists
-/// column as "(fit fell back)".
+/// column as "(fit fell back)".  `refined_best` is the refinement
+/// sweep's winner — single-process or distributed, both phases share
+/// this row.
 fn calibration_row(
     cal: &Calibration,
-    refined: &elastic_gen::generator::SearchResult,
+    refined_best: Option<&Estimate>,
 ) -> anyhow::Result<Vec<String>> {
     let spec = &cal.spec;
     anyhow::ensure!(
@@ -350,9 +468,7 @@ fn calibration_row(
         cal.after.tau,
         cal.fitted.tau
     );
-    let best = refined
-        .best
-        .as_ref()
+    let best = refined_best
         .ok_or_else(|| anyhow::anyhow!("{}: refinement found nothing feasible", spec.name))?;
     let moved = match &cal.sweep_best {
         Some(b) if b.candidate.describe() == best.candidate.describe() => "winner unchanged",
@@ -382,12 +498,16 @@ fn calibration_row(
 
 /// `elastic-gen calibrate`: the full estimator↔simulator loop per
 /// scenario — sweep, DES replay of the Pareto finalists, least-squares
-/// fit, rank agreement, calibrated refinement sweep.
+/// fit, rank agreement, calibrated refinement sweep.  With `--workers N`
+/// both the sweep and the refinement run process-sharded
+/// (`calibrate_and_refine_dist`); `--verify-parity` then cross-checks
+/// every scenario against the single-process loop.
 fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
     let jobs = args.get_usize("jobs", default_threads());
     let quick = args.has_flag("quick");
     let requests = args.get_usize("requests", if quick { 200 } else { 600 });
     let budget = args.get_usize("budget", 0);
+    let workers = args.get_usize("workers", 0);
     let specs = match args.get("app") {
         Some(name) => vec![scenario(name)?],
         None => AppSpec::scenarios(),
@@ -398,6 +518,9 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
         budget: if budget > 0 { Some(budget) } else { None },
         ..Default::default()
     };
+    if workers > 0 {
+        return cmd_calibrate_dist(args, &specs, &opts, workers, quick);
+    }
     println!(
         "Calibrating the closed-form estimator against the DES: {} scenario(s), {jobs} jobs, {requests} replayed requests per finalist{}\n",
         specs.len(),
@@ -406,7 +529,7 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
     let mut t = Table::new(&calibration_columns()).with_title("Estimator↔DES calibration");
     for spec in &specs {
         let (cal, refined) = calibrate_and_refine(spec, &opts);
-        t.row(&calibration_row(&cal, &refined)?);
+        t.row(&calibration_row(&cal, refined.best.as_ref())?);
         if cal.fell_back {
             println!(
                 "note: {}: fitted scales regressed tau ({:.3} vs {:.3}) and were discarded",
@@ -419,6 +542,64 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
     println!("busy -> dyn_mw_per_mhz_per_klut + DSP/BRAM surcharges, cold -> cold-start energy,");
     println!("idle/off -> gap overheads.  A fit that does not improve Kendall tau is replaced");
     println!("by the identity constants, so tau post >= tau pre on every scenario.");
+    Ok(())
+}
+
+/// `elastic-gen calibrate --workers N`: the distributed loop — sweep and
+/// refinement both process-sharded, with the fit performed by the driver
+/// on the merged front so every number matches the single-process loop
+/// bit for bit (`--verify-parity` enforces exactly that; the CI smoke
+/// runs through here).
+fn cmd_calibrate_dist(
+    args: &Args,
+    specs: &[AppSpec],
+    opts: &CalibrateOpts,
+    workers: usize,
+    quick: bool,
+) -> anyhow::Result<()> {
+    let in_process = args.has_flag("in-process");
+    let verify = args.has_flag("verify-parity");
+    let threads = (opts.threads / workers).max(1);
+    let mode = if in_process {
+        WorkerMode::InProcess
+    } else {
+        WorkerMode::Subprocess(std::env::current_exe()?)
+    };
+    println!(
+        "Calibrating distributed: {} scenario(s), {workers} {} worker(s), {} replayed requests per finalist{}\n",
+        specs.len(),
+        if in_process { "in-process" } else { "subprocess" },
+        opts.requests,
+        if quick { " (quick)" } else { "" }
+    );
+    let dopts = DistOpts {
+        workers,
+        mode,
+        threads,
+        ..DistOpts::default()
+    };
+    let mut t = Table::new(&calibration_columns())
+        .with_title(&format!("Estimator↔DES calibration ({workers} workers)"));
+    for spec in specs {
+        let out = calibrate_and_refine_dist(spec, opts, &dopts)?;
+        t.row(&calibration_row(&out.calibration, out.refined.best.as_ref())?);
+        if out.calibration.fell_back {
+            println!(
+                "note: {}: fitted scales regressed tau ({:.3} vs {:.3}) and were discarded",
+                spec.name, out.calibration.fitted.tau, out.calibration.before.tau
+            );
+        }
+        if out.sweep.reassigned + out.refined.reassigned > 0 {
+            println!(
+                "note: {}: {} sweep / {} refinement shard(s) reassigned in-process",
+                spec.name, out.sweep.reassigned, out.refined.reassigned
+            );
+        }
+        if verify {
+            verify_calibrated_parity(spec, opts, &out)?;
+        }
+    }
+    println!("{}", t.render());
     Ok(())
 }
 

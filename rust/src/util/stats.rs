@@ -85,10 +85,15 @@ impl OnlineStats {
     }
 }
 
-/// Full-sample summary with percentiles (sorts a copy).
+/// Full-sample summary with percentiles (sorts a copy).  Non-finite
+/// samples (NaN/±inf timing artifacts) are dropped before summarizing —
+/// counted in `dropped` — so every reported statistic is finite.
 #[derive(Debug, Clone)]
 pub struct Summary {
+    /// Finite samples summarized.
     pub n: usize,
+    /// Non-finite samples dropped from the input.
+    pub dropped: usize,
     pub mean: f64,
     pub std: f64,
     pub min: f64,
@@ -101,15 +106,30 @@ pub struct Summary {
 impl Summary {
     pub fn of(samples: &[f64]) -> Summary {
         assert!(!samples.is_empty(), "Summary::of on empty sample set");
-        let mut v: Vec<f64> = samples.to_vec();
-        // total_cmp: NaN samples (zero-duration timing artifacts) sort to
-        // the end instead of panicking the percentile path
+        let mut v: Vec<f64> = samples.iter().copied().filter(|x| x.is_finite()).collect();
+        let dropped = samples.len() - v.len();
+        if v.is_empty() {
+            // every sample was non-finite: an all-zero summary beats
+            // poisoning mean/std/max with NaN downstream
+            return Summary {
+                n: 0,
+                dropped,
+                mean: 0.0,
+                std: 0.0,
+                min: 0.0,
+                p50: 0.0,
+                p90: 0.0,
+                p99: 0.0,
+                max: 0.0,
+            };
+        }
         v.sort_by(|a, b| a.total_cmp(b));
         let n = v.len();
         let mean = v.iter().sum::<f64>() / n as f64;
         let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
         Summary {
             n,
+            dropped,
             mean,
             std: var.sqrt(),
             min: v[0],
@@ -199,15 +219,32 @@ mod tests {
     }
 
     #[test]
-    fn summary_tolerates_nan_and_inf() {
+    fn summary_drops_non_finite_samples() {
         // reachable from metrics rendering on a zero-duration timing
-        // sample — must degrade (NaN-tailed order) rather than panic
+        // sample — NaN/±inf must not poison max/p99/mean/std; they are
+        // dropped (and counted) before summarizing
         let s = Summary::of(&[2.0, f64::NAN, 1.0, f64::INFINITY]);
-        assert_eq!(s.n, 4);
+        assert_eq!(s.n, 2);
+        assert_eq!(s.dropped, 2);
         assert_eq!(s.min, 1.0);
-        assert!(s.mean.is_nan());
+        assert_eq!(s.max, 2.0);
+        assert_eq!(s.mean, 1.5);
+        assert!(s.p99.is_finite() && s.std.is_finite());
         let neg = Summary::of(&[f64::NEG_INFINITY, 0.5, f64::NAN]);
-        assert_eq!(neg.min, f64::NEG_INFINITY);
+        assert_eq!(neg.n, 1);
+        assert_eq!(neg.dropped, 2);
+        assert_eq!(neg.min, 0.5);
+        assert_eq!(neg.max, 0.5);
+    }
+
+    #[test]
+    fn summary_of_all_non_finite_is_zeroed() {
+        let s = Summary::of(&[f64::NAN, f64::INFINITY, f64::NEG_INFINITY]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.dropped, 3);
+        for x in [s.mean, s.std, s.min, s.p50, s.p90, s.p99, s.max] {
+            assert_eq!(x, 0.0);
+        }
     }
 
     #[test]

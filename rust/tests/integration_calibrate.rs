@@ -1,9 +1,13 @@
 //! Integration: the estimator↔simulator calibration loop — rank
 //! agreement floors per scenario, the tau-improvement guarantee,
 //! thread-count determinism of the DES replay stage, and the calibrated
-//! refinement sweep.
+//! refinement sweep (now carrying the corrected-coordinate Pareto front
+//! the distributed refinement merges against).
 
-use elastic_gen::generator::calibrate::{calibrate, calibrate_and_refine, refine, CalibrateOpts};
+use elastic_gen::generator::calibrate::{
+    calibrate, calibrate_and_refine, refine, CalibrateOpts, ModelScales,
+};
+use elastic_gen::generator::dist::assert_front_parity;
 use elastic_gen::generator::AppSpec;
 
 fn opts(threads: usize) -> CalibrateOpts {
@@ -125,4 +129,29 @@ fn combined_refinement_costs_zero_evaluations() {
     let best = refined.best.expect("refinement found nothing feasible");
     assert!(best.feasible);
     assert!(best.energy_per_item.value() > 0.0);
+    assert!(!refined.front.is_empty(), "refinement shipped no corrected front");
+}
+
+/// The refinement's Pareto front lives in the corrected coordinates and
+/// is bit-identical across thread counts; under identity scales it
+/// degrades to the plain (uncorrected) sweep front.
+#[test]
+fn refinement_front_is_corrected_and_thread_invariant() {
+    let spec = AppSpec::soft_sensor();
+    let scales = ModelScales { busy: 1.4, idle: 0.7, off: 1.0, cold: 0.5 };
+    let r1 = refine(&spec, scales, 1);
+    let r4 = refine(&spec, scales, 4);
+    assert!(!r1.front.is_empty());
+    assert_front_parity(&r1.front, &r4.front).expect("thread count changed the refined front");
+    // every front member carries the corrected energy, bit-for-bit
+    for e in r1.front.iter() {
+        let corrected = scales.energy_per_item(e, spec.workload.mean_gap());
+        assert_eq!(e.energy_per_item.value().to_bits(), corrected.value().to_bits());
+    }
+    // identity correction reproduces the uncorrected sweep front
+    let plain = refine(&spec, ModelScales::identity(), 2);
+    let (reference, _, _) =
+        elastic_gen::generator::dist::single_process_reference(&spec, None, 2);
+    assert_front_parity(&reference, &plain.front)
+        .expect("identity refinement diverged from the sweep front");
 }

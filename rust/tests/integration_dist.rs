@@ -2,16 +2,23 @@
 //! worker protocol (in-process and real subprocess workers), crash
 //! reassignment, and the calibration-guarded merge's bit-parity
 //! contract: `generate --distributed N` must produce a merged Pareto
-//! front bit-identical to the single-process sweep at any worker count.
+//! front bit-identical to the single-process sweep at any worker count —
+//! and, since the refinement phase, `calibrate --workers N` must produce
+//! fitted scales and a refined front/best bit-identical to the
+//! single-process `calibrate_and_refine`, crashes included.
 
 use std::path::PathBuf;
 
+use elastic_gen::generator::calibrate::{calibrate_and_refine, calibrate_and_refine_dist, refine};
 use elastic_gen::generator::design_space::enumerate;
 use elastic_gen::generator::dist::{
-    assert_front_parity, run_shard, single_process_reference, DistOpts, DistSweep, ShardResult,
-    ShardSpec, WorkerMode,
+    assert_front_parity, run_shard, single_process_reference, DistCalOutcome, DistOpts, DistSweep,
+    ShardResult, ShardSpec, WorkerMode,
 };
-use elastic_gen::generator::{AppSpec, ModelScales, RankAgreement, StrategyKind};
+use elastic_gen::generator::{
+    AppSpec, CalibrateOpts, Calibration, Estimate, ModelScales, RankAgreement, Refinement,
+    StrategyKind,
+};
 
 fn in_process(workers: usize, budget: Option<usize>) -> DistOpts {
     DistOpts {
@@ -21,6 +28,38 @@ fn in_process(workers: usize, budget: Option<usize>) -> DistOpts {
         requests: 80,
         ..DistOpts::default()
     }
+}
+
+/// The calibrated pipeline's bit-parity contract against the
+/// single-process `calibrate_and_refine`: same fitted scales, same
+/// agreement and fallback decision, same refined front/best.
+fn assert_calibrated_parity(
+    spec: &AppSpec,
+    ref_cal: &Calibration,
+    ref_refined: &Refinement,
+    out: &DistCalOutcome,
+    label: &str,
+) {
+    assert_eq!(
+        out.calibration.scales.to_bits(),
+        ref_cal.scales.to_bits(),
+        "{}: {label}: fitted scales diverged",
+        spec.name
+    );
+    assert_eq!(out.calibration.before, ref_cal.before, "{}: {label}", spec.name);
+    assert_eq!(out.calibration.after, ref_cal.after, "{}: {label}", spec.name);
+    assert_eq!(
+        out.calibration.fell_back,
+        ref_cal.fell_back,
+        "{}: {label}: fallback decision diverged",
+        spec.name
+    );
+    assert_front_parity(&ref_refined.front, &out.refined.front)
+        .unwrap_or_else(|e| panic!("{}: {label}: refined front: {e:#}", spec.name));
+    let key = |e: &Estimate| (e.candidate.describe(), e.energy_per_item.value().to_bits());
+    let a = ref_refined.best.as_ref().map(key);
+    let b = out.refined.best.as_ref().map(key);
+    assert_eq!(a, b, "{}: {label}: refined best diverged", spec.name);
 }
 
 /// The headline contract: for N ∈ {1, 2, 4} in-process workers the
@@ -189,6 +228,7 @@ fn non_finite_scales_survive_the_wire_as_identity() {
         seed: 11,
         requests: 40,
         threads: 1,
+        scales: None,
     })
     .expect("shard run");
     r.scales = ModelScales {
@@ -206,4 +246,161 @@ fn non_finite_scales_survive_the_wire_as_identity() {
     // everything else is untouched
     assert_eq!(back.front.len(), r.front.len());
     assert_eq!(back.evaluations, r.evaluations);
+}
+
+/// The tentpole contract: `calibrate --workers N` — distributed sweep,
+/// driver-side fit on the merged front, distributed refinement — is
+/// bit-identical to the single-process `calibrate_and_refine` at N ∈
+/// {1, 2, 4} in-process workers.
+#[test]
+fn distributed_calibrated_refinement_matches_single_process() {
+    let spec = AppSpec::har_wearable();
+    let copts = CalibrateOpts { threads: 2, requests: 80, seed: 11, budget: None };
+    let (ref_cal, ref_refined) = calibrate_and_refine(&spec, &copts);
+    assert!(ref_refined.best.is_some(), "reference refinement found nothing");
+    for workers in [1usize, 2, 4] {
+        let out = calibrate_and_refine_dist(&spec, &copts, &in_process(workers, None))
+            .unwrap_or_else(|e| panic!("{workers} workers: {e:#}"));
+        let label = format!("{workers} workers");
+        assert_calibrated_parity(&spec, &ref_cal, &ref_refined, &out, &label);
+        assert_eq!(out.refined.shards.len(), workers);
+        assert_eq!(out.refined.reassigned, 0);
+        // the refinement phase applied the corrected constants, not the
+        // per-shard consensus: that is what bit-parity demands
+        assert_eq!(out.refined.scales.to_bits(), ref_cal.scales.to_bits());
+    }
+}
+
+/// Budgeted calibrated refinement: the refinement stripes spend on the
+/// same global enumeration prefix the single-process calibration sweep
+/// memoized, so the budget-cut refined front is bit-identical too.
+#[test]
+fn budgeted_calibrated_refinement_matches_single_process() {
+    let spec = AppSpec::soft_sensor();
+    let copts = CalibrateOpts { threads: 2, requests: 60, seed: 11, budget: Some(400) };
+    let (ref_cal, ref_refined) = calibrate_and_refine(&spec, &copts);
+    for workers in [2usize, 3] {
+        let out = calibrate_and_refine_dist(&spec, &copts, &in_process(workers, Some(400)))
+            .unwrap_or_else(|e| panic!("{workers} workers: {e:#}"));
+        let label = format!("budgeted, {workers} workers");
+        assert_calibrated_parity(&spec, &ref_cal, &ref_refined, &out, &label);
+        assert_eq!(out.sweep.evaluations, 400);
+        assert!(out.refined.budget_exhausted);
+    }
+}
+
+/// A dead worker binary on *both* phases: every shard is reassigned
+/// in-process and the calibrated pipeline still lands bit-identically.
+#[test]
+fn calibrated_refinement_with_dead_workers_is_unchanged() {
+    let spec = AppSpec::har_wearable();
+    let copts = CalibrateOpts { threads: 2, requests: 60, seed: 11, budget: None };
+    let (ref_cal, ref_refined) = calibrate_and_refine(&spec, &copts);
+    let dopts = DistOpts {
+        workers: 2,
+        mode: WorkerMode::Subprocess(PathBuf::from("/nonexistent/elastic-gen-worker")),
+        attempts: 1,
+        ..DistOpts::default()
+    };
+    let out = calibrate_and_refine_dist(&spec, &copts, &dopts).expect("calibrated sweep");
+    assert_eq!(out.sweep.reassigned, 2, "sweep shards not reassigned");
+    assert_eq!(out.refined.reassigned, 2, "refinement shards not reassigned");
+    assert_calibrated_parity(&spec, &ref_cal, &ref_refined, &out, "dead workers");
+}
+
+/// Real subprocess workers speak the extended wire protocol end to end:
+/// the refinement shard specs carry `ModelScales` across the process
+/// boundary and the merged outcome still matches the local loop.
+#[test]
+fn subprocess_calibrated_refinement_end_to_end() {
+    let spec = AppSpec::har_wearable();
+    let copts = CalibrateOpts { threads: 2, requests: 60, seed: 11, budget: None };
+    let (ref_cal, ref_refined) = calibrate_and_refine(&spec, &copts);
+    let exe = PathBuf::from(env!("CARGO_BIN_EXE_elastic-gen"));
+    let dopts = DistOpts {
+        workers: 2,
+        mode: WorkerMode::Subprocess(exe),
+        ..DistOpts::default()
+    };
+    let out = calibrate_and_refine_dist(&spec, &copts, &dopts).expect("subprocess pipeline");
+    assert_eq!(out.sweep.reassigned, 0, "healthy sweep workers were reassigned");
+    assert_eq!(out.refined.reassigned, 0, "healthy refinement workers were reassigned");
+    assert_calibrated_parity(&spec, &ref_cal, &ref_refined, &out, "subprocess");
+}
+
+/// When every fit is quarantined (the tau floor is unreachable), the
+/// consensus must degrade to the identity scales — and the guard still
+/// only decides trust, never membership.
+#[test]
+fn all_quarantined_shards_yield_identity_consensus() {
+    let spec = AppSpec::har_wearable();
+    let mut opts = in_process(1, None);
+    opts.tau_floor = f64::INFINITY;
+    let out = DistSweep::new(opts).run(&spec).unwrap();
+    // the full-space front has >= 3 finalists (pinned in
+    // integration_calibrate), so the single shard is rankable
+    assert!(out.shards[0].result.post.pairs >= 2, "front too small to exercise the guard");
+    assert_eq!(out.reranked, 1);
+    assert!(
+        out.consensus.is_identity(),
+        "quarantined fit leaked into the consensus: {:?}",
+        out.consensus
+    );
+    let (reference, _, _) = single_process_reference(&spec, None, 4);
+    assert_front_parity(&reference, &out.front).expect("guard changed membership");
+}
+
+/// The merge folds trusted fits through `ModelScales::weighted_mean`
+/// with finalist-count weights — pin the consensus against a manual
+/// recomputation from the per-shard results.
+#[test]
+fn consensus_is_the_finalist_weighted_mean_of_trusted_fits() {
+    let spec = AppSpec::soft_sensor();
+    let out = DistSweep::new(in_process(2, None)).run(&spec).unwrap();
+    let fits: Vec<(ModelScales, f64)> = out
+        .shards
+        .iter()
+        .filter(|s| !s.reranked && !s.result.fell_back && !s.result.front.is_empty())
+        .map(|s| (s.result.scales, s.result.front.len() as f64))
+        .collect();
+    assert_eq!(out.consensus, ModelScales::weighted_mean(&fits));
+    // and the empty / non-positive-weight degenerate cases hold
+    assert!(ModelScales::weighted_mean(&[]).is_identity());
+    let junk = ModelScales { busy: 9.0, idle: 9.0, off: 9.0, cold: 9.0 };
+    assert!(ModelScales::weighted_mean(&[(junk, 0.0), (junk, f64::NAN)]).is_identity());
+}
+
+/// A shard whose shipped tau sits *exactly at* the floor counts as
+/// disagreeing — on the sweep and on the refinement phase alike — and
+/// in both cases the guard re-ranks without changing membership.
+#[test]
+fn tau_floor_boundary_counts_as_disagreeing_on_both_phases() {
+    let spec = AppSpec::har_wearable();
+
+    // sweep phase: observe the (deterministic) shipped tau, then pin the
+    // floor exactly there and re-run
+    let base = DistSweep::new(in_process(1, None)).run(&spec).unwrap();
+    assert!(base.shards[0].result.post.pairs >= 2, "front too small to rank");
+    assert!(!base.shards[0].reranked, "default floor already tripped");
+    let mut opts = in_process(1, None);
+    opts.tau_floor = base.shards[0].result.post.tau;
+    let out = DistSweep::new(opts).run(&spec).unwrap();
+    assert!(out.shards[0].reranked, "tau == tau_floor must count as disagreeing on the sweep");
+    assert!(out.consensus.is_identity(), "boundary shard's fit joined the consensus");
+    let (reference, _, _) = single_process_reference(&spec, None, 4);
+    assert_front_parity(&reference, &out.front).expect("sweep guard changed membership");
+
+    // refinement phase: same boundary semantics under the corrected model
+    let scales = ModelScales { busy: 1.2, idle: 0.9, off: 1.0, cold: 0.8 };
+    let base_r = DistSweep::new(in_process(1, None)).run_refine(&spec, scales).unwrap();
+    assert!(base_r.shards[0].result.post.pairs >= 2, "refined front too small to rank");
+    let mut opts_r = in_process(1, None);
+    opts_r.tau_floor = base_r.shards[0].result.post.tau;
+    let out_r = DistSweep::new(opts_r).run_refine(&spec, scales).unwrap();
+    assert!(
+        out_r.shards[0].reranked,
+        "tau == tau_floor must count as disagreeing on the refinement phase"
+    );
+    let local = refine(&spec, scales, 2);
+    assert_front_parity(&local.front, &out_r.front).expect("refinement guard changed membership");
 }
