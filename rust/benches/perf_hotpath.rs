@@ -8,7 +8,7 @@
 //! Run with BENCH_SECS=<f64> to change the per-bench wall budget.
 
 use elastic_gen::behav::{self, ExecConfig};
-use elastic_gen::bench::{bench, black_box, default_target};
+use elastic_gen::bench::{bench, black_box, default_target, BenchJson};
 use elastic_gen::coordinator::{Coordinator, CoordinatorConfig, EngineSpec, ShardPolicy};
 use elastic_gen::elastic_node::Platform;
 use elastic_gen::fpga::{device, ConfigController};
@@ -32,7 +32,7 @@ use std::time::Instant;
 /// Throughput of the sharded coordinator on a hermetic synthetic workload
 /// (8 artifacts, ~30us of deterministic CPU per request, 8 producer
 /// threads).  Demonstrates shard scaling without any built artifacts.
-fn coordinator_scaling() {
+fn coordinator_scaling(json: &mut BenchJson) {
     const PRODUCERS: usize = 8;
     const PER_PRODUCER: usize = 256;
     println!();
@@ -70,6 +70,7 @@ fn coordinator_scaling() {
         if shards == 1 {
             base_rps = rps;
         }
+        json.record(&format!("coordinator-scaling/{shards}-shard"), wall);
         println!(
             "coordinator-scaling/{shards}-shard: {served} reqs in {wall:.3}s = {rps:.0} req/s ({:.2}x vs 1 shard)",
             rps / base_rps
@@ -81,7 +82,7 @@ fn coordinator_scaling() {
 /// count gets a fresh pool (no memo carry-over) and must reproduce the
 /// single-thread best exactly — the pool merges in submission order, so
 /// parallelism only changes wall-clock.
-fn dse_scaling() {
+fn dse_scaling(json: &mut BenchJson) {
     let spec = AppSpec::soft_sensor();
     let space = enumerate(&[]);
     println!();
@@ -101,6 +102,7 @@ fn dse_scaling() {
             }
             Some(s) => assert_eq!(s, score, "thread count changed the sweep result"),
         }
+        json.record(&format!("dse-scaling/{threads}-thread"), wall);
         println!(
             "dse-scaling/{threads}-thread: {} evals in {wall:.3}s = {:.0} cand/s ({:.2}x vs 1 thread)",
             r.evaluations,
@@ -114,7 +116,7 @@ fn dse_scaling() {
 /// the fit + rank-agreement wall-clock.  Replays merge in submission
 /// order, so the summed simulated energy must be bit-identical across
 /// thread counts.
-fn calibration_scaling() {
+fn calibration_scaling(json: &mut BenchJson) {
     let spec = AppSpec::ecg_monitor();
     let space = enumerate(&spec.device_allowlist);
     let mut pool = EvalPool::new(default_threads());
@@ -137,6 +139,7 @@ fn calibration_scaling() {
             }
             Some(t) => assert_eq!(t, total, "thread count changed DES replay results"),
         }
+        json.record(&format!("calibration/replay-{threads}-thread"), wall);
         println!(
             "calibration/replay-{threads}-thread: {} finalists x {} reqs in {wall:.3}s ({:.2}x vs 1 thread)",
             finalists.len(),
@@ -150,12 +153,13 @@ fn calibration_scaling() {
         finalists,
         &CalibrateOpts { threads: default_threads(), requests: 400, ..Default::default() },
     );
+    let fit_wall = t0.elapsed().as_secs_f64();
+    json.record("calibration/fit+tau", fit_wall);
     println!(
-        "calibration/fit+tau: {} finalists, tau {:.3} -> {:.3} in {:.3}s",
+        "calibration/fit+tau: {} finalists, tau {:.3} -> {:.3} in {fit_wall:.3}s",
         cal.replays.len(),
         cal.before.tau,
         cal.after.tau,
-        t0.elapsed().as_secs_f64()
     );
 }
 
@@ -164,7 +168,7 @@ fn calibration_scaling() {
 /// → calibration-guarded merge.  Every worker count must merge to a
 /// front bit-identical to the single-process sweep — the subsystem's
 /// determinism contract — and spend exactly the same evaluation count.
-fn dist_scaling() {
+fn dist_scaling(json: &mut BenchJson) {
     use elastic_gen::generator::dist::{
         assert_front_parity, single_process_reference, DistOpts, DistSweep, WorkerMode,
     };
@@ -189,6 +193,7 @@ fn dist_scaling() {
         if workers == 1 {
             base_wall = wall;
         }
+        json.record(&format!("dist-scaling/{workers}-worker"), wall);
         println!(
             "dist-scaling/{workers}-worker: {} evals, front {} in {wall:.3}s ({:.2}x vs 1 worker)",
             out.evaluations,
@@ -205,7 +210,7 @@ fn dist_scaling() {
 /// single-process `calibrate_and_refine` — scales, refined front and
 /// refined best — so refinement scaling stays on the bench trajectory
 /// without ever drifting from the local loop.
-fn dist_refine_scaling() {
+fn dist_refine_scaling(json: &mut BenchJson) {
     use elastic_gen::generator::calibrate::calibrate_and_refine_dist;
     use elastic_gen::generator::dist::{assert_front_parity, DistOpts, WorkerMode};
     let spec = AppSpec::har_wearable();
@@ -243,6 +248,7 @@ fn dist_refine_scaling() {
         if workers == 1 {
             base_wall = wall;
         }
+        json.record(&format!("dist-refine/{workers}-worker"), wall);
         println!(
             "dist-refine/{workers}-worker: {} sweep + {} refine evals, refined front {} in {wall:.3}s ({:.2}x vs 1 worker)",
             out.sweep.evaluations,
@@ -261,6 +267,7 @@ fn main() {
     );
     let target = default_target();
     let mut results = Vec::new();
+    let mut json = BenchJson::new();
 
     // --- DSE estimator -----------------------------------------------------
     let spec = AppSpec::soft_sensor();
@@ -291,19 +298,19 @@ fn main() {
     }));
 
     // --- DSE sweep scaling across pool workers ------------------------------
-    dse_scaling();
+    dse_scaling(&mut json);
 
     // --- calibration: parallel DES replay + fit -----------------------------
-    calibration_scaling();
+    calibration_scaling(&mut json);
 
     // --- distributed sweep: shard + merge parity across worker counts -------
-    dist_scaling();
+    dist_scaling(&mut json);
 
     // --- distributed calibrated refinement: two-phase parity + scaling ------
-    dist_refine_scaling();
+    dist_refine_scaling(&mut json);
 
     // --- coordinator shard scaling (hermetic, synthetic engine) ------------
-    coordinator_scaling();
+    coordinator_scaling(&mut json);
 
     // --- behavioural executor ----------------------------------------------
     let dir = elastic_gen::artifacts_dir();
@@ -380,5 +387,15 @@ fn main() {
             enumerate(&[]).len(),
             enumerate(&[]).len() as f64 * est.per_iter.mean
         );
+    }
+
+    // the machine-readable trajectory: every harness bench (median
+    // per-iter) plus the scaling sections' wall-clocks
+    for r in &results {
+        json.record_result(r);
+    }
+    match json.write() {
+        Ok(path) => println!("\nbench trajectory written: {}", path.display()),
+        Err(e) => println!("\n(bench trajectory not written: {e})"),
     }
 }

@@ -1,8 +1,12 @@
 //! Criterion-lite benchmark harness (criterion is not in the vendored
 //! crate set).  Warmup + timed iterations with summary statistics, plus
-//! the table plumbing the E1-E8 bench binaries share.
+//! the table plumbing the E1-E8 bench binaries share and the
+//! machine-readable `BENCH_<date>.json` trajectory writer.
 
+use crate::util::json::Json;
 use crate::util::stats::Summary;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 pub use std::hint::black_box;
@@ -86,6 +90,117 @@ pub fn default_target() -> Duration {
         .unwrap_or_else(|| Duration::from_millis(800))
 }
 
+/// The machine-readable twin of the bench binaries' text output: a flat
+/// `sections` map of section name -> representative wall-clock seconds
+/// (harness benches record their median per-iter; the scaling sections
+/// record their phase wall-clocks).  Written as `BENCH_<date>.json` so
+/// successive runs leave a dated perf trajectory that scripts and CI can
+/// diff without scraping stdout.  `BENCH_JSON_DIR` overrides the target
+/// directory (default: the repo root, found by walking up to
+/// ROADMAP.md); `BENCH_JSON_DATE` overrides the date stamp.
+#[derive(Debug, Clone, Default)]
+pub struct BenchJson {
+    sections: Vec<(String, f64)>,
+}
+
+impl BenchJson {
+    pub fn new() -> BenchJson {
+        BenchJson::default()
+    }
+
+    /// Record one section's representative wall-clock, in seconds.
+    pub fn record(&mut self, section: &str, seconds: f64) {
+        self.sections.push((section.to_string(), seconds));
+    }
+
+    /// Record a harness result under its bench name (median per-iter).
+    pub fn record_result(&mut self, r: &BenchResult) {
+        self.record(&r.name, r.per_iter.p50);
+    }
+
+    pub fn len(&self) -> usize {
+        self.sections.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sections.is_empty()
+    }
+
+    /// Serialise as `{"date", "unit", "sections"}` (keys sorted, so the
+    /// output is byte-deterministic for a given section set).
+    pub fn render(&self, date: &str) -> String {
+        let map: BTreeMap<String, Json> = self
+            .sections
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Num(*v)))
+            .collect();
+        Json::obj(vec![
+            ("date", Json::Str(date.to_string())),
+            ("unit", Json::Str("seconds".into())),
+            ("sections", Json::Obj(map)),
+        ])
+        .dump()
+    }
+
+    /// Write `BENCH_<date>.json` into the trajectory directory; returns
+    /// the path written.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let date = std::env::var("BENCH_JSON_DATE").unwrap_or_else(|_| utc_date());
+        let dir = std::env::var("BENCH_JSON_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| bench_json_dir());
+        self.write_to(&dir, &date)
+    }
+
+    /// Write `BENCH_<date>.json` into an explicit directory.
+    pub fn write_to(&self, dir: &Path, date: &str) -> std::io::Result<PathBuf> {
+        let path = dir.join(format!("BENCH_{date}.json"));
+        std::fs::write(&path, self.render(date) + "\n")?;
+        Ok(path)
+    }
+}
+
+/// Default trajectory directory: the repo root, found by walking up from
+/// the cwd to the directory holding ROADMAP.md (falls back to the cwd so
+/// a detached checkout still writes somewhere sensible).
+fn bench_json_dir() -> PathBuf {
+    let start = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    let mut dir = start.clone();
+    loop {
+        if dir.join("ROADMAP.md").is_file() {
+            return dir;
+        }
+        if !dir.pop() {
+            return start;
+        }
+    }
+}
+
+/// Proleptic-Gregorian civil date from days since 1970-01-01
+/// (Hinnant's `civil_from_days`).
+fn civil_from_days(days: i64) -> (i64, u32, u32) {
+    let z = days + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097);
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = (doy - (153 * mp + 2) / 5 + 1) as u32;
+    let m = (if mp < 10 { mp + 3 } else { mp - 9 }) as u32;
+    let y = yoe + era * 400 + i64::from(m <= 2);
+    (y, m, d)
+}
+
+/// Today's UTC date as `YYYY-MM-DD`.
+fn utc_date() -> String {
+    let secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let (y, m, d) = civil_from_days((secs / 86_400) as i64);
+    format!("{y:04}-{m:02}-{d:02}")
+}
+
 /// Standard header for the E1-E8 bench binaries.
 pub fn banner(id: &str, title: &str, paper_claim: &str) {
     println!("==========================================================");
@@ -106,6 +221,47 @@ mod tests {
         assert!(r.iterations > 100);
         assert!(r.per_iter.mean > 0.0);
         assert!(r.report_line().contains("us/iter"));
+    }
+
+    #[test]
+    fn civil_date_pins() {
+        assert_eq!(civil_from_days(0), (1970, 1, 1));
+        assert_eq!(civil_from_days(59), (1970, 3, 1));
+        assert_eq!(civil_from_days(11_016), (2000, 2, 29));
+        assert_eq!(civil_from_days(20_000), (2024, 10, 4));
+        assert_eq!(civil_from_days(20_672), (2026, 8, 7));
+        let today = utc_date();
+        assert_eq!(today.len(), 10);
+        assert_eq!(today.as_bytes()[4], b'-');
+        assert_eq!(today.as_bytes()[7], b'-');
+    }
+
+    #[test]
+    fn bench_json_round_trips() {
+        let mut j = BenchJson::new();
+        assert!(j.is_empty());
+        j.record("dse/sweep", 1.25);
+        j.record("coordinator/2-shard", 0.5);
+        assert_eq!(j.len(), 2);
+        let text = j.render("2026-08-07");
+        let parsed = crate::util::json::parse(&text).expect("render emits valid JSON");
+        assert_eq!(parsed.path(&["date"]).as_str(), Some("2026-08-07"));
+        assert_eq!(parsed.path(&["unit"]).as_str(), Some("seconds"));
+        assert_eq!(parsed.path(&["sections", "dse/sweep"]).as_f64(), Some(1.25));
+        assert_eq!(
+            parsed.path(&["sections", "coordinator/2-shard"]).as_f64(),
+            Some(0.5)
+        );
+        // byte-deterministic for a given section set
+        assert_eq!(text, j.render("2026-08-07"));
+
+        let dir = std::env::temp_dir().join(format!("elastic-bench-json-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = j.write_to(&dir, "2026-08-07").unwrap();
+        assert!(path.ends_with("BENCH_2026-08-07.json"));
+        let back = crate::util::json::parse_file(&path).unwrap();
+        assert_eq!(back.path(&["sections", "dse/sweep"]).as_f64(), Some(1.25));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -4,10 +4,14 @@
 
 use crate::util::stats::Summary;
 use crate::util::table::{num, Table};
-use std::collections::BTreeMap;
+use crate::util::units::Secs;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicIsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
+
+/// Default bound on the per-artifact arrival-trace ring.
+pub const DEFAULT_ARRIVAL_CAP: usize = 4096;
 
 #[derive(Debug, Default)]
 struct ArtifactStats {
@@ -16,12 +20,18 @@ struct ArtifactStats {
     queue_wait_s: Vec<f64>,
     exec_s: Vec<f64>,
     e2e_s: Vec<f64>,
+    /// Bounded ring of arrival timestamps (seconds since the metrics
+    /// epoch) — the raw material the workload fitter consumes.
+    arrivals: VecDeque<f64>,
 }
 
 #[derive(Debug, Default)]
 struct ShardStats {
     submitted: u64,
     rejected: u64,
+    /// Subset of `rejected` bounced because the shard was draining for an
+    /// engine swap (bounded by the drain window).
+    drain_rejected: u64,
     served: u64,
     failed: u64,
     batches: u64,
@@ -30,8 +40,41 @@ struct ShardStats {
     e2e_s: Vec<f64>,
 }
 
+/// One completed drain-and-switch reconfiguration.
+#[derive(Debug, Clone)]
+pub struct SwitchEvent {
+    /// Seconds since the metrics epoch.
+    pub at_s: f64,
+    /// Candidate descriptions (Candidate::describe / Workload::describe).
+    pub from: String,
+    pub to: String,
+    /// Modeled energy/item before and after, when known.
+    pub before_mj: Option<f64>,
+    pub after_mj: Option<f64>,
+    /// Drift score that triggered the re-exploration.
+    pub drift: Option<f64>,
+    /// Requests rejected during the drain window of this switch.
+    pub drain_rejected: u64,
+}
+
+impl SwitchEvent {
+    fn render_line(&self) -> String {
+        let mj = |v: Option<f64>| v.map(|x| format!("{x:.3} mJ/item")).unwrap_or_else(|| "-".into());
+        format!(
+            "switch @{:.1}s: {} -> {} (before {}, after {}, drift {}, drain rejects {})",
+            self.at_s,
+            self.from,
+            self.to,
+            mj(self.before_mj),
+            mj(self.after_mj),
+            self.drift.map(|d| format!("{d:.2}")).unwrap_or_else(|| "-".into()),
+            self.drain_rejected,
+        )
+    }
+}
+
 /// Thread-safe metrics sink.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Metrics {
     inner: Mutex<BTreeMap<String, ArtifactStats>>,
     shards: Mutex<Vec<ShardStats>>,
@@ -40,6 +83,21 @@ pub struct Metrics {
     /// benignly).
     depth_gauges: Mutex<Vec<Arc<AtomicIsize>>>,
     start: Mutex<Option<Instant>>,
+    arrival_cap: Mutex<usize>,
+    switches: Mutex<Vec<SwitchEvent>>,
+}
+
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics {
+            inner: Mutex::default(),
+            shards: Mutex::default(),
+            depth_gauges: Mutex::default(),
+            start: Mutex::default(),
+            arrival_cap: Mutex::new(DEFAULT_ARRIVAL_CAP),
+            switches: Mutex::default(),
+        }
+    }
 }
 
 impl Metrics {
@@ -117,6 +175,73 @@ impl Metrics {
         }
     }
 
+    /// A request bounced off `shard` because it was draining for a swap.
+    /// Counted both in the total reject tally and separately, so tests can
+    /// bound rejects attributable to the drain window.
+    pub fn record_drain_reject(&self, shard: usize) {
+        let mut shards = self.shards.lock().unwrap();
+        if let Some(s) = shards.get_mut(shard) {
+            s.rejected += 1;
+            s.drain_rejected += 1;
+        }
+    }
+
+    /// Change the arrival-ring bound (existing rings are trimmed lazily on
+    /// the next arrival).
+    pub fn set_arrival_cap(&self, cap: usize) {
+        *self.arrival_cap.lock().unwrap() = cap.max(1);
+    }
+
+    /// Record an arrival for `artifact` at "now" (seconds since the
+    /// metrics epoch).  Called on the submit path.
+    pub fn record_arrival(&self, artifact: &str) {
+        let t = self.elapsed_s();
+        self.record_arrival_at(artifact, t);
+    }
+
+    /// Record an arrival at an explicit timestamp.  Test/replay entry
+    /// point: the adaptive loop's hermetic tests inject synthetic traces
+    /// here instead of depending on the wall clock.
+    pub fn record_arrival_at(&self, artifact: &str, t_s: f64) {
+        let cap = *self.arrival_cap.lock().unwrap();
+        let mut m = self.inner.lock().unwrap();
+        let ring = &mut m.entry(artifact.to_string()).or_default().arrivals;
+        while ring.len() >= cap {
+            ring.pop_front();
+        }
+        ring.push_back(t_s);
+    }
+
+    /// The recorded arrival trace for `artifact`, oldest first.
+    pub fn arrival_trace(&self, artifact: &str) -> Vec<Secs> {
+        let m = self.inner.lock().unwrap();
+        m.get(artifact)
+            .map(|s| s.arrivals.iter().map(|&t| Secs(t)).collect())
+            .unwrap_or_default()
+    }
+
+    /// Drop the recorded arrivals for `artifact` (after a switch the old
+    /// trace describes the previous regime and would bias the next fit).
+    pub fn reset_arrivals(&self, artifact: &str) {
+        let mut m = self.inner.lock().unwrap();
+        if let Some(s) = m.get_mut(artifact) {
+            s.arrivals.clear();
+        }
+    }
+
+    /// Record a completed drain-and-switch reconfiguration.
+    pub fn record_switch(&self, mut event: SwitchEvent) {
+        if event.at_s == 0.0 {
+            event.at_s = self.elapsed_s();
+        }
+        self.switches.lock().unwrap().push(event);
+    }
+
+    /// Completed switch events, oldest first.
+    pub fn switch_events(&self) -> Vec<SwitchEvent> {
+        self.switches.lock().unwrap().clone()
+    }
+
     /// One micro-batch of `fill` requests drained (window `cap`).
     pub fn record_batch(&self, shard: usize, fill: usize, cap: usize) {
         let mut shards = self.shards.lock().unwrap();
@@ -139,6 +264,7 @@ impl Metrics {
                 queue_wait: maybe_summary(&s.queue_wait_s),
                 exec: maybe_summary(&s.exec_s),
                 e2e: maybe_summary(&s.e2e_s),
+                arrivals: s.arrivals.len(),
             })
             .collect();
         let gauges = self.depth_gauges.lock().unwrap();
@@ -152,6 +278,7 @@ impl Metrics {
                 shard: i,
                 submitted: s.submitted,
                 rejected: s.rejected,
+                drain_rejected: s.drain_rejected,
                 served: s.served,
                 failed: s.failed,
                 queue_depth: gauges
@@ -172,6 +299,7 @@ impl Metrics {
             elapsed_s: elapsed,
             rows,
             shards,
+            switches: self.switches.lock().unwrap().clone(),
         }
     }
 }
@@ -193,6 +321,8 @@ pub struct ArtifactSnapshot {
     pub queue_wait: Option<Summary>,
     pub exec: Option<Summary>,
     pub e2e: Option<Summary>,
+    /// Arrival timestamps currently held in the bounded trace ring.
+    pub arrivals: usize,
 }
 
 /// Point-in-time view of one engine shard.
@@ -201,6 +331,8 @@ pub struct ShardSnapshot {
     pub shard: usize,
     pub submitted: u64,
     pub rejected: u64,
+    /// Subset of `rejected` bounced during swap drain windows.
+    pub drain_rejected: u64,
     pub served: u64,
     pub failed: u64,
     /// Requests currently waiting in the shard's bounded queue.
@@ -217,6 +349,8 @@ pub struct MetricsSnapshot {
     pub elapsed_s: f64,
     pub rows: Vec<ArtifactSnapshot>,
     pub shards: Vec<ShardSnapshot>,
+    /// Completed drain-and-switch reconfigurations, oldest first.
+    pub switches: Vec<SwitchEvent>,
 }
 
 impl MetricsSnapshot {
@@ -226,6 +360,10 @@ impl MetricsSnapshot {
 
     pub fn total_rejected(&self) -> u64 {
         self.shards.iter().map(|s| s.rejected).sum()
+    }
+
+    pub fn total_drain_rejected(&self) -> u64 {
+        self.shards.iter().map(|s| s.drain_rejected).sum()
     }
 
     pub fn render(&self) -> String {
@@ -269,6 +407,10 @@ impl MetricsSnapshot {
             }
             out.push('\n');
             out.push_str(&st.render());
+        }
+        for sw in &self.switches {
+            out.push('\n');
+            out.push_str(&sw.render_line());
         }
         out
     }
@@ -325,6 +467,55 @@ mod tests {
         // shard execution also feeds the per-artifact table
         assert_eq!(s.total_served(), 1);
         assert!(s.render().contains("Per-shard counters"));
+    }
+
+    #[test]
+    fn arrival_ring_is_bounded_and_resettable() {
+        let m = Metrics::default();
+        m.set_arrival_cap(8);
+        for i in 0..20 {
+            m.record_arrival_at("a", i as f64 * 0.1);
+        }
+        let trace = m.arrival_trace("a");
+        assert_eq!(trace.len(), 8, "ring must stay bounded");
+        // oldest entries evicted: ring holds the last 8 timestamps
+        assert!((trace[0].value() - 1.2).abs() < 1e-9);
+        assert!((trace[7].value() - 1.9).abs() < 1e-9);
+        assert!(trace.windows(2).all(|w| w[1] >= w[0]));
+        assert_eq!(m.snapshot().rows[0].arrivals, 8);
+
+        m.reset_arrivals("a");
+        assert!(m.arrival_trace("a").is_empty());
+        // unknown artifact -> empty, no panic
+        assert!(m.arrival_trace("nope").is_empty());
+    }
+
+    #[test]
+    fn switch_events_recorded_and_rendered() {
+        let m = Metrics::default();
+        let gauges: Vec<Arc<AtomicIsize>> =
+            (0..1).map(|_| Arc::new(AtomicIsize::new(0))).collect();
+        m.init_shards(gauges);
+        m.record_drain_reject(0);
+        m.record_drain_reject(0);
+        m.record_switch(SwitchEvent {
+            at_s: 12.5,
+            from: "idle-wait".into(),
+            to: "on-off".into(),
+            before_mj: Some(1.25),
+            after_mj: Some(0.4),
+            drift: Some(0.9),
+            drain_rejected: 2,
+        });
+        let s = m.snapshot();
+        assert_eq!(s.switches.len(), 1);
+        assert_eq!(s.shards[0].drain_rejected, 2);
+        assert_eq!(s.shards[0].rejected, 2);
+        assert_eq!(s.total_drain_rejected(), 2);
+        let r = s.render();
+        assert!(r.contains("switch @12.5s: idle-wait -> on-off"), "{r}");
+        assert!(r.contains("drain rejects 2"), "{r}");
+        assert_eq!(m.switch_events().len(), 1);
     }
 
     #[test]

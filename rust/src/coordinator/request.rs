@@ -45,6 +45,8 @@ pub enum SubmitError {
     QueueFull { shard: usize, capacity: usize },
     /// The coordinator is draining; no new work is admitted.
     ShuttingDown,
+    /// The selected shard is draining for an engine swap; retry shortly.
+    Draining { shard: usize },
 }
 
 impl std::fmt::Display for SubmitError {
@@ -54,6 +56,9 @@ impl std::fmt::Display for SubmitError {
                 write!(f, "shard {shard} queue full (capacity {capacity})")
             }
             SubmitError::ShuttingDown => write!(f, "coordinator is shutting down"),
+            SubmitError::Draining { shard } => {
+                write!(f, "shard {shard} is draining for an engine swap")
+            }
         }
     }
 }

@@ -8,15 +8,27 @@
 //! control rejects with a reason ([`SubmitError`]) instead of letting
 //! queues grow without bound, and shutdown drains: every admitted request
 //! is answered before the workers exit.
+//!
+//! Engine bindings are **swappable at runtime** (the "Switch" stage of the
+//! adaptive serving loop): [`Coordinator::swap_engines`] drains each shard
+//! and replaces its engine without restarting the coordinator.  The swap
+//! travels *in-band* through the same bounded FIFO queue as requests, so
+//! every request admitted before the swap is served by the old engine and
+//! every request after by the new one — nothing is lost or double-served.
+//! While a shard drains, new submissions to it bounce with
+//! [`SubmitError::Draining`]; the reject window is exactly the time the
+//! worker needs to serve its backlog plus one engine build.
 
-use super::metrics::Metrics;
+use super::metrics::{Metrics, SwitchEvent};
 use super::request::{Request, Response, SubmitError};
 use super::router::{ShardPolicy, ShardRouter};
 use crate::runtime::{Engine, Manifest, SyntheticSpec};
 use anyhow::{anyhow, Result};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicIsize, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError,
+};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -128,10 +140,70 @@ fn shard_engines(config: &CoordinatorConfig, router: &ShardRouter) -> Result<Vec
     }
 }
 
+/// What travels through a shard's queue.  Swaps ride the same FIFO as
+/// requests, so the queue order *is* the drain barrier.
+enum ShardMsg {
+    Req(Request),
+    Swap(SwapMsg),
+}
+
+struct SwapMsg {
+    engine: ShardEngine,
+    /// Worker confirms (or refuses, keeping its old engine) here.
+    ack: Sender<std::result::Result<(), String>>,
+}
+
 struct Shard {
-    /// `None` once draining: the worker exits after serving the backlog.
-    tx: Mutex<Option<SyncSender<Request>>>,
+    /// `None` once draining for shutdown: the worker exits after serving
+    /// the backlog.
+    tx: Mutex<Option<SyncSender<ShardMsg>>>,
     depth: Arc<AtomicIsize>,
+    /// Set while an engine swap is in flight on this shard; submissions
+    /// bounce with [`SubmitError::Draining`] instead of queuing behind
+    /// the swap.
+    draining: AtomicBool,
+}
+
+/// Metadata describing a swap for the metrics switch-event log.
+#[derive(Debug, Clone, Default)]
+pub struct SwitchInfo {
+    /// Human-readable description of the outgoing deployment.
+    pub from: String,
+    /// Human-readable description of the incoming deployment.
+    pub to: String,
+    /// Modeled energy/item before and after, when known.
+    pub before_mj: Option<f64>,
+    pub after_mj: Option<f64>,
+    /// Drift score that triggered the reconfiguration.
+    pub drift: Option<f64>,
+}
+
+impl SwitchInfo {
+    pub fn new(from: impl Into<String>, to: impl Into<String>) -> SwitchInfo {
+        SwitchInfo {
+            from: from.into(),
+            to: to.into(),
+            ..SwitchInfo::default()
+        }
+    }
+}
+
+/// Outcome of a [`Coordinator::swap_engines`] call.
+#[derive(Debug)]
+pub struct SwapReport {
+    /// Shards that now run the new engine.
+    pub swapped: usize,
+    /// Shards whose new engine failed to build — they keep their old
+    /// engine and continue serving (the abort edge of the state machine).
+    pub failed: Vec<(usize, String)>,
+    /// Requests bounced during this swap's drain windows.
+    pub drain_rejected: u64,
+}
+
+impl SwapReport {
+    pub fn all_swapped(&self) -> bool {
+        self.failed.is_empty()
+    }
 }
 
 /// Client handle; shareable across request-producer threads.
@@ -142,7 +214,11 @@ pub struct Coordinator {
     next_id: AtomicU64,
     draining: AtomicBool,
     queue_cap: usize,
+    config: Arc<CoordinatorConfig>,
     workers: Mutex<Vec<JoinHandle<()>>>,
+    /// Serialises engine swaps (concurrent swaps would interleave drain
+    /// windows unpredictably).
+    swap_lock: Mutex<()>,
 }
 
 impl Coordinator {
@@ -167,7 +243,7 @@ impl Coordinator {
         let mut workers = Vec::with_capacity(n);
         let mut readies = Vec::with_capacity(n);
         for (shard_id, engine) in engines.into_iter().enumerate() {
-            let (tx, rx) = sync_channel::<Request>(queue_cap);
+            let (tx, rx) = sync_channel::<ShardMsg>(queue_cap);
             let depth = Arc::new(AtomicIsize::new(0));
             let (ready_tx, ready_rx) = channel::<std::result::Result<(), String>>();
             let worker = std::thread::Builder::new()
@@ -182,6 +258,7 @@ impl Coordinator {
             shards.push(Shard {
                 tx: Mutex::new(Some(tx)),
                 depth,
+                draining: AtomicBool::new(false),
             });
             workers.push(worker);
             readies.push(ready_rx);
@@ -193,8 +270,10 @@ impl Coordinator {
             next_id: AtomicU64::new(1),
             draining: AtomicBool::new(false),
             queue_cap,
+            config,
             shards,
             workers: Mutex::new(workers),
+            swap_lock: Mutex::new(()),
         };
         for (shard_id, ready) in readies.into_iter().enumerate() {
             let outcome = match ready.recv() {
@@ -213,6 +292,11 @@ impl Coordinator {
 
     pub fn shard_count(&self) -> usize {
         self.shards.len()
+    }
+
+    /// The configuration the coordinator was started with.
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.config
     }
 
     /// Submit a request, waiting for queue space if the target shard is
@@ -244,6 +328,9 @@ impl Coordinator {
         if self.draining.load(Ordering::SeqCst) {
             return Err(SubmitError::ShuttingDown);
         }
+        // observe the offered load (rejected requests are still arrivals —
+        // the fitter models the arrival process, not the service process)
+        self.metrics.record_arrival(artifact);
         // gather queue depths only for depth-aware policies; the default
         // affinity path stays allocation-free
         let depths: Vec<usize> = if self.router.needs_depths() {
@@ -255,6 +342,10 @@ impl Coordinator {
             Vec::new()
         };
         let shard = self.router.pick(artifact, &depths);
+        if self.shards[shard].draining.load(Ordering::SeqCst) {
+            self.metrics.record_drain_reject(shard);
+            return Err(SubmitError::Draining { shard });
+        }
         let (reply, rx) = channel();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
@@ -272,13 +363,13 @@ impl Coordinator {
         if blocking {
             // count the waiting producer as queue pressure
             self.shards[shard].depth.fetch_add(1, Ordering::Relaxed);
-            if tx.send(req).is_err() {
+            if tx.send(ShardMsg::Req(req)).is_err() {
                 self.shards[shard].depth.fetch_sub(1, Ordering::Relaxed);
                 return Err(SubmitError::ShuttingDown);
             }
             self.metrics.record_submit(shard);
         } else {
-            match tx.try_send(req) {
+            match tx.try_send(ShardMsg::Req(req)) {
                 Ok(()) => {
                     self.shards[shard].depth.fetch_add(1, Ordering::Relaxed);
                     self.metrics.record_submit(shard);
@@ -310,6 +401,86 @@ impl Coordinator {
 
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
+    }
+
+    /// Drain-and-switch: replace every shard's engine with `engine`
+    /// without restarting the coordinator.
+    ///
+    /// Per shard, in order: mark the shard draining (new submissions
+    /// bounce with [`SubmitError::Draining`]), send the swap in-band
+    /// through the bounded queue (FIFO: the worker serves its whole
+    /// admitted backlog first), wait for the worker's ack, resume
+    /// admission.  Shards whose replacement engine fails to build keep
+    /// their old engine and keep serving — this is the abort edge, and no
+    /// switch event is recorded for a partial swap.
+    ///
+    /// Returns an error without touching any shard when the new spec
+    /// cannot be resolved at all or the coordinator is shutting down.
+    pub fn swap_engines(&self, engine: EngineSpec, info: SwitchInfo) -> Result<SwapReport> {
+        let _guard = self.swap_lock.lock().unwrap();
+        if self.draining.load(Ordering::SeqCst) {
+            return Err(anyhow!("coordinator is shutting down"));
+        }
+        // resolve the per-shard engine groups eagerly: an unresolvable
+        // spec must fail before any shard begins draining
+        let mut config = (*self.config).clone();
+        config.engine = engine;
+        let engines = shard_engines(&config, &self.router)?;
+
+        let drain_before = self.metrics.snapshot().total_drain_rejected();
+        let mut failed = Vec::new();
+        for (shard_id, shard_engine) in engines.into_iter().enumerate() {
+            let shard = &self.shards[shard_id];
+            shard.draining.store(true, Ordering::SeqCst);
+            let tx = match shard.tx.lock().unwrap().as_ref() {
+                Some(tx) => tx.clone(),
+                None => {
+                    shard.draining.store(false, Ordering::SeqCst);
+                    failed.push((shard_id, "shard is shutting down".to_string()));
+                    continue;
+                }
+            };
+            let (ack_tx, ack_rx) = channel();
+            if tx
+                .send(ShardMsg::Swap(SwapMsg {
+                    engine: shard_engine,
+                    ack: ack_tx,
+                }))
+                .is_err()
+            {
+                failed.push((shard_id, "shard queue disconnected".to_string()));
+            } else {
+                match ack_rx.recv() {
+                    Ok(Ok(())) => {}
+                    Ok(Err(e)) => failed.push((shard_id, e)),
+                    Err(_) => failed.push((shard_id, "shard worker died during swap".to_string())),
+                }
+            }
+            shard.draining.store(false, Ordering::SeqCst);
+        }
+
+        let drain_rejected = self
+            .metrics
+            .snapshot()
+            .total_drain_rejected()
+            .saturating_sub(drain_before);
+        let report = SwapReport {
+            swapped: self.shards.len() - failed.len(),
+            failed,
+            drain_rejected,
+        };
+        if report.all_swapped() {
+            self.metrics.record_switch(SwitchEvent {
+                at_s: 0.0,
+                from: info.from,
+                to: info.to,
+                before_mj: info.before_mj,
+                after_mj: info.after_mj,
+                drift: info.drift,
+                drain_rejected,
+            });
+        }
+        Ok(report)
     }
 
     /// Stop admitting work, drain every shard queue, and join the
@@ -349,12 +520,12 @@ fn worker_loop(
     shard_id: usize,
     config: &CoordinatorConfig,
     shard_engine: ShardEngine,
-    rx: Receiver<Request>,
+    rx: Receiver<ShardMsg>,
     depth: Arc<AtomicIsize>,
     metrics: Arc<Metrics>,
     ready: std::sync::mpsc::Sender<std::result::Result<(), String>>,
 ) {
-    let engine = match build_engine(config, shard_engine) {
+    let mut engine = match build_engine(config, shard_engine) {
         Ok(e) => {
             let _ = ready.send(Ok(()));
             e
@@ -366,40 +537,59 @@ fn worker_loop(
     };
 
     loop {
-        // block for the first request, then gather a micro-batch
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => return, // queue drained + all handles dropped
-        };
-        depth.fetch_sub(1, Ordering::Relaxed);
-        let mut batch = vec![first];
-        if config.batch_window.is_zero() {
-            while batch.len() < config.batch_max {
-                match rx.try_recv() {
-                    Ok(r) => {
-                        depth.fetch_sub(1, Ordering::Relaxed);
-                        batch.push(r);
-                    }
-                    Err(_) => break,
-                }
+        // block for the first message, then gather a micro-batch; a swap
+        // closes the batch early so it applies at a batch boundary
+        let mut batch: Vec<Request> = Vec::new();
+        let mut pending_swap: Option<SwapMsg> = None;
+        match rx.recv() {
+            Ok(ShardMsg::Req(r)) => {
+                depth.fetch_sub(1, Ordering::Relaxed);
+                batch.push(r);
             }
-        } else {
-            let deadline = Instant::now() + config.batch_window;
-            while batch.len() < config.batch_max {
-                let now = Instant::now();
-                let Some(remaining) = deadline.checked_duration_since(now) else {
-                    break;
-                };
-                match rx.recv_timeout(remaining) {
-                    Ok(r) => {
-                        depth.fetch_sub(1, Ordering::Relaxed);
-                        batch.push(r);
+            Ok(ShardMsg::Swap(s)) => pending_swap = Some(s),
+            Err(_) => return, // queue drained + all handles dropped
+        }
+        if pending_swap.is_none() {
+            if config.batch_window.is_zero() {
+                while batch.len() < config.batch_max {
+                    match rx.try_recv() {
+                        Ok(ShardMsg::Req(r)) => {
+                            depth.fetch_sub(1, Ordering::Relaxed);
+                            batch.push(r);
+                        }
+                        Ok(ShardMsg::Swap(s)) => {
+                            pending_swap = Some(s);
+                            break;
+                        }
+                        Err(_) => break,
                     }
-                    Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
+                }
+            } else {
+                let deadline = Instant::now() + config.batch_window;
+                while batch.len() < config.batch_max {
+                    let now = Instant::now();
+                    let Some(remaining) = deadline.checked_duration_since(now) else {
+                        break;
+                    };
+                    match rx.recv_timeout(remaining) {
+                        Ok(ShardMsg::Req(r)) => {
+                            depth.fetch_sub(1, Ordering::Relaxed);
+                            batch.push(r);
+                        }
+                        Ok(ShardMsg::Swap(s)) => {
+                            pending_swap = Some(s);
+                            break;
+                        }
+                        Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
+                            break
+                        }
+                    }
                 }
             }
         }
-        metrics.record_batch(shard_id, batch.len(), config.batch_max);
+        if !batch.is_empty() {
+            metrics.record_batch(shard_id, batch.len(), config.batch_max);
+        }
 
         for req in batch {
             let picked_up = Instant::now();
@@ -416,6 +606,21 @@ fn worker_loop(
                 queue_wait_s: queue_wait,
                 exec_s: exec,
             });
+        }
+
+        if let Some(swap) = pending_swap {
+            // the backlog admitted before the swap has been served above
+            // (FIFO order) — safe to replace the engine now
+            match build_engine(config, swap.engine) {
+                Ok(e) => {
+                    engine = e;
+                    let _ = swap.ack.send(Ok(()));
+                }
+                Err(e) => {
+                    // keep the old engine and keep serving
+                    let _ = swap.ack.send(Err(format!("{e:#}")));
+                }
+            }
         }
     }
 }
@@ -440,7 +645,10 @@ mod tests {
         assert!(resp.is_ok());
         assert!(resp.shard < 2);
         assert!(resp.total_s() >= 0.0);
-        assert_eq!(coord.metrics().snapshot().total_served(), 1);
+        let snap = coord.metrics().snapshot();
+        assert_eq!(snap.total_served(), 1);
+        // the submit path feeds the arrival-trace ring
+        assert_eq!(coord.metrics().arrival_trace("syn.0").len(), 1);
     }
 
     #[test]
@@ -463,5 +671,53 @@ mod tests {
         };
         let err = Coordinator::start(cfg).unwrap_err().to_string();
         assert!(err.contains("startup failed"), "{err}");
+    }
+
+    #[test]
+    fn swap_engines_mid_stream() {
+        let coord = Coordinator::start(synthetic_config(2)).unwrap();
+        assert!(coord.infer("syn.0", vec![0.5; 8]).unwrap().is_ok());
+
+        let report = coord
+            .swap_engines(
+                EngineSpec::Synthetic(SyntheticSpec::uniform(4, 8, 2, 100)),
+                SwitchInfo::new("old", "new"),
+            )
+            .unwrap();
+        assert!(report.all_swapped(), "{:?}", report.failed);
+        assert_eq!(report.swapped, 2);
+
+        // serving continues on the new engine
+        assert!(coord.infer("syn.0", vec![0.5; 8]).unwrap().is_ok());
+        let events = coord.metrics().switch_events();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].from, "old");
+        assert_eq!(events[0].to, "new");
+    }
+
+    #[test]
+    fn failed_swap_keeps_old_engine_and_records_no_switch() {
+        // artifacts_dir doesn't exist, but the artifact list is explicit,
+        // so resolution succeeds and the failure surfaces in the worker's
+        // engine build — the abort edge
+        let coord = Coordinator::start(CoordinatorConfig {
+            shards: 1,
+            artifacts_dir: PathBuf::from("/definitely/missing"),
+            artifacts: vec!["ghost.a".to_string()],
+            engine: EngineSpec::Synthetic(SyntheticSpec::uniform(4, 8, 2, 50)),
+            ..CoordinatorConfig::default()
+        })
+        .unwrap();
+        assert!(coord.infer("syn.0", vec![0.5; 8]).unwrap().is_ok());
+
+        let report = coord
+            .swap_engines(EngineSpec::Artifacts, SwitchInfo::new("old", "broken"))
+            .unwrap();
+        assert_eq!(report.swapped, 0);
+        assert_eq!(report.failed.len(), 1);
+
+        // old engine still serves; no switch event recorded
+        assert!(coord.infer("syn.0", vec![0.5; 8]).unwrap().is_ok());
+        assert!(coord.metrics().switch_events().is_empty());
     }
 }

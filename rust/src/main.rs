@@ -18,12 +18,15 @@
 //! * `simulate` — workload simulation comparing all strategies.
 //! * `serve`    — load compiled artifacts and serve a synthetic request
 //!   stream through the PJRT engine, printing latency metrics.
+//!   `--adapt` closes the serving loop: observe arrivals, fit the
+//!   workload, run the calibrated sweep in the background, and
+//!   drain-and-switch the shards when the winner justifies it.
 //! * `devices`  — print the device catalog.
 //! * `verify`   — cross-check PJRT execution and the behavioural
 //!   simulator against the golden vectors.
 
 use anyhow::Context as _;
-use elastic_gen::coordinator::{Coordinator, CoordinatorConfig, EngineSpec};
+use elastic_gen::coordinator::{Coordinator, CoordinatorConfig, EngineSpec, SubmitError};
 use elastic_gen::eda;
 use elastic_gen::elastic_node::Platform;
 use elastic_gen::fpga::{device, ConfigController, DEVICES};
@@ -44,14 +47,17 @@ use elastic_gen::generator::{
 use elastic_gen::models::Topology;
 use elastic_gen::rtl::composition::{build, BuildOpts};
 use elastic_gen::rtl::fixed_point::QFormat;
-use elastic_gen::runtime::{Golden, Manifest};
+use elastic_gen::runtime::{AdaptConfig, Golden, Manifest, Supervisor};
 use elastic_gen::sim::{cost_model, NodeSim};
 use elastic_gen::strategy::Strategy;
 use elastic_gen::util::cli::Args;
 use elastic_gen::util::rng::Rng;
 use elastic_gen::util::table::{num, Table};
-use elastic_gen::util::units::{Hertz, Secs};
+use elastic_gen::util::units::{Hertz, Joules, Secs};
 use elastic_gen::workload::Workload;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
 
 fn main() {
     let args = Args::from_env();
@@ -100,6 +106,11 @@ fn print_usage() {
            simulate  --period-ms <f> [--requests N] [--device <name>]\n\
            serve     [--requests N] [--artifact <name>] [--shards N]\n\
                      [--queue-cap N] [--batch-max N] [--synthetic]\n\
+           serve     --adapt [--inject-drift] [--expect-switch] [--quick]\n\
+                     [--drift-threshold F] [--margin-mj F] [--amortize-s F]\n\
+                     [--deploy-strategy <name>] [--workers N [--in-process]]\n\
+                     (adaptive serving loop on the synthetic backend:\n\
+                     observe -> fit -> calibrated sweep -> drain-and-switch)\n\
            verify    [--artifact <name>]\n\
            devices"
     );
@@ -769,6 +780,9 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    if args.has_flag("adapt") {
+        return cmd_serve_adapt(args);
+    }
     let n = args.get_usize("requests", 200);
     let base = CoordinatorConfig {
         shards: args.get_usize("shards", 0),
@@ -810,15 +824,264 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         coord.shard_count()
     );
     for _ in 0..n {
-        let input: Vec<f32> = (0..input_len)
-            .map(|_| (rng.range(-2.0, 2.0) * 256.0).floor() as f32 / 256.0)
-            .collect();
+        let input = synth_input(input_len, &mut rng);
         let resp = coord.infer(&artifact, input)?;
         if let Err(e) = &resp.output {
             anyhow::bail!("inference failed: {e}");
         }
     }
     println!("{}", coord.metrics().snapshot().render());
+    Ok(())
+}
+
+/// One synthetic input vector, quantised the way the engines expect.
+fn synth_input(len: usize, rng: &mut Rng) -> Vec<f32> {
+    (0..len)
+        .map(|_| (rng.range(-2.0, 2.0) * 256.0).floor() as f32 / 256.0)
+        .collect()
+}
+
+/// The best feasible candidate for `spec` pinned to one power strategy —
+/// the "deployed" baseline the adaptive loop measures drift against.
+/// Pinning to a strategy (rather than the global winner) leaves a
+/// drastically drifted workload room to justify a switch.
+fn deployed_estimate(
+    spec: &AppSpec,
+    strategy: StrategyKind,
+    jobs: usize,
+) -> anyhow::Result<Estimate> {
+    let space = design_space::enumerate(&spec.device_allowlist);
+    let mut pool = EvalPool::new(jobs);
+    let mut best: Option<Estimate> = None;
+    for c in space.iter().filter(|c| c.strategy == strategy) {
+        if let Some(e) = pool.evaluate(spec, c) {
+            if e.feasible
+                && best
+                    .as_ref()
+                    .map(|b| e.score(spec.goal) > b.score(spec.goal))
+                    .unwrap_or(true)
+            {
+                best = Some(e);
+            }
+        }
+    }
+    best.ok_or_else(|| {
+        anyhow::anyhow!(
+            "no feasible {} candidate for '{}'",
+            strategy.name(),
+            spec.name
+        )
+    })
+}
+
+/// `elastic-gen serve --adapt`: the closed adaptive serving loop on the
+/// synthetic backend.  Phase 1 serves an observed stream (arrivals land
+/// in the per-artifact ring); `--inject-drift` then replaces the ring
+/// with a seeded trace from a 50x slower Poisson workload so the
+/// fit -> sweep -> switch decision is reproducible run to run.  Phase 2
+/// spawns the supervisor in the background and keeps serving a second
+/// stream concurrently — only the drain windows of an actual switch may
+/// bounce submissions (they are retried and counted).  The CI smoke runs
+/// through here with `--quick --inject-drift --expect-switch`.
+fn cmd_serve_adapt(args: &Args) -> anyhow::Result<()> {
+    let quick = args.has_flag("quick");
+    let jobs = args.get_usize("jobs", default_threads());
+    let n = args.get_usize("requests", if quick { 120 } else { 400 });
+    let workers = args.get_usize("workers", 0);
+
+    // always the manifest-free synthetic backend: hermetic, and the
+    // engine swap is observable without `make artifacts`
+    let spec_syn = elastic_gen::runtime::SyntheticSpec::uniform(4, 16, 4, 50_000);
+    let artifact = args.get_or("artifact", "syn.0").to_string();
+    let load_artifact = "syn.1".to_string();
+    anyhow::ensure!(
+        artifact != load_artifact,
+        "'{load_artifact}' is reserved for the concurrent load stream"
+    );
+    let input_len = spec_syn
+        .artifacts
+        .iter()
+        .find(|a| a.name == artifact)
+        .ok_or_else(|| anyhow::anyhow!("unknown synthetic artifact '{artifact}'"))?
+        .input_len;
+    let config = CoordinatorConfig {
+        shards: args.get_usize("shards", 2),
+        queue_cap: args.get_usize("queue-cap", 256),
+        batch_max: args.get_usize("batch-max", 16),
+        engine: EngineSpec::Synthetic(spec_syn),
+        ..CoordinatorConfig::default()
+    };
+    let coord = Arc::new(Coordinator::start(config)?);
+
+    let mut spec = scenario(args.get_or("app", "soft-sensor"))?;
+    if quick {
+        // narrow the sweep so the background re-exploration fits the
+        // smoke timeout
+        spec.device_allowlist = vec!["xc7s6"];
+    }
+    let strategy = StrategyKind::parse(args.get_or("deploy-strategy", "idle-wait"))
+        .ok_or_else(|| {
+            let names: Vec<&str> = StrategyKind::all().iter().map(|k| k.name()).collect();
+            anyhow::anyhow!("unknown --deploy-strategy (one of: {})", names.join(", "))
+        })?;
+    let deployed = deployed_estimate(&spec, strategy, jobs)?;
+    println!(
+        "deployed: {} [{}] at {} mJ/item under {}",
+        deployed.candidate.describe(),
+        strategy.name(),
+        num(deployed.energy_per_item.mj(), 4),
+        spec.workload.describe()
+    );
+
+    let mut cfg = AdaptConfig::new(spec, deployed);
+    cfg.drift_threshold = args.get_f64("drift-threshold", 0.5);
+    cfg.margin = Joules(args.get_f64("margin-mj", 0.0) * 1e-3);
+    cfg.amortize_horizon = Secs(args.get_f64("amortize-s", 60.0));
+    cfg.calibrate = CalibrateOpts {
+        threads: jobs,
+        requests: args.get_usize("cal-requests", if quick { 120 } else { 400 }),
+        ..Default::default()
+    };
+    if workers > 0 {
+        let mode = if args.has_flag("in-process") {
+            WorkerMode::InProcess
+        } else {
+            WorkerMode::Subprocess(std::env::current_exe()?)
+        };
+        cfg.dist = Some(DistOpts {
+            workers,
+            mode,
+            threads: (jobs / workers).max(1),
+            ..DistOpts::default()
+        });
+    }
+
+    // phase 1: the observed stream — every accepted submission lands in
+    // the per-artifact arrival ring
+    let mut rng = Rng::new(7);
+    println!(
+        "serving {n} observed requests against '{artifact}' on {} shard(s) ...",
+        coord.shard_count()
+    );
+    for _ in 0..n {
+        let input = synth_input(input_len, &mut rng);
+        let resp = coord.infer(&artifact, input)?;
+        if let Err(e) = &resp.output {
+            anyhow::bail!("inference failed: {e}");
+        }
+    }
+
+    let inject = args.has_flag("inject-drift");
+    if inject {
+        let drifted = Workload::Poisson {
+            mean_gap: Secs(2.5),
+        };
+        let trace = drifted.arrivals(512, &mut Rng::new(11));
+        coord.metrics().reset_arrivals(&artifact);
+        for t in &trace {
+            coord.metrics().record_arrival_at(&artifact, t.value());
+        }
+        println!(
+            "injected drifted trace: {} arrivals under {} (ring reset)",
+            trace.len(),
+            drifted.describe()
+        );
+    }
+
+    // phase 2: the supervisor watches the observed artifact in the
+    // background while the foreground serves a second stream
+    let stop = Arc::new(AtomicBool::new(false));
+    let interval = Duration::from_millis(args.get_usize("interval-ms", 100) as u64);
+    let handle = Supervisor::new(cfg).spawn(
+        Arc::clone(&coord),
+        artifact.clone(),
+        interval,
+        Arc::clone(&stop),
+    );
+
+    let mut drain_rejects = 0usize;
+    for _ in 0..n {
+        let input = synth_input(input_len, &mut rng);
+        loop {
+            match coord.submit(&load_artifact, input.clone()) {
+                Ok(rx) => {
+                    let resp = rx
+                        .recv()
+                        .map_err(|_| anyhow::anyhow!("engine shard died before replying"))?;
+                    if let Err(e) = &resp.output {
+                        anyhow::bail!("inference failed: {e}");
+                    }
+                    break;
+                }
+                Err(SubmitError::Draining { .. }) => {
+                    drain_rejects += 1;
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+
+    // wait (bounded) for the cycle that switches; without an injected
+    // drift the supervisor may legitimately keep observing
+    let deadline =
+        std::time::Instant::now() + Duration::from_secs(args.get_usize("wait-s", 120) as u64);
+    while inject
+        && coord.metrics().switch_events().is_empty()
+        && std::time::Instant::now() < deadline
+    {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    stop.store(true, Ordering::SeqCst);
+    let outcomes = handle.join().expect("adapt supervisor panicked");
+
+    for (i, o) in outcomes.iter().enumerate() {
+        let drift = match o.drift {
+            Some(d) => num(d, 3),
+            None => "-".into(),
+        };
+        match &o.decision {
+            Some(d) => println!(
+                "cycle {}: {} — fit {}, drift {}, {} -> {} mJ/item (amortized {}, net gain {}) => {}{}",
+                i + 1,
+                o.state.name(),
+                o.fit.family.name(),
+                drift,
+                num(d.before.mj(), 4),
+                num(d.after.mj(), 4),
+                num(d.amortized.mj(), 4),
+                num(d.net_gain.mj(), 4),
+                if d.switch { "switch" } else { "keep" },
+                if o.dist_fell_back {
+                    " (dist fell back)"
+                } else {
+                    ""
+                },
+            ),
+            None => println!(
+                "cycle {}: {} — fit {}, drift {}, {} arrival(s)",
+                i + 1,
+                o.state.name(),
+                o.fit.family.name(),
+                drift,
+                o.fit.stats.arrivals,
+            ),
+        }
+    }
+    if drain_rejects > 0 {
+        println!("foreground stream absorbed {drain_rejects} drain reject(s) while switching");
+    }
+    println!("{}", coord.metrics().snapshot().render());
+
+    if args.has_flag("expect-switch") {
+        let events = coord.metrics().switch_events();
+        anyhow::ensure!(
+            events.len() == 1,
+            "expected exactly one switch event, saw {}",
+            events.len()
+        );
+        println!("adaptive cycle complete: observe -> fit -> sweep -> switch verified");
+    }
     Ok(())
 }
 

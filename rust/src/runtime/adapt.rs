@@ -1,0 +1,477 @@
+//! The adaptive serving loop supervisor: observe → fit → sweep → switch.
+//!
+//! Closes the loop the paper leaves open — the coordinator serves a
+//! configuration chosen once, offline, from a hand-written workload spec;
+//! this module connects observed traffic back to design choice.  The
+//! state machine (DESIGN.md "Adaptive serving loop"):
+//!
+//! * **Observing** — the coordinator's metrics record arrival timestamps
+//!   into a bounded ring; below the fitter's sample floor (or on a
+//!   degenerate trace) the supervisor stays here.
+//! * **Fitting** — [`fit_trace`] recovers the generating family; if drift
+//!   against the deployed spec's workload stays within the hysteresis
+//!   threshold, nothing else runs.
+//! * **Sweeping** — past the threshold, the calibrated sweep
+//!   ([`calibrate_and_refine`], distributed when `dist` is set) re-ranks
+//!   the design space against the *fitted* workload.  The winner must
+//!   beat the deployed candidate's calibrated energy/item by more than
+//!   the configured margin *net of* reconfiguration cost
+//!   ([`ConfigController::cold_start_energy`] amortized over the fitted
+//!   arrival rate) — otherwise the decision is "keep".
+//! * **Draining / Switched** — [`Supervisor::run_cycle`] executes the
+//!   drain-and-switch on the coordinator; a failed engine build aborts
+//!   back to the old engine (state stays `Draining`), success records a
+//!   switch event, rebaselines the deployed spec to the fitted workload
+//!   and resets the arrival ring (hysteresis: drift is henceforth
+//!   measured against the regime we just adapted to).
+//!
+//! [`Supervisor::evaluate`] is **pure**: it consumes an explicit trace
+//! and never reads the wall clock, so the whole decision pipeline is
+//! deterministic under a fixed seed and hermetically testable.
+
+use crate::coordinator::{Coordinator, EngineSpec, SwitchInfo};
+use crate::fpga::config_ctrl::ConfigController;
+use crate::generator::{
+    calibrate_and_refine, calibrate_and_refine_dist, AppSpec, CalibrateOpts, Calibration,
+    DistOpts, Estimate,
+};
+use crate::util::units::{Joules, Secs};
+use crate::workload::fit::{drift, fit_trace, Family, FitReport};
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Supervisor knobs.
+#[derive(Debug, Clone)]
+pub struct AdaptConfig {
+    /// The application spec the deployment was generated for; its
+    /// `workload` is the drift baseline and is rebaselined on switch.
+    pub spec: AppSpec,
+    /// The currently-deployed configuration.
+    pub deployed: Estimate,
+    /// Hysteresis: drift at or below this never triggers a sweep.
+    pub drift_threshold: f64,
+    /// Required net energy/item gain beyond the amortized reconfiguration
+    /// cost; a switch happens only when the gain *strictly exceeds* this.
+    pub margin: Joules,
+    /// Horizon the one-time reconfiguration energy is amortized over.
+    pub amortize_horizon: Secs,
+    /// Sweep/calibration knobs (threads, replay length, seed, budget).
+    pub calibrate: CalibrateOpts,
+    /// When set, the re-exploration runs process-sharded.
+    pub dist: Option<DistOpts>,
+    /// Engine to install on switch; `None` reuses the coordinator's
+    /// current engine spec (the modeled accelerator changes, the serving
+    /// backend stays).
+    pub switch_to: Option<EngineSpec>,
+}
+
+impl AdaptConfig {
+    pub fn new(spec: AppSpec, deployed: Estimate) -> AdaptConfig {
+        AdaptConfig {
+            spec,
+            deployed,
+            drift_threshold: 0.5,
+            margin: Joules::ZERO,
+            amortize_horizon: Secs(60.0),
+            calibrate: CalibrateOpts::default(),
+            dist: None,
+            switch_to: None,
+        }
+    }
+}
+
+/// Stage the adaptive cycle ended in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdaptState {
+    /// Not enough (or degenerate) data — keep observing.
+    Observing,
+    /// Fit succeeded but drift is within the hysteresis threshold.
+    Fitting,
+    /// Sweep ran; the decision (if any) said keep — or recommended a
+    /// switch that [`Supervisor::run_cycle`] has not executed yet.
+    Sweeping,
+    /// A switch was attempted but aborted (engine build failure); the old
+    /// deployment keeps serving.
+    Draining,
+    /// The drain-and-switch completed and the baseline was rebased.
+    Switched,
+}
+
+impl AdaptState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdaptState::Observing => "observing",
+            AdaptState::Fitting => "fitting",
+            AdaptState::Sweeping => "sweeping",
+            AdaptState::Draining => "draining",
+            AdaptState::Switched => "switched",
+        }
+    }
+}
+
+/// The switch predicate, fully expanded for reports and regression tests.
+#[derive(Debug, Clone)]
+pub struct SwitchDecision {
+    /// The sweep winner under the fitted workload (corrected coordinates).
+    pub to: Estimate,
+    /// Deployed candidate's calibrated energy/item under the *fitted* gap.
+    pub before: Joules,
+    /// Winner's calibrated energy/item.
+    pub after: Joules,
+    /// One-time reconfiguration energy: cold start of the new device plus
+    /// the deployed node idling through the swap window.
+    pub reconfig: Joules,
+    /// `reconfig` spread over the items the fitted rate serves within the
+    /// amortization horizon.
+    pub amortized: Joules,
+    /// `(before - after) - amortized`.
+    pub net_gain: Joules,
+    /// True iff `net_gain` strictly exceeds the configured margin.
+    pub switch: bool,
+}
+
+/// One pass through the state machine.
+#[derive(Debug, Clone)]
+pub struct AdaptOutcome {
+    pub state: AdaptState,
+    pub fit: FitReport,
+    /// Drift of the fitted workload vs the deployed spec's workload.
+    pub drift: Option<f64>,
+    /// Present once a sweep ran and produced a feasible winner.
+    pub decision: Option<SwitchDecision>,
+    /// True when the distributed sweep failed and the supervisor fell
+    /// back to the in-process pool.
+    pub dist_fell_back: bool,
+}
+
+/// Drift supervisor.  `evaluate` is the pure decision pipeline;
+/// `run_cycle` additionally reads the coordinator's arrival ring and
+/// executes the drain-and-switch.
+pub struct Supervisor {
+    cfg: AdaptConfig,
+}
+
+impl Supervisor {
+    pub fn new(cfg: AdaptConfig) -> Supervisor {
+        Supervisor { cfg }
+    }
+
+    pub fn config(&self) -> &AdaptConfig {
+        &self.cfg
+    }
+
+    /// The full observe→fit→sweep decision pipeline on an explicit trace.
+    /// Pure and deterministic: no wall clock, no coordinator — the sweep
+    /// seeds come from `cfg.calibrate`.  Never switches anything; the
+    /// returned decision says whether a switch is warranted.
+    pub fn evaluate(&self, trace: &[Secs]) -> AdaptOutcome {
+        let report = fit_trace(trace);
+        if report.family == Family::Unknown {
+            return AdaptOutcome {
+                state: AdaptState::Observing,
+                fit: report,
+                drift: None,
+                decision: None,
+                dist_fell_back: false,
+            };
+        }
+        let fitted = report.fitted.clone().expect("classified fit carries a workload");
+        let drift_score = drift(&fitted, &self.cfg.spec.workload);
+        let Some(d) = drift_score else {
+            return AdaptOutcome {
+                state: AdaptState::Observing,
+                fit: report,
+                drift: None,
+                decision: None,
+                dist_fell_back: false,
+            };
+        };
+        if d <= self.cfg.drift_threshold {
+            return AdaptOutcome {
+                state: AdaptState::Fitting,
+                fit: report,
+                drift: Some(d),
+                decision: None,
+                dist_fell_back: false,
+            };
+        }
+
+        // re-explore against the fitted workload
+        let mut fitted_spec = self.cfg.spec.clone();
+        fitted_spec.workload = fitted;
+        let (cal, best, dist_fell_back) = self.sweep(&fitted_spec);
+        let decision = best.map(|winner| self.decide(&cal, &fitted_spec, winner));
+        AdaptOutcome {
+            state: AdaptState::Sweeping,
+            fit: report,
+            drift: Some(d),
+            decision,
+            dist_fell_back,
+        }
+    }
+
+    /// Calibrated sweep against the fitted spec; a failed distributed run
+    /// falls back to the in-process pool rather than stalling the loop.
+    fn sweep(&self, fitted_spec: &AppSpec) -> (Calibration, Option<Estimate>, bool) {
+        if let Some(dopts) = &self.cfg.dist {
+            match calibrate_and_refine_dist(fitted_spec, &self.cfg.calibrate, dopts) {
+                Ok(out) => return (out.calibration, out.refined.best, false),
+                Err(_) => {
+                    let (cal, refined) = calibrate_and_refine(fitted_spec, &self.cfg.calibrate);
+                    return (cal, refined.best, true);
+                }
+            }
+        }
+        let (cal, refined) = calibrate_and_refine(fitted_spec, &self.cfg.calibrate);
+        (cal, refined.best, false)
+    }
+
+    /// The single definition of the switch predicate: switch iff
+    /// `(before - after) - amortized > margin`, strictly.
+    fn decide(&self, cal: &Calibration, fitted_spec: &AppSpec, winner: Estimate) -> SwitchDecision {
+        let gap = fitted_spec.workload.mean_gap();
+        let before = cal.scales.energy_per_item(&self.cfg.deployed, gap);
+        let after = winner.energy_per_item;
+        let cc = ConfigController::raw(winner.candidate.device);
+        let reconfig =
+            cc.cold_start_energy() + self.cfg.deployed.cost.idle_power * cc.cold_start_time();
+        let items = (self.cfg.amortize_horizon.value() / gap.value().max(1e-12)).max(1.0);
+        let amortized = reconfig / items;
+        let net_gain = (before - after) - amortized;
+        SwitchDecision {
+            to: winner,
+            before,
+            after,
+            reconfig,
+            amortized,
+            net_gain,
+            switch: net_gain.value() > self.cfg.margin.value(),
+        }
+    }
+
+    /// One full cycle against a live coordinator: read the arrival ring
+    /// for `artifact`, evaluate, and when the decision says switch,
+    /// drain-and-switch the shards.  On success the deployed baseline is
+    /// rebased onto the winner + fitted workload and the arrival ring is
+    /// reset; on an aborted swap the old deployment keeps serving.
+    pub fn run_cycle(&mut self, coord: &Coordinator, artifact: &str) -> Result<AdaptOutcome> {
+        let trace = coord.metrics().arrival_trace(artifact);
+        let mut outcome = self.evaluate(&trace);
+        let Some(decision) = &outcome.decision else {
+            return Ok(outcome);
+        };
+        if !decision.switch {
+            return Ok(outcome);
+        }
+
+        let engine = self
+            .cfg
+            .switch_to
+            .clone()
+            .unwrap_or_else(|| coord.config().engine.clone());
+        let info = SwitchInfo {
+            from: self.cfg.deployed.candidate.describe(),
+            to: decision.to.candidate.describe(),
+            before_mj: Some(decision.before.mj()),
+            after_mj: Some(decision.after.mj()),
+            drift: outcome.drift,
+        };
+        let report = coord.swap_engines(engine, info)?;
+        if report.all_swapped() {
+            self.cfg.deployed = decision.to.clone();
+            if let Some(w) = &outcome.fit.fitted {
+                self.cfg.spec.workload = w.clone();
+            }
+            coord.metrics().reset_arrivals(artifact);
+            outcome.state = AdaptState::Switched;
+        } else {
+            // abort edge: some shard kept its old engine — keep the old
+            // baseline so the next cycle retries
+            outcome.state = AdaptState::Draining;
+        }
+        Ok(outcome)
+    }
+
+    /// Run cycles in a background thread every `interval` until `stop`
+    /// is set, collecting the outcomes.  Serving continues concurrently:
+    /// only the drain windows of an actual switch reject submissions.
+    pub fn spawn(
+        mut self,
+        coord: Arc<Coordinator>,
+        artifact: String,
+        interval: Duration,
+        stop: Arc<AtomicBool>,
+    ) -> JoinHandle<Vec<AdaptOutcome>> {
+        std::thread::Builder::new()
+            .name("elastic-adapt".into())
+            .spawn(move || {
+                let mut outcomes = Vec::new();
+                while !stop.load(Ordering::SeqCst) {
+                    if let Ok(outcome) = self.run_cycle(&coord, &artifact) {
+                        outcomes.push(outcome);
+                    }
+                    // sleep in small slices so stop stays responsive
+                    let mut remaining = interval;
+                    let slice = Duration::from_millis(20);
+                    while !remaining.is_zero() && !stop.load(Ordering::SeqCst) {
+                        let step = remaining.min(slice);
+                        std::thread::sleep(step);
+                        remaining -= step;
+                    }
+                }
+                outcomes
+            })
+            .expect("spawn adapt supervisor")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generator::{EvalPool, Evaluator, Goal, StrategyKind};
+    use crate::util::rng::Rng;
+    use crate::workload::Workload;
+
+    /// A deployed estimate: the best idle-wait candidate for the spec
+    /// (deliberately pinned to one strategy so a drifted workload can
+    /// beat it with another).
+    fn deployed_for(spec: &AppSpec, strategy: StrategyKind) -> Estimate {
+        let space = crate::generator::design_space::enumerate(&spec.device_allowlist);
+        let mut pool = EvalPool::new(2);
+        let mut best: Option<Estimate> = None;
+        for c in space.iter().filter(|c| c.strategy == strategy) {
+            if let Some(e) = pool.evaluate(spec, c) {
+                if e.feasible
+                    && best
+                        .as_ref()
+                        .map(|b| e.score(spec.goal) > b.score(spec.goal))
+                        .unwrap_or(true)
+                {
+                    best = Some(e);
+                }
+            }
+        }
+        best.expect("spec has at least one feasible candidate for the strategy")
+    }
+
+    fn quick_opts() -> CalibrateOpts {
+        CalibrateOpts {
+            threads: 2,
+            requests: 120,
+            ..CalibrateOpts::default()
+        }
+    }
+
+    fn test_spec() -> AppSpec {
+        let mut spec = AppSpec::soft_sensor();
+        // narrow the space so sweeps stay fast in tests
+        spec.device_allowlist = vec!["xc7s6"];
+        spec.goal = Goal::EnergyPerItem;
+        spec
+    }
+
+    #[test]
+    fn observes_until_sample_floor() {
+        let spec = test_spec();
+        let deployed = deployed_for(&spec, StrategyKind::IdleWait);
+        let sup = Supervisor::new(AdaptConfig::new(spec.clone(), deployed));
+        let trace = spec.workload.arrivals(8, &mut Rng::new(1));
+        let out = sup.evaluate(&trace);
+        assert_eq!(out.state, AdaptState::Observing);
+        assert!(out.decision.is_none());
+    }
+
+    #[test]
+    fn hysteresis_holds_within_threshold() {
+        let spec = test_spec();
+        let deployed = deployed_for(&spec, StrategyKind::IdleWait);
+        let mut cfg = AdaptConfig::new(spec.clone(), deployed);
+        cfg.drift_threshold = 0.5;
+        let sup = Supervisor::new(cfg);
+        // a trace drawn from the deployed workload itself: drift ~ 0
+        let trace = spec.workload.arrivals(512, &mut Rng::new(7));
+        let out = sup.evaluate(&trace);
+        assert_eq!(out.state, AdaptState::Fitting);
+        assert!(out.drift.unwrap() <= 0.5, "drift {:?}", out.drift);
+        assert!(out.decision.is_none(), "no sweep may run under the threshold");
+    }
+
+    #[test]
+    fn drifted_workload_triggers_sweep_and_decision() {
+        let spec = test_spec();
+        let deployed = deployed_for(&spec, StrategyKind::IdleWait);
+        let mut cfg = AdaptConfig::new(spec.clone(), deployed);
+        cfg.drift_threshold = 0.5;
+        cfg.calibrate = quick_opts();
+        let sup = Supervisor::new(cfg);
+        // the workload slows 50x: long gaps favour switching off
+        let drifted = Workload::Poisson { mean_gap: Secs(2.5) };
+        let trace = drifted.arrivals(512, &mut Rng::new(11));
+        let out = sup.evaluate(&trace);
+        assert_eq!(out.state, AdaptState::Sweeping);
+        assert!(out.drift.unwrap() > 0.5);
+        let d = out.decision.expect("sweep must produce a winner");
+        assert!(d.before.value() > 0.0 && d.after.value() > 0.0);
+        assert!(d.amortized.value() > 0.0);
+        // predicate consistency
+        assert_eq!(d.switch, d.net_gain.value() > 0.0);
+    }
+
+    #[test]
+    fn evaluate_is_deterministic() {
+        let spec = test_spec();
+        let deployed = deployed_for(&spec, StrategyKind::IdleWait);
+        let mut cfg = AdaptConfig::new(spec, deployed);
+        cfg.drift_threshold = 0.1;
+        cfg.calibrate = quick_opts();
+        let sup = Supervisor::new(cfg);
+        let drifted = Workload::Poisson { mean_gap: Secs(1.0) };
+        let trace = drifted.arrivals(256, &mut Rng::new(13));
+        let a = sup.evaluate(&trace);
+        let b = sup.evaluate(&trace);
+        assert_eq!(a.state, b.state);
+        assert_eq!(a.drift, b.drift);
+        let (da, db) = (a.decision.unwrap(), b.decision.unwrap());
+        assert_eq!(da.switch, db.switch);
+        assert_eq!(da.net_gain.value().to_bits(), db.net_gain.value().to_bits());
+        assert_eq!(da.to.candidate.describe(), db.to.candidate.describe());
+    }
+
+    /// The acceptance-criteria regression: a switch must never occur when
+    /// net gain minus amortized reconfiguration cost is <= the margin.
+    /// Crafted borderline: margin set to exactly the achievable net gain.
+    #[test]
+    fn borderline_margin_blocks_switch() {
+        let spec = test_spec();
+        let deployed = deployed_for(&spec, StrategyKind::IdleWait);
+        let mut cfg = AdaptConfig::new(spec, deployed);
+        cfg.drift_threshold = 0.1;
+        cfg.calibrate = quick_opts();
+        let drifted = Workload::Poisson { mean_gap: Secs(2.5) };
+        let trace = drifted.arrivals(512, &mut Rng::new(11));
+
+        let probe = Supervisor::new(cfg.clone()).evaluate(&trace);
+        let gain = probe.decision.expect("winner expected").net_gain;
+        assert!(
+            gain.value() > 0.0,
+            "borderline test needs a positive achievable gain, got {gain:?}"
+        );
+
+        // margin == exact achievable gain: "gain - cost <= margin" holds
+        // with equality, so the strict predicate must refuse
+        cfg.margin = gain;
+        let at_margin = Supervisor::new(cfg.clone()).evaluate(&trace);
+        assert!(
+            !at_margin.decision.unwrap().switch,
+            "switch at exact margin violates the strict predicate"
+        );
+
+        // a hair below the gain: now the switch is allowed
+        cfg.margin = Joules(gain.value() * (1.0 - 1e-9));
+        let below = Supervisor::new(cfg).evaluate(&trace);
+        assert!(below.decision.unwrap().switch);
+    }
+}

@@ -2,12 +2,15 @@
 //! AOT-compiled artifacts on the request path (no Python).  The engine
 //! dispatches to PJRT (feature `pjrt`), the bit-true behavioural executor
 //! (default), or a synthetic CPU-burner backend for hermetic serving
-//! tests — see `engine.rs`.
+//! tests — see `engine.rs`.  `adapt.rs` hosts the adaptive serving loop's
+//! drift supervisor (observe → fit → sweep → drain-and-switch).
 
+pub mod adapt;
 pub mod artifact;
 pub mod engine;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
+pub use adapt::{AdaptConfig, AdaptOutcome, AdaptState, Supervisor, SwitchDecision};
 pub use artifact::{ArtifactMeta, Golden, Manifest};
 pub use engine::{load_default, Engine, SyntheticArtifact, SyntheticSpec};

@@ -2,6 +2,7 @@
 //! characteristics §2.1 names — regular sensor periods, irregular/bursty
 //! event streams — plus trace capture/replay for reproducible comparisons.
 
+pub mod fit;
 pub mod trace;
 
 use crate::util::rng::Rng;
@@ -206,6 +207,42 @@ mod tests {
         };
         // per burst: 96 + 4*1 = 100ms over 5 items = 20ms
         assert!((w.mean_gap().ms() - 20.0).abs() < 1e-9);
+    }
+
+    /// The drift report and switch-event log embed these strings; pin them
+    /// so log-parsing tooling doesn't silently break.
+    #[test]
+    fn describe_strings_pinned() {
+        assert_eq!(
+            Workload::Periodic { period: Secs::from_ms(50.0) }.describe(),
+            "periodic(50.0ms)"
+        );
+        assert_eq!(
+            Workload::Poisson { mean_gap: Secs(0.8) }.describe(),
+            "poisson(mean 800.0ms)"
+        );
+        assert_eq!(
+            Workload::Bursty {
+                burst_len: 8,
+                intra_gap: Secs::from_ms(30.0),
+                burst_gap: Secs(2.0),
+            }
+            .describe(),
+            "bursty(8x30.0ms / 2000ms)"
+        );
+        assert_eq!(
+            Workload::Phased {
+                fast_gap: Secs::from_ms(2.0),
+                slow_gap: Secs::from_ms(30.0),
+                phase_len: 10,
+            }
+            .describe(),
+            "phased(2.0ms<->30.0ms x10)"
+        );
+        assert_eq!(
+            Workload::Trace { times: vec![Secs(0.1); 3] }.describe(),
+            "trace(3 events)"
+        );
     }
 
     #[test]

@@ -1,10 +1,51 @@
 //! Trace capture/replay: a plain text format (one arrival time in seconds
 //! per line, `#` comments) so workload traces can be diffed, versioned and
 //! exchanged with the python side.
+//!
+//! Parsing returns a typed [`TraceError`] (not a panic, not a stringly
+//! anyhow error): the adaptive serving loop feeds recorded traces back
+//! into the fitter, and a malformed or empty capture must be a recoverable
+//! "keep the current deployment" signal, never a crash.
 
 use crate::util::units::Secs;
-use anyhow::{anyhow, Result};
 use std::path::Path;
+
+/// Why a trace document was rejected.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TraceError {
+    /// The document contains no arrival times at all.
+    Empty,
+    /// A line is not a number.
+    BadNumber { line: usize },
+    /// An arrival time is negative.
+    NegativeTime { line: usize },
+    /// An arrival time is smaller than its predecessor.
+    NonMonotone { line: usize },
+    /// Filesystem failure while saving/loading.
+    Io(String),
+}
+
+impl std::fmt::Display for TraceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TraceError::Empty => write!(f, "trace contains no arrival times"),
+            TraceError::BadNumber { line } => write!(f, "trace line {line}: bad number"),
+            TraceError::NegativeTime { line } => write!(f, "trace line {line}: negative time"),
+            TraceError::NonMonotone { line } => {
+                write!(f, "trace line {line}: arrival time decreases")
+            }
+            TraceError::Io(e) => write!(f, "trace io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for TraceError {}
+
+impl From<std::io::Error> for TraceError {
+    fn from(e: std::io::Error) -> TraceError {
+        TraceError::Io(e.to_string())
+    }
+}
 
 /// Serialise arrival times.
 pub fn to_text(times: &[Secs]) -> String {
@@ -16,9 +57,12 @@ pub fn to_text(times: &[Secs]) -> String {
     s
 }
 
-/// Parse a trace document.
-pub fn from_text(text: &str) -> Result<Vec<Secs>> {
-    let mut out = Vec::new();
+/// Parse a trace document.  Empty traces (no data lines) are rejected:
+/// every consumer — replay, fitting, drift scoring — needs at least one
+/// arrival, and an empty capture is indistinguishable from a broken one.
+pub fn from_text(text: &str) -> Result<Vec<Secs>, TraceError> {
+    let mut out: Vec<Secs> = Vec::new();
+    let mut prev: Option<f64> = None;
     for (i, line) in text.lines().enumerate() {
         let line = line.trim();
         if line.is_empty() || line.starts_with('#') {
@@ -26,30 +70,40 @@ pub fn from_text(text: &str) -> Result<Vec<Secs>> {
         }
         let v: f64 = line
             .parse()
-            .map_err(|_| anyhow!("trace line {}: bad number '{line}'", i + 1))?;
-        if v < 0.0 {
-            return Err(anyhow!("trace line {}: negative time", i + 1));
+            .map_err(|_| TraceError::BadNumber { line: i + 1 })?;
+        if !v.is_finite() {
+            return Err(TraceError::BadNumber { line: i + 1 });
         }
+        if v < 0.0 {
+            return Err(TraceError::NegativeTime { line: i + 1 });
+        }
+        if let Some(p) = prev {
+            if v < p {
+                return Err(TraceError::NonMonotone { line: i + 1 });
+            }
+        }
+        prev = Some(v);
         out.push(Secs(v));
     }
-    if out.windows(2).any(|w| w[1] < w[0]) {
-        return Err(anyhow!("trace not sorted"));
+    if out.is_empty() {
+        return Err(TraceError::Empty);
     }
     Ok(out)
 }
 
-pub fn save(path: &Path, times: &[Secs]) -> Result<()> {
+pub fn save(path: &Path, times: &[Secs]) -> Result<(), TraceError> {
     std::fs::write(path, to_text(times))?;
     Ok(())
 }
 
-pub fn load(path: &Path) -> Result<Vec<Secs>> {
+pub fn load(path: &Path) -> Result<Vec<Secs>, TraceError> {
     from_text(&std::fs::read_to_string(path)?)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::proptest::{check, vec_f64};
 
     #[test]
     fn roundtrip() {
@@ -60,14 +114,70 @@ mod tests {
     }
 
     #[test]
-    fn rejects_unsorted_and_garbage() {
-        assert!(from_text("2.0\n1.0\n").is_err());
-        assert!(from_text("abc\n").is_err());
-        assert!(from_text("-1\n").is_err());
+    fn rejects_unsorted_and_garbage_with_typed_errors() {
+        assert_eq!(
+            from_text("2.0\n1.0\n").unwrap_err(),
+            TraceError::NonMonotone { line: 2 }
+        );
+        assert_eq!(from_text("abc\n").unwrap_err(), TraceError::BadNumber { line: 1 });
+        assert_eq!(from_text("nan\n").unwrap_err(), TraceError::BadNumber { line: 1 });
+        assert_eq!(
+            from_text("-1\n").unwrap_err(),
+            TraceError::NegativeTime { line: 1 }
+        );
+    }
+
+    #[test]
+    fn empty_trace_is_a_typed_error_not_a_panic() {
+        assert_eq!(from_text("").unwrap_err(), TraceError::Empty);
+        assert_eq!(from_text("# only comments\n\n").unwrap_err(), TraceError::Empty);
+        // the error renders (drift reports embed it)
+        assert!(TraceError::Empty.to_string().contains("no arrival times"));
     }
 
     #[test]
     fn comments_and_blanks_ignored() {
         assert_eq!(from_text("# hi\n\n0.5\n").unwrap(), vec![Secs(0.5)]);
+    }
+
+    #[test]
+    fn load_missing_file_is_io_error() {
+        let e = load(Path::new("/definitely/missing/trace.txt")).unwrap_err();
+        assert!(matches!(e, TraceError::Io(_)));
+    }
+
+    #[test]
+    fn prop_roundtrip_preserves_sorted_traces() {
+        // any non-empty sorted non-negative series round-trips within the
+        // 1e-9 print precision
+        check("trace roundtrip", 200, vec_f64(1, 64, 0.0..1e5), |v| {
+            let mut sorted = v.clone();
+            sorted.sort_by(|a, b| a.total_cmp(b));
+            let times: Vec<Secs> = sorted.iter().map(|&x| Secs(x)).collect();
+            match from_text(&to_text(&times)) {
+                Ok(parsed) => {
+                    parsed.len() == times.len()
+                        && parsed
+                            .iter()
+                            .zip(&times)
+                            .all(|(a, b)| (a.value() - b.value()).abs() < 1e-8)
+                }
+                Err(_) => false,
+            }
+        });
+    }
+
+    #[test]
+    fn prop_unsorted_traces_rejected() {
+        // any series with a strict decrease must be rejected NonMonotone
+        check("unsorted rejected", 200, vec_f64(2, 64, 0.0..1e5), |v| {
+            let times: Vec<Secs> = v.iter().map(|&x| Secs(x)).collect();
+            let decreases = v.windows(2).any(|w| w[1] < w[0]);
+            match from_text(&to_text(&times)) {
+                Ok(_) => !decreases,
+                Err(TraceError::NonMonotone { .. }) => decreases,
+                Err(_) => false,
+            }
+        });
     }
 }
