@@ -1,0 +1,75 @@
+//! Module-path classifier: maps a crate-relative file path to the rule
+//! scopes that apply there.
+//!
+//! The scopes encode repo contracts, not style preferences:
+//!
+//! * **parity** — modules under the bit-parity contract (distributed
+//!   sweeps must merge bit-identical to single-process): `generator/`,
+//!   `sim/`, `strategy/`, and `workload/fit.rs`.  Determinism rules run
+//!   here.
+//! * **serving** — the request path and the worker/driver processes that
+//!   must degrade with errors instead of panicking mid-drain:
+//!   `coordinator/`, `runtime/`, `generator/dist/`.  Panic-surface rules
+//!   run here.
+//! * **wire** — files defining a host-portable codec (`wire.rs` under
+//!   `dist/`).  Wire-hygiene rules run here.
+//!
+//! `tests/` and `benches/` are walked too, but only the pragma meta
+//! rules apply (a stale or reason-less suppression is a defect anywhere).
+
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Scope {
+    /// Determinism rules apply (bit-parity contract).
+    pub parity: bool,
+    /// Panic-surface rules apply (serving/worker path).
+    pub serving: bool,
+    /// Wire-hygiene rules apply (codec file).
+    pub wire: bool,
+    /// File is crate source (`src/`) rather than tests/benches; code
+    /// rules only ever apply to crate source.
+    pub src: bool,
+}
+
+/// Classify a path relative to the crate root, e.g.
+/// `src/generator/dist/driver.rs`.  Accepts `\` separators.
+pub fn classify(relpath: &str) -> Scope {
+    let p = relpath.replace('\\', "/");
+    let src = p.starts_with("src/");
+    let parity = p.starts_with("src/generator/")
+        || p.starts_with("src/sim/")
+        || p.starts_with("src/strategy/")
+        || p == "src/workload/fit.rs";
+    let serving = p.starts_with("src/coordinator/")
+        || p.starts_with("src/runtime/")
+        || p.starts_with("src/generator/dist/");
+    let wire = p.contains("/dist/") && p.ends_with("wire.rs");
+    Scope {
+        parity,
+        serving,
+        wire,
+        src,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scopes_match_repo_contracts() {
+        let s = classify("src/generator/dist/driver.rs");
+        assert!(s.parity && s.serving && s.src && !s.wire);
+        let s = classify("src/generator/dist/wire.rs");
+        assert!(s.wire && s.serving && s.parity);
+        let s = classify("src/coordinator/metrics.rs");
+        assert!(s.serving && !s.parity);
+        let s = classify("src/workload/fit.rs");
+        assert!(s.parity && !s.serving);
+        let s = classify("src/workload/mod.rs");
+        assert!(!s.parity && !s.serving);
+        let s = classify("src/analysis/rules.rs");
+        assert!(!s.parity && !s.serving && s.src);
+        let s = classify("tests/integration_lint.rs");
+        assert!(!s.src && !s.parity && !s.serving);
+    }
+}

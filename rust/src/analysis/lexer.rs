@@ -1,0 +1,440 @@
+//! Minimal Rust lexer for the repo linter.
+//!
+//! Produces a flat token stream — identifiers, numbers, string/char
+//! literals, lifetimes, single-char punctuation, and comments — with
+//! 1-based line numbers.  The point is not to parse Rust but to strip
+//! comments and string literals *correctly* (nested block comments, raw
+//! strings with `#` guards, byte strings, char-vs-lifetime after `'`) so
+//! the rule engine can match token patterns without false positives from
+//! hazards that only appear inside text.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Num,
+    /// String literal of any flavour; `text` holds the *content* (no
+    /// quotes, prefixes, or raw-string guards).
+    Str,
+    Char,
+    Lifetime,
+    /// One punctuation character per token (`::` is two `:` tokens).
+    Punct,
+    /// Line or block comment; `text` holds the full lexeme including the
+    /// `//` / `/* */` delimiters.  Block comments record their start line.
+    Comment,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Tok {
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct && self.text.len() == c.len_utf8() && self.text.starts_with(c)
+    }
+
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Tokenize `src`.  Never fails: unterminated literals consume to EOF,
+/// which is the forgiving behaviour a linter wants (the compiler owns
+/// syntax errors).
+pub fn tokenize(src: &str) -> Vec<Tok> {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+
+        // comments
+        if c == '/' && i + 1 < n && (b[i + 1] == '/' || b[i + 1] == '*') {
+            if b[i + 1] == '/' {
+                let start = i;
+                while i < n && b[i] != '\n' {
+                    i += 1;
+                }
+                toks.push(Tok {
+                    kind: TokKind::Comment,
+                    text: b[start..i].iter().collect(),
+                    line,
+                });
+            } else {
+                let start = i;
+                let start_line = line;
+                let mut depth = 1usize;
+                i += 2;
+                while i < n && depth > 0 {
+                    if b[i] == '\n' {
+                        line += 1;
+                        i += 1;
+                    } else if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                toks.push(Tok {
+                    kind: TokKind::Comment,
+                    text: b[start..i].iter().collect(),
+                    line: start_line,
+                });
+            }
+            continue;
+        }
+
+        // raw strings / raw idents: r"..", r#".."#, r#ident
+        if c == 'r' {
+            let mut j = i + 1;
+            let mut guards = 0usize;
+            while j < n && b[j] == '#' {
+                guards += 1;
+                j += 1;
+            }
+            if j < n && b[j] == '"' {
+                let start_line = line;
+                let (content, next) = scan_raw_string(&b, j, guards, &mut line);
+                toks.push(Tok {
+                    kind: TokKind::Str,
+                    text: content,
+                    line: start_line,
+                });
+                i = next;
+                continue;
+            }
+            if guards == 1 && j < n && is_ident_start(b[j]) {
+                // raw identifier r#type — token text keeps the bare name
+                let start = j;
+                let mut k = j;
+                while k < n && is_ident_continue(b[k]) {
+                    k += 1;
+                }
+                toks.push(Tok {
+                    kind: TokKind::Ident,
+                    text: b[start..k].iter().collect(),
+                    line,
+                });
+                i = k;
+                continue;
+            }
+            // plain ident starting with 'r' — fall through
+        }
+
+        // byte strings / byte chars: b".."  br#".."#  b'x'
+        if c == 'b' && i + 1 < n {
+            if b[i + 1] == '"' {
+                let start_line = line;
+                let (content, next) = scan_string(&b, i + 1, &mut line);
+                toks.push(Tok {
+                    kind: TokKind::Str,
+                    text: content,
+                    line: start_line,
+                });
+                i = next;
+                continue;
+            }
+            if b[i + 1] == '\'' {
+                let next = scan_char(&b, i + 1);
+                toks.push(Tok {
+                    kind: TokKind::Char,
+                    text: b[i..next].iter().collect(),
+                    line,
+                });
+                i = next;
+                continue;
+            }
+            if b[i + 1] == 'r' {
+                let mut j = i + 2;
+                let mut guards = 0usize;
+                while j < n && b[j] == '#' {
+                    guards += 1;
+                    j += 1;
+                }
+                if j < n && b[j] == '"' {
+                    let start_line = line;
+                    let (content, next) = scan_raw_string(&b, j, guards, &mut line);
+                    toks.push(Tok {
+                        kind: TokKind::Str,
+                        text: content,
+                        line: start_line,
+                    });
+                    i = next;
+                    continue;
+                }
+            }
+            // plain ident starting with 'b' — fall through
+        }
+
+        if c == '"' {
+            let start_line = line;
+            let (content, next) = scan_string(&b, i, &mut line);
+            toks.push(Tok {
+                kind: TokKind::Str,
+                text: content,
+                line: start_line,
+            });
+            i = next;
+            continue;
+        }
+
+        // char literal vs lifetime
+        if c == '\'' {
+            let is_char = if i + 1 < n && b[i + 1] == '\\' {
+                true // escape: always a char literal
+            } else {
+                // 'X' (any single char, including '{' or ' ') is a char;
+                // 'ident not closed by a quote is a lifetime
+                i + 2 < n && b[i + 2] == '\'' && b[i + 1] != '\''
+            };
+            if is_char {
+                let next = scan_char(&b, i);
+                toks.push(Tok {
+                    kind: TokKind::Char,
+                    text: b[i..next].iter().collect(),
+                    line,
+                });
+                i = next;
+                continue;
+            }
+            if i + 1 < n && is_ident_start(b[i + 1]) {
+                let start = i;
+                let mut k = i + 1;
+                while k < n && is_ident_continue(b[k]) {
+                    k += 1;
+                }
+                toks.push(Tok {
+                    kind: TokKind::Lifetime,
+                    text: b[start..k].iter().collect(),
+                    line,
+                });
+                i = k;
+                continue;
+            }
+            toks.push(Tok {
+                kind: TokKind::Punct,
+                text: "'".to_string(),
+                line,
+            });
+            i += 1;
+            continue;
+        }
+
+        if is_ident_start(c) {
+            let start = i;
+            while i < n && is_ident_continue(b[i]) {
+                i += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Ident,
+                text: b[start..i].iter().collect(),
+                line,
+            });
+            continue;
+        }
+
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < n && (is_ident_continue(b[i]) || (b[i] == '.' && i + 1 < n && b[i + 1].is_ascii_digit() && !b[start..i].iter().any(|&x| x == '.'))) {
+                i += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Num,
+                text: b[start..i].iter().collect(),
+                line,
+            });
+            continue;
+        }
+
+        toks.push(Tok {
+            kind: TokKind::Punct,
+            text: c.to_string(),
+            line,
+        });
+        i += 1;
+    }
+    toks
+}
+
+/// Scan a `"…"` literal starting at `b[i] == '"'`; returns (content,
+/// index past the closing quote).
+fn scan_string(b: &[char], mut i: usize, line: &mut u32) -> (String, usize) {
+    let n = b.len();
+    i += 1;
+    let start = i;
+    while i < n {
+        match b[i] {
+            '\\' => i += 2,
+            '"' => return (b[start..i].iter().collect(), i + 1),
+            '\n' => {
+                *line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    (b[start..i.min(n)].iter().collect(), n)
+}
+
+/// Scan a raw string whose opening quote is at `b[q] == '"'` with
+/// `guards` trailing `#`s required to close; returns (content, index past
+/// the closing delimiter).
+fn scan_raw_string(b: &[char], q: usize, guards: usize, line: &mut u32) -> (String, usize) {
+    let n = b.len();
+    let mut i = q + 1;
+    let start = i;
+    while i < n {
+        if b[i] == '\n' {
+            *line += 1;
+            i += 1;
+            continue;
+        }
+        if b[i] == '"' {
+            let mut k = 0usize;
+            while k < guards && i + 1 + k < n && b[i + 1 + k] == '#' {
+                k += 1;
+            }
+            if k == guards {
+                return (b[start..i].iter().collect(), i + 1 + guards);
+            }
+        }
+        i += 1;
+    }
+    (b[start..i.min(n)].iter().collect(), n)
+}
+
+/// Scan a char literal starting at `b[i] == '\''`; returns index past the
+/// closing quote.  Lenient: a malformed literal consumes at most the
+/// escape and one closing-quote attempt.
+fn scan_char(b: &[char], mut i: usize) -> usize {
+    let n = b.len();
+    i += 1; // opening quote
+    if i < n && b[i] == '\\' {
+        i += 1;
+        if i < n && b[i] == 'u' && i + 1 < n && b[i + 1] == '{' {
+            i += 2;
+            while i < n && b[i] != '}' {
+                i += 1;
+            }
+            i += 1;
+        } else {
+            i += 1;
+        }
+    } else if i < n {
+        i += 1;
+    }
+    if i < n && b[i] == '\'' {
+        i += 1;
+    }
+    i
+}
+
+/// The code view: all tokens except comments, preserving order and lines.
+pub fn code_tokens(toks: &[Tok]) -> Vec<Tok> {
+    toks.iter().filter(|t| t.kind != TokKind::Comment).cloned().collect()
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::indexing_slicing)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        tokenize(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn comments_are_single_tokens() {
+        let t = kinds("a // x.unwrap()\nb /* panic! /* nested */ still */ c");
+        assert_eq!(t[0], (TokKind::Ident, "a".into()));
+        assert_eq!(t[1].0, TokKind::Comment);
+        assert!(t[1].1.contains("unwrap"));
+        assert_eq!(t[2], (TokKind::Ident, "b".into()));
+        assert_eq!(t[3].0, TokKind::Comment);
+        assert!(t[3].1.contains("nested"));
+        assert_eq!(t[4], (TokKind::Ident, "c".into()));
+    }
+
+    #[test]
+    fn strings_swallow_hazards() {
+        let t = kinds(r##"let s = "x.unwrap()"; let r = r#"panic!()"# ;"##);
+        assert!(t.iter().all(|(k, tx)| *k != TokKind::Ident || (tx != "unwrap" && tx != "panic")));
+        assert!(t.iter().any(|(k, tx)| *k == TokKind::Str && tx.contains("unwrap")));
+    }
+
+    #[test]
+    fn raw_string_guards_respected() {
+        let src = "r##\"inner \"# quote\"## after";
+        let t = kinds(src);
+        assert_eq!(t[0].0, TokKind::Str);
+        assert!(t[0].1.contains("\"#"));
+        assert_eq!(t[1], (TokKind::Ident, "after".into()));
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let t = kinds("x: &'a str; let c = 'x'; let n = '\\n'; let b = '{';");
+        assert!(t.iter().any(|(k, tx)| *k == TokKind::Lifetime && tx == "'a"));
+        assert_eq!(t.iter().filter(|(k, _)| *k == TokKind::Char).count(), 3);
+    }
+
+    #[test]
+    fn numbers_do_not_eat_method_calls() {
+        let t = kinds("x.0.unwrap(); 1.5e3; 0..10");
+        assert!(t.iter().any(|(k, tx)| *k == TokKind::Ident && tx == "unwrap"));
+        assert!(t.iter().any(|(k, tx)| *k == TokKind::Num && tx == "1.5e3"));
+        // range stays three tokens: 0, '.', '.', 10
+        assert!(t.iter().any(|(k, tx)| *k == TokKind::Num && tx == "10"));
+    }
+
+    #[test]
+    fn lines_are_tracked_through_multiline_literals() {
+        let src = "a\n\"two\nlines\"\nb";
+        let toks = tokenize(src);
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[1].line, 2);
+        assert_eq!(toks[2].line, 4);
+    }
+
+    #[test]
+    fn byte_literals() {
+        let t = kinds("b\"bytes\" b'x' br#\"raw\"#");
+        assert_eq!(t[0], (TokKind::Str, "bytes".into()));
+        assert_eq!(t[1].0, TokKind::Char);
+        assert_eq!(t[2], (TokKind::Str, "raw".into()));
+    }
+
+    #[test]
+    fn raw_ident() {
+        let t = kinds("r#type x");
+        assert_eq!(t[0], (TokKind::Ident, "type".into()));
+        assert_eq!(t[1], (TokKind::Ident, "x".into()));
+    }
+}

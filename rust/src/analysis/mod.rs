@@ -1,0 +1,293 @@
+//! `elastic-gen lint`: the repo-invariant static analysis pass.
+//!
+//! Enforces three rule families clippy cannot express (see DESIGN.md
+//! §Static analysis):
+//!
+//! * **determinism** — parity-critical modules (`generator/`, `sim/`,
+//!   `strategy/`, `workload/fit.rs`) must stay bit-reproducible: no hash
+//!   iteration, no wall clocks, no entropy RNG, no unordered float
+//!   folds;
+//! * **panic surface** — serving/worker modules (`coordinator/`,
+//!   `runtime/`, `generator/dist/`) must not panic: no
+//!   `unwrap`/`expect`/`panic!`/direct indexing;
+//! * **wire hygiene** — every struct with a codec in `dist/wire.rs`
+//!   carries the schema tag and full encode/decode field coverage.
+//!
+//! A finding is suppressed only by an inline pragma carrying a written
+//! reason: `// lint: allow(<rule>) — <reason>`.  The pass walks
+//! `src/`, `tests/`, and `benches/`, reports `file:line` findings, can
+//! emit a JSON report (`util::json`), and exits non-zero on any
+//! unsuppressed finding — wired as both a CI step and a tier-1
+//! integration test (`tests/integration_lint.rs`).
+
+pub mod classify;
+pub mod lexer;
+pub mod rules;
+pub mod wire;
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use rules::Finding;
+
+/// One input file: crate-relative path + contents.  In-memory so the
+/// fixture self-tests drive the exact pipeline the CLI runs.
+#[derive(Debug, Clone)]
+pub struct SourceFile {
+    pub rel: String,
+    pub text: String,
+}
+
+/// The whole pass's outcome.
+#[derive(Debug)]
+pub struct LintOutcome {
+    /// Every finding, suppressed ones included, ordered by (file, line).
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+    /// Total `lint: allow(...)` pragmas in the tree (the suppression
+    /// inventory a meta-test pins).
+    pub allow_count: usize,
+}
+
+impl LintOutcome {
+    pub fn unsuppressed(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| !f.suppressed)
+    }
+
+    pub fn unsuppressed_count(&self) -> usize {
+        self.unsuppressed().count()
+    }
+
+    pub fn suppressed_count(&self) -> usize {
+        self.findings.iter().filter(|f| f.suppressed).count()
+    }
+}
+
+/// Lint a set of in-memory files (the engine behind both the CLI and the
+/// fixture tests).
+pub fn lint_files(files: &[SourceFile]) -> LintOutcome {
+    struct Prepared {
+        rel: String,
+        code: Vec<lexer::Tok>,
+        scope: classify::Scope,
+        pragmas: rules::Pragmas,
+    }
+
+    let mut prepared: Vec<Prepared> = Vec::with_capacity(files.len());
+    let mut structs: BTreeMap<String, wire::StructDef> = BTreeMap::new();
+    for f in files {
+        let toks = lexer::tokenize(&f.text);
+        let code = lexer::code_tokens(&toks);
+        let scope = classify::classify(&f.rel);
+        let pragmas = rules::scan_pragmas(&f.rel, &toks, &rules::code_line_set(&code));
+        if scope.src {
+            for s in wire::collect_structs(&f.rel, &code, &pragmas.aliases) {
+                structs.entry(s.name.clone()).or_insert(s);
+            }
+        }
+        prepared.push(Prepared {
+            rel: f.rel.clone(),
+            code,
+            scope,
+            pragmas,
+        });
+    }
+
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut allow_count = 0usize;
+    for p in &prepared {
+        let mut file_findings = rules::run_code_rules(&p.rel, &p.code, p.scope);
+        if p.scope.wire {
+            file_findings.extend(wire::check_wire_file(&p.rel, &p.code, &structs));
+        }
+        rules::apply_suppressions(&mut file_findings, &p.pragmas.allows);
+        file_findings.extend(p.pragmas.meta.iter().cloned());
+        allow_count += p.pragmas.allows.len();
+        findings.extend(file_findings);
+    }
+    findings.sort_by(|a, b| {
+        let ka = (a.file.as_str(), a.line, a.rule.as_str());
+        ka.cmp(&(b.file.as_str(), b.line, b.rule.as_str()))
+    });
+
+    LintOutcome {
+        findings,
+        files_scanned: prepared.len(),
+        allow_count,
+    }
+}
+
+/// Walk `src/`, `tests/`, and `benches/` under the crate root and lint
+/// every `.rs` file, in sorted path order.
+pub fn lint_tree(crate_root: &Path) -> Result<LintOutcome> {
+    let mut files: Vec<SourceFile> = Vec::new();
+    for sub in ["src", "tests", "benches"] {
+        let dir = crate_root.join(sub);
+        if dir.is_dir() {
+            collect_rs(&dir, crate_root, &mut files)?;
+        }
+    }
+    if files.is_empty() {
+        return Err(anyhow!(
+            "no .rs files under {} — is this the crate root?",
+            crate_root.display()
+        ));
+    }
+    files.sort_by(|a, b| a.rel.cmp(&b.rel));
+    Ok(lint_files(&files))
+}
+
+fn collect_rs(dir: &Path, root: &Path, out: &mut Vec<SourceFile>) -> Result<()> {
+    for entry in std::fs::read_dir(dir).with_context(|| format!("reading {}", dir.display()))? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, root, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            out.push(SourceFile { rel, text });
+        }
+    }
+    Ok(())
+}
+
+/// Locate the crate root from the current directory: either the crate
+/// itself (`src/lib.rs` + `Cargo.toml`) or a repo root holding `rust/`.
+pub fn find_crate_root() -> Result<PathBuf> {
+    let mut d = std::env::current_dir().context("current dir")?;
+    loop {
+        if d.join("src/lib.rs").is_file() && d.join("Cargo.toml").is_file() {
+            return Ok(d);
+        }
+        if d.join("rust/src/lib.rs").is_file() {
+            return Ok(d.join("rust"));
+        }
+        if !d.pop() {
+            return Err(anyhow!(
+                "could not locate the crate root (src/lib.rs) from the current directory"
+            ));
+        }
+    }
+}
+
+/// The machine-readable report (`elastic-gen lint --json <path>`).
+pub fn report_json(o: &LintOutcome) -> Json {
+    Json::obj(vec![
+        ("schema", Json::Str("elastic-gen/lint-report/v1".to_string())),
+        ("files_scanned", Json::Num(o.files_scanned as f64)),
+        ("unsuppressed", Json::Num(o.unsuppressed_count() as f64)),
+        ("suppressed", Json::Num(o.suppressed_count() as f64)),
+        ("allow_pragmas", Json::Num(o.allow_count as f64)),
+        (
+            "findings",
+            Json::Arr(
+                o.findings
+                    .iter()
+                    .map(|f| {
+                        Json::obj(vec![
+                            ("rule", Json::Str(f.rule.clone())),
+                            ("file", Json::Str(f.file.clone())),
+                            ("line", Json::Num(f.line as f64)),
+                            ("message", Json::Str(f.message.clone())),
+                            ("suppressed", Json::Bool(f.suppressed)),
+                            (
+                                "reason",
+                                match &f.reason {
+                                    Some(r) => Json::Str(r.clone()),
+                                    None => Json::Null,
+                                },
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::indexing_slicing)]
+mod tests {
+    use super::*;
+
+    fn file(rel: &str, text: &str) -> SourceFile {
+        SourceFile {
+            rel: rel.to_string(),
+            text: text.to_string(),
+        }
+    }
+
+    #[test]
+    fn cross_file_wire_check_sees_structs_from_other_files() {
+        // struct in worker.rs, codec in wire.rs — the ShardResult shape
+        let worker = file(
+            "src/generator/dist/worker.rs",
+            "pub struct Reply { pub x: usize, pub extra: bool }",
+        );
+        let wire = file(
+            "src/generator/dist/wire.rs",
+            r#"
+            impl Reply {
+                fn to_json(&self) -> Json {
+                    Json::obj(vec![
+                        ("schema", Json::Str(S.to_string())),
+                        ("x", Json::Num(self.x as f64)),
+                    ])
+                }
+                fn from_json(j: &Json) -> anyhow::Result<Reply> {
+                    check_schema(j, S)?;
+                    Ok(Reply { x: uint(j, "x")?, extra: false })
+                }
+            }
+            "#,
+        );
+        let out = lint_files(&[worker, wire]);
+        let cov: Vec<&rules::Finding> = out
+            .findings
+            .iter()
+            .filter(|f| f.rule == rules::WIRE_FIELD_COVERAGE)
+            .collect();
+        assert_eq!(cov.len(), 2, "{:?}", out.findings);
+        assert!(cov.iter().all(|f| f.message.contains("extra")));
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let out = lint_files(&[file(
+            "src/coordinator/x.rs",
+            "fn f(o: Option<u32>) -> u32 { o.unwrap() }",
+        )]);
+        assert_eq!(out.unsuppressed_count(), 1);
+        let j = report_json(&out);
+        assert_eq!(
+            j.get("schema").and_then(|s| s.as_str()),
+            Some("elastic-gen/lint-report/v1")
+        );
+        assert_eq!(j.get("unsuppressed").and_then(|n| n.as_usize()), Some(1));
+        let arr = j.get("findings").and_then(|a| a.as_arr()).unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(
+            arr[0].get("rule").and_then(|r| r.as_str()),
+            Some(rules::PANIC_UNWRAP)
+        );
+    }
+
+    #[test]
+    fn allow_inventory_counts_pragmas() {
+        let out = lint_files(&[file(
+            "src/runtime/x.rs",
+            "fn f(o: Option<u32>) -> u32 { o.unwrap() } // lint: allow(panic-unwrap) — fixture",
+        )]);
+        assert_eq!(out.allow_count, 1);
+        assert_eq!(out.unsuppressed_count(), 0);
+        assert_eq!(out.suppressed_count(), 1);
+    }
+}

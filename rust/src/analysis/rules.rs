@@ -1,0 +1,688 @@
+//! Rule engine: per-file token-pattern rules, suppression pragmas, and
+//! findings.
+//!
+//! Three rule families (see DESIGN.md §Static analysis):
+//!
+//! * determinism (`det-*`) — parity-scoped modules must not iterate hash
+//!   containers, read wall clocks, or fold floats in unordered
+//!   iteration order;
+//! * panic surface (`panic-*`) — serving-scoped modules must not
+//!   `unwrap`/`expect`/`panic!` or index slices directly;
+//! * pragma meta (`pragma-*`) — every suppression must name a known rule
+//!   and carry a written reason; these run everywhere and are not
+//!   themselves suppressible.
+//!
+//! The wire-hygiene family (`wire-*`) is cross-file and lives in
+//! `analysis::wire`.
+//!
+//! Suppression grammar: `// lint: allow(<rule>) — <reason>` (an ASCII
+//! `-` works too).  The pragma covers its own line and the next code
+//! line, so it works both trailing a statement and on the line above.
+//! `// lint: wire(<key>)` trailing a struct field declares the field's
+//! wire key when it differs from the field name (`pre` encoded as
+//! `tau_pre`).
+
+use super::classify::Scope;
+use super::lexer::{Tok, TokKind};
+use std::collections::BTreeSet;
+
+pub const DET_HASH_ITER: &str = "det-hash-iter";
+pub const DET_UNORDERED_FOLD: &str = "det-unordered-fold";
+pub const DET_WALL_CLOCK: &str = "det-wall-clock";
+pub const DET_ENTROPY_RNG: &str = "det-entropy-rng";
+pub const PANIC_UNWRAP: &str = "panic-unwrap";
+pub const PANIC_EXPECT: &str = "panic-expect";
+pub const PANIC_MACRO: &str = "panic-macro";
+pub const PANIC_SLICE_INDEX: &str = "panic-slice-index";
+pub const WIRE_SCHEMA_TAG: &str = "wire-schema-tag";
+pub const WIRE_FIELD_COVERAGE: &str = "wire-field-coverage";
+pub const WIRE_KEY_PARITY: &str = "wire-key-parity";
+pub const PRAGMA_MISSING_REASON: &str = "pragma-missing-reason";
+pub const PRAGMA_UNKNOWN_RULE: &str = "pragma-unknown-rule";
+
+/// Every rule id the pass can emit (and therefore that `allow(...)` may
+/// name).
+pub const KNOWN_RULES: &[&str] = &[
+    DET_HASH_ITER,
+    DET_UNORDERED_FOLD,
+    DET_WALL_CLOCK,
+    DET_ENTROPY_RNG,
+    PANIC_UNWRAP,
+    PANIC_EXPECT,
+    PANIC_MACRO,
+    PANIC_SLICE_INDEX,
+    WIRE_SCHEMA_TAG,
+    WIRE_FIELD_COVERAGE,
+    WIRE_KEY_PARITY,
+    PRAGMA_MISSING_REASON,
+    PRAGMA_UNKNOWN_RULE,
+];
+
+/// One lint finding, suppressed or not.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: String,
+    pub file: String,
+    pub line: u32,
+    pub message: String,
+    pub suppressed: bool,
+    /// The pragma's written reason, when suppressed.
+    pub reason: Option<String>,
+}
+
+/// A parsed `lint: allow(...)` pragma.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    pub rule: String,
+    pub reason: String,
+    pub line: u32,
+    /// Lines this pragma covers: its own line and the next code line.
+    pub covers: Vec<u32>,
+}
+
+/// A parsed `lint: wire(<key>)` field-alias pragma.
+#[derive(Debug, Clone)]
+pub struct WireAlias {
+    pub key: String,
+    pub line: u32,
+}
+
+/// Per-file pragma scan result.
+#[derive(Debug, Default)]
+pub struct Pragmas {
+    pub allows: Vec<Allow>,
+    pub aliases: Vec<WireAlias>,
+    /// Meta findings (unknown rule / missing reason) — never suppressible.
+    pub meta: Vec<Finding>,
+}
+
+/// Strip comment decoration (`//`, `///`, `//!`, `/*`, `*/`) and return
+/// the trimmed payload.
+fn comment_payload(text: &str) -> &str {
+    let t = text
+        .trim_start_matches('/')
+        .trim_start_matches('*')
+        .trim_start_matches('!')
+        .trim_start_matches('/');
+    t.trim_end_matches('/').trim_end_matches('*').trim()
+}
+
+/// Parse all `lint:` pragmas in a file's token stream.  `code_lines` must
+/// be the ascending set of lines holding at least one non-comment token.
+pub fn scan_pragmas(file: &str, toks: &[Tok], code_lines: &BTreeSet<u32>) -> Pragmas {
+    let mut out = Pragmas::default();
+    for t in toks.iter().filter(|t| t.kind == TokKind::Comment) {
+        let payload = comment_payload(&t.text);
+        let Some(rest) = payload.strip_prefix("lint:") else {
+            continue;
+        };
+        let rest = rest.trim();
+        if let Some(arg) = directive_arg(rest, "allow") {
+            let rule = arg.0.trim().to_string();
+            let reason = arg
+                .1
+                .trim_start()
+                .trim_start_matches(['—', '–', '-'])
+                .trim()
+                .to_string();
+            if !KNOWN_RULES.contains(&rule.as_str()) {
+                out.meta.push(Finding {
+                    rule: PRAGMA_UNKNOWN_RULE.to_string(),
+                    file: file.to_string(),
+                    line: t.line,
+                    message: format!("allow names unknown rule '{rule}'"),
+                    suppressed: false,
+                    reason: None,
+                });
+                continue;
+            }
+            if reason.is_empty() {
+                out.meta.push(Finding {
+                    rule: PRAGMA_MISSING_REASON.to_string(),
+                    file: file.to_string(),
+                    line: t.line,
+                    message: format!(
+                        "allow({rule}) has no reason — write `// lint: allow({rule}) — <why>`"
+                    ),
+                    suppressed: false,
+                    reason: None,
+                });
+                continue;
+            }
+            let mut covers = vec![t.line];
+            if let Some(&next) = code_lines.range(t.line + 1..).next() {
+                covers.push(next);
+            }
+            out.allows.push(Allow {
+                rule,
+                reason,
+                line: t.line,
+                covers,
+            });
+        } else if let Some(arg) = directive_arg(rest, "wire") {
+            let key = arg.0.trim().to_string();
+            if key.is_empty() || !key.chars().all(|c| c.is_alphanumeric() || c == '_') {
+                out.meta.push(Finding {
+                    rule: PRAGMA_UNKNOWN_RULE.to_string(),
+                    file: file.to_string(),
+                    line: t.line,
+                    message: format!("wire(...) key '{key}' is not an identifier"),
+                    suppressed: false,
+                    reason: None,
+                });
+                continue;
+            }
+            out.aliases.push(WireAlias { key, line: t.line });
+        } else {
+            out.meta.push(Finding {
+                rule: PRAGMA_UNKNOWN_RULE.to_string(),
+                file: file.to_string(),
+                line: t.line,
+                message: format!("unrecognised lint directive '{rest}'"),
+                suppressed: false,
+                reason: None,
+            });
+        }
+    }
+    out
+}
+
+/// If `rest` starts with `name(...)`, return (argument, remainder after
+/// the closing paren).
+fn directive_arg<'a>(rest: &'a str, name: &str) -> Option<(&'a str, &'a str)> {
+    let r = rest.strip_prefix(name)?;
+    let r = r.trim_start();
+    let r = r.strip_prefix('(')?;
+    let close = r.find(')')?;
+    Some((&r[..close], &r[close + 1..]))
+}
+
+/// Keywords that may directly precede `[` without it being an index
+/// expression (slice patterns, array types after `->`, …).
+const KEYWORDS: &[&str] = &[
+    "as", "async", "await", "box", "break", "const", "continue", "crate", "dyn", "else", "enum",
+    "extern", "fn", "for", "if", "impl", "in", "let", "loop", "match", "mod", "move", "mut",
+    "pub", "ref", "return", "static", "struct", "super", "trait", "type", "unsafe", "use",
+    "where", "while", "yield",
+];
+
+const HASH_ITER_METHODS: &[&str] = &[
+    "iter", "iter_mut", "keys", "values", "values_mut", "into_iter", "into_keys", "into_values",
+    "drain",
+];
+
+const UNORDERED_FOLDS: &[&str] = &["sum", "fold", "product"];
+
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+const ENTROPY_IDENTS: &[&str] = &["thread_rng", "from_entropy", "OsRng", "getrandom"];
+
+/// Token-index ranges (over the code-token stream) occupied by
+/// `#[cfg(test)] mod … { … }` bodies; det/panic rules skip them.
+pub fn test_ranges(code: &[Tok]) -> Vec<(usize, usize)> {
+    let mut ranges = Vec::new();
+    let n = code.len();
+    let mut i = 0usize;
+    while i + 6 < n {
+        let is_cfg_test = code[i].is_punct('#')
+            && code[i + 1].is_punct('[')
+            && code[i + 2].is_ident("cfg")
+            && code[i + 3].is_punct('(')
+            && code[i + 4].is_ident("test")
+            && code[i + 5].is_punct(')')
+            && code[i + 6].is_punct(']');
+        if !is_cfg_test {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 7;
+        // skip further attributes between #[cfg(test)] and the item
+        while j + 1 < n && code[j].is_punct('#') && code[j + 1].is_punct('[') {
+            let mut depth = 0usize;
+            j += 1;
+            while j < n {
+                if code[j].is_punct('[') {
+                    depth += 1;
+                } else if code[j].is_punct(']') {
+                    depth -= 1;
+                    if depth == 0 {
+                        j += 1;
+                        break;
+                    }
+                }
+                j += 1;
+            }
+        }
+        if j < n && code[j].is_ident("mod") {
+            // mod <name> { … } — brace-match the body
+            let mut k = j + 1;
+            while k < n && !code[k].is_punct('{') {
+                k += 1;
+            }
+            let start = k;
+            let mut depth = 0usize;
+            while k < n {
+                if code[k].is_punct('{') {
+                    depth += 1;
+                } else if code[k].is_punct('}') {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                k += 1;
+            }
+            ranges.push((start, k.min(n.saturating_sub(1))));
+            i = k + 1;
+        } else {
+            i = j;
+        }
+    }
+    ranges
+}
+
+fn in_ranges(idx: usize, ranges: &[(usize, usize)]) -> bool {
+    ranges.iter().any(|&(a, b)| idx >= a && idx <= b)
+}
+
+/// Identifiers bound to a `HashMap`/`HashSet` anywhere in the file
+/// (type ascriptions, struct fields, fn params, `= HashMap::new()`).
+/// File-local and name-based — deliberately over-approximate: a hash
+/// container reached through a differently-named binding escapes, but
+/// every direct iteration in the file is caught.
+fn hash_bound_idents(code: &[Tok]) -> BTreeSet<String> {
+    let mut vars = BTreeSet::new();
+    for (i, t) in code.iter().enumerate() {
+        if !(t.is_ident("HashMap") || t.is_ident("HashSet")) {
+            continue;
+        }
+        // walk back over a `path::to::` prefix
+        let mut j = i;
+        while j >= 2 && code[j - 1].is_punct(':') && code[j - 2].is_punct(':') {
+            j -= 2;
+            if j >= 1 && code[j - 1].kind == TokKind::Ident {
+                j -= 1;
+            }
+        }
+        if j == 0 {
+            continue;
+        }
+        let prev = &code[j - 1];
+        if prev.is_punct(':') && j >= 2 && !code[j - 2].is_punct(':') {
+            if code[j - 2].kind == TokKind::Ident {
+                vars.insert(code[j - 2].text.clone());
+            }
+        } else if prev.is_punct('=') && j >= 2 && code[j - 2].kind == TokKind::Ident {
+            vars.insert(code[j - 2].text.clone());
+        }
+    }
+    vars
+}
+
+/// Run the determinism + panic-surface rules over one file's code
+/// tokens.  `scope` gates which families fire; meta rules are handled by
+/// `scan_pragmas`.
+pub fn run_code_rules(file: &str, code: &[Tok], scope: Scope) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if !scope.src || !(scope.parity || scope.serving) {
+        return out;
+    }
+    let skip = test_ranges(code);
+    let hash_vars = if scope.parity {
+        hash_bound_idents(code)
+    } else {
+        BTreeSet::new()
+    };
+    let n = code.len();
+    let mut push = |rule: &str, line: u32, message: String| {
+        out.push(Finding {
+            rule: rule.to_string(),
+            file: file.to_string(),
+            line,
+            message,
+            suppressed: false,
+            reason: None,
+        });
+    };
+
+    for i in 0..n {
+        if in_ranges(i, &skip) {
+            continue;
+        }
+        let t = &code[i];
+
+        if scope.parity {
+            // Instant::now / SystemTime::now
+            if (t.is_ident("Instant") || t.is_ident("SystemTime"))
+                && i + 3 < n
+                && code[i + 1].is_punct(':')
+                && code[i + 2].is_punct(':')
+                && code[i + 3].is_ident("now")
+            {
+                push(
+                    DET_WALL_CLOCK,
+                    t.line,
+                    format!(
+                        "{}::now() in a parity-critical module — wall-clock reads \
+                         break replay determinism",
+                        t.text
+                    ),
+                );
+            }
+            if t.kind == TokKind::Ident && ENTROPY_IDENTS.contains(&t.text.as_str()) {
+                push(
+                    DET_ENTROPY_RNG,
+                    t.line,
+                    format!(
+                        "entropy-seeded RNG `{}` in a parity-critical module — use the \
+                         seeded splitmix in util::rng",
+                        t.text
+                    ),
+                );
+            }
+            // <hashvar>.iter()/keys()/… and `for _ in [&]hashvar {`
+            if t.kind == TokKind::Ident
+                && hash_vars.contains(&t.text)
+                && i + 3 < n
+                && code[i + 1].is_punct('.')
+                && code[i + 2].kind == TokKind::Ident
+                && HASH_ITER_METHODS.contains(&code[i + 2].text.as_str())
+                && code[i + 3].is_punct('(')
+            {
+                let folded = chain_reaches_fold(code, i + 3);
+                let (rule, what) = if folded {
+                    (DET_UNORDERED_FOLD, "float reduction over hash-order iteration")
+                } else {
+                    (DET_HASH_ITER, "iteration over a hash container")
+                };
+                push(
+                    rule,
+                    t.line,
+                    format!(
+                        "{what} (`{}.{}()`) — hash order varies per process; collect \
+                         and sort, or use an ordered container",
+                        t.text,
+                        code[i + 2].text
+                    ),
+                );
+            }
+            if t.is_ident("in") && i + 2 < n {
+                let mut j = i + 1;
+                while j < n && (code[j].is_punct('&') || code[j].is_ident("mut")) {
+                    j += 1;
+                }
+                if j + 1 < n
+                    && code[j].kind == TokKind::Ident
+                    && hash_vars.contains(&code[j].text)
+                    && code[j + 1].is_punct('{')
+                {
+                    push(
+                        DET_HASH_ITER,
+                        code[j].line,
+                        format!(
+                            "`for … in {}` iterates a hash container — hash order varies \
+                             per process",
+                            code[j].text
+                        ),
+                    );
+                }
+            }
+        }
+
+        if scope.serving {
+            if t.is_punct('.') && i + 2 < n && code[i + 2].is_punct('(') {
+                if code[i + 1].is_ident("unwrap") {
+                    push(
+                        PANIC_UNWRAP,
+                        code[i + 1].line,
+                        "`.unwrap()` on the serving/worker path — recover or return an \
+                         error (see util::sync::locked for mutexes)"
+                            .to_string(),
+                    );
+                } else if code[i + 1].is_ident("expect") {
+                    push(
+                        PANIC_EXPECT,
+                        code[i + 1].line,
+                        "`.expect()` on the serving/worker path — recover or return an \
+                         error"
+                            .to_string(),
+                    );
+                }
+            }
+            if t.kind == TokKind::Ident
+                && PANIC_MACROS.contains(&t.text.as_str())
+                && i + 1 < n
+                && code[i + 1].is_punct('!')
+            {
+                push(
+                    PANIC_MACRO,
+                    t.line,
+                    format!("`{}!` on the serving/worker path — return an error instead", t.text),
+                );
+            }
+            if t.is_punct('[') && i >= 1 {
+                let prev = &code[i - 1];
+                let indexes = match prev.kind {
+                    TokKind::Ident => !KEYWORDS.contains(&prev.text.as_str()),
+                    TokKind::Punct => prev.is_punct(')') || prev.is_punct(']'),
+                    _ => false,
+                };
+                if indexes {
+                    push(
+                        PANIC_SLICE_INDEX,
+                        t.line,
+                        "direct slice/array index on the serving/worker path — use \
+                         .get() or justify the bound with a pragma"
+                            .to_string(),
+                    );
+                }
+            }
+        }
+    }
+    out
+}
+
+/// From an opening `(` at `open`, does the method chain continue into a
+/// `sum`/`fold`/`product` call before the statement ends?
+fn chain_reaches_fold(code: &[Tok], open: usize) -> bool {
+    let n = code.len();
+    let mut i = open;
+    let mut depth: i32 = 0;
+    // bounded forward scan: the rest of the chain expression
+    let limit = (open + 200).min(n);
+    while i < limit {
+        let t = &code[i];
+        if t.is_punct('(') || t.is_punct('[') || t.is_punct('{') {
+            depth += 1;
+        } else if t.is_punct(')') || t.is_punct(']') || t.is_punct('}') {
+            depth -= 1;
+            if depth < 0 {
+                return false; // closed an enclosing scope — chain over
+            }
+        } else if depth == 0 && (t.is_punct(';') || t.is_punct(',')) {
+            return false;
+        } else if depth == 0
+            && t.is_punct('.')
+            && i + 2 < n
+            && code[i + 1].kind == TokKind::Ident
+            && UNORDERED_FOLDS.contains(&code[i + 1].text.as_str())
+            && code[i + 2].is_punct('(')
+        {
+            return true;
+        }
+        i += 1;
+    }
+    false
+}
+
+/// Mark findings covered by an `allow` pragma as suppressed, attaching
+/// the written reason.  Meta findings (`pragma-*`) are never suppressed.
+pub fn apply_suppressions(findings: &mut [Finding], allows: &[Allow]) {
+    for f in findings.iter_mut() {
+        if f.rule.starts_with("pragma-") {
+            continue;
+        }
+        if let Some(a) = allows
+            .iter()
+            .find(|a| a.rule == f.rule && a.covers.contains(&f.line))
+        {
+            f.suppressed = true;
+            f.reason = Some(a.reason.clone());
+        }
+    }
+}
+
+/// Ascending set of lines carrying at least one non-comment token.
+pub fn code_line_set(code: &[Tok]) -> BTreeSet<u32> {
+    code.iter().map(|t| t.line).collect()
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::indexing_slicing)]
+mod tests {
+    use super::super::lexer::{code_tokens, tokenize};
+    use super::*;
+
+    fn run(relpath: &str, src: &str) -> Vec<Finding> {
+        let toks = tokenize(src);
+        let code = code_tokens(&toks);
+        let scope = super::super::classify::classify(relpath);
+        let mut f = run_code_rules(relpath, &code, scope);
+        let p = scan_pragmas(relpath, &toks, &code_line_set(&code));
+        apply_suppressions(&mut f, &p.allows);
+        f.extend(p.meta);
+        f
+    }
+
+    fn unsuppressed<'a>(f: &'a [Finding]) -> Vec<&'a Finding> {
+        f.iter().filter(|x| !x.suppressed).collect()
+    }
+
+    #[test]
+    fn hash_iteration_flagged_in_parity_scope_only() {
+        let src = "fn f() { let m: HashMap<String, u32> = HashMap::new(); \
+                   for v in m.values() { let _ = v; } }";
+        let f = run("src/generator/eval.rs", src);
+        assert!(f.iter().any(|x| x.rule == DET_HASH_ITER), "{f:?}");
+        let f = run("src/power/model.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn hash_fold_classified_as_unordered_fold() {
+        let src = "fn f(m: HashMap<u32, f64>) -> f64 { m.values().sum() }";
+        let f = run("src/sim/des.rs", src);
+        assert!(f.iter().any(|x| x.rule == DET_UNORDERED_FOLD), "{f:?}");
+    }
+
+    #[test]
+    fn vec_iteration_not_flagged() {
+        let src = "fn f(v: Vec<f64>) -> f64 { v.iter().sum() }";
+        let f = run("src/sim/des.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn wall_clock_and_entropy_flagged() {
+        let src = "fn f() { let t = Instant::now(); let r = thread_rng(); }";
+        let f = run("src/generator/search/greedy.rs", src);
+        assert!(f.iter().any(|x| x.rule == DET_WALL_CLOCK));
+        assert!(f.iter().any(|x| x.rule == DET_ENTROPY_RNG));
+    }
+
+    #[test]
+    fn panic_family_fires_in_serving_scope() {
+        let src = "fn f(v: &[u32], o: Option<u32>) -> u32 { \
+                   let a = o.unwrap(); let b = o.expect(\"x\"); \
+                   if a > b { panic!(\"boom\") } v[0] }";
+        let f = run("src/coordinator/server.rs", src);
+        let rules: Vec<&str> = f.iter().map(|x| x.rule.as_str()).collect();
+        assert!(rules.contains(&PANIC_UNWRAP));
+        assert!(rules.contains(&PANIC_EXPECT));
+        assert!(rules.contains(&PANIC_MACRO));
+        assert!(rules.contains(&PANIC_SLICE_INDEX));
+    }
+
+    #[test]
+    fn unwrap_or_else_and_vec_macro_not_flagged() {
+        let src = "fn f(m: &std::sync::Mutex<u32>) -> u32 { \
+                   let g = m.lock().unwrap_or_else(|e| e.into_inner()); \
+                   let v = vec![1, 2]; let [a, b] = [0u32, 1]; *g + v.len() as u32 + a + b }";
+        let f = run("src/coordinator/metrics.rs", src);
+        assert!(unsuppressed(&f).is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn hazards_in_comments_and_strings_do_not_fire() {
+        let src = "fn f() -> u32 { // calls x.unwrap() and panic!()\n\
+                   let s = \"y.unwrap() panic! v[0]\"; s.len() as u32 }";
+        let f = run("src/coordinator/router.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn cfg_test_mod_is_exempt() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { \
+                   let o: Option<u32> = Some(1); o.unwrap(); }\n}\n";
+        let f = run("src/coordinator/server.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn pragma_with_reason_suppresses_same_line_and_next_line() {
+        let trailing = "fn f(o: Option<u32>) -> u32 { o.unwrap() } \
+                        // lint: allow(panic-unwrap) — checked by caller";
+        let f = run("src/runtime/engine.rs", trailing);
+        assert_eq!(unsuppressed(&f).len(), 0, "{f:?}");
+        assert!(f.iter().any(|x| x.suppressed && x.reason.as_deref() == Some("checked by caller")));
+
+        let above = "// lint: allow(panic-unwrap) — checked by caller\n\
+                     fn f(o: Option<u32>) -> u32 { o.unwrap() }";
+        let f = run("src/runtime/engine.rs", above);
+        assert_eq!(unsuppressed(&f).len(), 0, "{f:?}");
+    }
+
+    #[test]
+    fn pragma_without_reason_is_a_finding_and_does_not_suppress() {
+        let src = "// lint: allow(panic-unwrap)\n\
+                   fn f(o: Option<u32>) -> u32 { o.unwrap() }";
+        let f = run("src/runtime/engine.rs", src);
+        let rules: Vec<&str> = unsuppressed(&f).iter().map(|x| x.rule.as_str()).collect();
+        assert!(rules.contains(&PRAGMA_MISSING_REASON), "{f:?}");
+        assert!(rules.contains(&PANIC_UNWRAP), "{f:?}");
+    }
+
+    #[test]
+    fn unknown_rule_in_pragma_is_a_finding() {
+        let src = "// lint: allow(no-such-rule) — whatever\nfn f() {}";
+        let f = run("src/runtime/engine.rs", src);
+        assert!(f.iter().any(|x| x.rule == PRAGMA_UNKNOWN_RULE));
+    }
+
+    #[test]
+    fn pragma_does_not_cover_two_lines_down() {
+        let src = "// lint: allow(panic-unwrap) — only covers next line\n\
+                   fn g() {}\n\
+                   fn f(o: Option<u32>) -> u32 { o.unwrap() }";
+        let f = run("src/runtime/engine.rs", src);
+        assert_eq!(unsuppressed(&f).len(), 1, "{f:?}");
+    }
+
+    #[test]
+    fn meta_rules_apply_in_tests_dir_but_code_rules_do_not() {
+        let src = "// lint: allow(panic-unwrap)\n\
+                   fn f(o: Option<u32>) -> u32 { o.unwrap() }";
+        let f = run("tests/integration_x.rs", src);
+        let rules: Vec<&str> = f.iter().map(|x| x.rule.as_str()).collect();
+        assert!(rules.contains(&PRAGMA_MISSING_REASON));
+        assert!(!rules.contains(&PANIC_UNWRAP));
+    }
+
+    #[test]
+    fn attribute_and_type_brackets_not_flagged() {
+        let src = "#[derive(Debug)]\nstruct S { xs: [f64; 4] }\n\
+                   fn f(s: &S) -> f64 { s.xs.iter().copied().fold(0.0, f64::max) }";
+        let f = run("src/coordinator/request.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+}

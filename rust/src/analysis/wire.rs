@@ -1,0 +1,577 @@
+//! Wire-hygiene rules: every struct with a JSON codec in a `dist/wire.rs`
+//! file must carry the schema tag and keep its field set covered by both
+//! the encoder and the decoder.
+//!
+//! The checks are cross-file: a codec lives in `wire.rs` (`impl Name {
+//! fn to_json / fn from_json }`) while the struct itself may be defined
+//! elsewhere (`ShardResult` lives in `worker.rs`), so struct definitions
+//! are collected over the whole scanned tree first.
+//!
+//! Key extraction is deliberately shape-based: a string literal counts as
+//! a wire key when it is identifier-like (`[A-Za-z_][A-Za-z0-9_]*`) and
+//! sits directly after `(` or `,` — the position of every key in the
+//! repo's helper-call idiom (`uint(j, "shard")`, `("shard", Json::Num)`)
+//! — while human-readable error messages contain spaces and never match.
+//! A field whose wire key differs from its name declares the mapping
+//! with a trailing `// lint: wire(<key>)` pragma.
+
+use super::lexer::{Tok, TokKind};
+use super::rules::{Finding, WireAlias, WIRE_FIELD_COVERAGE, WIRE_KEY_PARITY, WIRE_SCHEMA_TAG};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// One struct field as seen by the wire checker.
+#[derive(Debug, Clone)]
+pub struct Field {
+    pub name: String,
+    pub line: u32,
+    /// Wire key when it differs from the field name (`lint: wire(...)`).
+    pub alias: Option<String>,
+}
+
+/// A `struct Name { … }` definition.
+#[derive(Debug, Clone)]
+pub struct StructDef {
+    pub name: String,
+    pub file: String,
+    pub line: u32,
+    pub fields: Vec<Field>,
+}
+
+fn ident_like(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_alphanumeric() || c == '_')
+}
+
+/// Collect brace-struct definitions from one file's code tokens.
+/// Tuple and unit structs are skipped — nothing wire-encoded is one.
+pub fn collect_structs(file: &str, code: &[Tok], aliases: &[WireAlias]) -> Vec<StructDef> {
+    let mut out = Vec::new();
+    let n = code.len();
+    let mut i = 0usize;
+    while i + 1 < n {
+        if !(code[i].is_ident("struct") && code[i + 1].kind == TokKind::Ident) {
+            i += 1;
+            continue;
+        }
+        let name = code[i + 1].text.clone();
+        let line = code[i + 1].line;
+        // skip generics / bounds to the body opener or a `;`/`(`
+        let mut j = i + 2;
+        let mut angle: i32 = 0;
+        while j < n {
+            let t = &code[j];
+            if t.is_punct('<') {
+                angle += 1;
+            } else if t.is_punct('>') {
+                angle -= 1;
+            } else if angle == 0 && (t.is_punct('{') || t.is_punct('(') || t.is_punct(';')) {
+                break;
+            }
+            j += 1;
+        }
+        if j >= n || !code[j].is_punct('{') {
+            i = j.max(i + 2);
+            continue;
+        }
+        let fields = parse_fields(code, j);
+        out.push(StructDef {
+            name,
+            file: file.to_string(),
+            line,
+            fields: fields
+                .into_iter()
+                .map(|(name, line)| Field {
+                    alias: aliases.iter().find(|a| a.line == line).map(|a| a.key.clone()),
+                    name,
+                    line,
+                })
+                .collect(),
+        });
+        i = j + 1;
+    }
+    out
+}
+
+/// Parse `name:` field starts inside a struct body opening at `code[open]
+/// == '{'`.  Depth-tracks `(){}[]<>` so commas inside generic types do
+/// not start a new field.
+fn parse_fields(code: &[Tok], open: usize) -> Vec<(String, u32)> {
+    let n = code.len();
+    let mut fields = Vec::new();
+    let mut brace: i32 = 1;
+    let mut paren: i32 = 0;
+    let mut bracket: i32 = 0;
+    let mut angle: i32 = 0;
+    let mut expecting = true;
+    let mut i = open + 1;
+    while i < n && brace > 0 {
+        let t = &code[i];
+        if t.is_punct('{') {
+            brace += 1;
+        } else if t.is_punct('}') {
+            brace -= 1;
+        } else if t.is_punct('(') {
+            paren += 1;
+        } else if t.is_punct(')') {
+            paren -= 1;
+        } else if t.is_punct('[') {
+            bracket += 1;
+        } else if t.is_punct(']') {
+            bracket -= 1;
+        } else if t.is_punct('<') {
+            angle += 1;
+        } else if t.is_punct('>') {
+            angle -= 1;
+        }
+        let top = brace == 1 && paren == 0 && bracket == 0 && angle == 0;
+        if top && t.is_punct(',') {
+            expecting = true;
+            i += 1;
+            continue;
+        }
+        if top && expecting {
+            if t.is_punct('#') && i + 1 < n && code[i + 1].is_punct('[') {
+                // skip an attribute
+                let mut depth = 0i32;
+                i += 1;
+                while i < n {
+                    if code[i].is_punct('[') {
+                        depth += 1;
+                    } else if code[i].is_punct(']') {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    i += 1;
+                }
+                i += 1;
+                continue;
+            }
+            if t.is_ident("pub") {
+                if i + 1 < n && code[i + 1].is_punct('(') {
+                    // pub(crate) / pub(super)
+                    let mut depth = 0i32;
+                    i += 1;
+                    while i < n {
+                        if code[i].is_punct('(') {
+                            depth += 1;
+                        } else if code[i].is_punct(')') {
+                            depth -= 1;
+                            if depth == 0 {
+                                break;
+                            }
+                        }
+                        i += 1;
+                    }
+                }
+                i += 1;
+                continue;
+            }
+            if t.kind == TokKind::Ident
+                && i + 1 < n
+                && code[i + 1].is_punct(':')
+                && !(i + 2 < n && code[i + 2].is_punct(':'))
+            {
+                fields.push((t.text.clone(), t.line));
+                expecting = false;
+            }
+        }
+        i += 1;
+    }
+    fields
+}
+
+/// One codec: an impl block containing both `fn to_json` and
+/// `fn from_json`.
+struct Codec {
+    struct_name: String,
+    line: u32,
+    encode_keys: BTreeSet<String>,
+    decode_keys: BTreeSet<String>,
+    decode_idents: BTreeSet<String>,
+}
+
+fn brace_match(code: &[Tok], open: usize) -> usize {
+    let n = code.len();
+    let mut depth = 0i32;
+    let mut i = open;
+    while i < n {
+        if code[i].is_punct('{') {
+            depth += 1;
+        } else if code[i].is_punct('}') {
+            depth -= 1;
+            if depth == 0 {
+                return i;
+            }
+        }
+        i += 1;
+    }
+    n.saturating_sub(1)
+}
+
+/// Identifier-like string literals sitting after `(` or `,` in a token
+/// range — the wire-key position.
+fn keys_in(code: &[Tok], from: usize, to: usize) -> BTreeSet<String> {
+    let mut keys = BTreeSet::new();
+    for i in from..=to.min(code.len().saturating_sub(1)) {
+        if code[i].kind == TokKind::Str
+            && ident_like(&code[i].text)
+            && i >= 1
+            && (code[i - 1].is_punct('(') || code[i - 1].is_punct(','))
+        {
+            keys.insert(code[i].text.clone());
+        }
+    }
+    keys
+}
+
+fn idents_in(code: &[Tok], from: usize, to: usize) -> BTreeSet<String> {
+    let mut ids = BTreeSet::new();
+    for t in code.iter().take(to.min(code.len().saturating_sub(1)) + 1).skip(from) {
+        if t.kind == TokKind::Ident {
+            ids.insert(t.text.clone());
+        }
+    }
+    ids
+}
+
+fn find_codecs(code: &[Tok]) -> Vec<Codec> {
+    let n = code.len();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        if !code[i].is_ident("impl") {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 1;
+        // skip impl generics
+        if j < n && code[j].is_punct('<') {
+            let mut angle = 0i32;
+            while j < n {
+                if code[j].is_punct('<') {
+                    angle += 1;
+                } else if code[j].is_punct('>') {
+                    angle -= 1;
+                    if angle == 0 {
+                        j += 1;
+                        break;
+                    }
+                }
+                j += 1;
+            }
+        }
+        if j >= n || code[j].kind != TokKind::Ident {
+            i = j;
+            continue;
+        }
+        let mut struct_name = code[j].text.clone();
+        let impl_line = code[j].line;
+        // `impl Trait for Name` — the implementing type names the codec
+        let mut k = j + 1;
+        while k < n && !(code[k].is_punct('{') || code[k].is_ident("for")) {
+            k += 1;
+        }
+        if k < n && code[k].is_ident("for") && k + 1 < n && code[k + 1].kind == TokKind::Ident {
+            struct_name = code[k + 1].text.clone();
+            k += 2;
+            while k < n && !code[k].is_punct('{') {
+                k += 1;
+            }
+        }
+        if k >= n {
+            break;
+        }
+        let body_end = brace_match(code, k);
+
+        let mut encode: Option<(usize, usize)> = None;
+        let mut decode: Option<(usize, usize)> = None;
+        let mut p = k + 1;
+        while p < body_end {
+            if code[p].is_ident("fn") && p + 1 < n && code[p + 1].kind == TokKind::Ident {
+                let fname = code[p + 1].text.clone();
+                let mut q = p + 2;
+                while q < body_end && !code[q].is_punct('{') {
+                    q += 1;
+                }
+                let fend = brace_match(code, q);
+                if fname == "to_json" {
+                    encode = Some((q, fend));
+                } else if fname == "from_json" {
+                    decode = Some((q, fend));
+                }
+                p = fend + 1;
+            } else {
+                p += 1;
+            }
+        }
+        if let (Some((es, ee)), Some((ds, de))) = (encode, decode) {
+            out.push(Codec {
+                struct_name,
+                line: impl_line,
+                encode_keys: keys_in(code, es, ee),
+                decode_keys: keys_in(code, ds, de),
+                decode_idents: idents_in(code, ds, de),
+            });
+        }
+        i = body_end + 1;
+    }
+    out
+}
+
+/// Run the wire-hygiene rules over one wire file, given the tree-wide
+/// struct definitions.
+pub fn check_wire_file(
+    file: &str,
+    code: &[Tok],
+    structs: &BTreeMap<String, StructDef>,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let mut push = |rule: &str, line: u32, message: String| {
+        out.push(Finding {
+            rule: rule.to_string(),
+            file: file.to_string(),
+            line,
+            message,
+            suppressed: false,
+            reason: None,
+        });
+    };
+
+    for codec in find_codecs(code) {
+        let name = &codec.struct_name;
+        if !codec.encode_keys.contains("schema") {
+            push(
+                WIRE_SCHEMA_TAG,
+                codec.line,
+                format!("{name}::to_json does not emit the 'schema' tag"),
+            );
+        }
+        if !codec.decode_idents.contains("check_schema") {
+            push(
+                WIRE_SCHEMA_TAG,
+                codec.line,
+                format!("{name}::from_json does not call check_schema"),
+            );
+        }
+
+        match structs.get(name) {
+            None => push(
+                WIRE_FIELD_COVERAGE,
+                codec.line,
+                format!("codec for '{name}' but no struct definition in the scanned tree"),
+            ),
+            Some(def) => {
+                for f in &def.fields {
+                    let key = f.alias.clone().unwrap_or_else(|| f.name.clone());
+                    if !codec.encode_keys.contains(&key) {
+                        push(
+                            WIRE_FIELD_COVERAGE,
+                            codec.line,
+                            format!(
+                                "field {name}.{} (wire key '{key}', defined {}:{}) is not \
+                                 emitted by to_json",
+                                f.name, def.file, f.line
+                            ),
+                        );
+                    }
+                    if !codec.decode_keys.contains(&key) {
+                        push(
+                            WIRE_FIELD_COVERAGE,
+                            codec.line,
+                            format!(
+                                "field {name}.{} (wire key '{key}', defined {}:{}) is not \
+                                 read by from_json",
+                                f.name, def.file, f.line
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+
+        let mut enc = codec.encode_keys.clone();
+        let mut dec = codec.decode_keys.clone();
+        enc.remove("schema");
+        dec.remove("schema");
+        if enc != dec {
+            let only_enc: Vec<&str> =
+                enc.difference(&dec).map(|s| s.as_str()).collect();
+            let only_dec: Vec<&str> =
+                dec.difference(&enc).map(|s| s.as_str()).collect();
+            push(
+                WIRE_KEY_PARITY,
+                codec.line,
+                format!(
+                    "{name} encode/decode key sets differ — encode-only: [{}], \
+                     decode-only: [{}]",
+                    only_enc.join(", "),
+                    only_dec.join(", ")
+                ),
+            );
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::indexing_slicing)]
+mod tests {
+    use super::super::lexer::{code_tokens, tokenize};
+    use super::super::rules::scan_pragmas;
+    use super::*;
+
+    fn structs_of(file: &str, src: &str) -> BTreeMap<String, StructDef> {
+        let toks = tokenize(src);
+        let code = code_tokens(&toks);
+        let lines = super::super::rules::code_line_set(&code);
+        let pragmas = scan_pragmas(file, &toks, &lines);
+        collect_structs(file, &code, &pragmas.aliases)
+            .into_iter()
+            .map(|s| (s.name.clone(), s))
+            .collect()
+    }
+
+    const GOOD: &str = r#"
+        pub struct Msg {
+            pub alpha: usize,
+            pub beta: Option<ModelScales>,
+            pub raw: RankAgreement, // lint: wire(tau_raw)
+        }
+        impl Msg {
+            pub fn to_json(&self) -> Json {
+                Json::obj(vec![
+                    ("schema", Json::Str(SCHEMA.to_string())),
+                    ("alpha", Json::Num(self.alpha as f64)),
+                    ("beta", encode_scales(&self.beta)),
+                    ("tau_raw", encode_agreement(&self.raw)),
+                ])
+            }
+            pub fn from_json(j: &Json) -> anyhow::Result<Msg> {
+                check_schema(j, SCHEMA)?;
+                Ok(Msg {
+                    alpha: uint(j, "alpha")?,
+                    beta: decode_scales(j, "beta")?,
+                    raw: decode_agreement(j, "tau_raw")?,
+                })
+            }
+        }
+    "#;
+
+    #[test]
+    fn clean_codec_passes() {
+        let src_map = structs_of("src/generator/dist/wire.rs", GOOD);
+        let toks = tokenize(GOOD);
+        let code = code_tokens(&toks);
+        let f = check_wire_file("src/generator/dist/wire.rs", &code, &src_map);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn missing_decode_key_and_parity_flagged() {
+        // encoder emits gamma, decoder never reads it
+        let src = r#"
+            pub struct Msg { pub gamma: usize }
+            impl Msg {
+                fn to_json(&self) -> Json {
+                    Json::obj(vec![
+                        ("schema", Json::Str(S.to_string())),
+                        ("gamma", Json::Num(self.gamma as f64)),
+                    ])
+                }
+                fn from_json(j: &Json) -> anyhow::Result<Msg> {
+                    check_schema(j, S)?;
+                    Ok(Msg { gamma: 0 })
+                }
+            }
+        "#;
+        let src_map = structs_of("src/generator/dist/wire.rs", src);
+        let code = code_tokens(&tokenize(src));
+        let f = check_wire_file("src/generator/dist/wire.rs", &code, &src_map);
+        let rules: Vec<&str> = f.iter().map(|x| x.rule.as_str()).collect();
+        assert!(rules.contains(&WIRE_FIELD_COVERAGE), "{f:?}");
+        assert!(rules.contains(&WIRE_KEY_PARITY), "{f:?}");
+    }
+
+    #[test]
+    fn missing_schema_tag_flagged() {
+        let src = r#"
+            pub struct Msg { pub x: usize }
+            impl Msg {
+                fn to_json(&self) -> Json {
+                    Json::obj(vec![("x", Json::Num(self.x as f64))])
+                }
+                fn from_json(j: &Json) -> anyhow::Result<Msg> {
+                    Ok(Msg { x: uint(j, "x")? })
+                }
+            }
+        "#;
+        let src_map = structs_of("src/generator/dist/wire.rs", src);
+        let code = code_tokens(&tokenize(src));
+        let f = check_wire_file("src/generator/dist/wire.rs", &code, &src_map);
+        let schema_findings =
+            f.iter().filter(|x| x.rule == WIRE_SCHEMA_TAG).count();
+        assert_eq!(schema_findings, 2, "{f:?}"); // no tag emitted, no check
+    }
+
+    #[test]
+    fn new_field_without_codec_update_is_flagged() {
+        // the regression the rule exists for: a field added to the struct
+        // but not to either side of the codec
+        let src = r#"
+            pub struct Msg { pub x: usize, pub added: bool }
+            impl Msg {
+                fn to_json(&self) -> Json {
+                    Json::obj(vec![
+                        ("schema", Json::Str(S.to_string())),
+                        ("x", Json::Num(self.x as f64)),
+                    ])
+                }
+                fn from_json(j: &Json) -> anyhow::Result<Msg> {
+                    check_schema(j, S)?;
+                    Ok(Msg { x: uint(j, "x")?, added: false })
+                }
+            }
+        "#;
+        let src_map = structs_of("src/generator/dist/wire.rs", src);
+        let code = code_tokens(&tokenize(src));
+        let f = check_wire_file("src/generator/dist/wire.rs", &code, &src_map);
+        let coverage: Vec<&Finding> =
+            f.iter().filter(|x| x.rule == WIRE_FIELD_COVERAGE).collect();
+        assert_eq!(coverage.len(), 2, "{f:?}"); // missing from both sides
+        assert!(coverage[0].message.contains("added"));
+    }
+
+    #[test]
+    fn error_message_strings_are_not_keys() {
+        let toks = tokenize(
+            r#"fn from_json(j: &Json) { uint(j, "shard")?; anyhow!("missing 'front' array"); }"#,
+        );
+        let code = code_tokens(&toks);
+        let keys = keys_in(&code, 0, code.len() - 1);
+        assert!(keys.contains("shard"));
+        assert_eq!(keys.len(), 1, "{keys:?}");
+    }
+
+    #[test]
+    fn struct_fields_parse_through_generics_and_attrs() {
+        let src = r#"
+            #[derive(Debug, Clone)]
+            pub struct S {
+                #[allow(dead_code)]
+                pub map: HashMap<String, Vec<(u32, f64)>>,
+                pub plain: bool,
+                inner: Option<Box<S>>,
+            }
+        "#;
+        let m = structs_of("src/generator/dist/wire.rs", src);
+        let s = &m["S"];
+        let names: Vec<&str> = s.fields.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, vec!["map", "plain", "inner"]);
+    }
+}

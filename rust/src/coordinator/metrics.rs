@@ -3,6 +3,7 @@
 //! shared between the shard worker threads and observers.
 
 use crate::util::stats::Summary;
+use crate::util::sync::locked;
 use crate::util::table::{num, Table};
 use crate::util::units::Secs;
 use std::collections::{BTreeMap, VecDeque};
@@ -104,18 +105,16 @@ impl Metrics {
     /// Register the shard layout.  Called once by `Coordinator::start`.
     pub fn init_shards(&self, gauges: Vec<Arc<AtomicIsize>>) {
         {
-            let mut shards = self.shards.lock().unwrap();
+            let mut shards = locked(&self.shards);
             *shards = Vec::new();
             shards.resize_with(gauges.len(), ShardStats::default);
         }
-        *self.depth_gauges.lock().unwrap() = gauges;
-        *self.start.lock().unwrap() = Some(Instant::now());
+        *locked(&self.depth_gauges) = gauges;
+        *locked(&self.start) = Some(Instant::now());
     }
 
     fn elapsed_s(&self) -> f64 {
-        self.start
-            .lock()
-            .unwrap()
+        locked(&self.start)
             .get_or_insert_with(Instant::now)
             .elapsed()
             .as_secs_f64()
@@ -125,7 +124,7 @@ impl Metrics {
     pub fn record(&self, artifact: &str, ok: bool, queue_wait_s: f64, exec_s: f64) {
         // pin the epoch on first use so throughput reflects serving time
         self.elapsed_s();
-        let mut m = self.inner.lock().unwrap();
+        let mut m = locked(&self.inner);
         let s = m.entry(artifact.to_string()).or_default();
         if ok {
             s.served += 1;
@@ -147,7 +146,7 @@ impl Metrics {
         exec_s: f64,
     ) {
         self.record(artifact, ok, queue_wait_s, exec_s);
-        let mut shards = self.shards.lock().unwrap();
+        let mut shards = locked(&self.shards);
         if let Some(s) = shards.get_mut(shard) {
             if ok {
                 s.served += 1;
@@ -161,7 +160,7 @@ impl Metrics {
 
     /// An admitted request was enqueued on `shard`.
     pub fn record_submit(&self, shard: usize) {
-        let mut shards = self.shards.lock().unwrap();
+        let mut shards = locked(&self.shards);
         if let Some(s) = shards.get_mut(shard) {
             s.submitted += 1;
         }
@@ -169,7 +168,7 @@ impl Metrics {
 
     /// Admission control rejected a request bound for `shard`.
     pub fn record_reject(&self, shard: usize) {
-        let mut shards = self.shards.lock().unwrap();
+        let mut shards = locked(&self.shards);
         if let Some(s) = shards.get_mut(shard) {
             s.rejected += 1;
         }
@@ -179,7 +178,7 @@ impl Metrics {
     /// Counted both in the total reject tally and separately, so tests can
     /// bound rejects attributable to the drain window.
     pub fn record_drain_reject(&self, shard: usize) {
-        let mut shards = self.shards.lock().unwrap();
+        let mut shards = locked(&self.shards);
         if let Some(s) = shards.get_mut(shard) {
             s.rejected += 1;
             s.drain_rejected += 1;
@@ -189,7 +188,7 @@ impl Metrics {
     /// Change the arrival-ring bound (existing rings are trimmed lazily on
     /// the next arrival).
     pub fn set_arrival_cap(&self, cap: usize) {
-        *self.arrival_cap.lock().unwrap() = cap.max(1);
+        *locked(&self.arrival_cap) = cap.max(1);
     }
 
     /// Record an arrival for `artifact` at "now" (seconds since the
@@ -203,8 +202,8 @@ impl Metrics {
     /// point: the adaptive loop's hermetic tests inject synthetic traces
     /// here instead of depending on the wall clock.
     pub fn record_arrival_at(&self, artifact: &str, t_s: f64) {
-        let cap = *self.arrival_cap.lock().unwrap();
-        let mut m = self.inner.lock().unwrap();
+        let cap = *locked(&self.arrival_cap);
+        let mut m = locked(&self.inner);
         let ring = &mut m.entry(artifact.to_string()).or_default().arrivals;
         while ring.len() >= cap {
             ring.pop_front();
@@ -214,7 +213,7 @@ impl Metrics {
 
     /// The recorded arrival trace for `artifact`, oldest first.
     pub fn arrival_trace(&self, artifact: &str) -> Vec<Secs> {
-        let m = self.inner.lock().unwrap();
+        let m = locked(&self.inner);
         m.get(artifact)
             .map(|s| s.arrivals.iter().map(|&t| Secs(t)).collect())
             .unwrap_or_default()
@@ -223,7 +222,7 @@ impl Metrics {
     /// Drop the recorded arrivals for `artifact` (after a switch the old
     /// trace describes the previous regime and would bias the next fit).
     pub fn reset_arrivals(&self, artifact: &str) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = locked(&self.inner);
         if let Some(s) = m.get_mut(artifact) {
             s.arrivals.clear();
         }
@@ -234,17 +233,17 @@ impl Metrics {
         if event.at_s == 0.0 {
             event.at_s = self.elapsed_s();
         }
-        self.switches.lock().unwrap().push(event);
+        locked(&self.switches).push(event);
     }
 
     /// Completed switch events, oldest first.
     pub fn switch_events(&self) -> Vec<SwitchEvent> {
-        self.switches.lock().unwrap().clone()
+        locked(&self.switches).clone()
     }
 
     /// One micro-batch of `fill` requests drained (window `cap`).
     pub fn record_batch(&self, shard: usize, fill: usize, cap: usize) {
-        let mut shards = self.shards.lock().unwrap();
+        let mut shards = locked(&self.shards);
         if let Some(s) = shards.get_mut(shard) {
             s.batches += 1;
             s.batch_fill_sum += fill as f64 / cap.max(1) as f64;
@@ -253,7 +252,7 @@ impl Metrics {
 
     pub fn snapshot(&self) -> MetricsSnapshot {
         let elapsed = self.elapsed_s();
-        let m = self.inner.lock().unwrap();
+        let m = locked(&self.inner);
         let rows = m
             .iter()
             .map(|(name, s)| ArtifactSnapshot {
@@ -267,11 +266,8 @@ impl Metrics {
                 arrivals: s.arrivals.len(),
             })
             .collect();
-        let gauges = self.depth_gauges.lock().unwrap();
-        let shards = self
-            .shards
-            .lock()
-            .unwrap()
+        let gauges = locked(&self.depth_gauges);
+        let shards = locked(&self.shards)
             .iter()
             .enumerate()
             .map(|(i, s)| ShardSnapshot {
@@ -299,7 +295,7 @@ impl Metrics {
             elapsed_s: elapsed,
             rows,
             shards,
-            switches: self.switches.lock().unwrap().clone(),
+            switches: locked(&self.switches).clone(),
         }
     }
 }
@@ -417,8 +413,29 @@ impl MetricsSnapshot {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::indexing_slicing)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn metrics_survive_a_poisoned_lock() {
+        // a worker thread that panics while holding a metrics lock must
+        // not cascade into panics on every later record/snapshot call
+        let m = Arc::new(Metrics::default());
+        m.record("a", true, 0.001, 0.002);
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.inner.lock().unwrap();
+            panic!("deliberate poison");
+        })
+        .join();
+        assert!(m.inner.is_poisoned());
+        m.record("a", true, 0.001, 0.002);
+        m.record_arrival_at("a", 0.5);
+        let s = m.snapshot();
+        assert_eq!(s.total_served(), 2);
+        assert_eq!(s.rows[0].arrivals, 1);
+    }
 
     #[test]
     fn record_and_snapshot() {

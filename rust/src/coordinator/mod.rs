@@ -9,6 +9,11 @@
 //! channels with admission control, and drain in micro-batches the way
 //! the MCU batches sensor windows.  See DESIGN.md §Coordinator.
 
+// serving path: a panic here takes down a shard mid-request, so the
+// panic-surface invariant is enforced both by `elastic-gen lint` and at
+// the clippy layer (tests opt back out per-module)
+#![warn(clippy::unwrap_used, clippy::indexing_slicing)]
+
 pub mod metrics;
 pub mod request;
 pub mod router;

@@ -131,36 +131,27 @@ impl Router {
     pub fn route(&self, model: &str, policy: Policy) -> Result<&ArtifactMeta> {
         let candidates: Vec<&ArtifactMeta> =
             self.entries.iter().filter(|a| a.model == model).collect();
-        if candidates.is_empty() {
+        // `total_cmp` (not `partial_cmp().unwrap()`): error/cost proxies
+        // are finite by construction, and a NaN from a future estimator
+        // change must not panic the serving path
+        let Some(&first) = candidates.first() else {
             return Err(anyhow!("no artifact for model '{model}'"));
-        }
+        };
         let chosen = match policy {
-            Policy::Named => candidates[0],
+            Policy::Named => first,
             Policy::HighestPrecision => candidates
                 .iter()
-                .min_by(|a, b| {
-                    Self::error_lsb(a)
-                        .partial_cmp(&Self::error_lsb(b))
-                        .unwrap()
-                })
-                .unwrap(),
-            Policy::CheapestWithin { max_error_lsb } => {
-                let within: Vec<&&ArtifactMeta> = candidates
-                    .iter()
-                    .filter(|a| Self::error_lsb(a) <= max_error_lsb as f64)
-                    .collect();
-                if within.is_empty() {
-                    return Err(anyhow!(
-                        "no {model} variant within {max_error_lsb} LSB error budget"
-                    ));
-                }
-                within
-                    .into_iter()
-                    .min_by(|a, b| {
-                        Self::cost_rank(a).partial_cmp(&Self::cost_rank(b)).unwrap()
-                    })
-                    .unwrap()
-            }
+                .copied()
+                .min_by(|a, b| Self::error_lsb(a).total_cmp(&Self::error_lsb(b)))
+                .unwrap_or(first),
+            Policy::CheapestWithin { max_error_lsb } => candidates
+                .iter()
+                .copied()
+                .filter(|a| Self::error_lsb(a) <= max_error_lsb as f64)
+                .min_by(|a, b| Self::cost_rank(a).total_cmp(&Self::cost_rank(b)))
+                .ok_or_else(|| {
+                    anyhow!("no {model} variant within {max_error_lsb} LSB error budget")
+                })?,
         };
         Ok(chosen)
     }
@@ -174,6 +165,7 @@ impl Router {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::indexing_slicing)]
 mod tests {
     use super::*;
     use crate::rtl::fixed_point::Q16_8;

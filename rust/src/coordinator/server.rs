@@ -23,6 +23,7 @@ use super::metrics::{Metrics, SwitchEvent};
 use super::request::{Request, Response, SubmitError};
 use super::router::{ShardPolicy, ShardRouter};
 use crate::runtime::{Engine, Manifest, SyntheticSpec};
+use crate::util::sync::locked;
 use anyhow::{anyhow, Result};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicIsize, AtomicU64, Ordering};
@@ -254,7 +255,7 @@ impl Coordinator {
                     let metrics = metrics.clone();
                     move || worker_loop(shard_id, &config, engine, rx, depth, metrics, ready_tx)
                 })
-                .expect("spawn shard worker");
+                .map_err(|e| anyhow!("spawning shard {shard_id} worker thread: {e}"))?;
             shards.push(Shard {
                 tx: Mutex::new(Some(tx)),
                 depth,
@@ -342,7 +343,12 @@ impl Coordinator {
             Vec::new()
         };
         let shard = self.router.pick(artifact, &depths);
-        if self.shards[shard].draining.load(Ordering::SeqCst) {
+        // the router's pick is always in range, but go through `get` so a
+        // future router bug surfaces as a rejection, not a panic mid-serve
+        let Some(target) = self.shards.get(shard) else {
+            return Err(SubmitError::ShuttingDown);
+        };
+        if target.draining.load(Ordering::SeqCst) {
             self.metrics.record_drain_reject(shard);
             return Err(SubmitError::Draining { shard });
         }
@@ -356,22 +362,22 @@ impl Coordinator {
         };
         // clone the sender out of the lock: a blocking send must not hold
         // the mutex, or it would stall shutdown and sibling producers
-        let tx = match self.shards[shard].tx.lock().unwrap().as_ref() {
+        let tx = match locked(&target.tx).as_ref() {
             Some(tx) => tx.clone(),
             None => return Err(SubmitError::ShuttingDown),
         };
         if blocking {
             // count the waiting producer as queue pressure
-            self.shards[shard].depth.fetch_add(1, Ordering::Relaxed);
+            target.depth.fetch_add(1, Ordering::Relaxed);
             if tx.send(ShardMsg::Req(req)).is_err() {
-                self.shards[shard].depth.fetch_sub(1, Ordering::Relaxed);
+                target.depth.fetch_sub(1, Ordering::Relaxed);
                 return Err(SubmitError::ShuttingDown);
             }
             self.metrics.record_submit(shard);
         } else {
             match tx.try_send(ShardMsg::Req(req)) {
                 Ok(()) => {
-                    self.shards[shard].depth.fetch_add(1, Ordering::Relaxed);
+                    target.depth.fetch_add(1, Ordering::Relaxed);
                     self.metrics.record_submit(shard);
                 }
                 Err(TrySendError::Full(_)) => {
@@ -417,7 +423,7 @@ impl Coordinator {
     /// Returns an error without touching any shard when the new spec
     /// cannot be resolved at all or the coordinator is shutting down.
     pub fn swap_engines(&self, engine: EngineSpec, info: SwitchInfo) -> Result<SwapReport> {
-        let _guard = self.swap_lock.lock().unwrap();
+        let _guard = locked(&self.swap_lock);
         if self.draining.load(Ordering::SeqCst) {
             return Err(anyhow!("coordinator is shutting down"));
         }
@@ -429,10 +435,9 @@ impl Coordinator {
 
         let drain_before = self.metrics.snapshot().total_drain_rejected();
         let mut failed = Vec::new();
-        for (shard_id, shard_engine) in engines.into_iter().enumerate() {
-            let shard = &self.shards[shard_id];
+        for (shard_id, (shard, shard_engine)) in self.shards.iter().zip(engines).enumerate() {
             shard.draining.store(true, Ordering::SeqCst);
-            let tx = match shard.tx.lock().unwrap().as_ref() {
+            let tx = match locked(&shard.tx).as_ref() {
                 Some(tx) => tx.clone(),
                 None => {
                     shard.draining.store(false, Ordering::SeqCst);
@@ -490,9 +495,9 @@ impl Coordinator {
     pub fn shutdown(&self) {
         self.draining.store(true, Ordering::SeqCst);
         for shard in &self.shards {
-            shard.tx.lock().unwrap().take();
+            locked(&shard.tx).take();
         }
-        let workers = std::mem::take(&mut *self.workers.lock().unwrap());
+        let workers = std::mem::take(&mut *locked(&self.workers));
         for handle in workers {
             let _ = handle.join();
         }
@@ -626,6 +631,7 @@ fn worker_loop(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::indexing_slicing)]
 mod tests {
     use super::*;
 

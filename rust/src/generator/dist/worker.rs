@@ -61,9 +61,9 @@ pub struct ShardResult {
     pub scales: ModelScales,
     pub fell_back: bool,
     /// Estimator↔DES rank agreement before the fit.
-    pub pre: RankAgreement,
+    pub pre: RankAgreement, // lint: wire(tau_pre)
     /// Agreement under the shipped scales (== `pre` when fell back).
-    pub post: RankAgreement,
+    pub post: RankAgreement, // lint: wire(tau_post)
 }
 
 pub(crate) fn scenario(name: &str) -> anyhow::Result<AppSpec> {

@@ -19,6 +19,7 @@
 //! See DESIGN.md for the module inventory, the serving architecture, and
 //! the experiment index (E1-E8, benches/).
 
+pub mod analysis;
 pub mod behav;
 pub mod bench;
 pub mod coordinator;

@@ -24,6 +24,9 @@
 //! * `devices`  — print the device catalog.
 //! * `verify`   — cross-check PJRT execution and the behavioural
 //!   simulator against the golden vectors.
+//! * `lint`     — repo-invariant static analysis (determinism /
+//!   panic-surface / wire-hygiene); exits non-zero on any unsuppressed
+//!   finding.  Runs in CI and as a tier-1 test.
 
 use anyhow::Context as _;
 use elastic_gen::coordinator::{Coordinator, CoordinatorConfig, EngineSpec, SubmitError};
@@ -71,6 +74,7 @@ fn main() {
         Some("serve") => cmd_serve(&args),
         Some("devices") => cmd_devices(),
         Some("verify") => cmd_verify(&args),
+        Some("lint") => cmd_lint(&args),
         _ => {
             print_usage();
             Ok(())
@@ -112,8 +116,45 @@ fn print_usage() {
                      (adaptive serving loop on the synthetic backend:\n\
                      observe -> fit -> calibrated sweep -> drain-and-switch)\n\
            verify    [--artifact <name>]\n\
+           lint      [--root <crate-dir>] [--json <report-path>]\n\
+                     [--max-suppressions N]  (repo-invariant static\n\
+                     analysis: determinism / panic-surface / wire-hygiene;\n\
+                     non-zero exit on any unsuppressed finding)\n\
            devices"
     );
+}
+
+fn cmd_lint(args: &Args) -> anyhow::Result<()> {
+    let root = match args.get("root") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => elastic_gen::analysis::find_crate_root()?,
+    };
+    let out = elastic_gen::analysis::lint_tree(&root)?;
+    for f in out.unsuppressed() {
+        println!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.message);
+    }
+    let unsuppressed = out.unsuppressed_count();
+    println!(
+        "lint: {} files, {} unsuppressed finding(s), {} suppressed, {} allow pragma(s)",
+        out.files_scanned,
+        unsuppressed,
+        out.suppressed_count(),
+        out.allow_count
+    );
+    if let Some(path) = args.get("json") {
+        let report = elastic_gen::analysis::report_json(&out);
+        std::fs::write(path, report.dump()).with_context(|| format!("writing {path}"))?;
+        println!("lint: report written to {path}");
+    }
+    let max_allows = args.get_usize("max-suppressions", usize::MAX);
+    anyhow::ensure!(
+        out.allow_count <= max_allows,
+        "suppression inventory {} exceeds --max-suppressions {}",
+        out.allow_count,
+        max_allows
+    );
+    anyhow::ensure!(unsuppressed == 0, "{unsuppressed} unsuppressed lint finding(s)");
+    Ok(())
 }
 
 fn scenario(name: &str) -> anyhow::Result<AppSpec> {
@@ -997,7 +1038,7 @@ fn cmd_serve_adapt(args: &Args) -> anyhow::Result<()> {
         artifact.clone(),
         interval,
         Arc::clone(&stop),
-    );
+    )?;
 
     let mut drain_rejects = 0usize;
     for _ in 0..n {

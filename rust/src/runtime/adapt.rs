@@ -178,7 +178,17 @@ impl Supervisor {
                 dist_fell_back: false,
             };
         }
-        let fitted = report.fitted.clone().expect("classified fit carries a workload");
+        // a classified family always carries a fitted workload, but a
+        // fitter regression must degrade to "keep observing", not panic
+        let Some(fitted) = report.fitted.clone() else {
+            return AdaptOutcome {
+                state: AdaptState::Observing,
+                fit: report,
+                drift: None,
+                decision: None,
+                dist_fell_back: false,
+            };
+        };
         let drift_score = drift(&fitted, &self.cfg.spec.workload);
         let Some(d) = drift_score else {
             return AdaptOutcome {
@@ -304,7 +314,7 @@ impl Supervisor {
         artifact: String,
         interval: Duration,
         stop: Arc<AtomicBool>,
-    ) -> JoinHandle<Vec<AdaptOutcome>> {
+    ) -> Result<JoinHandle<Vec<AdaptOutcome>>> {
         std::thread::Builder::new()
             .name("elastic-adapt".into())
             .spawn(move || {
@@ -324,11 +334,12 @@ impl Supervisor {
                 }
                 outcomes
             })
-            .expect("spawn adapt supervisor")
+            .map_err(|e| anyhow::anyhow!("spawning adapt supervisor thread: {e}"))
     }
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::indexing_slicing)]
 mod tests {
     use super::*;
     use crate::generator::{EvalPool, Evaluator, Goal, StrategyKind};

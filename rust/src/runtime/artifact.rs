@@ -165,6 +165,7 @@ impl Golden {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::indexing_slicing)]
 mod tests {
     use super::*;
     use crate::util::json::parse;

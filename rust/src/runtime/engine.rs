@@ -363,6 +363,7 @@ pub fn load_default() -> Result<Engine> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::indexing_slicing)]
 mod tests {
     use super::*;
 

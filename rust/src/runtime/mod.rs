@@ -5,6 +5,11 @@
 //! tests — see `engine.rs`.  `adapt.rs` hosts the adaptive serving loop's
 //! drift supervisor (observe → fit → sweep → drain-and-switch).
 
+// serving path: a panic here takes down a shard mid-request, so the
+// panic-surface invariant is enforced both by `elastic-gen lint` and at
+// the clippy layer (tests opt back out per-module)
+#![warn(clippy::unwrap_used, clippy::indexing_slicing)]
+
 pub mod adapt;
 pub mod artifact;
 pub mod engine;

@@ -105,7 +105,10 @@ impl PjrtEngine {
         let result = exe
             .execute::<xla::Literal>(&[lit])
             .map_err(|e| anyhow!("execute {name}: {e}"))?;
-        let out = result[0][0]
+        let out = result
+            .first()
+            .and_then(|per_device| per_device.first())
+            .ok_or_else(|| anyhow!("execute {name}: empty result set"))?
             .to_literal_sync()
             .map_err(|e| anyhow!("fetch result: {e}"))?
             .to_tuple1()

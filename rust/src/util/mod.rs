@@ -8,5 +8,6 @@ pub mod json;
 pub mod proptest;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod table;
 pub mod units;

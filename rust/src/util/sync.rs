@@ -1,0 +1,40 @@
+//! Poison-tolerant mutex locking for the serving path.
+//!
+//! `Mutex::lock().unwrap()` turns one panicking worker thread into a
+//! cascade: every later lock of the same mutex panics too, taking down
+//! metrics reads and shard drains that were otherwise healthy.  The
+//! serving stack guards plain data (counters, rings, senders) whose
+//! invariants hold between statements, so recovering the guard from a
+//! poisoned lock is always safe here — the data is at worst one update
+//! stale, never structurally torn.
+
+use std::sync::{Mutex, MutexGuard};
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+pub fn locked<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn locked_recovers_from_a_poisoned_lock() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = m.clone();
+        // poison the lock by panicking while holding it
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("deliberate poison");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        // locked() still hands out the guard, data intact
+        assert_eq!(*locked(&m), 7);
+        *locked(&m) += 1;
+        assert_eq!(*locked(&m), 8);
+    }
+}
