@@ -2,18 +2,24 @@
 //!
 //! Produces a flat token stream — identifiers, numbers, string/char
 //! literals, lifetimes, single-char punctuation, and comments — with
-//! 1-based line numbers.  The point is not to parse Rust but to strip
-//! comments and string literals *correctly* (nested block comments, raw
-//! strings with `#` guards, byte strings, char-vs-lifetime after `'`) so
-//! the rule engine can match token patterns without false positives from
-//! hazards that only appear inside text.
+//! 1-based line numbers and byte spans.  The point is not to parse Rust
+//! but to strip comments and string literals *correctly* (nested block
+//! comments, raw strings with `#` guards, byte strings, char-vs-lifetime
+//! after `'`) so the rule engine can match token patterns without false
+//! positives from hazards that only appear inside text.
+//!
+//! Span contract (checked by a property test in
+//! `tests/prop_invariants.rs`): token spans are ascending,
+//! non-overlapping byte ranges into the source, and every byte between
+//! consecutive spans is whitespace.
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TokKind {
     Ident,
     Num,
     /// String literal of any flavour; `text` holds the *content* (no
-    /// quotes, prefixes, or raw-string guards).
+    /// quotes, prefixes, or raw-string guards).  The span covers the
+    /// whole lexeme, delimiters included.
     Str,
     Char,
     Lifetime,
@@ -29,6 +35,10 @@ pub struct Tok {
     pub kind: TokKind,
     pub text: String,
     pub line: u32,
+    /// Byte offset of the lexeme's first byte in the source.
+    pub start: usize,
+    /// Byte offset one past the lexeme's last byte.
+    pub end: usize,
 }
 
 impl Tok {
@@ -55,7 +65,26 @@ fn is_ident_continue(c: char) -> bool {
 pub fn tokenize(src: &str) -> Vec<Tok> {
     let b: Vec<char> = src.chars().collect();
     let n = b.len();
+    // char index -> byte offset (offs[n] == src.len())
+    let mut offs: Vec<usize> = Vec::with_capacity(n + 1);
+    let mut o = 0usize;
+    for &c in &b {
+        offs.push(o);
+        o += c.len_utf8();
+    }
+    offs.push(o);
+    let byte = |ci: usize| offs.get(ci.min(n)).copied().unwrap_or(o);
+
     let mut toks: Vec<Tok> = Vec::new();
+    let mut push = |kind: TokKind, text: String, line: u32, s: usize, e: usize| {
+        toks.push(Tok {
+            kind,
+            text,
+            line,
+            start: byte(s),
+            end: byte(e),
+        });
+    };
     let mut i = 0usize;
     let mut line: u32 = 1;
 
@@ -78,11 +107,7 @@ pub fn tokenize(src: &str) -> Vec<Tok> {
                 while i < n && b[i] != '\n' {
                     i += 1;
                 }
-                toks.push(Tok {
-                    kind: TokKind::Comment,
-                    text: b[start..i].iter().collect(),
-                    line,
-                });
+                push(TokKind::Comment, b[start..i].iter().collect(), line, start, i);
             } else {
                 let start = i;
                 let start_line = line;
@@ -102,11 +127,13 @@ pub fn tokenize(src: &str) -> Vec<Tok> {
                         i += 1;
                     }
                 }
-                toks.push(Tok {
-                    kind: TokKind::Comment,
-                    text: b[start..i].iter().collect(),
-                    line: start_line,
-                });
+                push(
+                    TokKind::Comment,
+                    b[start..i].iter().collect(),
+                    start_line,
+                    start,
+                    i,
+                );
             }
             continue;
         }
@@ -122,26 +149,19 @@ pub fn tokenize(src: &str) -> Vec<Tok> {
             if j < n && b[j] == '"' {
                 let start_line = line;
                 let (content, next) = scan_raw_string(&b, j, guards, &mut line);
-                toks.push(Tok {
-                    kind: TokKind::Str,
-                    text: content,
-                    line: start_line,
-                });
+                push(TokKind::Str, content, start_line, i, next);
                 i = next;
                 continue;
             }
             if guards == 1 && j < n && is_ident_start(b[j]) {
-                // raw identifier r#type — token text keeps the bare name
+                // raw identifier r#type — token text keeps the bare name,
+                // the span covers the r# prefix
                 let start = j;
                 let mut k = j;
                 while k < n && is_ident_continue(b[k]) {
                     k += 1;
                 }
-                toks.push(Tok {
-                    kind: TokKind::Ident,
-                    text: b[start..k].iter().collect(),
-                    line,
-                });
+                push(TokKind::Ident, b[start..k].iter().collect(), line, i, k);
                 i = k;
                 continue;
             }
@@ -153,21 +173,13 @@ pub fn tokenize(src: &str) -> Vec<Tok> {
             if b[i + 1] == '"' {
                 let start_line = line;
                 let (content, next) = scan_string(&b, i + 1, &mut line);
-                toks.push(Tok {
-                    kind: TokKind::Str,
-                    text: content,
-                    line: start_line,
-                });
+                push(TokKind::Str, content, start_line, i, next);
                 i = next;
                 continue;
             }
             if b[i + 1] == '\'' {
                 let next = scan_char(&b, i + 1);
-                toks.push(Tok {
-                    kind: TokKind::Char,
-                    text: b[i..next].iter().collect(),
-                    line,
-                });
+                push(TokKind::Char, b[i..next].iter().collect(), line, i, next);
                 i = next;
                 continue;
             }
@@ -181,11 +193,7 @@ pub fn tokenize(src: &str) -> Vec<Tok> {
                 if j < n && b[j] == '"' {
                     let start_line = line;
                     let (content, next) = scan_raw_string(&b, j, guards, &mut line);
-                    toks.push(Tok {
-                        kind: TokKind::Str,
-                        text: content,
-                        line: start_line,
-                    });
+                    push(TokKind::Str, content, start_line, i, next);
                     i = next;
                     continue;
                 }
@@ -196,11 +204,7 @@ pub fn tokenize(src: &str) -> Vec<Tok> {
         if c == '"' {
             let start_line = line;
             let (content, next) = scan_string(&b, i, &mut line);
-            toks.push(Tok {
-                kind: TokKind::Str,
-                text: content,
-                line: start_line,
-            });
+            push(TokKind::Str, content, start_line, i, next);
             i = next;
             continue;
         }
@@ -216,11 +220,7 @@ pub fn tokenize(src: &str) -> Vec<Tok> {
             };
             if is_char {
                 let next = scan_char(&b, i);
-                toks.push(Tok {
-                    kind: TokKind::Char,
-                    text: b[i..next].iter().collect(),
-                    line,
-                });
+                push(TokKind::Char, b[i..next].iter().collect(), line, i, next);
                 i = next;
                 continue;
             }
@@ -230,19 +230,17 @@ pub fn tokenize(src: &str) -> Vec<Tok> {
                 while k < n && is_ident_continue(b[k]) {
                     k += 1;
                 }
-                toks.push(Tok {
-                    kind: TokKind::Lifetime,
-                    text: b[start..k].iter().collect(),
+                push(
+                    TokKind::Lifetime,
+                    b[start..k].iter().collect(),
                     line,
-                });
+                    start,
+                    k,
+                );
                 i = k;
                 continue;
             }
-            toks.push(Tok {
-                kind: TokKind::Punct,
-                text: "'".to_string(),
-                line,
-            });
+            push(TokKind::Punct, "'".to_string(), line, i, i + 1);
             i += 1;
             continue;
         }
@@ -252,11 +250,7 @@ pub fn tokenize(src: &str) -> Vec<Tok> {
             while i < n && is_ident_continue(b[i]) {
                 i += 1;
             }
-            toks.push(Tok {
-                kind: TokKind::Ident,
-                text: b[start..i].iter().collect(),
-                line,
-            });
+            push(TokKind::Ident, b[start..i].iter().collect(), line, start, i);
             continue;
         }
 
@@ -265,19 +259,11 @@ pub fn tokenize(src: &str) -> Vec<Tok> {
             while i < n && (is_ident_continue(b[i]) || (b[i] == '.' && i + 1 < n && b[i + 1].is_ascii_digit() && !b[start..i].iter().any(|&x| x == '.'))) {
                 i += 1;
             }
-            toks.push(Tok {
-                kind: TokKind::Num,
-                text: b[start..i].iter().collect(),
-                line,
-            });
+            push(TokKind::Num, b[start..i].iter().collect(), line, start, i);
             continue;
         }
 
-        toks.push(Tok {
-            kind: TokKind::Punct,
-            text: c.to_string(),
-            line,
-        });
+        push(TokKind::Punct, c.to_string(), line, i, i + 1);
         i += 1;
     }
     toks
@@ -332,7 +318,9 @@ fn scan_raw_string(b: &[char], q: usize, guards: usize, line: &mut u32) -> (Stri
 
 /// Scan a char literal starting at `b[i] == '\''`; returns index past the
 /// closing quote.  Lenient: a malformed literal consumes at most the
-/// escape and one closing-quote attempt.
+/// escape and one closing-quote attempt, and an unterminated literal at
+/// EOF stops at `n` (every increment is bounds-guarded so the returned
+/// index never exceeds the buffer).
 fn scan_char(b: &[char], mut i: usize) -> usize {
     let n = b.len();
     i += 1; // opening quote
@@ -343,8 +331,10 @@ fn scan_char(b: &[char], mut i: usize) -> usize {
             while i < n && b[i] != '}' {
                 i += 1;
             }
-            i += 1;
-        } else {
+            if i < n {
+                i += 1;
+            }
+        } else if i < n {
             i += 1;
         }
     } else if i < n {
@@ -436,5 +426,38 @@ mod tests {
         let t = kinds("r#type x");
         assert_eq!(t[0], (TokKind::Ident, "type".into()));
         assert_eq!(t[1], (TokKind::Ident, "x".into()));
+    }
+
+    #[test]
+    fn spans_tile_the_source() {
+        let src = "fn f() { let s = \"a b\"; /* c */ x.y[0] } // tail";
+        let toks = tokenize(src);
+        let mut prev_end = 0usize;
+        for t in &toks {
+            assert!(t.start >= prev_end, "{t:?} overlaps previous token");
+            assert!(t.end > t.start, "{t:?} has an empty span");
+            let gap = &src[prev_end..t.start];
+            assert!(gap.chars().all(char::is_whitespace), "gap {gap:?} not whitespace");
+            prev_end = t.end;
+        }
+        assert!(src[prev_end..].chars().all(char::is_whitespace));
+    }
+
+    #[test]
+    fn unterminated_escape_at_eof_does_not_panic() {
+        // regression: '\  and '\u{  used to walk the scan index past the
+        // buffer and panic on the slice
+        for src in ["'\\", "'\\u{12", "b'\\", "r#\"x", "\"abc", "'"] {
+            let toks = tokenize(src);
+            assert!(toks.iter().all(|t| t.end <= src.len()), "{src:?}: {toks:?}");
+        }
+    }
+
+    #[test]
+    fn string_span_includes_delimiters() {
+        let src = "r#\"abc\"#";
+        let toks = tokenize(src);
+        assert_eq!(toks[0].text, "abc");
+        assert_eq!((toks[0].start, toks[0].end), (0, src.len()));
     }
 }

@@ -1,0 +1,418 @@
+//! Lock-discipline analysis over `util::sync::locked` guard live-ranges.
+//!
+//! The repo's one blessed mutex entry point is `locked(&mutex)` (poison
+//! recovery built in), which makes lexical guard tracking tractable: a
+//! guard bound with `let g = locked(&x);` lives to the end of its
+//! enclosing block, a temporary `locked(&x).field` lives to the end of
+//! its statement.  Two rule families run over those live ranges:
+//!
+//! * **lock-order** — the graph-wide acquisition-order relation (direct
+//!   lexical nesting plus transitive acquisitions through resolved call
+//!   edges) must be consistent: if some path takes `a` then `b` and
+//!   another takes `b` then `a`, the pair can deadlock under
+//!   concurrency;
+//! * **lock-blocking** — serving-scope code must not call a potentially
+//!   unbounded blocking primitive (`send`/`recv`/`join`/`sleep`/…)
+//!   while a guard is live; a worker stalled inside a critical section
+//!   stalls every thread behind the lock.
+//!
+//! The lock identifier is lexical — the last field/binding name of the
+//! `locked(...)` argument — so two fields named `inner` on different
+//! structs alias into one lock id.  That is deliberately conservative
+//! for ordering (a false edge can only demand *more* consistency) and is
+//! kept honest by the repo's naming: lock fields carry distinct names.
+
+use super::rules::{Finding, LOCK_BLOCKING, LOCK_ORDER};
+use super::lexer::Tok;
+use super::symbols::Sym;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Call names treated as potentially unbounded blocking primitives when
+/// they appear (as a bare or method call) inside a guard's live range.
+pub const BLOCKING_NAMES: &[&str] = &[
+    "join",
+    "recv",
+    "recv_timeout",
+    "send",
+    "sleep",
+    "spawn_worker",
+    "wait",
+];
+
+/// One `locked(...)` acquisition inside a function body.
+#[derive(Debug, Clone)]
+pub struct LockAcq {
+    /// Lexical lock id: last field/binding ident of the argument.
+    pub lock: String,
+    /// Code-token index of the `locked` ident.
+    pub acq_idx: usize,
+    pub acq_line: u32,
+    /// Last code-token index at which the guard is live.
+    pub live_end: usize,
+    /// `let g = locked(...);` (block-scoped) vs a temporary
+    /// (statement-scoped).
+    pub bound: bool,
+    /// The argument expression, for diagnostics.
+    pub expr: String,
+}
+
+/// Index of the `;` ending the statement containing token `i` (at
+/// relative depth 0), or the close of the enclosing block, or `hi`.
+fn find_statement_end(code: &[Tok], mut i: usize, hi: usize) -> usize {
+    let mut depth = 0i32;
+    while i <= hi {
+        let Some(t) = code.get(i) else { break };
+        if t.is_punct('(') || t.is_punct('[') || t.is_punct('{') {
+            depth += 1;
+        } else if t.is_punct(')') || t.is_punct(']') || t.is_punct('}') {
+            depth -= 1;
+            if depth < 0 {
+                return i;
+            }
+        } else if t.is_punct(';') && depth == 0 {
+            return i;
+        }
+        i += 1;
+    }
+    hi
+}
+
+/// Index of the `}` closing the innermost block containing `start`,
+/// or `hi`.
+fn enclosing_block_end(code: &[Tok], start: usize, hi: usize) -> usize {
+    let mut depth = 0i32;
+    let mut j = start;
+    while j <= hi {
+        let Some(t) = code.get(j) else { break };
+        if t.is_punct('{') {
+            depth += 1;
+        } else if t.is_punct('}') {
+            if depth == 0 {
+                return j;
+            }
+            depth -= 1;
+        }
+        j += 1;
+    }
+    hi
+}
+
+/// Extract every `locked(...)` acquisition in `sym`'s body with its
+/// guard live-range.
+pub fn extract_locks(code: &[Tok], sym: &Sym) -> Vec<LockAcq> {
+    let (lo, hi) = sym.body;
+    let mut out = Vec::new();
+    let mut i = lo;
+    while i <= hi {
+        let hit = code.get(i).is_some_and(|t| t.is_ident("locked"))
+            && i + 1 <= hi
+            && code.get(i + 1).is_some_and(|t| t.is_punct('('));
+        if !hit {
+            i += 1;
+            continue;
+        }
+        // collect the argument expression to the matching ')'
+        let mut depth = 0i32;
+        let mut j = i + 1;
+        let mut arg: Vec<String> = Vec::new();
+        while j <= hi {
+            let Some(t) = code.get(j) else { break };
+            if t.is_punct('(') {
+                depth += 1;
+            } else if t.is_punct(')') {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            } else if depth >= 1 {
+                arg.push(t.text.clone());
+            }
+            j += 1;
+        }
+        let close = j;
+        let lock_id = arg
+            .iter()
+            .rev()
+            .find(|a| !matches!(a.as_str(), "&" | "mut" | "*" | "." | "self" | "(" | ")"))
+            .cloned()
+            .unwrap_or_else(|| arg.concat());
+        // bound guard: `= locked(...);` with a non-`_` binding
+        let mut bound = i >= 1
+            && code.get(i - 1).is_some_and(|t| t.is_punct('='))
+            && close + 1 <= hi
+            && code.get(close + 1).is_some_and(|t| t.is_punct(';'));
+        if bound && i >= 2 && code.get(i - 2).is_some_and(|t| t.is_ident("_")) {
+            bound = false;
+        }
+        let live_end = if bound {
+            enclosing_block_end(code, close + 2, hi)
+        } else {
+            find_statement_end(code, close + 1, hi)
+        };
+        out.push(LockAcq {
+            lock: lock_id,
+            acq_idx: i,
+            acq_line: code.get(i).map(|t| t.line).unwrap_or(0),
+            live_end,
+            bound,
+            expr: arg.concat(),
+        });
+        i = close + 1;
+    }
+    out
+}
+
+/// Transitive acquisition sets: for each function, the lock ids it (or
+/// anything it transitively calls through resolved edges) may acquire.
+fn compute_acq_sets(
+    locks: &BTreeMap<String, Vec<LockAcq>>,
+    edges: &BTreeMap<String, Vec<(String, u32)>>,
+) -> BTreeMap<String, BTreeSet<String>> {
+    let mut acq: BTreeMap<String, BTreeSet<String>> = locks
+        .iter()
+        .map(|(p, lks)| (p.clone(), lks.iter().map(|l| l.lock.clone()).collect()))
+        .collect();
+    loop {
+        let mut changed = false;
+        for (caller, outs) in edges {
+            for (callee, _) in outs {
+                let add: BTreeSet<String> = acq.get(callee).cloned().unwrap_or_default();
+                if add.is_empty() {
+                    continue;
+                }
+                let cur = acq.entry(caller.clone()).or_default();
+                let before = cur.len();
+                cur.extend(add);
+                if cur.len() != before {
+                    changed = true;
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    acq
+}
+
+fn via_suffix(via: Option<&String>) -> String {
+    via.map(|v| format!(" (via `{v}`)")).unwrap_or_default()
+}
+
+/// Run both lock rules over the whole graph.  Returns the findings
+/// (suppression already resolved through `covered`) and the observed
+/// acquisition-order table `(first, second, site count)` for the report.
+pub fn lock_findings(
+    all_syms: &BTreeMap<String, Sym>,
+    locks: &BTreeMap<String, Vec<LockAcq>>,
+    edges: &BTreeMap<String, Vec<(String, u32)>>,
+    serving_files: &BTreeSet<String>,
+    covered: &dyn Fn(&str, &str, u32) -> Option<String>,
+) -> (Vec<Finding>, Vec<(String, String, usize)>) {
+    let acq_sets = compute_acq_sets(locks, edges);
+    // (first, second) -> acquisition sites (file, line, via-callee)
+    #[allow(clippy::type_complexity)]
+    let mut order: BTreeMap<(String, String), Vec<(String, u32, Option<String>)>> = BTreeMap::new();
+    let mut findings: Vec<Finding> = Vec::new();
+
+    for (p, s) in all_syms {
+        let Some(lks) = locks.get(p) else { continue };
+        let serving = serving_files.contains(&s.file);
+        for (li, lk) in lks.iter().enumerate() {
+            // direct lexical nesting: another acquisition inside the
+            // guard's live range
+            for (lj, lk2) in lks.iter().enumerate() {
+                if li == lj {
+                    continue;
+                }
+                if lk.acq_idx < lk2.acq_idx && lk2.acq_idx <= lk.live_end {
+                    order
+                        .entry((lk.lock.clone(), lk2.lock.clone()))
+                        .or_default()
+                        .push((s.file.clone(), lk2.acq_line, None));
+                }
+            }
+            for rc in &s.raw_calls {
+                if !(lk.acq_idx < rc.idx && rc.idx <= lk.live_end) {
+                    continue;
+                }
+                let bare = rc.name.rsplit("::").next().unwrap_or("");
+                if serving && BLOCKING_NAMES.contains(&bare) {
+                    let reason = covered(LOCK_BLOCKING, &s.file, rc.line);
+                    findings.push(Finding {
+                        rule: LOCK_BLOCKING.to_string(),
+                        file: s.file.clone(),
+                        line: rc.line,
+                        message: format!(
+                            "`{bare}()` may block while lock '{}' (acquired at line {}) \
+                             is held in `{p}` — a stalled critical section stalls every \
+                             thread behind the lock",
+                            lk.lock, lk.acq_line
+                        ),
+                        suppressed: reason.is_some(),
+                        reason,
+                    });
+                }
+                // transitive acquisitions through resolved call edges at
+                // this call site
+                if let Some(outs) = edges.get(p) {
+                    for (callee, cl) in outs {
+                        if *cl != rc.line {
+                            continue;
+                        }
+                        for l2 in acq_sets.get(callee).into_iter().flatten() {
+                            if l2 != &lk.lock {
+                                order
+                                    .entry((lk.lock.clone(), l2.clone()))
+                                    .or_default()
+                                    .push((s.file.clone(), rc.line, Some(callee.clone())));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    let mut table: Vec<(String, String, usize)> = Vec::new();
+    for ((a, b), sites) in &order {
+        table.push((a.clone(), b.clone(), sites.len()));
+        if a >= b {
+            continue;
+        }
+        let Some(rev_sites) = order.get(&(b.clone(), a.clone())) else {
+            continue;
+        };
+        let Some(site) = sites.first() else { continue };
+        let rev_desc = rev_sites
+            .first()
+            .map(|r| format!("{}:{}{}", r.0, r.1, via_suffix(r.2.as_ref())))
+            .unwrap_or_else(|| "?".to_string());
+        let reason = covered(LOCK_ORDER, &site.0, site.1);
+        findings.push(Finding {
+            rule: LOCK_ORDER.to_string(),
+            file: site.0.clone(),
+            line: site.1,
+            message: format!(
+                "inconsistent lock order: '{a}' then '{b}' at {}:{}{}, but '{b}' then \
+                 '{a}' at {} — these paths can deadlock",
+                site.0,
+                site.1,
+                via_suffix(site.2.as_ref()),
+                rev_desc
+            ),
+            suppressed: reason.is_some(),
+            reason,
+        });
+    }
+    (findings, table)
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::indexing_slicing)]
+mod tests {
+    use super::super::lexer::{code_tokens, tokenize};
+    use super::super::symbols::extract_symbols;
+    use super::*;
+
+    fn locks_of(src: &str) -> Vec<LockAcq> {
+        let code = code_tokens(&tokenize(src));
+        let (syms, _) = extract_symbols("src/m.rs", &code);
+        assert_eq!(syms.len(), 1, "{syms:?}");
+        extract_locks(&code, &syms[0])
+    }
+
+    #[test]
+    fn bound_guard_lives_to_block_end() {
+        let src = "fn f(s: &S) -> u32 { let g = locked(&s.state); g.count += 1; g.count }";
+        let lks = locks_of(src);
+        assert_eq!(lks.len(), 1);
+        assert!(lks[0].bound);
+        assert_eq!(lks[0].lock, "state");
+        // lives to the fn's closing brace
+        let code = code_tokens(&tokenize(src));
+        assert!(code[lks[0].live_end].is_punct('}'));
+    }
+
+    #[test]
+    fn temp_guard_lives_to_statement_end() {
+        let src = "fn f(s: &S) { locked(&s.state).count += 1; let x = 7; let _ = x; }";
+        let lks = locks_of(src);
+        assert_eq!(lks.len(), 1);
+        assert!(!lks[0].bound);
+        let code = code_tokens(&tokenize(src));
+        assert!(code[lks[0].live_end].is_punct(';'));
+        // the next statement is outside the live range
+        let seven = code.iter().position(|t| t.text == "7").unwrap();
+        assert!(seven > lks[0].live_end);
+    }
+
+    #[test]
+    fn underscore_binding_treated_as_temp() {
+        // `let _ = locked(..)` drops the guard immediately; treat as temp
+        let src = "fn f(s: &S) { let _ = locked(&s.state); let y = 2; let _ = y; }";
+        let lks = locks_of(src);
+        assert_eq!(lks.len(), 1);
+        assert!(!lks[0].bound);
+    }
+
+    #[test]
+    fn lock_id_is_last_field_segment() {
+        let src = "fn f(s: &S, i: usize) { let g = locked(&s.shards.queue); let _x = g; }";
+        let lks = locks_of(src);
+        assert_eq!(lks[0].lock, "queue");
+    }
+
+    #[test]
+    fn inconsistent_nesting_order_is_flagged() {
+        let ab = "fn ab(s: &S) { let g = locked(&s.alpha); let h = locked(&s.beta); \
+                  let _ = (g, h); }";
+        let ba = "fn ba(s: &S) { let g = locked(&s.beta); let h = locked(&s.alpha); \
+                  let _ = (g, h); }";
+        let mut all_syms = BTreeMap::new();
+        let mut locks = BTreeMap::new();
+        for (rel, src) in [("src/runtime/a.rs", ab), ("src/runtime/b.rs", ba)] {
+            let code = code_tokens(&tokenize(src));
+            let (syms, _) = extract_symbols(rel, &code);
+            for s in syms {
+                locks.insert(s.path.clone(), extract_locks(&code, &s));
+                all_syms.insert(s.path.clone(), s);
+            }
+        }
+        let edges = BTreeMap::new();
+        let serving: BTreeSet<String> =
+            ["src/runtime/a.rs", "src/runtime/b.rs"].iter().map(|s| s.to_string()).collect();
+        let none = |_: &str, _: &str, _: u32| None;
+        let (findings, table) = lock_findings(&all_syms, &locks, &edges, &serving, &none);
+        assert!(findings.iter().any(|f| f.rule == LOCK_ORDER
+            && f.message.contains("'alpha'")
+            && f.message.contains("'beta'")), "{findings:?}");
+        assert!(table.iter().any(|(a, b, _)| a == "alpha" && b == "beta"));
+        assert!(table.iter().any(|(a, b, _)| a == "beta" && b == "alpha"));
+    }
+
+    #[test]
+    fn blocking_call_in_live_range_flagged_in_serving_scope_only() {
+        let src = "fn f(s: &S, tx: &Sender<u32>) { let g = locked(&s.state); \
+                   tx.send(1); let _ = g; }";
+        let code = code_tokens(&tokenize(src));
+        let (syms, _) = extract_symbols("src/runtime/w.rs", &code);
+        let mut all_syms = BTreeMap::new();
+        let mut locks = BTreeMap::new();
+        for mut s in syms {
+            super::super::symbols::analyze_bodies(&code, std::slice::from_mut(&mut s), true);
+            locks.insert(s.path.clone(), extract_locks(&code, &s));
+            all_syms.insert(s.path.clone(), s);
+        }
+        let edges = BTreeMap::new();
+        let none = |_: &str, _: &str, _: u32| None;
+        let serving: BTreeSet<String> = ["src/runtime/w.rs".to_string()].into_iter().collect();
+        let (findings, _) = lock_findings(&all_syms, &locks, &edges, &serving, &none);
+        assert!(findings.iter().any(|f| f.rule == LOCK_BLOCKING && f.message.contains("send")),
+            "{findings:?}");
+        // same file treated as non-serving: no finding
+        let not_serving = BTreeSet::new();
+        let (findings, _) = lock_findings(&all_syms, &locks, &edges, &not_serving, &none);
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+}

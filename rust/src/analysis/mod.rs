@@ -11,7 +11,12 @@
 //!   `runtime/`, `generator/dist/`) must not panic: no
 //!   `unwrap`/`expect`/`panic!`/direct indexing;
 //! * **wire hygiene** — every struct with a codec in `dist/wire.rs`
-//!   carries the schema tag and full encode/decode field coverage.
+//!   carries the schema tag and full encode/decode field coverage;
+//! * **interprocedural** (`symbols`/`callgraph`/`lock`) — a crate-wide
+//!   call graph propagates may-panic facts to serving entries
+//!   (`panic-reach`), and lexical lock live-ranges catch inconsistent
+//!   nesting (`lock-order`) and blocking calls under a held guard
+//!   (`lock-blocking`).
 //!
 //! A finding is suppressed only by an inline pragma carrying a written
 //! reason: `// lint: allow(<rule>) — <reason>`.  The pass walks
@@ -20,9 +25,12 @@
 //! unsuppressed finding — wired as both a CI step and a tier-1
 //! integration test (`tests/integration_lint.rs`).
 
+pub mod callgraph;
 pub mod classify;
 pub mod lexer;
+pub mod lock;
 pub mod rules;
+pub mod symbols;
 pub mod wire;
 
 use anyhow::{anyhow, Context, Result};
@@ -49,6 +57,8 @@ pub struct LintOutcome {
     /// Total `lint: allow(...)` pragmas in the tree (the suppression
     /// inventory a meta-test pins).
     pub allow_count: usize,
+    /// Call-graph statistics from the interprocedural pass.
+    pub graph: callgraph::GraphSummary,
 }
 
 impl LintOutcome {
@@ -107,6 +117,21 @@ pub fn lint_files(files: &[SourceFile]) -> LintOutcome {
         allow_count += p.pragmas.allows.len();
         findings.extend(file_findings);
     }
+
+    // interprocedural pass — cut-based suppression is resolved inside,
+    // so these findings skip apply_suppressions
+    let ctxs: Vec<callgraph::FileCtx> = prepared
+        .iter()
+        .map(|p| callgraph::FileCtx {
+            rel: &p.rel,
+            code: &p.code,
+            scope: p.scope,
+            allows: &p.pragmas.allows,
+        })
+        .collect();
+    let (graph_findings, graph) = callgraph::graph_pass(&ctxs);
+    findings.extend(graph_findings);
+
     findings.sort_by(|a, b| {
         let ka = (a.file.as_str(), a.line, a.rule.as_str());
         ka.cmp(&(b.file.as_str(), b.line, b.rule.as_str()))
@@ -116,6 +141,7 @@ pub fn lint_files(files: &[SourceFile]) -> LintOutcome {
         findings,
         files_scanned: prepared.len(),
         allow_count,
+        graph,
     }
 }
 
@@ -210,6 +236,40 @@ pub fn report_json(o: &LintOutcome) -> Json {
                     .collect(),
             ),
         ),
+        ("graph", graph_json(&o.graph)),
+    ])
+}
+
+/// The `graph` report section: call-graph statistics, the serving panic
+/// frontier, and the observed lock-acquisition order.
+pub fn graph_json(g: &callgraph::GraphSummary) -> Json {
+    Json::obj(vec![
+        ("symbols", Json::Num(g.symbols as f64)),
+        ("edges", Json::Num(g.edges as f64)),
+        ("method_edges", Json::Num(g.method_edges as f64)),
+        ("unresolved_calls", Json::Num(g.unresolved_calls as f64)),
+        ("base_panic_fns", Json::Num(g.base_panic_fns as f64)),
+        ("may_panic_fns", Json::Num(g.may_panic_fns as f64)),
+        ("serving_entries", Json::Num(g.serving_entries as f64)),
+        (
+            "panic_frontier",
+            Json::Arr(g.panic_frontier.iter().map(|p| Json::Str(p.clone())).collect()),
+        ),
+        (
+            "lock_order",
+            Json::Arr(
+                g.lock_order
+                    .iter()
+                    .map(|(a, b, n)| {
+                        Json::obj(vec![
+                            ("first", Json::Str(a.clone())),
+                            ("second", Json::Str(b.clone())),
+                            ("sites", Json::Num(*n as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
     ])
 }
 
@@ -277,6 +337,34 @@ mod tests {
         assert_eq!(
             arr[0].get("rule").and_then(|r| r.as_str()),
             Some(rules::PANIC_UNWRAP)
+        );
+    }
+
+    #[test]
+    fn graph_section_reports_cross_file_panic_reach() {
+        let helper = file(
+            "src/util/helper.rs",
+            "pub fn boom(o: Option<u32>) -> u32 { o.unwrap() }",
+        );
+        let entry = file(
+            "src/coordinator/entry.rs",
+            "use crate::util::helper::boom;\npub fn serve(o: Option<u32>) -> u32 { boom(o) }",
+        );
+        let out = lint_files(&[entry, helper]);
+        assert!(
+            out.findings
+                .iter()
+                .any(|f| f.rule == rules::PANIC_REACH && !f.suppressed),
+            "{:?}",
+            out.findings
+        );
+        assert_eq!(out.graph.panic_frontier, vec!["coordinator::entry::serve"]);
+        let j = report_json(&out);
+        let g = j.get("graph").unwrap();
+        assert_eq!(g.get("edges").and_then(|n| n.as_usize()), Some(1));
+        assert_eq!(
+            g.get("panic_frontier").and_then(|a| a.as_arr()).map(Vec::len),
+            Some(1)
         );
     }
 

@@ -37,6 +37,9 @@ pub const PANIC_SLICE_INDEX: &str = "panic-slice-index";
 pub const WIRE_SCHEMA_TAG: &str = "wire-schema-tag";
 pub const WIRE_FIELD_COVERAGE: &str = "wire-field-coverage";
 pub const WIRE_KEY_PARITY: &str = "wire-key-parity";
+pub const PANIC_REACH: &str = "panic-reach";
+pub const LOCK_ORDER: &str = "lock-order";
+pub const LOCK_BLOCKING: &str = "lock-blocking";
 pub const PRAGMA_MISSING_REASON: &str = "pragma-missing-reason";
 pub const PRAGMA_UNKNOWN_RULE: &str = "pragma-unknown-rule";
 
@@ -54,6 +57,9 @@ pub const KNOWN_RULES: &[&str] = &[
     WIRE_SCHEMA_TAG,
     WIRE_FIELD_COVERAGE,
     WIRE_KEY_PARITY,
+    PANIC_REACH,
+    LOCK_ORDER,
+    LOCK_BLOCKING,
     PRAGMA_MISSING_REASON,
     PRAGMA_UNKNOWN_RULE,
 ];
@@ -198,8 +204,9 @@ fn directive_arg<'a>(rest: &'a str, name: &str) -> Option<(&'a str, &'a str)> {
 }
 
 /// Keywords that may directly precede `[` without it being an index
-/// expression (slice patterns, array types after `->`, …).
-const KEYWORDS: &[&str] = &[
+/// expression (slice patterns, array types after `->`, …).  Also the
+/// not-a-type / not-a-callee filter for the symbol extractor.
+pub const KEYWORDS: &[&str] = &[
     "as", "async", "await", "box", "break", "const", "continue", "crate", "dyn", "else", "enum",
     "extern", "fn", "for", "if", "impl", "in", "let", "loop", "match", "mod", "move", "mut",
     "pub", "ref", "return", "static", "struct", "super", "trait", "type", "unsafe", "use",

@@ -1,0 +1,566 @@
+//! Function-item extraction for the interprocedural rules.
+//!
+//! Walks a file's code-token stream as a recursive item parse — `mod`
+//! blocks push module segments, `impl`/`trait` blocks record the
+//! self-type, `fn` items record their crate path, declaration line, and
+//! body token range — without recursing into function bodies (nested
+//! closures and items stay attributed to the enclosing `fn`, which is
+//! exactly the granularity the call graph wants).
+//!
+//! Two deliberate conservatisms (see DESIGN.md §Interprocedural
+//! analysis):
+//!
+//! * `macro_rules!` bodies are *not* turned into symbols (a macro's `fn`
+//!   skeleton is not a callable item), but every `fn NAME` inside one is
+//!   harvested into the `macro_fns` set so macro-generated method names
+//!   stay ambiguous during method resolution;
+//! * `#[cfg(test)] mod` bodies are parsed but their symbols carry
+//!   `is_test` — test-only functions neither seed panic facts nor serve
+//!   as reachability entries.
+
+use super::lexer::{Tok, TokKind};
+use super::rules::{test_ranges, KEYWORDS};
+use std::collections::BTreeSet;
+
+/// How a call site names its target.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CallKind {
+    /// `.name(` — receiver type unknown; resolved only when `name` is
+    /// unique crate-wide among impl methods.
+    Method,
+    /// Bare `name(` — same-module, impl-type, use-map, then crate root.
+    Free,
+    /// `a::b::name(` — resolved through the use map / path prefixes.
+    Path,
+}
+
+/// One call site inside a function body.
+#[derive(Debug, Clone)]
+pub struct RawCall {
+    pub kind: CallKind,
+    /// `::`-joined path as written (single segment for method/free).
+    pub name: String,
+    pub line: u32,
+    /// Code-token index of the callee name token.
+    pub idx: usize,
+}
+
+/// One may-panic site inside a function body (non-serving files only —
+/// serving files are kept panic-free by the per-file token rules).
+#[derive(Debug, Clone)]
+pub struct PanicSite {
+    /// What panics: `.unwrap()`, `panic!`, `slice index`, …
+    pub what: String,
+    pub line: u32,
+}
+
+/// One extracted function item.
+#[derive(Debug, Clone)]
+pub struct Sym {
+    /// Crate path, e.g. `coordinator::server::Coordinator::submit`.
+    pub path: String,
+    pub name: String,
+    /// Enclosing `impl`/`trait` self-type, when any.
+    pub impl_ty: Option<String>,
+    /// Crate-relative file, e.g. `src/coordinator/server.rs`.
+    pub file: String,
+    pub decl_line: u32,
+    /// Code-token index range (inclusive) of the `{ … }` body.
+    pub body: (usize, usize),
+    /// Lives inside a `#[cfg(test)] mod` body.
+    pub is_test: bool,
+    pub raw_calls: Vec<RawCall>,
+    pub panic_sites: Vec<PanicSite>,
+}
+
+/// Module path of a crate-relative `.rs` file: `src/lib.rs` → ``,
+/// `src/main.rs` → `main`, `src/x/mod.rs` → `x`, `src/x/y.rs` → `x::y`.
+/// Non-`src/` files have no module path (their items are not symbols).
+pub fn module_path_of(rel: &str) -> Option<Vec<String>> {
+    let p = rel.replace('\\', "/");
+    let p = p.strip_prefix("src/")?;
+    if p == "lib.rs" {
+        return Some(Vec::new());
+    }
+    if p == "main.rs" {
+        return Some(vec!["main".to_string()]);
+    }
+    let stem = p.strip_suffix("/mod.rs").or_else(|| p.strip_suffix(".rs"))?;
+    Some(stem.split('/').map(str::to_string).collect())
+}
+
+/// From `code[i] == '<'`, return the index past the matching `>` —
+/// treating `->`'s `>` as an arrow, not a closer — or bail at `{` / `;`
+/// (malformed or odd generics).
+fn skip_angles(code: &[Tok], mut i: usize) -> usize {
+    let n = code.len();
+    let mut depth = 0i32;
+    while i < n {
+        let Some(t) = code.get(i) else { break };
+        if t.is_punct('<') {
+            depth += 1;
+        } else if t.is_punct('>') {
+            let arrow = i >= 1 && code.get(i - 1).is_some_and(|p| p.is_punct('-'));
+            if !arrow {
+                depth -= 1;
+                if depth == 0 {
+                    return i + 1;
+                }
+            }
+        } else if t.is_punct('{') || t.is_punct(';') {
+            return i;
+        }
+        i += 1;
+    }
+    i
+}
+
+/// Index of the `}` matching the `{` at `open_idx`, bounded by `hi`.
+fn match_brace(code: &[Tok], open_idx: usize, hi: usize) -> usize {
+    let mut depth = 0i32;
+    let mut k = open_idx;
+    while k < hi {
+        let Some(t) = code.get(k) else { break };
+        if t.is_punct('{') {
+            depth += 1;
+        } else if t.is_punct('}') {
+            depth -= 1;
+            if depth == 0 {
+                return k;
+            }
+        }
+        k += 1;
+    }
+    hi.saturating_sub(1)
+}
+
+fn tok_at(code: &[Tok], i: usize) -> Option<&Tok> {
+    code.get(i)
+}
+
+fn is_ident_at(code: &[Tok], i: usize) -> bool {
+    tok_at(code, i).is_some_and(|t| t.kind == TokKind::Ident)
+}
+
+/// Extract every `fn` item in a src file, plus the set of `fn` names
+/// that appear inside `macro_rules!` bodies (kept ambiguous during
+/// method resolution).
+pub fn extract_symbols(rel: &str, code: &[Tok]) -> (Vec<Sym>, BTreeSet<String>) {
+    let Some(mp) = module_path_of(rel) else {
+        return (Vec::new(), BTreeSet::new());
+    };
+    let tranges = test_ranges(code);
+    let in_test = |idx: usize| tranges.iter().any(|&(a, b)| idx >= a && idx <= b);
+    let mut syms: Vec<Sym> = Vec::new();
+    let mut macro_fns: BTreeSet<String> = BTreeSet::new();
+    let n = code.len();
+
+    // explicit work stack instead of recursion: (lo, hi, mod_parts, impl_ty)
+    // processed as nested segments of the linear token stream
+    struct Frame {
+        lo: usize,
+        hi: usize,
+        mod_parts: Vec<String>,
+        impl_ty: Option<String>,
+    }
+    let mut stack = vec![Frame {
+        lo: 0,
+        hi: n,
+        mod_parts: mp,
+        impl_ty: None,
+    }];
+
+    while let Some(frame) = stack.pop() {
+        let Frame {
+            lo,
+            hi,
+            mod_parts,
+            impl_ty,
+        } = frame;
+        let mut i = lo;
+        while i < hi {
+            let Some(t) = tok_at(code, i) else { break };
+
+            if t.is_ident("macro_rules")
+                && tok_at(code, i + 1).is_some_and(|t| t.is_punct('!'))
+            {
+                let mut j = i + 2;
+                while j < hi && !tok_at(code, j).is_some_and(|t| t.is_punct('{')) {
+                    j += 1;
+                }
+                if j < hi {
+                    let close = match_brace(code, j, hi);
+                    for k in j..close {
+                        if tok_at(code, k).is_some_and(|t| t.is_ident("fn"))
+                            && k + 1 < close
+                            && is_ident_at(code, k + 1)
+                        {
+                            if let Some(nm) = tok_at(code, k + 1) {
+                                macro_fns.insert(nm.text.clone());
+                            }
+                        }
+                    }
+                    i = close + 1;
+                } else {
+                    i = j;
+                }
+                continue;
+            }
+
+            if t.is_ident("mod") && is_ident_at(code, i + 1) {
+                let name = tok_at(code, i + 1).map(|t| t.text.clone()).unwrap_or_default();
+                let mut j = i + 2;
+                while j < hi
+                    && !tok_at(code, j).is_some_and(|t| t.is_punct('{') || t.is_punct(';'))
+                {
+                    j += 1;
+                }
+                if j < hi && tok_at(code, j).is_some_and(|t| t.is_punct('{')) {
+                    let close = match_brace(code, j, hi);
+                    let mut parts = mod_parts.clone();
+                    parts.push(name);
+                    stack.push(Frame {
+                        lo: j + 1,
+                        hi: close,
+                        mod_parts: parts,
+                        impl_ty: None,
+                    });
+                    i = close + 1;
+                } else {
+                    i = j + 1;
+                }
+                continue;
+            }
+
+            if t.is_ident("impl") || t.is_ident("trait") {
+                let is_trait = t.is_ident("trait");
+                let mut j = i + 1;
+                if tok_at(code, j).is_some_and(|t| t.is_punct('<')) {
+                    j = skip_angles(code, j);
+                }
+                let mut ty: Option<String> = None;
+                while j < hi {
+                    let Some(tk) = tok_at(code, j) else { break };
+                    if tk.is_punct('{') || tk.is_punct(';') {
+                        break;
+                    }
+                    if tk.is_ident("for") && !is_trait {
+                        // `impl Trait for Type` — the self type follows
+                        ty = None;
+                        j += 1;
+                        continue;
+                    }
+                    if tk.is_ident("where") {
+                        while j < hi && !tok_at(code, j).is_some_and(|t| t.is_punct('{')) {
+                            j += 1;
+                        }
+                        break;
+                    }
+                    if tk.kind == TokKind::Ident && !KEYWORDS.contains(&tk.text.as_str()) {
+                        ty = Some(tk.text.clone());
+                    }
+                    if tk.is_punct('<') {
+                        j = skip_angles(code, j);
+                        continue;
+                    }
+                    j += 1;
+                }
+                if j < hi && tok_at(code, j).is_some_and(|t| t.is_punct('{')) {
+                    let close = match_brace(code, j, hi);
+                    stack.push(Frame {
+                        lo: j + 1,
+                        hi: close,
+                        mod_parts: mod_parts.clone(),
+                        impl_ty: ty,
+                    });
+                    i = close + 1;
+                } else {
+                    i = j + 1;
+                }
+                continue;
+            }
+
+            if t.is_ident("fn") && is_ident_at(code, i + 1) {
+                let name = tok_at(code, i + 1).map(|t| t.text.clone()).unwrap_or_default();
+                let decl_line = t.line;
+                // scan the signature to the body `{` at paren/bracket
+                // depth 0, or `;` (no body: trait method, extern)
+                let mut j = i + 2;
+                let mut depth = 0i32;
+                let mut body: Option<(usize, usize)> = None;
+                while j < hi {
+                    let Some(tk) = tok_at(code, j) else { break };
+                    if tk.is_punct('(') || tk.is_punct('[') {
+                        depth += 1;
+                    } else if tk.is_punct(')') || tk.is_punct(']') {
+                        depth -= 1;
+                    } else if depth == 0 && tk.is_punct('{') {
+                        body = Some((j, match_brace(code, j, hi)));
+                        break;
+                    } else if depth == 0 && tk.is_punct(';') {
+                        break;
+                    }
+                    j += 1;
+                }
+                let Some(body) = body else {
+                    i = j + 1;
+                    continue;
+                };
+                let mut parts = mod_parts.clone();
+                if let Some(ty) = &impl_ty {
+                    parts.push(ty.clone());
+                }
+                parts.push(name.clone());
+                syms.push(Sym {
+                    path: parts.join("::"),
+                    name,
+                    impl_ty: impl_ty.clone(),
+                    file: rel.to_string(),
+                    decl_line,
+                    body,
+                    is_test: in_test(body.0),
+                    raw_calls: Vec::new(),
+                    panic_sites: Vec::new(),
+                });
+                i = body.1 + 1;
+                continue;
+            }
+
+            i += 1;
+        }
+    }
+
+    syms.sort_by(|a, b| a.body.0.cmp(&b.body.0));
+    (syms, macro_fns)
+}
+
+/// From the call-name ident at `code[i]`, walk back over a
+/// `seg:: seg::` prefix; returns the full segment list.
+fn walk_path_back(code: &[Tok], i: usize) -> Vec<String> {
+    let mut segs = vec![code.get(i).map(|t| t.text.clone()).unwrap_or_default()];
+    let mut j = i;
+    while j >= 3
+        && code.get(j - 1).is_some_and(|t| t.is_punct(':'))
+        && code.get(j - 2).is_some_and(|t| t.is_punct(':'))
+        && is_ident_at(code, j - 3)
+    {
+        if let Some(t) = code.get(j - 3) {
+            segs.insert(0, t.text.clone());
+        }
+        j -= 3;
+    }
+    segs
+}
+
+const PANIC_MACRO_NAMES: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+/// Fill each symbol's `raw_calls`, and — in non-serving src files —
+/// its `panic_sites` (serving files are kept panic-free by the token
+/// rules, so they contribute no base facts; asserts are deliberately
+/// excluded everywhere — an assert is a contract check, not a latent
+/// panic).
+pub fn analyze_bodies(code: &[Tok], syms: &mut [Sym], serving: bool) {
+    for sym in syms.iter_mut() {
+        // test-only fns never seed panic facts (they are allowed to
+        // unwrap) but their call edges are still recorded
+        let quiet = serving || sym.is_test;
+        let (lo, hi) = sym.body;
+        let mut i = lo;
+        while i <= hi {
+            let Some(t) = tok_at(code, i) else { break };
+
+            // method call: `. name (`
+            if t.is_punct('.')
+                && i + 2 <= hi
+                && is_ident_at(code, i + 1)
+                && tok_at(code, i + 2).is_some_and(|t| t.is_punct('('))
+            {
+                if let Some(nm) = tok_at(code, i + 1) {
+                    sym.raw_calls.push(RawCall {
+                        kind: CallKind::Method,
+                        name: nm.text.clone(),
+                        line: nm.line,
+                        idx: i + 1,
+                    });
+                    if !quiet && (nm.text == "unwrap" || nm.text == "expect") {
+                        sym.panic_sites.push(PanicSite {
+                            what: format!(".{}()", nm.text),
+                            line: nm.line,
+                        });
+                    }
+                }
+                i += 2;
+                continue;
+            }
+
+            // free/path call: `name (` where the previous token is not
+            // `.` (method) or `fn` (declaration)
+            if t.kind == TokKind::Ident
+                && !KEYWORDS.contains(&t.text.as_str())
+                && i + 1 <= hi
+                && tok_at(code, i + 1).is_some_and(|t| t.is_punct('('))
+            {
+                let prev_ok = i == 0
+                    || !tok_at(code, i - 1)
+                        .is_some_and(|p| p.is_punct('.') || p.is_ident("fn"));
+                if prev_ok {
+                    let segs = walk_path_back(code, i);
+                    let kind = if segs.len() > 1 {
+                        CallKind::Path
+                    } else {
+                        CallKind::Free
+                    };
+                    sym.raw_calls.push(RawCall {
+                        kind,
+                        name: segs.join("::"),
+                        line: t.line,
+                        idx: i,
+                    });
+                }
+            }
+
+            // panic macros
+            if t.kind == TokKind::Ident
+                && PANIC_MACRO_NAMES.contains(&t.text.as_str())
+                && i + 1 <= hi
+                && tok_at(code, i + 1).is_some_and(|t| t.is_punct('!'))
+                && !quiet
+            {
+                sym.panic_sites.push(PanicSite {
+                    what: format!("{}!", t.text),
+                    line: t.line,
+                });
+            }
+
+            // indexing: `expr [` — same prev-token test as the per-file
+            // panic-slice-index rule
+            if t.is_punct('[') && i >= 1 && !quiet {
+                if let Some(prev) = tok_at(code, i - 1) {
+                    let indexes = match prev.kind {
+                        TokKind::Ident => !KEYWORDS.contains(&prev.text.as_str()),
+                        TokKind::Punct => prev.is_punct(')') || prev.is_punct(']'),
+                        _ => false,
+                    };
+                    if indexes {
+                        sym.panic_sites.push(PanicSite {
+                            what: "slice index".to_string(),
+                            line: t.line,
+                        });
+                    }
+                }
+            }
+
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::indexing_slicing)]
+mod tests {
+    use super::super::lexer::{code_tokens, tokenize};
+    use super::*;
+
+    fn syms_of(rel: &str, src: &str) -> Vec<Sym> {
+        let code = code_tokens(&tokenize(src));
+        extract_symbols(rel, &code).0
+    }
+
+    #[test]
+    fn module_paths() {
+        assert_eq!(module_path_of("src/lib.rs"), Some(vec![]));
+        assert_eq!(module_path_of("src/main.rs"), Some(vec!["main".into()]));
+        assert_eq!(module_path_of("src/x/mod.rs"), Some(vec!["x".into()]));
+        assert_eq!(
+            module_path_of("src/x/y.rs"),
+            Some(vec!["x".into(), "y".into()])
+        );
+        assert_eq!(module_path_of("tests/t.rs"), None);
+    }
+
+    #[test]
+    fn free_impl_and_nested_mod_paths() {
+        let src = "pub fn top() {}\n\
+                   impl Widget { fn m(&self) {} }\n\
+                   impl Display for Widget { fn fmt(&self) {} }\n\
+                   mod inner { pub fn deep() {} }\n";
+        let s = syms_of("src/a/b.rs", src);
+        let paths: Vec<&str> = s.iter().map(|s| s.path.as_str()).collect();
+        assert!(paths.contains(&"a::b::top"), "{paths:?}");
+        assert!(paths.contains(&"a::b::Widget::m"), "{paths:?}");
+        assert!(paths.contains(&"a::b::Widget::fmt"), "{paths:?}");
+        assert!(paths.contains(&"a::b::inner::deep"), "{paths:?}");
+    }
+
+    #[test]
+    fn generic_impl_and_arrow_in_signature() {
+        let src = "impl<T: Iterator<Item = u8>> Holder<T> {\n\
+                   fn get(&self) -> Option<&T> { None }\n}";
+        let s = syms_of("src/m.rs", src);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].path, "m::Holder::get");
+    }
+
+    #[test]
+    fn bodies_not_recursed_and_sigless_fns_skipped() {
+        let src = "trait T { fn sig_only(&self); }\n\
+                   fn outer() { let f = |x: u32| x + 1; fn inner_decl() {} }\n";
+        let s = syms_of("src/m.rs", src);
+        let paths: Vec<&str> = s.iter().map(|s| s.path.as_str()).collect();
+        // sig-only trait method has no body; inner_decl is swallowed by
+        // outer's body range (no recursion into fn bodies)
+        assert_eq!(paths, vec!["m::outer"], "{paths:?}");
+    }
+
+    #[test]
+    fn macro_rules_fns_harvested_not_symbolised() {
+        let src = "macro_rules! gen { () => { pub fn value(&self) -> f64 { self.0 } }; }\n\
+                   pub fn real() {}\n";
+        let code = code_tokens(&tokenize(src));
+        let (s, mfns) = extract_symbols("src/m.rs", &code);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].path, "m::real");
+        assert!(mfns.contains("value"));
+    }
+
+    #[test]
+    fn cfg_test_symbols_marked() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests { fn helper() {} }\n";
+        let s = syms_of("src/m.rs", src);
+        let t: Vec<(&str, bool)> = s.iter().map(|s| (s.name.as_str(), s.is_test)).collect();
+        assert!(t.contains(&("live", false)), "{t:?}");
+        assert!(t.contains(&("helper", true)), "{t:?}");
+    }
+
+    #[test]
+    fn calls_and_panic_sites_extracted() {
+        let src = "fn f(o: Option<u32>, v: &[u32]) -> u32 {\n\
+                   helper();\n\
+                   crate::util::go(1);\n\
+                   o.map(|x| x).unwrap() + v[0]\n}";
+        let code = code_tokens(&tokenize(src));
+        let (mut s, _) = extract_symbols("src/m.rs", &code);
+        analyze_bodies(&code, &mut s, false);
+        let calls: Vec<(&CallKind, &str)> = s[0]
+            .raw_calls
+            .iter()
+            .map(|c| (&c.kind, c.name.as_str()))
+            .collect();
+        assert!(calls.contains(&(&CallKind::Free, "helper")), "{calls:?}");
+        assert!(calls.contains(&(&CallKind::Path, "crate::util::go")), "{calls:?}");
+        assert!(calls.contains(&(&CallKind::Method, "unwrap")), "{calls:?}");
+        let sites: Vec<&str> = s[0].panic_sites.iter().map(|p| p.what.as_str()).collect();
+        assert!(sites.contains(&".unwrap()"), "{sites:?}");
+        assert!(sites.contains(&"slice index"), "{sites:?}");
+    }
+
+    #[test]
+    fn serving_files_contribute_no_base_facts() {
+        let src = "fn f(o: Option<u32>) -> u32 { o.unwrap() }";
+        let code = code_tokens(&tokenize(src));
+        let (mut s, _) = extract_symbols("src/coordinator/x.rs", &code);
+        analyze_bodies(&code, &mut s, true);
+        assert!(s[0].panic_sites.is_empty());
+        assert!(!s[0].raw_calls.is_empty());
+    }
+}

@@ -446,15 +446,19 @@ impl Coordinator {
                 }
             };
             let (ack_tx, ack_rx) = channel();
-            if tx
-                .send(ShardMsg::Swap(SwapMsg {
-                    engine: shard_engine,
-                    ack: ack_tx,
-                }))
-                .is_err()
-            {
+            let msg = ShardMsg::Swap(SwapMsg {
+                engine: shard_engine,
+                ack: ack_tx,
+            });
+            // lint: allow(lock-blocking) — the swap IS the drain barrier: holding
+            // swap_lock across the shard hand-off is the serialization this fn exists
+            // to provide, and submit/shutdown never take swap_lock
+            if tx.send(msg).is_err() {
                 failed.push((shard_id, "shard queue disconnected".to_string()));
             } else {
+                // lint: allow(lock-blocking) — bounded wait: the ack arrives once the
+                // in-flight batch drains, and a dead worker closes the channel, which
+                // returns Err here instead of blocking forever
                 match ack_rx.recv() {
                     Ok(Ok(())) => {}
                     Ok(Err(e)) => failed.push((shard_id, e)),

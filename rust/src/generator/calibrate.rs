@@ -92,26 +92,26 @@ impl ModelScales {
     /// consensus correction (weights are each shard's replayed-finalist
     /// count).  Zero total weight falls back to the identity.
     pub fn weighted_mean(fits: &[(ModelScales, f64)]) -> ModelScales {
-        let mut acc = [0.0f64; 4];
+        let (mut busy, mut idle, mut off, mut cold) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
         let mut total = 0.0f64;
         for (s, w) in fits {
             if !w.is_finite() || *w <= 0.0 {
                 continue;
             }
-            acc[0] += s.busy * w;
-            acc[1] += s.idle * w;
-            acc[2] += s.off * w;
-            acc[3] += s.cold * w;
+            busy += s.busy * w;
+            idle += s.idle * w;
+            off += s.off * w;
+            cold += s.cold * w;
             total += w;
         }
         if total <= 0.0 {
             return ModelScales::identity();
         }
         ModelScales {
-            busy: acc[0] / total,
-            idle: acc[1] / total,
-            off: acc[2] / total,
-            cold: acc[3] / total,
+            busy: busy / total,
+            idle: idle / total,
+            off: off / total,
+            cold: cold / total,
         }
     }
 }
@@ -189,17 +189,22 @@ pub fn fit(spec: &AppSpec, replays: &[Replay]) -> ModelScales {
             (p.off, a.off),
             (p.cold, a.cold),
         ];
-        for (k, (pv, av)) in pairs.into_iter().enumerate() {
-            num[k] += pv.value() * av.value();
-            den[k] += pv.value() * pv.value();
+        for ((pv, av), (nk, dk)) in pairs
+            .into_iter()
+            .zip(num.iter_mut().zip(den.iter_mut()))
+        {
+            *nk += pv.value() * av.value();
+            *dk += pv.value() * pv.value();
         }
     }
-    let theta = |k: usize| if den[k] > 1e-30 { num[k] / den[k] } else { 1.0 };
+    let theta = |n: f64, d: f64| if d > 1e-30 { n / d } else { 1.0 };
+    let [n0, n1, n2, n3] = num;
+    let [d0, d1, d2, d3] = den;
     ModelScales {
-        busy: theta(0),
-        idle: theta(1),
-        off: theta(2),
-        cold: theta(3),
+        busy: theta(n0, d0),
+        idle: theta(n1, d1),
+        off: theta(n2, d2),
+        cold: theta(n3, d3),
     }
 }
 
@@ -224,9 +229,9 @@ pub fn rank_agreement(a: &[f64], b: &[f64]) -> RankAgreement {
     }
     let mut concordant = 0usize;
     let mut discordant = 0usize;
-    for i in 0..n {
-        for j in (i + 1)..n {
-            let s = (a[i] - a[j]) * (b[i] - b[j]);
+    for (i, (ai, bi)) in a.iter().zip(b.iter()).enumerate() {
+        for (aj, bj) in a.iter().zip(b.iter()).skip(i + 1) {
+            let s = (ai - aj) * (bi - bj);
             if s > 0.0 {
                 concordant += 1;
             } else if s < 0.0 {

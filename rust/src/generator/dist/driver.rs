@@ -537,6 +537,11 @@ fn spawn_worker(exe: &Path, payload: &str, timeout: Duration) -> anyhow::Result<
 
     // lint: allow(det-wall-clock) — subprocess liveness deadline only; a timed-out shard is retried/reassigned, its clock never reaches merged results
     let deadline = Instant::now() + timeout;
+    // exit-poll backoff: short shards (the common case at small budgets)
+    // return within a millisecond, so start near-instant and double up
+    // to the old fixed 5 ms cap for the long tail
+    let mut poll = Duration::from_micros(200);
+    const POLL_CAP: Duration = Duration::from_millis(5);
     let status = loop {
         match child.try_wait().context("polling worker")? {
             Some(status) => break status,
@@ -552,7 +557,10 @@ fn spawn_worker(exe: &Path, payload: &str, timeout: Duration) -> anyhow::Result<
                 let _ = reader.join();
                 anyhow::bail!("worker timed out after {timeout:?}");
             }
-            None => std::thread::sleep(Duration::from_millis(5)),
+            None => {
+                std::thread::sleep(poll);
+                poll = (poll * 2).min(POLL_CAP);
+            }
         }
     };
     if let Some(w) = writer {

@@ -232,7 +232,7 @@ fn lut_eval(q: i64, fmt: QFormat, kind: ActKind) -> i64 {
     let shift = fmt.frac_bits - 4;
     let lo_q = (LUT_LO * fmt.scale() as f64) as i64;
     let idx = ((q - lo_q) >> shift).clamp(0, LUT_SIZE as i64 - 1) as usize;
-    lut_table(kind, fmt)[idx]
+    lut_table(kind, fmt).get(idx).copied().unwrap_or(0)
 }
 
 pub fn hardsigmoid(q: i64, fmt: QFormat) -> i64 {

@@ -132,27 +132,27 @@ impl Summary {
             dropped,
             mean,
             std: var.sqrt(),
-            min: v[0],
+            min: v.first().copied().unwrap_or(0.0),
             p50: percentile_sorted(&v, 50.0),
             p90: percentile_sorted(&v, 90.0),
             p99: percentile_sorted(&v, 99.0),
-            max: v[n - 1],
+            max: v.last().copied().unwrap_or(0.0),
         }
     }
 }
 
 /// Linear-interpolated percentile of a pre-sorted slice; `p` in [0, 100].
+/// Returns 0.0 for an empty slice.
 pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
-    assert!(!sorted.is_empty());
     let p = p.clamp(0.0, 100.0);
-    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let rank = p / 100.0 * (sorted.len().saturating_sub(1)) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
-    if lo == hi {
-        sorted[lo]
-    } else {
-        let w = rank - lo as f64;
-        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    let w = rank - lo as f64;
+    match (sorted.get(lo), sorted.get(hi)) {
+        (Some(&a), Some(&b)) if lo != hi => a * (1.0 - w) + b * w,
+        (Some(&a), _) => a,
+        _ => 0.0,
     }
 }
 

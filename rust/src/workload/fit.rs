@@ -133,7 +133,9 @@ fn log_histogram(gaps: &[f64]) -> Vec<(Secs, usize)> {
         } else {
             (((g.ln() - lg_lo) / step) as usize).min(HISTOGRAM_BINS - 1)
         };
-        bins[idx] += 1;
+        if let Some(b) = bins.get_mut(idx) {
+            *b += 1;
+        }
     }
     bins.iter()
         .enumerate()
@@ -151,7 +153,13 @@ pub fn fit_trace(times: &[Secs]) -> FitReport {
             stats: empty_stats(times.len()),
         };
     }
-    let gaps: Vec<f64> = times.windows(2).map(|w| w[1].value() - w[0].value()).collect();
+    let gaps: Vec<f64> = times
+        .windows(2)
+        .map(|w| match w {
+            [a, b] => b.value() - a.value(),
+            _ => 0.0,
+        })
+        .collect();
     let n = gaps.len();
     let mean = gaps.iter().sum::<f64>() / n as f64;
     if mean <= 0.0 {
@@ -166,7 +174,7 @@ pub fn fit_trace(times: &[Secs]) -> FitReport {
 
     let mut sorted = gaps.clone();
     sorted.sort_by(f64::total_cmp);
-    let median = sorted[n / 2];
+    let median = sorted.get(n / 2).copied().unwrap_or(0.0);
     let thresh = LONG_GAP_FACTOR * median;
     let (long, short): (Vec<f64>, Vec<f64>) = gaps.iter().copied().partition(|&g| g > thresh);
     let short_mean = if short.is_empty() {
@@ -203,7 +211,10 @@ pub fn fit_trace(times: &[Secs]) -> FitReport {
             ((times.len() as f64 / bursts as f64).round() as u32).max(2);
         let mut short_sorted = short.clone();
         short_sorted.sort_by(f64::total_cmp);
-        let intra = short_sorted[short_sorted.len() / 2];
+        let intra = short_sorted
+            .get(short_sorted.len() / 2)
+            .copied()
+            .unwrap_or(0.0);
         // the generator emits `intra_gap` after the last arrival of a burst
         // and *then* `burst_gap`, so the observed separator is their sum —
         // subtract the intra estimate to recover the parameter
@@ -260,8 +271,13 @@ pub fn canon(w: &Workload) -> Option<(f64, f64)> {
             if times.len() < 2 {
                 return None;
             }
-            let gaps: Vec<f64> =
-                times.windows(2).map(|w| w[1].value() - w[0].value()).collect();
+            let gaps: Vec<f64> = times
+                .windows(2)
+                .map(|w| match w {
+                    [a, b] => b.value() - a.value(),
+                    _ => 0.0,
+                })
+                .collect();
             let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
             if mean <= 0.0 {
                 return None;

@@ -114,16 +114,12 @@ impl Workload {
             Workload::Phased {
                 fast_gap, slow_gap, ..
             } => Secs((fast_gap.value() + slow_gap.value()) / 2.0),
-            Workload::Trace { times } => {
-                if times.len() < 2 {
-                    Secs(0.0)
-                } else {
-                    Secs(
-                        (times.last().unwrap().value() - times[0].value())
-                            / (times.len() - 1) as f64,
-                    )
+            Workload::Trace { times } => match (times.first(), times.last()) {
+                (Some(first), Some(last)) if times.len() >= 2 => {
+                    Secs((last.value() - first.value()) / (times.len() - 1) as f64)
                 }
-            }
+                _ => Secs(0.0),
+            },
         }
     }
 

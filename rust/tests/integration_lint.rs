@@ -9,7 +9,8 @@
 //!   pragma is a deliberate, reviewed act, and every suppression carries
 //!   a written reason;
 //! * the CLI gate actually gates — a tree seeded with violations from
-//!   each rule family exits non-zero, a clean tree exits zero.
+//!   each rule family exits 1, a clean tree exits 0, and a usage/I-O
+//!   error exits 2 (scripts distinguish "dirty" from "could not run").
 
 use elastic_gen::analysis::{lint_files, lint_tree, SourceFile};
 use std::path::Path;
@@ -47,9 +48,11 @@ fn repo_tree_is_lint_clean() {
 fn suppression_inventory_is_pinned_and_reasoned() {
     let out = lint_tree(crate_root()).expect("lint walk");
     assert_eq!(
-        out.allow_count, 2,
-        "suppression inventory changed (expected the two det-wall-clock \
-         allows on the dist driver's subprocess liveness deadline); if the \
+        out.allow_count, 9,
+        "suppression inventory changed (expected: 2 det-wall-clock on the \
+         dist driver's subprocess liveness deadline, 5 panic-reach on the \
+         wire/artifact/eval chains the callers validate, 2 lock-blocking \
+         on the coordinator's intentional drain-and-switch sends); if the \
          new suppression is justified, update this pin in the same change"
     );
     for f in out.findings.iter().filter(|f| f.suppressed) {
@@ -101,8 +104,105 @@ fn seeded_violations_trip_every_rule_family() {
     assert!(rules.iter().any(|r| r.starts_with("wire-")), "{rules:?}");
 }
 
-/// End-to-end through the binary: the CLI must exit non-zero on a seeded
-/// tree and zero on a clean one, and `--json` must emit the report.
+/// panic-reach: a serving entry calling across files into a helper that
+/// unwraps reports the whole chain, not just the local call site.
+#[test]
+fn seeded_panic_reach_reports_the_call_chain() {
+    let helper = fixture(
+        "src/util/seeded_helper.rs",
+        "pub fn parse_step(o: Option<u32>) -> u32 { o.unwrap() }\n",
+    );
+    let entry = fixture(
+        "src/coordinator/seeded_entry.rs",
+        "use crate::util::seeded_helper::parse_step;\n\
+         pub fn serve(o: Option<u32>) -> u32 { parse_step(o) }\n",
+    );
+    let out = lint_files(&[entry, helper]);
+    let pr: Vec<_> = out
+        .unsuppressed()
+        .filter(|f| f.rule == "panic-reach")
+        .collect();
+    assert_eq!(pr.len(), 1, "{:?}", out.findings);
+    let f = pr.first().expect("one panic-reach finding");
+    assert_eq!(f.file, "src/coordinator/seeded_entry.rs");
+    assert!(
+        f.message.contains(
+            "coordinator::seeded_entry::serve -> util::seeded_helper::parse_step  \
+             (.unwrap() at src/util/seeded_helper.rs:1)"
+        ),
+        "{}",
+        f.message
+    );
+    assert_eq!(out.graph.panic_frontier, vec!["coordinator::seeded_entry::serve"]);
+}
+
+/// lock-order: two serving functions nesting the same pair of locks in
+/// opposite orders is a deadlock hazard.
+#[test]
+fn seeded_inconsistent_lock_order_is_flagged() {
+    let a = fixture(
+        "src/coordinator/seeded_a.rs",
+        "pub fn forward(s: &crate::coordinator::State) {\n\
+             let g1 = locked(&s.alpha);\n\
+             let g2 = locked(&s.beta);\n\
+             drop(g2);\n\
+             drop(g1);\n\
+         }\n",
+    );
+    let b = fixture(
+        "src/coordinator/seeded_b.rs",
+        "pub fn backward(s: &crate::coordinator::State) {\n\
+             let g1 = locked(&s.beta);\n\
+             let g2 = locked(&s.alpha);\n\
+             drop(g2);\n\
+             drop(g1);\n\
+         }\n",
+    );
+    let out = lint_files(&[a, b]);
+    let lo: Vec<_> = out
+        .unsuppressed()
+        .filter(|f| f.rule == "lock-order")
+        .collect();
+    assert_eq!(lo.len(), 1, "{:?}", out.findings);
+    let f = lo.first().expect("one lock-order finding");
+    assert!(
+        f.message.contains("'alpha' then 'beta'") && f.message.contains("'beta' then 'alpha'"),
+        "{}",
+        f.message
+    );
+    // the order table in the graph summary carries both directions
+    assert_eq!(out.graph.lock_order.len(), 2, "{:?}", out.graph.lock_order);
+}
+
+/// lock-blocking: a blocking channel call while a guard is live stalls
+/// every thread behind that lock.
+#[test]
+fn seeded_blocking_call_under_guard_is_flagged() {
+    let f = fixture(
+        "src/runtime/seeded_hold.rs",
+        "pub fn publish(s: &crate::runtime::Shared, tx: &Sender<u32>) {\n\
+             let g = locked(&s.table);\n\
+             tx.send(1);\n\
+             drop(g);\n\
+         }\n",
+    );
+    let out = lint_files(&[f]);
+    let lb: Vec<_> = out
+        .unsuppressed()
+        .filter(|f| f.rule == "lock-blocking")
+        .collect();
+    assert_eq!(lb.len(), 1, "{:?}", out.findings);
+    let f = lb.first().expect("one lock-blocking finding");
+    assert!(
+        f.message.contains("`send()`") && f.message.contains("'table'"),
+        "{}",
+        f.message
+    );
+}
+
+/// End-to-end through the binary: exit 1 on a seeded tree, 0 on a clean
+/// one, 2 on a usage error, and `--json` must emit the report (graph
+/// section included).
 #[test]
 fn lint_cli_gates_and_reports() {
     let base = std::env::temp_dir().join(format!("elastic-gen-lint-it-{}", std::process::id()));
@@ -126,9 +226,10 @@ fn lint_cli_gates_and_reports() {
         .arg(&report)
         .output()
         .expect("run lint on dirty tree");
-    assert!(
-        !dirty_run.status.success(),
-        "a seeded violation must fail the lint gate; stdout:\n{}",
+    assert_eq!(
+        dirty_run.status.code(),
+        Some(1),
+        "findings must exit 1 exactly; stdout:\n{}",
         String::from_utf8_lossy(&dirty_run.stdout)
     );
     let stdout = String::from_utf8_lossy(&dirty_run.stdout);
@@ -141,17 +242,62 @@ fn lint_cli_gates_and_reports() {
         Some("elastic-gen/lint-report/v1")
     );
     assert_eq!(j.get("unsuppressed").and_then(|n| n.as_usize()), Some(1));
+    let g = j.get("graph").expect("report carries the graph section");
+    assert!(g.get("symbols").and_then(|n| n.as_usize()).is_some(), "{text}");
 
     let clean_run = Command::new(exe)
-        .args(["lint", "--root"])
+        .args(["lint", "--graph", "--root"])
         .arg(&clean)
         .output()
         .expect("run lint on clean tree");
-    assert!(
-        clean_run.status.success(),
-        "a clean tree must pass; stdout:\n{}stderr:\n{}",
+    assert_eq!(
+        clean_run.status.code(),
+        Some(0),
+        "a clean tree must exit 0; stdout:\n{}stderr:\n{}",
         String::from_utf8_lossy(&clean_run.stdout),
         String::from_utf8_lossy(&clean_run.stderr)
+    );
+    let clean_out = String::from_utf8_lossy(&clean_run.stdout);
+    assert!(clean_out.contains("graph:"), "{clean_out}");
+
+    // a root that is not a crate is a usage error, not a finding
+    let bogus_run = Command::new(exe)
+        .args(["lint", "--root"])
+        .arg(base.join("no-such-dir"))
+        .output()
+        .expect("run lint on bogus root");
+    assert_eq!(
+        bogus_run.status.code(),
+        Some(2),
+        "a usage error must exit 2; stderr:\n{}",
+        String::from_utf8_lossy(&bogus_run.stderr)
+    );
+
+    // a suppressed-but-capped inventory exits 1 without any unsuppressed
+    // finding
+    let capped = base.join("capped");
+    std::fs::create_dir_all(capped.join("src/runtime")).expect("mkdir");
+    std::fs::write(
+        capped.join("src/runtime/sup.rs"),
+        "fn f(o: Option<u32>) -> u32 { o.unwrap() } // lint: allow(panic-unwrap) — fixture\n",
+    )
+    .expect("write fixture");
+    let capped_ok = Command::new(exe)
+        .args(["lint", "--root"])
+        .arg(&capped)
+        .output()
+        .expect("run lint on capped tree");
+    assert_eq!(capped_ok.status.code(), Some(0));
+    let capped_run = Command::new(exe)
+        .args(["lint", "--max-suppressions", "0", "--root"])
+        .arg(&capped)
+        .output()
+        .expect("run lint with a zero suppression cap");
+    assert_eq!(
+        capped_run.status.code(),
+        Some(1),
+        "an exceeded suppression cap must exit 1; stderr:\n{}",
+        String::from_utf8_lossy(&capped_run.stderr)
     );
 
     let _ = std::fs::remove_dir_all(&base);

@@ -270,3 +270,73 @@ fn prop_latency_monotone_in_clock() {
         },
     );
 }
+
+/// Random character soup weighted toward the lexer's hazard characters:
+/// quote/backslash/raw-string guards, comment delimiters, braces, and
+/// multi-byte unicode.  Shrinks by halving and trimming the ends.
+struct CharSoup {
+    max_len: usize,
+}
+
+const SOUP: &[char] = &[
+    '\'', '"', '\\', 'r', 'b', '#', '{', '}', '/', '*', '\n', '\t', ' ', 'a', 'Z', '0', '9',
+    '_', '!', '[', ']', '.', ':', ';', ',', '-', '>', '=', '&', 'é', '中', '🦀',
+];
+
+impl Strategy for CharSoup {
+    type Value = String;
+
+    fn generate(&self, rng: &mut Rng) -> String {
+        let len = rng.int_range(0, self.max_len as i64) as usize;
+        (0..len)
+            .map(|_| SOUP[rng.int_range(0, SOUP.len() as i64 - 1) as usize])
+            .collect()
+    }
+
+    fn shrink(&self, v: &String) -> Vec<String> {
+        if v.is_empty() {
+            return vec![];
+        }
+        let chars: Vec<char> = v.chars().collect();
+        let mut out = vec![
+            chars[..chars.len() / 2].iter().collect(),
+            chars[1..].iter().collect(),
+        ];
+        if chars.len() > 1 {
+            out.push(chars[..chars.len() - 1].iter().collect());
+        }
+        out
+    }
+}
+
+#[test]
+fn prop_lexer_total_and_spans_tile_the_input() {
+    use elastic_gen::analysis::lexer::tokenize;
+    check(
+        "tokenize never panics; spans ascend, sit on char boundaries, and gaps are whitespace",
+        400,
+        CharSoup { max_len: 64 },
+        |src| {
+            // calling at all asserts totality — a panic fails the property
+            let toks = tokenize(src);
+            let mut prev_end = 0usize;
+            for t in &toks {
+                // ascending, non-empty, boundary-valid spans
+                if t.start < prev_end || t.end <= t.start {
+                    return false;
+                }
+                if src.get(t.start..t.end).is_none() {
+                    return false;
+                }
+                // anything the lexer skipped must be whitespace
+                match src.get(prev_end..t.start) {
+                    Some(gap) if gap.chars().all(char::is_whitespace) => {}
+                    _ => return false,
+                }
+                prev_end = t.end;
+            }
+            src.get(prev_end..)
+                .is_some_and(|tail| tail.chars().all(char::is_whitespace))
+        },
+    );
+}
