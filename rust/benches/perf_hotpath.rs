@@ -78,6 +78,68 @@ fn coordinator_scaling(json: &mut BenchJson) {
     }
 }
 
+/// Journal overhead on the serving hot path: the same concurrent
+/// synthetic load with no journal attached vs a full-cap journal
+/// recording four spans per request.  Reported as absolute wall and
+/// per-request cost — the number that justifies leaving `--obs-log`
+/// on in production.
+fn obs_overhead(json: &mut BenchJson) {
+    use elastic_gen::obs::{Journal, DEFAULT_RING_CAP};
+    const PRODUCERS: usize = 4;
+    const PER_PRODUCER: usize = 256;
+    println!();
+    let mut base_wall = 0.0;
+    for &enabled in &[false, true] {
+        let journal = enabled.then(|| Arc::new(Journal::new(DEFAULT_RING_CAP)));
+        let coord = Arc::new(
+            Coordinator::start(CoordinatorConfig {
+                shards: 2,
+                queue_cap: 4096,
+                batch_max: 16,
+                shard_policy: ShardPolicy::RoundRobin,
+                engine: EngineSpec::Synthetic(SyntheticSpec::uniform(8, 16, 4, 30_000)),
+                journal: journal.clone(),
+                ..CoordinatorConfig::default()
+            })
+            .unwrap(),
+        );
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for p in 0..PRODUCERS {
+            let coord = coord.clone();
+            handles.push(std::thread::spawn(move || {
+                let rxs: Vec<_> = (0..PER_PRODUCER)
+                    .map(|i| {
+                        coord
+                            .submit(&format!("syn.{}", (p + i) % 8), vec![0.25; 16])
+                            .unwrap()
+                    })
+                    .collect();
+                rxs.into_iter().filter(|rx| rx.recv().unwrap().is_ok()).count()
+            }));
+        }
+        let served: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(served, PRODUCERS * PER_PRODUCER);
+        let label = if enabled { "enabled" } else { "disabled" };
+        if !enabled {
+            base_wall = wall;
+        }
+        json.record(&format!("obs-overhead/{label}"), wall);
+        if let Some(j) = &journal {
+            assert_eq!(j.recorded(), 4 * served as u64, "4 spans per request");
+            println!(
+                "obs-overhead/enabled: {served} reqs in {wall:.3}s, {} events ({:+.1}% wall, {:.2}us/req)",
+                j.recorded(),
+                (wall / base_wall - 1.0) * 100.0,
+                (wall - base_wall).max(0.0) * 1e6 / served as f64,
+            );
+        } else {
+            println!("obs-overhead/disabled: {served} reqs in {wall:.3}s");
+        }
+    }
+}
+
 /// Full-space DSE sweep wall-clock at 1/2/4 pool workers.  Each thread
 /// count gets a fresh pool (no memo carry-over) and must reproduce the
 /// single-thread best exactly — the pool merges in submission order, so
@@ -263,7 +325,7 @@ fn main() {
     elastic_gen::bench::banner(
         "PERF",
         "hot-path microbenchmarks",
-        "DSE estimator, DES engine, calibration replay, dist merge + refine, shard scaling, behavioural exec",
+        "DSE estimator, DES engine, calibration replay, dist merge + refine, shard scaling, obs overhead, behavioural exec",
     );
     let target = default_target();
     let mut results = Vec::new();
@@ -311,6 +373,9 @@ fn main() {
 
     // --- coordinator shard scaling (hermetic, synthetic engine) ------------
     coordinator_scaling(&mut json);
+
+    // --- observability: journal cost on the serving hot path ---------------
+    obs_overhead(&mut json);
 
     // --- behavioural executor ----------------------------------------------
     let dir = elastic_gen::artifacts_dir();

@@ -9,10 +9,12 @@
 //!   here.
 //! * **serving** — the request path and the worker/driver processes that
 //!   must degrade with errors instead of panicking mid-drain:
-//!   `coordinator/`, `runtime/`, `generator/dist/`.  Panic-surface rules
-//!   run here.
+//!   `coordinator/`, `runtime/`, `generator/dist/`, and `obs/` (the
+//!   journal records from inside the serving path, so a panicking or
+//!   printing recorder is a serving defect).  Panic-surface and
+//!   observability rules run here.
 //! * **wire** — files defining a host-portable codec (`wire.rs` under
-//!   `dist/`).  Wire-hygiene rules run here.
+//!   `dist/` or `obs/`).  Wire-hygiene rules run here.
 //!
 //! `tests/` and `benches/` are walked too, but only the pragma meta
 //! rules apply (a stale or reason-less suppression is a defect anywhere).
@@ -41,8 +43,9 @@ pub fn classify(relpath: &str) -> Scope {
         || p == "src/workload/fit.rs";
     let serving = p.starts_with("src/coordinator/")
         || p.starts_with("src/runtime/")
-        || p.starts_with("src/generator/dist/");
-    let wire = p.contains("/dist/") && p.ends_with("wire.rs");
+        || p.starts_with("src/generator/dist/")
+        || p.starts_with("src/obs/");
+    let wire = (p.contains("/dist/") || p.starts_with("src/obs/")) && p.ends_with("wire.rs");
     Scope {
         parity,
         serving,
@@ -65,6 +68,10 @@ mod tests {
         assert!(s.serving && !s.parity);
         let s = classify("src/workload/fit.rs");
         assert!(s.parity && !s.serving);
+        let s = classify("src/obs/journal.rs");
+        assert!(s.serving && !s.parity && !s.wire);
+        let s = classify("src/obs/wire.rs");
+        assert!(s.serving && s.wire && !s.parity);
         let s = classify("src/workload/mod.rs");
         assert!(!s.parity && !s.serving);
         let s = classify("src/analysis/rules.rs");

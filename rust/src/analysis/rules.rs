@@ -8,6 +8,11 @@
 //!   iteration order;
 //! * panic surface (`panic-*`) — serving-scoped modules must not
 //!   `unwrap`/`expect`/`panic!` or index slices directly;
+//! * observability (`obs-*`) — serving-scoped modules must not write
+//!   ad-hoc stdio (`println!`/`eprintln!`/`dbg!`); diagnostics go
+//!   through the structured journal (`crate::obs`), and the one stdout
+//!   use that *is* a wire protocol (the dist worker's result line)
+//!   carries a reasoned pragma;
 //! * pragma meta (`pragma-*`) — every suppression must name a known rule
 //!   and carry a written reason; these run everywhere and are not
 //!   themselves suppressible.
@@ -38,6 +43,7 @@ pub const WIRE_SCHEMA_TAG: &str = "wire-schema-tag";
 pub const WIRE_FIELD_COVERAGE: &str = "wire-field-coverage";
 pub const WIRE_KEY_PARITY: &str = "wire-key-parity";
 pub const PANIC_REACH: &str = "panic-reach";
+pub const OBS_PRINT: &str = "obs-print";
 pub const LOCK_ORDER: &str = "lock-order";
 pub const LOCK_BLOCKING: &str = "lock-blocking";
 pub const PRAGMA_MISSING_REASON: &str = "pragma-missing-reason";
@@ -58,6 +64,7 @@ pub const KNOWN_RULES: &[&str] = &[
     WIRE_FIELD_COVERAGE,
     WIRE_KEY_PARITY,
     PANIC_REACH,
+    OBS_PRINT,
     LOCK_ORDER,
     LOCK_BLOCKING,
     PRAGMA_MISSING_REASON,
@@ -221,6 +228,8 @@ const HASH_ITER_METHODS: &[&str] = &[
 const UNORDERED_FOLDS: &[&str] = &["sum", "fold", "product"];
 
 const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+const PRINT_MACROS: &[&str] = &["println", "eprintln", "print", "eprint", "dbg"];
 
 const ENTROPY_IDENTS: &[&str] = &["thread_rng", "from_entropy", "OsRng", "getrandom"];
 
@@ -467,6 +476,21 @@ pub fn run_code_rules(file: &str, code: &[Tok], scope: Scope) -> Vec<Finding> {
                     format!("`{}!` on the serving/worker path — return an error instead", t.text),
                 );
             }
+            if t.kind == TokKind::Ident
+                && PRINT_MACROS.contains(&t.text.as_str())
+                && i + 1 < n
+                && code[i + 1].is_punct('!')
+            {
+                push(
+                    OBS_PRINT,
+                    t.line,
+                    format!(
+                        "`{}!` on the serving/worker path — emit a structured journal \
+                         event (crate::obs) instead of ad-hoc stdio",
+                        t.text
+                    ),
+                );
+            }
             if t.is_punct('[') && i >= 1 {
                 let prev = &code[i - 1];
                 let indexes = match prev.kind {
@@ -608,6 +632,23 @@ mod tests {
         assert!(rules.contains(&PANIC_EXPECT));
         assert!(rules.contains(&PANIC_MACRO));
         assert!(rules.contains(&PANIC_SLICE_INDEX));
+    }
+
+    #[test]
+    fn print_macros_flagged_in_serving_scope_only() {
+        let src = "fn f(x: u32) { println!(\"{x}\"); eprintln!(\"{x}\"); let _ = dbg!(x); }";
+        let f = run("src/coordinator/router.rs", src);
+        let hits = f.iter().filter(|x| x.rule == OBS_PRINT).count();
+        assert_eq!(hits, 3, "{f:?}");
+        // unscoped crate source may print (the CLI does)
+        let f = run("src/power/model.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+        // a reasoned pragma suppresses (the dist worker's wire line)
+        let src = "fn f(x: u32) { \
+                   // lint: allow(obs-print) — stdout is the wire protocol\n\
+                   println!(\"{x}\"); }";
+        let f = run("src/generator/dist/worker.rs", src);
+        assert!(unsuppressed(&f).is_empty(), "{f:?}");
     }
 
     #[test]

@@ -1,7 +1,16 @@
 //! Serving metrics: per-artifact latency/throughput accounting plus
 //! per-shard counters (queue depth, batch fill, admission rejects),
 //! shared between the shard worker threads and observers.
+//!
+//! Latency samples land in fixed-memory [`Hist`]ograms, so the sink's
+//! footprint is O(artifacts + shards) no matter how many requests it
+//! records — the unbounded per-request `Vec<f64>`s this module used to
+//! keep were a leak under sustained load (`approx_mem_bytes` pins this
+//! in tests).  Supervisor switch *decisions* are recorded here too,
+//! rejections included: anti-flapping behaviour is only assertable if
+//! the decisions that did **not** fire leave a trace.
 
+use crate::obs::Hist;
 use crate::util::stats::Summary;
 use crate::util::sync::locked;
 use crate::util::table::{num, Table};
@@ -18,9 +27,11 @@ pub const DEFAULT_ARRIVAL_CAP: usize = 4096;
 struct ArtifactStats {
     served: u64,
     failed: u64,
-    queue_wait_s: Vec<f64>,
-    exec_s: Vec<f64>,
-    e2e_s: Vec<f64>,
+    /// Fixed-memory latency histograms; exact mean/min/max, bucketed
+    /// quantiles (see `obs::hist`).
+    queue_wait_s: Hist,
+    exec_s: Hist,
+    e2e_s: Hist,
     /// Bounded ring of arrival timestamps (seconds since the metrics
     /// epoch) — the raw material the workload fitter consumes.
     arrivals: VecDeque<f64>,
@@ -37,8 +48,8 @@ struct ShardStats {
     failed: u64,
     batches: u64,
     batch_fill_sum: f64,
-    exec_s: Vec<f64>,
-    e2e_s: Vec<f64>,
+    exec_s: Hist,
+    e2e_s: Hist,
 }
 
 /// One completed drain-and-switch reconfiguration.
@@ -74,6 +85,35 @@ impl SwitchEvent {
     }
 }
 
+/// One supervisor switch decision, committed or rejected.  The fields
+/// spell out the predicate arithmetic (`net_gain = before - after -
+/// amortized`, switch iff `net_gain > margin` strictly) so a rejection
+/// carries the losing margin with it.
+#[derive(Debug, Clone)]
+pub struct DecisionRecord {
+    /// Seconds since the metrics epoch; 0.0 is stamped on record.
+    pub at_s: f64,
+    /// Candidate the decision evaluated switching to.
+    pub to: String,
+    pub before_mj: f64,
+    pub after_mj: f64,
+    pub reconfig_mj: f64,
+    pub amortized_mj: f64,
+    pub net_gain_mj: f64,
+    pub margin_mj: f64,
+    /// Drift score that triggered the sweep, when known.
+    pub drift: Option<f64>,
+    /// True when the decision committed a swap.
+    pub switched: bool,
+}
+
+#[derive(Debug, Default)]
+struct DecisionLog {
+    total: u64,
+    rejected: u64,
+    last: Option<DecisionRecord>,
+}
+
 /// Thread-safe metrics sink.
 #[derive(Debug)]
 pub struct Metrics {
@@ -86,6 +126,7 @@ pub struct Metrics {
     start: Mutex<Option<Instant>>,
     arrival_cap: Mutex<usize>,
     switches: Mutex<Vec<SwitchEvent>>,
+    decisions: Mutex<DecisionLog>,
 }
 
 impl Default for Metrics {
@@ -97,6 +138,7 @@ impl Default for Metrics {
             start: Mutex::default(),
             arrival_cap: Mutex::new(DEFAULT_ARRIVAL_CAP),
             switches: Mutex::default(),
+            decisions: Mutex::default(),
         }
     }
 }
@@ -128,9 +170,9 @@ impl Metrics {
         let s = m.entry(artifact.to_string()).or_default();
         if ok {
             s.served += 1;
-            s.queue_wait_s.push(queue_wait_s);
-            s.exec_s.push(exec_s);
-            s.e2e_s.push(queue_wait_s + exec_s);
+            s.queue_wait_s.record(queue_wait_s);
+            s.exec_s.record(exec_s);
+            s.e2e_s.record(queue_wait_s + exec_s);
         } else {
             s.failed += 1;
         }
@@ -150,8 +192,8 @@ impl Metrics {
         if let Some(s) = shards.get_mut(shard) {
             if ok {
                 s.served += 1;
-                s.exec_s.push(exec_s);
-                s.e2e_s.push(queue_wait_s + exec_s);
+                s.exec_s.record(exec_s);
+                s.e2e_s.record(queue_wait_s + exec_s);
             } else {
                 s.failed += 1;
             }
@@ -241,6 +283,46 @@ impl Metrics {
         locked(&self.switches).clone()
     }
 
+    /// Record one supervisor switch decision — **including rejections**.
+    /// Only the last record is kept (plus total/rejected counters), so
+    /// the log stays O(1) however long the supervisor runs.
+    pub fn record_decision(&self, mut d: DecisionRecord) {
+        if d.at_s == 0.0 {
+            d.at_s = self.elapsed_s();
+        }
+        let mut log = locked(&self.decisions);
+        log.total += 1;
+        if !d.switched {
+            log.rejected += 1;
+        }
+        log.last = Some(d);
+    }
+
+    /// Rough heap bytes held by the sink.  Latency histograms are inline
+    /// fixed arrays and the arrival rings are capped, so this is a
+    /// function of artifact/shard/switch counts — **not** request count;
+    /// the long-run test pins that by recording twice and comparing.
+    pub fn approx_mem_bytes(&self) -> usize {
+        use std::mem::size_of;
+        let artifacts = {
+            let m = locked(&self.inner);
+            m.iter()
+                .map(|(k, s)| {
+                    k.len()
+                        + size_of::<ArtifactStats>()
+                        + s.arrivals.capacity() * size_of::<f64>()
+                })
+                .sum::<usize>()
+        };
+        let shards = locked(&self.shards).capacity() * size_of::<ShardStats>();
+        let switches = {
+            let sw = locked(&self.switches);
+            sw.capacity() * size_of::<SwitchEvent>()
+                + sw.iter().map(|e| e.from.len() + e.to.len()).sum::<usize>()
+        };
+        artifacts + shards + switches
+    }
+
     /// One micro-batch of `fill` requests drained (window `cap`).
     pub fn record_batch(&self, shard: usize, fill: usize, cap: usize) {
         let mut shards = locked(&self.shards);
@@ -260,9 +342,9 @@ impl Metrics {
                 served: s.served,
                 failed: s.failed,
                 throughput_rps: s.served as f64 / elapsed.max(1e-9),
-                queue_wait: maybe_summary(&s.queue_wait_s),
-                exec: maybe_summary(&s.exec_s),
-                e2e: maybe_summary(&s.e2e_s),
+                queue_wait: s.queue_wait_s.summary(),
+                exec: s.exec_s.summary(),
+                e2e: s.e2e_s.summary(),
                 arrivals: s.arrivals.len(),
             })
             .collect();
@@ -287,24 +369,23 @@ impl Metrics {
                 } else {
                     s.batch_fill_sum / s.batches as f64
                 },
-                exec: maybe_summary(&s.exec_s),
-                e2e: maybe_summary(&s.e2e_s),
+                exec: s.exec_s.summary(),
+                e2e: s.e2e_s.summary(),
             })
             .collect();
+        let (decisions, decisions_rejected, last_decision) = {
+            let log = locked(&self.decisions);
+            (log.total, log.rejected, log.last.clone())
+        };
         MetricsSnapshot {
             elapsed_s: elapsed,
             rows,
             shards,
             switches: locked(&self.switches).clone(),
+            decisions,
+            decisions_rejected,
+            last_decision,
         }
-    }
-}
-
-fn maybe_summary(v: &[f64]) -> Option<Summary> {
-    if v.is_empty() {
-        None
-    } else {
-        Some(Summary::of(v))
     }
 }
 
@@ -347,6 +428,13 @@ pub struct MetricsSnapshot {
     pub shards: Vec<ShardSnapshot>,
     /// Completed drain-and-switch reconfigurations, oldest first.
     pub switches: Vec<SwitchEvent>,
+    /// Supervisor switch decisions recorded, committed or not.
+    pub decisions: u64,
+    /// Subset of `decisions` whose net gain did not clear the margin (or
+    /// whose swap aborted) — the anti-flapping evidence.
+    pub decisions_rejected: u64,
+    /// The most recent decision with its full margin arithmetic.
+    pub last_decision: Option<DecisionRecord>,
 }
 
 impl MetricsSnapshot {
@@ -407,6 +495,23 @@ impl MetricsSnapshot {
         for sw in &self.switches {
             out.push('\n');
             out.push_str(&sw.render_line());
+        }
+        if self.decisions > 0 {
+            out.push('\n');
+            out.push_str(&format!(
+                "decisions: {} total, {} rejected",
+                self.decisions, self.decisions_rejected
+            ));
+            if let Some(d) = &self.last_decision {
+                out.push_str(&format!(
+                    "; last @{:.1}s -> {} (net {:+.3} mJ vs margin {:.3} mJ: {})",
+                    d.at_s,
+                    d.to,
+                    d.net_gain_mj,
+                    d.margin_mj,
+                    if d.switched { "committed" } else { "rejected" },
+                ));
+            }
         }
         out
     }
@@ -533,6 +638,82 @@ mod tests {
         assert!(r.contains("switch @12.5s: idle-wait -> on-off"), "{r}");
         assert!(r.contains("drain rejects 2"), "{r}");
         assert_eq!(m.switch_events().len(), 1);
+    }
+
+    /// The ISSUE-9 leak regression: recording must not grow the sink.
+    /// Two identical 50k-request phases must leave `approx_mem_bytes`
+    /// exactly where the first left it — O(artifacts + shards), not
+    /// O(requests).
+    #[test]
+    fn memory_is_bounded_by_artifacts_and_shards_not_requests() {
+        let m = Metrics::default();
+        let gauges: Vec<Arc<AtomicIsize>> =
+            (0..2).map(|_| Arc::new(AtomicIsize::new(0))).collect();
+        m.init_shards(gauges);
+        m.set_arrival_cap(64);
+        let phase = |m: &Metrics| {
+            for i in 0..50_000usize {
+                let artifact = if i % 2 == 0 { "a" } else { "b" };
+                m.record_shard(i % 2, artifact, true, 1e-4, 2e-4);
+                m.record_arrival_at(artifact, i as f64 * 1e-3);
+            }
+        };
+        phase(&m);
+        let after_one_phase = m.approx_mem_bytes();
+        phase(&m);
+        assert_eq!(
+            m.approx_mem_bytes(),
+            after_one_phase,
+            "50k more requests must not grow the metrics sink"
+        );
+        let s = m.snapshot();
+        assert_eq!(s.total_served(), 100_000);
+        // the histograms still summarize correctly at this volume
+        let a = s.rows.first().unwrap();
+        assert!((a.e2e.as_ref().unwrap().mean - 3e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decisions_counted_rejections_included() {
+        let m = Metrics::default();
+        let rejected = DecisionRecord {
+            at_s: 1.5,
+            to: "cand-b".into(),
+            before_mj: 1.2,
+            after_mj: 1.0,
+            reconfig_mj: 10.0,
+            amortized_mj: 0.5,
+            net_gain_mj: -0.3,
+            margin_mj: 0.0,
+            drift: Some(0.8),
+            switched: false,
+        };
+        m.record_decision(rejected.clone());
+        m.record_decision(DecisionRecord {
+            at_s: 2.5,
+            net_gain_mj: 0.7,
+            switched: true,
+            ..rejected
+        });
+        let s = m.snapshot();
+        assert_eq!(s.decisions, 2);
+        assert_eq!(s.decisions_rejected, 1);
+        let last = s.last_decision.as_ref().unwrap();
+        assert!(last.switched);
+        assert!((last.net_gain_mj - 0.7).abs() < 1e-12);
+        let r = s.render();
+        assert!(r.contains("decisions: 2 total, 1 rejected"), "{r}");
+        assert!(r.contains("committed"), "{r}");
+
+        // at_s == 0.0 stamps "now", mirroring record_switch
+        m.record_decision(DecisionRecord {
+            at_s: 0.0,
+            switched: false,
+            ..s.last_decision.clone().unwrap()
+        });
+        let s2 = m.snapshot();
+        assert_eq!(s2.decisions_rejected, 2);
+        assert!(s2.last_decision.unwrap().at_s >= 0.0);
     }
 
     #[test]

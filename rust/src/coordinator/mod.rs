@@ -19,7 +19,7 @@ pub mod request;
 pub mod router;
 pub mod server;
 
-pub use metrics::{Metrics, MetricsSnapshot, ShardSnapshot, SwitchEvent};
+pub use metrics::{DecisionRecord, Metrics, MetricsSnapshot, ShardSnapshot, SwitchEvent};
 pub use request::{Request, Response, SubmitError};
 pub use router::{Router, ShardPolicy, ShardRouter};
 pub use server::{Coordinator, CoordinatorConfig, EngineSpec, SwapReport, SwitchInfo};

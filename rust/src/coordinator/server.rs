@@ -22,6 +22,7 @@
 use super::metrics::{Metrics, SwitchEvent};
 use super::request::{Request, Response, SubmitError};
 use super::router::{ShardPolicy, ShardRouter};
+use crate::obs::{Event, Journal, SpanEvent, SwapEvent};
 use crate::runtime::{Engine, Manifest, SyntheticSpec};
 use crate::util::sync::locked;
 use anyhow::{anyhow, Result};
@@ -62,6 +63,10 @@ pub struct CoordinatorConfig {
     /// How requests map to shards.
     pub shard_policy: ShardPolicy,
     pub engine: EngineSpec,
+    /// When set, every request lifecycle stage and swap phase is
+    /// recorded as a structured event (`--obs-log`).  `None` keeps the
+    /// hot path allocation- and lock-free.
+    pub journal: Option<Arc<Journal>>,
 }
 
 impl Default for CoordinatorConfig {
@@ -75,6 +80,7 @@ impl Default for CoordinatorConfig {
             batch_window: Duration::ZERO,
             shard_policy: ShardPolicy::Affinity,
             engine: EngineSpec::Artifacts,
+            journal: None,
         }
     }
 }
@@ -320,6 +326,34 @@ impl Coordinator {
         self.enqueue(artifact, input, false)
     }
 
+    /// Emit one request-lifecycle span when a journal is attached.
+    /// Terminal rejects carry id 0: the request never earned an id.
+    fn span(&self, id: u64, stage: &str, artifact: &str, shard: Option<usize>) {
+        if let Some(j) = &self.config.journal {
+            let mut s = SpanEvent::new(id, stage, artifact);
+            s.shard = shard;
+            j.record(Event::Span(s));
+        }
+    }
+
+    /// Emit one swap-phase event when a journal is attached.
+    fn swap_event(
+        &self,
+        to: &str,
+        phase: &str,
+        shard: Option<usize>,
+        drain_rejected: Option<u64>,
+        detail: Option<String>,
+    ) {
+        if let Some(j) = &self.config.journal {
+            let mut e = SwapEvent::new(phase, to);
+            e.shard = shard;
+            e.drain_rejected = drain_rejected;
+            e.detail = detail;
+            j.record(Event::Swap(e));
+        }
+    }
+
     fn enqueue(
         &self,
         artifact: &str,
@@ -350,11 +384,13 @@ impl Coordinator {
         };
         if target.draining.load(Ordering::SeqCst) {
             self.metrics.record_drain_reject(shard);
+            self.span(0, "drain-reject", artifact, Some(shard));
             return Err(SubmitError::Draining { shard });
         }
         let (reply, rx) = channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let req = Request {
-            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            id,
             artifact: artifact.to_string(),
             input,
             enqueued: Instant::now(),
@@ -374,14 +410,21 @@ impl Coordinator {
                 return Err(SubmitError::ShuttingDown);
             }
             self.metrics.record_submit(shard);
+            // spans start at admission: a request that bounced never
+            // earned an id, so chains stay complete for every accepted id
+            self.span(id, "submit", artifact, Some(shard));
+            self.span(id, "enqueue", artifact, Some(shard));
         } else {
             match tx.try_send(ShardMsg::Req(req)) {
                 Ok(()) => {
                     target.depth.fetch_add(1, Ordering::Relaxed);
                     self.metrics.record_submit(shard);
+                    self.span(id, "submit", artifact, Some(shard));
+                    self.span(id, "enqueue", artifact, Some(shard));
                 }
                 Err(TrySendError::Full(_)) => {
                     self.metrics.record_reject(shard);
+                    self.span(0, "reject", artifact, Some(shard));
                     return Err(SubmitError::QueueFull {
                         shard,
                         capacity: self.queue_cap,
@@ -437,11 +480,14 @@ impl Coordinator {
         let mut failed = Vec::new();
         for (shard_id, (shard, shard_engine)) in self.shards.iter().zip(engines).enumerate() {
             shard.draining.store(true, Ordering::SeqCst);
+            self.swap_event(&info.to, "drain-start", Some(shard_id), None, None);
             let tx = match locked(&shard.tx).as_ref() {
                 Some(tx) => tx.clone(),
                 None => {
                     shard.draining.store(false, Ordering::SeqCst);
-                    failed.push((shard_id, "shard is shutting down".to_string()));
+                    let why = "shard is shutting down".to_string();
+                    self.swap_event(&info.to, "aborted", Some(shard_id), None, Some(why.clone()));
+                    failed.push((shard_id, why));
                     continue;
                 }
             };
@@ -454,15 +500,26 @@ impl Coordinator {
             // swap_lock across the shard hand-off is the serialization this fn exists
             // to provide, and submit/shutdown never take swap_lock
             if tx.send(msg).is_err() {
-                failed.push((shard_id, "shard queue disconnected".to_string()));
+                let why = "shard queue disconnected".to_string();
+                self.swap_event(&info.to, "aborted", Some(shard_id), None, Some(why.clone()));
+                failed.push((shard_id, why));
             } else {
                 // lint: allow(lock-blocking) — bounded wait: the ack arrives once the
                 // in-flight batch drains, and a dead worker closes the channel, which
                 // returns Err here instead of blocking forever
                 match ack_rx.recv() {
-                    Ok(Ok(())) => {}
-                    Ok(Err(e)) => failed.push((shard_id, e)),
-                    Err(_) => failed.push((shard_id, "shard worker died during swap".to_string())),
+                    Ok(Ok(())) => {
+                        self.swap_event(&info.to, "engine-built", Some(shard_id), None, None);
+                    }
+                    Ok(Err(e)) => {
+                        self.swap_event(&info.to, "aborted", Some(shard_id), None, Some(e.clone()));
+                        failed.push((shard_id, e));
+                    }
+                    Err(_) => {
+                        let why = "shard worker died during swap".to_string();
+                        self.swap_event(&info.to, "aborted", Some(shard_id), None, Some(why.clone()));
+                        failed.push((shard_id, why));
+                    }
                 }
             }
             shard.draining.store(false, Ordering::SeqCst);
@@ -479,6 +536,7 @@ impl Coordinator {
             drain_rejected,
         };
         if report.all_swapped() {
+            self.swap_event(&info.to, "committed", None, Some(drain_rejected), None);
             self.metrics.record_switch(SwitchEvent {
                 at_s: 0.0,
                 from: info.from,
@@ -596,16 +654,31 @@ fn worker_loop(
                 }
             }
         }
+        let batch_len = batch.len();
         if !batch.is_empty() {
-            metrics.record_batch(shard_id, batch.len(), config.batch_max);
+            metrics.record_batch(shard_id, batch_len, config.batch_max);
         }
 
         for req in batch {
             let picked_up = Instant::now();
             let queue_wait = picked_up.duration_since(req.enqueued).as_secs_f64();
+            if let Some(j) = &config.journal {
+                let mut s = SpanEvent::new(req.id, "exec", &req.artifact);
+                s.shard = Some(shard_id);
+                s.queue_wait_s = Some(queue_wait);
+                s.batch = Some(batch_len);
+                j.record(Event::Span(s));
+            }
             let result = engine.infer(&req.artifact, &req.input);
             let exec = picked_up.elapsed().as_secs_f64();
             let ok = result.is_ok();
+            if let Some(j) = &config.journal {
+                let mut s = SpanEvent::new(req.id, "done", &req.artifact);
+                s.shard = Some(shard_id);
+                s.exec_s = Some(exec);
+                s.ok = Some(ok);
+                j.record(Event::Span(s));
+            }
             metrics.record_shard(shard_id, &req.artifact, ok, queue_wait, exec);
             let _ = req.reply.send(Response {
                 id: req.id,

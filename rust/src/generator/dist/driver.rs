@@ -39,6 +39,7 @@
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 use std::process::{Command, Stdio};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context};
@@ -53,6 +54,7 @@ use crate::generator::eval::{EvalPool, Evaluator};
 use crate::generator::search::exhaustive::Exhaustive;
 use crate::generator::search::pareto::ParetoFront;
 use crate::generator::search::Searcher;
+use crate::obs::{Event, Journal, WorkerEvent};
 use crate::util::rng::Rng;
 
 use super::plan::plan_shards;
@@ -97,6 +99,11 @@ pub struct DistOpts {
     pub timeout: Duration,
     /// Subprocess attempts per shard before in-process reassignment.
     pub attempts: usize,
+    /// Event journal worker-lifecycle events are emitted into
+    /// (spawn/exit/timeout/reassign/quarantine).  Timestamps are stamped
+    /// by the journal itself, so this parity-scoped driver never reads a
+    /// wall clock for observability.
+    pub journal: Option<Arc<Journal>>,
 }
 
 impl Default for DistOpts {
@@ -111,6 +118,7 @@ impl Default for DistOpts {
             tau_floor: 0.0,
             timeout: Duration::from_secs(300),
             attempts: 2,
+            journal: None,
         }
     }
 }
@@ -225,6 +233,16 @@ impl DistSweep {
 
     pub fn opts(&self) -> &DistOpts {
         &self.opts
+    }
+
+    /// Emit one worker-lifecycle event when a journal is attached.
+    fn note(&self, kind: &str, shard: usize, attempt: Option<usize>, detail: Option<String>) {
+        if let Some(j) = &self.opts.journal {
+            let mut e = WorkerEvent::new(kind, shard);
+            e.attempt = attempt;
+            e.detail = detail;
+            j.record(Event::Worker(e));
+        }
     }
 
     /// Plan, execute (workers in parallel), merge — the sweep phase.
@@ -397,6 +415,15 @@ impl DistSweep {
                     front.insert(e);
                 }
             } else {
+                self.note(
+                    "quarantine",
+                    p.shard,
+                    None,
+                    Some(format!(
+                        "tau {:.3} <= floor {:.3} over {} pairs",
+                        result.post.tau, o.tau_floor, result.post.pairs
+                    )),
+                );
                 // calibration guard: this shard's ranking (uncorrected
                 // model on the sweep, corrected model on the refinement)
                 // disagrees with the DES, so validate before folding —
@@ -456,13 +483,19 @@ impl DistSweep {
     /// exactly when the shard was reassigned in-process.
     fn execute(&self, plan: &ShardSpec) -> anyhow::Result<Executed> {
         match &self.opts.mode {
-            WorkerMode::InProcess => run_shard(plan).map(|r| (r, 1, None)),
+            WorkerMode::InProcess => {
+                self.note("spawn", plan.shard, Some(1), None);
+                let r = run_shard(plan).map(|r| (r, 1, None));
+                self.note("exit", plan.shard, Some(1), r.as_ref().err().map(|e| format!("{e:#}")));
+                r
+            }
             WorkerMode::Subprocess(exe) => {
                 let payload = plan.to_json().dump();
                 let mut attempts = 0usize;
                 let mut last_err = String::new();
                 while attempts < self.opts.attempts.max(1) {
                     attempts += 1;
+                    self.note("spawn", plan.shard, Some(attempts), None);
                     let decoded = spawn_worker(exe, &payload, self.opts.timeout)
                         .and_then(|out| ShardResult::from_json_str(&out))
                         .and_then(|r| {
@@ -480,14 +513,22 @@ impl DistSweep {
                             Ok(r)
                         });
                     match decoded {
-                        Ok(r) => return Ok((r, attempts, None)),
-                        Err(e) => last_err = format!("{e:#}"),
+                        Ok(r) => {
+                            self.note("exit", plan.shard, Some(attempts), None);
+                            return Ok((r, attempts, None));
+                        }
+                        Err(e) => {
+                            last_err = format!("{e:#}");
+                            let kind = if last_err.contains("timed out") { "timeout" } else { "exit" };
+                            self.note(kind, plan.shard, Some(attempts), Some(last_err.clone()));
+                        }
                     }
                 }
                 // every subprocess attempt crashed, hung or spoke
                 // garbage: reassign the shard to an in-process worker so
                 // the sweep completes with an unchanged merged front,
                 // keeping the last failure as the reassignment cause
+                self.note("reassign", plan.shard, Some(attempts + 1), Some(last_err.clone()));
                 run_shard(plan).map(|r| (r, attempts + 1, Some(last_err)))
             }
         }

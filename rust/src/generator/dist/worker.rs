@@ -208,6 +208,9 @@ pub fn worker_stdio() -> anyhow::Result<()> {
         .context("reading shard spec from stdin")?;
     let spec = ShardSpec::from_json_str(&buf)?;
     let result = run_shard(&spec)?;
+    // lint: allow(obs-print) — stdout IS the wire protocol here: the driver reads
+    // exactly this one JSON line as the shard result; diagnostics still belong in
+    // the journal, not here
     println!("{}", result.to_json().dump());
     Ok(())
 }

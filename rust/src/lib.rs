@@ -28,6 +28,7 @@ pub mod elastic_node;
 pub mod fpga;
 pub mod generator;
 pub mod models;
+pub mod obs;
 pub mod power;
 pub mod rtl;
 pub mod runtime;

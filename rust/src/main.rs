@@ -21,6 +21,9 @@
 //!   `--adapt` closes the serving loop: observe arrivals, fit the
 //!   workload, run the calibrated sweep in the background, and
 //!   drain-and-switch the shards when the winner justifies it.
+//! * `obs`      — decode a `--obs-log` JSONL event journal and render the
+//!   report: span-chain completeness, per-stage latency, switch-decision
+//!   audit (rejections included), worker timeline.
 //! * `devices`  — print the device catalog.
 //! * `verify`   — cross-check PJRT execution and the behavioural
 //!   simulator against the golden vectors.
@@ -49,9 +52,10 @@ use elastic_gen::generator::{
     Searcher, StrategyKind,
 };
 use elastic_gen::models::Topology;
+use elastic_gen::obs::Journal;
 use elastic_gen::rtl::composition::{build, BuildOpts};
 use elastic_gen::rtl::fixed_point::QFormat;
-use elastic_gen::runtime::{AdaptConfig, Golden, Manifest, Supervisor};
+use elastic_gen::runtime::{AdaptConfig, AdaptState, Golden, Manifest, Supervisor};
 use elastic_gen::sim::{cost_model, NodeSim};
 use elastic_gen::strategy::Strategy;
 use elastic_gen::util::cli::Args;
@@ -73,6 +77,7 @@ fn main() {
         Some("report") => cmd_report(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("serve") => cmd_serve(&args),
+        Some("obs") => cmd_obs(&args),
         Some("devices") => cmd_devices(),
         Some("verify") => cmd_verify(&args),
         // lint has a three-way exit contract (0 clean / 1 findings /
@@ -100,9 +105,10 @@ fn print_usage() {
            generate  --all [--jobs N] [--budget N]   (cross-scenario sweep)\n\
            dse       --workers N [--app <name>] [--jobs N] [--budget N]\n\
                      [--requests N] [--in-process] [--verify-parity]\n\
-                     [--calibrate]  (process-sharded sweep, calibration-\n\
-                     guarded merge; --calibrate adds the fit + the\n\
-                     distributed refinement re-rank)\n\
+                     [--calibrate] [--obs-log <journal.jsonl>]\n\
+                     (process-sharded sweep, calibration-guarded merge;\n\
+                     --calibrate adds the fit + the distributed\n\
+                     refinement re-rank)\n\
            dse-worker   (internal: JSON shard spec on stdin -> stdout)\n\
            calibrate [--app <name>] [--jobs N] [--requests N] [--budget N]\n\
                      [--quick] [--workers N [--in-process] [--verify-parity]]\n\
@@ -113,11 +119,16 @@ fn print_usage() {
            simulate  --period-ms <f> [--requests N] [--device <name>]\n\
            serve     [--requests N] [--artifact <name>] [--shards N]\n\
                      [--queue-cap N] [--batch-max N] [--synthetic]\n\
+                     [--obs-log <journal.jsonl>]\n\
            serve     --adapt [--inject-drift] [--expect-switch] [--quick]\n\
                      [--drift-threshold F] [--margin-mj F] [--amortize-s F]\n\
                      [--deploy-strategy <name>] [--workers N [--in-process]]\n\
+                     [--obs-log <journal.jsonl>]\n\
                      (adaptive serving loop on the synthetic backend:\n\
                      observe -> fit -> calibrated sweep -> drain-and-switch)\n\
+           obs       <journal.jsonl>  (render a --obs-log event journal:\n\
+                     span chains, per-stage latency, switch audit,\n\
+                     worker timeline)\n\
            verify    [--artifact <name>]\n\
            lint      [--root <crate-dir>] [--json <report-path>] [--graph]\n\
                      [--max-suppressions N]  (repo-invariant static\n\
@@ -386,12 +397,14 @@ fn cmd_dse(args: &Args) -> anyhow::Result<()> {
         },
     );
     let t0 = std::time::Instant::now();
+    let journal = obs_journal(args)?;
     let dopts = DistOpts {
         workers,
         mode,
         budget: budget_opt,
         requests,
         threads,
+        journal: journal.clone(),
         ..DistOpts::default()
     };
     if calibrated {
@@ -413,6 +426,7 @@ fn cmd_dse(args: &Args) -> anyhow::Result<()> {
         if args.has_flag("verify-parity") {
             verify_calibrated_parity(&spec, &copts, &out)?;
         }
+        obs_journal_close(&journal, args)?;
         return Ok(());
     }
     let out = DistSweep::new(dopts).run(&spec)?;
@@ -440,6 +454,7 @@ fn cmd_dse(args: &Args) -> anyhow::Result<()> {
             out.front.len()
         );
     }
+    obs_journal_close(&journal, args)?;
     Ok(())
 }
 
@@ -875,10 +890,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         return cmd_serve_adapt(args);
     }
     let n = args.get_usize("requests", 200);
+    let journal = obs_journal(args)?;
     let base = CoordinatorConfig {
         shards: args.get_usize("shards", 0),
         queue_cap: args.get_usize("queue-cap", 256),
         batch_max: args.get_usize("batch-max", 16),
+        journal: journal.clone(),
         ..CoordinatorConfig::default()
     };
     // --synthetic serves the manifest-free CPU-burner artifacts, so the
@@ -922,6 +939,37 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         }
     }
     println!("{}", coord.metrics().snapshot().render());
+    obs_journal_close(&journal, args)?;
+    Ok(())
+}
+
+/// `--obs-log <path>`: attach a streaming JSONL event journal (bounded
+/// in-memory ring; every event also hits the file before eviction).
+fn obs_journal(args: &Args) -> anyhow::Result<Option<Arc<Journal>>> {
+    match args.get("obs-log") {
+        Some(path) => {
+            let j = Journal::with_writer(
+                elastic_gen::obs::DEFAULT_RING_CAP,
+                std::path::Path::new(path),
+            )?;
+            Ok(Some(Arc::new(j)))
+        }
+        None => Ok(None),
+    }
+}
+
+/// Flush the `--obs-log` journal and report what it captured.
+fn obs_journal_close(journal: &Option<Arc<Journal>>, path_args: &Args) -> anyhow::Result<()> {
+    if let Some(j) = journal {
+        j.flush()?;
+        println!(
+            "obs journal: {} event(s) recorded to {} ({} in ring, {} evicted)",
+            j.recorded(),
+            path_args.get_or("obs-log", "?"),
+            j.len(),
+            j.evicted()
+        );
+    }
     Ok(())
 }
 
@@ -995,11 +1043,13 @@ fn cmd_serve_adapt(args: &Args) -> anyhow::Result<()> {
         .find(|a| a.name == artifact)
         .ok_or_else(|| anyhow::anyhow!("unknown synthetic artifact '{artifact}'"))?
         .input_len;
+    let journal = obs_journal(args)?;
     let config = CoordinatorConfig {
         shards: args.get_usize("shards", 2),
         queue_cap: args.get_usize("queue-cap", 256),
         batch_max: args.get_usize("batch-max", 16),
         engine: EngineSpec::Synthetic(spec_syn),
+        journal: journal.clone(),
         ..CoordinatorConfig::default()
     };
     let coord = Arc::new(Coordinator::start(config)?);
@@ -1025,6 +1075,7 @@ fn cmd_serve_adapt(args: &Args) -> anyhow::Result<()> {
     );
 
     let mut cfg = AdaptConfig::new(spec, deployed);
+    cfg.journal = journal.clone();
     cfg.drift_threshold = args.get_f64("drift-threshold", 0.5);
     cfg.margin = Joules(args.get_f64("margin-mj", 0.0) * 1e-3);
     cfg.amortize_horizon = Secs(args.get_f64("amortize-s", 60.0));
@@ -1043,6 +1094,7 @@ fn cmd_serve_adapt(args: &Args) -> anyhow::Result<()> {
             workers,
             mode,
             threads: (jobs / workers).max(1),
+            journal: journal.clone(),
             ..DistOpts::default()
         });
     }
@@ -1083,6 +1135,8 @@ fn cmd_serve_adapt(args: &Args) -> anyhow::Result<()> {
     // background while the foreground serves a second stream
     let stop = Arc::new(AtomicBool::new(false));
     let interval = Duration::from_millis(args.get_usize("interval-ms", 100) as u64);
+    // kept for the post-switch probe: `spawn` consumes the supervisor
+    let probe_cfg = cfg.clone();
     let handle = Supervisor::new(cfg).spawn(
         Arc::clone(&coord),
         artifact.clone(),
@@ -1162,7 +1216,51 @@ fn cmd_serve_adapt(args: &Args) -> anyhow::Result<()> {
     if drain_rejects > 0 {
         println!("foreground stream absorbed {drain_rejects} drain reject(s) while switching");
     }
+
+    // post-switch probe: one forced re-evaluation from the *switched*
+    // deployment's point of view.  The winner just became the baseline,
+    // so the same drifted trace nets about -amortized, below any
+    // non-negative margin — a recorded *rejection*, so a single smoke
+    // run leaves both verdicts in the decision log and the journal.
+    if inject {
+        let rebased = outcomes
+            .iter()
+            .rev()
+            .find(|o| o.state == AdaptState::Switched)
+            .and_then(|o| match (&o.decision, &o.fit.fitted) {
+                (Some(d), Some(w)) => Some((d.to.clone(), w.clone())),
+                _ => None,
+            });
+        if let Some((to, fitted)) = rebased {
+            let mut pc = probe_cfg;
+            pc.deployed = to;
+            pc.spec.workload = fitted;
+            // the switch rebaselined and cleared the ring; re-inject the
+            // same deterministic trace the supervisor decided on
+            let drifted = Workload::Poisson {
+                mean_gap: Secs(2.5),
+            };
+            let trace = drifted.arrivals(512, &mut Rng::new(11));
+            coord.metrics().reset_arrivals(&artifact);
+            for t in &trace {
+                coord.metrics().record_arrival_at(&artifact, t.value());
+            }
+            let probe = Supervisor::new(pc).probe(&coord, &artifact);
+            match &probe.decision {
+                Some(d) => println!(
+                    "post-switch probe: {} -> {} mJ/item (net gain {}) => {}",
+                    num(d.before.mj(), 4),
+                    num(d.after.mj(), 4),
+                    num(d.net_gain.mj(), 4),
+                    if d.switch { "switch" } else { "keep" },
+                ),
+                None => println!("post-switch probe: no feasible alternative"),
+            }
+        }
+    }
+
     println!("{}", coord.metrics().snapshot().render());
+    obs_journal_close(&journal, args)?;
 
     if args.has_flag("expect-switch") {
         let events = coord.metrics().switch_events();
@@ -1173,6 +1271,30 @@ fn cmd_serve_adapt(args: &Args) -> anyhow::Result<()> {
         );
         println!("adaptive cycle complete: observe -> fit -> sweep -> switch verified");
     }
+    Ok(())
+}
+
+/// `elastic-gen obs <journal.jsonl>`: render a recorded event journal —
+/// span-chain completeness, per-artifact latency/exec histograms, the
+/// adapt-cycle decision trail, swap phases, and worker lifecycle events.
+fn cmd_obs(args: &Args) -> anyhow::Result<()> {
+    let path = args.positional.get(1).ok_or_else(|| {
+        anyhow::anyhow!("usage: elastic-gen obs <journal.jsonl>  (see serve --obs-log)")
+    })?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading journal '{path}': {e}"))?;
+    let mut events = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = elastic_gen::util::json::parse(line)
+            .map_err(|e| anyhow::anyhow!("{path}:{}: bad JSON: {e}", i + 1))?;
+        let ev = elastic_gen::obs::wire::decode(&j)
+            .map_err(|e| anyhow::anyhow!("{path}:{}: {e}", i + 1))?;
+        events.push(ev);
+    }
+    println!("{}", elastic_gen::obs::render(&events));
     Ok(())
 }
 

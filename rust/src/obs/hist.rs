@@ -1,0 +1,340 @@
+//! Fixed-memory log-bucketed latency histogram.
+//!
+//! `Metrics` used to keep every latency sample in a per-artifact
+//! `Vec<f64>` — O(requests) memory on a server whose north star is
+//! millions of users.  `Hist` replaces those vectors with a fixed
+//! 256-bucket geometric layout: bucket 0 absorbs everything at or below
+//! 1 ns, and each later bucket spans a factor of 2^(1/4) (four buckets
+//! per octave), reaching past 10^10 s at the top.  Quantiles are read
+//! back by linear interpolation inside the owning bucket, so p50/p90/p99
+//! carry at most ~9% relative error while count/sum/min/max — and
+//! therefore mean and std — stay exact.
+//!
+//! Histograms are mergeable (`merge`), which is what lets per-shard and
+//! per-worker recordings fold into one fleet view without shipping raw
+//! samples, and the snapshot surface (`summary`) is the same
+//! `Option<Summary>` the old vectors produced, so `MetricsSnapshot`
+//! consumers did not have to change.
+
+use crate::util::stats::Summary;
+
+/// Bucket count; fixed, so `size_of::<Hist>()` is the whole story.
+pub const BUCKETS: usize = 256;
+
+/// Upper edge of bucket 0 (seconds): nothing we time resolves below 1 ns.
+const LO: f64 = 1e-9;
+
+/// Sub-buckets per octave; 2^(1/4) ≈ 1.19 per step bounds the relative
+/// quantile error at the bucket width.
+const PER_OCTAVE: f64 = 4.0;
+
+/// Fixed-memory latency histogram with exact count/sum/min/max and
+/// bucket-interpolated quantiles.
+#[derive(Debug, Clone)]
+pub struct Hist {
+    count: u64,
+    dropped: u64,
+    sum: f64,
+    sumsq: f64,
+    min: f64,
+    max: f64,
+    buckets: [u64; BUCKETS],
+}
+
+impl Default for Hist {
+    fn default() -> Hist {
+        Hist::new()
+    }
+}
+
+impl Hist {
+    pub fn new() -> Hist {
+        Hist {
+            count: 0,
+            dropped: 0,
+            sum: 0.0,
+            sumsq: 0.0,
+            // ±inf sentinels so the first sample seeds min/max; `summary`
+            // never leaks them (empty -> None)
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            buckets: [0; BUCKETS],
+        }
+    }
+
+    fn index(v: f64) -> usize {
+        if v <= LO {
+            return 0;
+        }
+        let i = ((v / LO).log2() * PER_OCTAVE).floor() as isize + 1;
+        i.clamp(0, BUCKETS as isize - 1) as usize
+    }
+
+    /// Value bounds of bucket `i` (geometric except bucket 0).
+    fn bounds(i: usize) -> (f64, f64) {
+        if i == 0 {
+            return (0.0, LO);
+        }
+        let lo = LO * 2f64.powf((i as f64 - 1.0) / PER_OCTAVE);
+        let hi = LO * 2f64.powf(i as f64 / PER_OCTAVE);
+        (lo, hi)
+    }
+
+    /// Record one sample (seconds).  Non-finite samples are dropped and
+    /// counted, mirroring `Summary::of`; negatives clamp to 0 (a latency
+    /// below the clock's resolution, not a defect worth panicking over).
+    pub fn record(&mut self, v: f64) {
+        if !v.is_finite() {
+            self.dropped += 1;
+            return;
+        }
+        let v = v.max(0.0);
+        self.count += 1;
+        self.sum += v;
+        self.sumsq += v * v;
+        if v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+        if let Some(b) = self.buckets.get_mut(Self::index(v)) {
+            *b += 1;
+        }
+    }
+
+    /// Fold another histogram in (shard/worker aggregation).
+    pub fn merge(&mut self, o: &Hist) {
+        self.count += o.count;
+        self.dropped += o.dropped;
+        self.sum += o.sum;
+        self.sumsq += o.sumsq;
+        if o.min < self.min {
+            self.min = o.min;
+        }
+        if o.max > self.max {
+            self.max = o.max;
+        }
+        for (mine, theirs) in self.buckets.iter_mut().zip(o.buckets.iter()) {
+            *mine += theirs;
+        }
+    }
+
+    /// Finite samples recorded (exact).
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Non-finite samples dropped (exact).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// True when nothing was ever recorded (dropped included).
+    pub fn is_empty(&self) -> bool {
+        self.count == 0 && self.dropped == 0
+    }
+
+    /// Largest sample (exact); 0.0 when empty.
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Bucket-interpolated quantile, `p` in [0, 100].  The rank
+    /// convention matches `stats::percentile_sorted` (rank p/100·(n-1));
+    /// the returned value is clamped into [min, max] so a single-valued
+    /// series reads back its exact value.
+    pub fn quantile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = p.clamp(0.0, 100.0) / 100.0 * (self.count - 1) as f64;
+        let mut cum = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            let next = cum + n;
+            if (next as f64) > rank {
+                let (lo, hi) = Self::bounds(i);
+                // mid-sample offset: k samples occupy the bucket at
+                // fractions (0.5, 1.5, …)/k of its width
+                let frac = ((rank - cum as f64 + 0.5) / n as f64).clamp(0.0, 1.0);
+                return (lo + (hi - lo) * frac).clamp(self.min, self.max);
+            }
+            cum = next;
+        }
+        self.max()
+    }
+
+    /// `Option<Summary>`-compatible snapshot: `None` before the first
+    /// `record` call, an all-zero summary when every sample was dropped
+    /// as non-finite — the exact contract `Summary::of` gave the old
+    /// sample vectors.  mean/std/min/max are exact; p50/p90/p99 are
+    /// bucket-interpolated.
+    pub fn summary(&self) -> Option<Summary> {
+        if self.is_empty() {
+            return None;
+        }
+        if self.count == 0 {
+            return Some(Summary {
+                n: 0,
+                dropped: self.dropped as usize,
+                mean: 0.0,
+                std: 0.0,
+                min: 0.0,
+                p50: 0.0,
+                p90: 0.0,
+                p99: 0.0,
+                max: 0.0,
+            });
+        }
+        let n = self.count as f64;
+        let mean = self.sum / n;
+        let var = (self.sumsq / n - mean * mean).max(0.0);
+        Some(Summary {
+            n: self.count as usize,
+            dropped: self.dropped as usize,
+            mean,
+            std: var.sqrt(),
+            min: self.min,
+            p50: self.quantile(50.0),
+            p90: self.quantile(90.0),
+            p99: self.quantile(99.0),
+            max: self.max,
+        })
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::indexing_slicing)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats::percentile_sorted;
+
+    #[test]
+    fn empty_and_single_value() {
+        let mut h = Hist::new();
+        assert!(h.summary().is_none());
+        assert_eq!(h.quantile(50.0), 0.0);
+        h.record(0.0035);
+        let s = h.summary().unwrap();
+        assert_eq!(s.n, 1);
+        assert!((s.mean - 0.0035).abs() < 1e-15);
+        assert_eq!(s.min, 0.0035);
+        assert_eq!(s.max, 0.0035);
+        // single value: clamped interpolation reads back exactly
+        assert_eq!(s.p50, 0.0035);
+        assert_eq!(s.p99, 0.0035);
+    }
+
+    #[test]
+    fn mean_and_std_are_exact() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut h = Hist::new();
+        for &x in &xs {
+            h.record(x);
+        }
+        let s = h.summary().unwrap();
+        assert!((s.mean - 5.0).abs() < 1e-12);
+        assert!((s.std - 2.0).abs() < 1e-12);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 9.0);
+        assert_eq!(s.n, 8);
+    }
+
+    #[test]
+    fn quantiles_track_exact_percentiles() {
+        // log-uniform latencies over ~4 decades: the realistic worst case
+        // for a geometric layout
+        let mut rng = Rng::new(42);
+        let samples: Vec<f64> = (0..20_000)
+            .map(|_| 1e-5 * 10f64.powf(rng.f64() * 4.0))
+            .collect();
+        let mut h = Hist::new();
+        for &x in &samples {
+            h.record(x);
+        }
+        let mut sorted = samples.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        for p in [50.0, 90.0, 99.0] {
+            let exact = percentile_sorted(&sorted, p);
+            let approx = h.quantile(p);
+            let rel = (approx - exact).abs() / exact;
+            assert!(rel < 0.10, "p{p}: exact {exact:.6e}, approx {approx:.6e}, rel {rel:.3}");
+        }
+        assert_eq!(h.summary().unwrap().max, sorted[sorted.len() - 1]);
+    }
+
+    #[test]
+    fn merge_equals_combined_recording() {
+        let mut rng = Rng::new(7);
+        let xs: Vec<f64> = (0..500).map(|_| rng.f64() * 0.01).collect();
+        let (a_half, b_half) = xs.split_at(250);
+        let mut a = Hist::new();
+        let mut b = Hist::new();
+        let mut all = Hist::new();
+        for &x in a_half {
+            a.record(x);
+            all.record(x);
+        }
+        for &x in b_half {
+            b.record(x);
+            all.record(x);
+        }
+        a.merge(&b);
+        let (sa, sc) = (a.summary().unwrap(), all.summary().unwrap());
+        assert_eq!(sa.n, sc.n);
+        assert_eq!(sa.min, sc.min);
+        assert_eq!(sa.max, sc.max);
+        assert!((sa.mean - sc.mean).abs() < 1e-15);
+        assert_eq!(sa.p50, sc.p50);
+        assert_eq!(sa.p99, sc.p99);
+    }
+
+    #[test]
+    fn non_finite_dropped_and_counted() {
+        let mut h = Hist::new();
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        let s = h.summary().unwrap();
+        assert_eq!(s.n, 0);
+        assert_eq!(s.dropped, 2);
+        assert_eq!(s.mean, 0.0);
+        h.record(1.0);
+        let s = h.summary().unwrap();
+        assert_eq!(s.n, 1);
+        assert_eq!(s.dropped, 2);
+        assert!((s.mean - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn extremes_land_in_end_buckets_without_panicking() {
+        let mut h = Hist::new();
+        h.record(0.0);
+        h.record(-1.0); // clamps to 0
+        h.record(1e-12);
+        h.record(1e12);
+        let s = h.summary().unwrap();
+        assert_eq!(s.n, 4);
+        assert_eq!(s.min, 0.0);
+        assert_eq!(s.max, 1e12);
+    }
+
+    #[test]
+    fn memory_is_fixed() {
+        // the whole point: recording more samples allocates nothing
+        let before = std::mem::size_of::<Hist>();
+        let mut h = Hist::new();
+        for i in 0..100_000 {
+            h.record(i as f64 * 1e-6);
+        }
+        assert_eq!(std::mem::size_of_val(&h), before);
+        assert_eq!(h.count(), 100_000);
+    }
+}

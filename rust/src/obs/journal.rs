@@ -1,0 +1,414 @@
+//! Bounded, poison-safe structured event journal.
+//!
+//! Every energy/latency decision the serving + dist stack makes leaves a
+//! typed event here: request spans (`SpanEvent`, one per lifecycle
+//! stage), supervisor cycles (`CycleEvent`, rejected switch decisions
+//! included with their margin arithmetic), coordinator swap phases
+//! (`SwapEvent`) and dist-driver worker lifecycle (`WorkerEvent`).
+//!
+//! The in-memory ring is bounded (`cap`, oldest evicted first) so a
+//! long-lived server cannot leak; when a JSONL writer is attached
+//! (`with_writer`, the `--obs-log` flag) every event is *also* streamed
+//! to disk before eviction, so the on-disk journal is complete even when
+//! the ring has wrapped.  Locks go through `util::sync::locked` — a
+//! panicking recorder must not take observability down with it — and
+//! the ring and writer are guarded separately so neither is ever
+//! acquired under the other.
+//!
+//! Timestamps are seconds since the journal's creation, stamped here
+//! (`record`) rather than by callers: the parity-scoped dist driver can
+//! then emit lifecycle events without touching a wall clock itself.
+//! Span ids reuse the coordinator's deterministic request counter — no
+//! entropy anywhere in the layer, so parity tests stay bit-identical.
+
+use crate::util::sync::locked;
+use anyhow::Context;
+use std::collections::VecDeque;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Default bound on the in-memory event ring.
+pub const DEFAULT_RING_CAP: usize = 16_384;
+
+/// One stage of a request's lifecycle.  A served request emits the chain
+/// submit → enqueue → exec → done under one `id`; an admission loss
+/// emits a single terminal `reject`/`drain-reject` with `id` 0 (the
+/// request never earned an id).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanEvent {
+    /// Seconds since the journal epoch (stamped by `Journal::record`).
+    pub t_s: f64,
+    /// Trace id — the coordinator's request id (deterministic counter).
+    pub id: u64,
+    /// submit | enqueue | exec | done | reject | drain-reject.
+    pub stage: String,
+    pub artifact: String,
+    pub shard: Option<usize>,
+    /// Stamped on `exec`: seconds spent queued before batch pickup.
+    pub queue_wait_s: Option<f64>,
+    /// Stamped on `done`: engine execution seconds.
+    pub exec_s: Option<f64>,
+    /// Stamped on `exec`: how many requests the micro-batch drained.
+    pub batch: Option<usize>,
+    /// Stamped on `done`: engine success or failure.
+    pub ok: Option<bool>,
+}
+
+impl SpanEvent {
+    pub fn new(id: u64, stage: &str, artifact: &str) -> SpanEvent {
+        SpanEvent {
+            t_s: 0.0,
+            id,
+            stage: stage.to_string(),
+            artifact: artifact.to_string(),
+            shard: None,
+            queue_wait_s: None,
+            exec_s: None,
+            batch: None,
+            ok: None,
+        }
+    }
+}
+
+/// One supervisor cycle: what the drift monitor observed and — when a
+/// sweep ran — the full switch-decision arithmetic, rejections included
+/// (a decision that *doesn't* fire is exactly what anti-flapping
+/// analysis needs to see).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CycleEvent {
+    pub t_s: f64,
+    /// Monotonic cycle counter within this supervisor.
+    pub cycle: u64,
+    /// AdaptState name at the end of the cycle.
+    pub state: String,
+    pub artifact: String,
+    pub drift: Option<f64>,
+    /// Fitted interarrival family, when the cycle got as far as fitting.
+    pub family: Option<String>,
+    /// Background sweep wall-clock seconds, when a sweep ran.
+    pub sweep_s: Option<f64>,
+    /// True when the cycle produced a switch decision (either way).
+    pub decided: bool,
+    /// True when that decision committed a swap.
+    pub switched: bool,
+    pub to: Option<String>,
+    pub before_mj: Option<f64>,
+    pub after_mj: Option<f64>,
+    pub reconfig_mj: Option<f64>,
+    pub amortized_mj: Option<f64>,
+    /// before - after - amortized: the quantity the margin gates.
+    pub net_gain_mj: Option<f64>,
+    pub margin_mj: Option<f64>,
+}
+
+impl CycleEvent {
+    pub fn new(cycle: u64, state: &str, artifact: &str) -> CycleEvent {
+        CycleEvent {
+            t_s: 0.0,
+            cycle,
+            state: state.to_string(),
+            artifact: artifact.to_string(),
+            drift: None,
+            family: None,
+            sweep_s: None,
+            decided: false,
+            switched: false,
+            to: None,
+            before_mj: None,
+            after_mj: None,
+            reconfig_mj: None,
+            amortized_mj: None,
+            net_gain_mj: None,
+            margin_mj: None,
+        }
+    }
+}
+
+/// One phase of a drain-and-switch engine swap.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SwapEvent {
+    pub t_s: f64,
+    /// drain-start | engine-built | aborted | committed.
+    pub phase: String,
+    /// Target candidate/config description.
+    pub to: String,
+    /// Set on per-shard phases (engine-built / aborted).
+    pub shard: Option<usize>,
+    /// Set on committed: requests bounced during this drain window.
+    pub drain_rejected: Option<u64>,
+    pub detail: Option<String>,
+}
+
+impl SwapEvent {
+    pub fn new(phase: &str, to: &str) -> SwapEvent {
+        SwapEvent {
+            t_s: 0.0,
+            phase: phase.to_string(),
+            to: to.to_string(),
+            shard: None,
+            drain_rejected: None,
+            detail: None,
+        }
+    }
+}
+
+/// One dist-driver worker lifecycle transition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerEvent {
+    pub t_s: f64,
+    /// spawn | exit | timeout | reassign | quarantine.
+    pub kind: String,
+    /// Shard index the worker was executing.
+    pub shard: usize,
+    /// Subprocess attempt number, when attributable to one.
+    pub attempt: Option<usize>,
+    /// Failure text / quarantine cause.
+    pub detail: Option<String>,
+}
+
+impl WorkerEvent {
+    pub fn new(kind: &str, shard: usize) -> WorkerEvent {
+        WorkerEvent {
+            t_s: 0.0,
+            kind: kind.to_string(),
+            shard,
+            attempt: None,
+            detail: None,
+        }
+    }
+}
+
+/// Any journal event (the ring's element type; see `obs::wire` for the
+/// schema-tagged codecs).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    Span(SpanEvent),
+    Cycle(CycleEvent),
+    Swap(SwapEvent),
+    Worker(WorkerEvent),
+}
+
+impl Event {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::Span(_) => "span",
+            Event::Cycle(_) => "cycle",
+            Event::Swap(_) => "swap",
+            Event::Worker(_) => "worker",
+        }
+    }
+
+    pub fn t_s(&self) -> f64 {
+        match self {
+            Event::Span(e) => e.t_s,
+            Event::Cycle(e) => e.t_s,
+            Event::Swap(e) => e.t_s,
+            Event::Worker(e) => e.t_s,
+        }
+    }
+
+    /// Stamp an unset (0.0) timestamp — the `record_switch(at_s == 0.0)`
+    /// convention, so replay/test events with explicit times pass
+    /// through untouched.
+    fn stamp(&mut self, t: f64) {
+        let slot = match self {
+            Event::Span(e) => &mut e.t_s,
+            Event::Cycle(e) => &mut e.t_s,
+            Event::Swap(e) => &mut e.t_s,
+            Event::Worker(e) => &mut e.t_s,
+        };
+        if *slot == 0.0 {
+            *slot = t;
+        }
+    }
+}
+
+/// Thread-safe bounded event journal with optional JSONL streaming.
+#[derive(Debug)]
+pub struct Journal {
+    start: Instant,
+    cap: usize,
+    ring: Mutex<VecDeque<Event>>,
+    writer: Mutex<Option<BufWriter<File>>>,
+    recorded: AtomicU64,
+    evicted: AtomicU64,
+    write_errors: AtomicU64,
+}
+
+impl Journal {
+    /// In-memory journal bounded at `cap` events.
+    pub fn new(cap: usize) -> Journal {
+        Journal {
+            start: Instant::now(),
+            cap: cap.max(1),
+            ring: Mutex::new(VecDeque::new()),
+            writer: Mutex::new(None),
+            recorded: AtomicU64::new(0),
+            evicted: AtomicU64::new(0),
+            write_errors: AtomicU64::new(0),
+        }
+    }
+
+    /// Journal that additionally streams every event to `path` as JSONL
+    /// (one schema-tagged object per line) — the `--obs-log` sink.
+    pub fn with_writer(cap: usize, path: &Path) -> anyhow::Result<Journal> {
+        let file = File::create(path)
+            .with_context(|| format!("creating obs log {}", path.display()))?;
+        let j = Journal::new(cap);
+        *locked(&j.writer) = Some(BufWriter::new(file));
+        Ok(j)
+    }
+
+    /// Seconds since the journal epoch.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Record one event: stamp its timestamp (if unset), append to the
+    /// bounded ring, and stream it to the writer when one is attached.
+    /// Never blocks on anything but the two short internal locks and
+    /// never panics — a full ring evicts, a failed write counts.
+    pub fn record(&self, mut ev: Event) {
+        ev.stamp(self.elapsed_s());
+        self.recorded.fetch_add(1, Ordering::Relaxed);
+        let line = super::wire::encode(&ev).dump();
+        {
+            let mut ring = locked(&self.ring);
+            while ring.len() >= self.cap {
+                ring.pop_front();
+                self.evicted.fetch_add(1, Ordering::Relaxed);
+            }
+            ring.push_back(ev);
+        }
+        let mut w = locked(&self.writer);
+        if let Some(out) = w.as_mut() {
+            if writeln!(out, "{line}").is_err() {
+                self.write_errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Current ring contents, oldest first.
+    pub fn events(&self) -> Vec<Event> {
+        locked(&self.ring).iter().cloned().collect()
+    }
+
+    /// Events currently held in the ring (≤ cap).
+    pub fn len(&self) -> usize {
+        locked(&self.ring).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Ring capacity.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Total events ever recorded.
+    pub fn recorded(&self) -> u64 {
+        self.recorded.load(Ordering::Relaxed)
+    }
+
+    /// Events evicted from the ring to stay under cap (still on disk
+    /// when a writer is attached).
+    pub fn evicted(&self) -> u64 {
+        self.evicted.load(Ordering::Relaxed)
+    }
+
+    /// Flush the JSONL writer and surface any write failures swallowed
+    /// on the record path.
+    pub fn flush(&self) -> anyhow::Result<()> {
+        {
+            let mut w = locked(&self.writer);
+            if let Some(out) = w.as_mut() {
+                out.flush().context("flushing obs log")?;
+            }
+        }
+        let errs = self.write_errors.load(Ordering::Relaxed);
+        anyhow::ensure!(errs == 0, "{errs} obs log write(s) failed");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::indexing_slicing)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn ring_is_bounded_and_counts_evictions() {
+        let j = Journal::new(16);
+        for i in 0..100 {
+            j.record(Event::Span(SpanEvent::new(i, "submit", "a")));
+        }
+        assert_eq!(j.len(), 16);
+        assert_eq!(j.recorded(), 100);
+        assert_eq!(j.evicted(), 84);
+        let evs = j.events();
+        // oldest evicted: ring holds ids 84..=99
+        match &evs[0] {
+            Event::Span(s) => assert_eq!(s.id, 84),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn record_stamps_unset_timestamps_monotonically() {
+        let j = Journal::new(8);
+        j.record(Event::Span(SpanEvent::new(1, "submit", "a")));
+        j.record(Event::Span(SpanEvent::new(1, "enqueue", "a")));
+        let evs = j.events();
+        assert!(evs[0].t_s() >= 0.0);
+        assert!(evs[1].t_s() >= evs[0].t_s());
+        // an explicit timestamp passes through untouched
+        let mut pre = SpanEvent::new(2, "exec", "a");
+        pre.t_s = 123.5;
+        j.record(Event::Span(pre));
+        assert_eq!(j.events()[2].t_s(), 123.5);
+    }
+
+    #[test]
+    fn journal_survives_a_poisoned_ring_lock() {
+        let j = Arc::new(Journal::new(8));
+        j.record(Event::Worker(WorkerEvent::new("spawn", 0)));
+        let j2 = j.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = j2.ring.lock().unwrap();
+            panic!("deliberate poison");
+        })
+        .join();
+        assert!(j.ring.is_poisoned());
+        j.record(Event::Worker(WorkerEvent::new("exit", 0)));
+        assert_eq!(j.len(), 2);
+        assert!(j.flush().is_ok());
+    }
+
+    #[test]
+    fn writer_streams_past_ring_eviction() {
+        let dir = std::env::temp_dir().join(format!("elastic-obs-journal-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("j.jsonl");
+        let j = Journal::with_writer(4, &path).unwrap();
+        for i in 0..20 {
+            j.record(Event::Span(SpanEvent::new(i, "submit", "a")));
+        }
+        j.flush().unwrap();
+        assert_eq!(j.len(), 4, "ring stays bounded");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+        assert_eq!(lines.len(), 20, "the file keeps what the ring evicts");
+        for line in lines {
+            let parsed = crate::util::json::parse(line).unwrap();
+            super::super::wire::decode(&parsed).unwrap();
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

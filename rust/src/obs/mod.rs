@@ -1,0 +1,34 @@
+//! Structured observability: bounded histograms, the event journal, and
+//! its report renderer.
+//!
+//! Three pieces, all fixed-memory and panic-free (this module is serving
+//! scope under the repo linter):
+//!
+//! * [`hist::Hist`] — 256-bucket log-scaled latency histograms with
+//!   exact count/mean/std/min/max and bucket-interpolated p50/p90/p99;
+//!   they replace the unbounded per-request sample vectors `Metrics`
+//!   used to keep.
+//! * [`journal::Journal`] — a bounded, poison-safe ring of typed events
+//!   ([`journal::SpanEvent`] request lifecycles, [`journal::CycleEvent`]
+//!   supervisor decisions including rejections, [`journal::SwapEvent`]
+//!   drain-and-switch phases, [`journal::WorkerEvent`] dist worker
+//!   lifecycle) with optional JSONL streaming (`--obs-log`).
+//! * [`report`] — renders a decoded journal into the `elastic-gen obs`
+//!   tables: per-stage latency, switch-decision audit, worker timeline.
+//!
+//! The JSONL journal is a wire format; [`wire`] holds the schema-tagged
+//! codecs and lives under the same lint wire rules as the dist shard
+//! protocol.
+
+#![warn(clippy::unwrap_used, clippy::indexing_slicing)]
+
+pub mod hist;
+pub mod journal;
+pub mod report;
+pub mod wire;
+
+pub use hist::Hist;
+pub use journal::{
+    CycleEvent, Event, Journal, SpanEvent, SwapEvent, WorkerEvent, DEFAULT_RING_CAP,
+};
+pub use report::{chains, render, ChainSummary};

@@ -1,0 +1,364 @@
+//! Render a decoded journal into the `elastic-gen obs` report: per-stage
+//! latency breakdowns (rebuilt into `Hist`s, so the report's quantiles
+//! use the same bucket scheme the live metrics do), a switch-decision
+//! audit table with the full margin arithmetic (rejections included —
+//! that is the whole point of recording them), and the dist worker
+//! lifecycle timeline.
+//!
+//! Everything here is pure over `&[Event]` and returns `String`s; the
+//! unscoped CLI layer owns the actual printing (this module is serving
+//! scope, where `obs-print` forbids direct stdout).
+
+use super::hist::Hist;
+use super::journal::Event;
+use crate::util::table::{num, Table};
+use std::collections::BTreeMap;
+
+/// Span-chain completeness over a journal: every accepted request must
+/// show the full submit → enqueue → exec → done chain under its id, and
+/// every admission loss must show a terminal reject event (id 0).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ChainSummary {
+    /// Distinct non-zero trace ids seen.
+    pub ids: usize,
+    /// Ids whose chain carries all four stages.
+    pub complete: usize,
+    /// Ids with at least one stage missing, ascending.
+    pub incomplete: Vec<u64>,
+    /// Terminal `reject` events.
+    pub rejects: usize,
+    /// Terminal `drain-reject` events.
+    pub drain_rejects: usize,
+}
+
+impl ChainSummary {
+    pub fn all_complete(&self) -> bool {
+        self.incomplete.is_empty()
+    }
+}
+
+fn stage_bit(stage: &str) -> u8 {
+    match stage {
+        "submit" => 1,
+        "enqueue" => 2,
+        "exec" => 4,
+        "done" => 8,
+        _ => 0,
+    }
+}
+
+/// Fold span events into a completeness summary.
+pub fn chains(events: &[Event]) -> ChainSummary {
+    let mut seen: BTreeMap<u64, u8> = BTreeMap::new();
+    let mut out = ChainSummary::default();
+    for ev in events {
+        let Event::Span(s) = ev else { continue };
+        match s.stage.as_str() {
+            "reject" => out.rejects += 1,
+            "drain-reject" => out.drain_rejects += 1,
+            stage if s.id != 0 => {
+                *seen.entry(s.id).or_insert(0) |= stage_bit(stage);
+            }
+            _ => {}
+        }
+    }
+    out.ids = seen.len();
+    for (id, mask) in seen {
+        if mask == 0b1111 {
+            out.complete += 1;
+        } else {
+            out.incomplete.push(id);
+        }
+    }
+    out
+}
+
+/// Per-artifact stage histograms rebuilt from span events.
+#[derive(Debug, Default)]
+struct StageHists {
+    spans: u64,
+    queue: Hist,
+    exec: Hist,
+    e2e: Hist,
+}
+
+fn ms(seconds: f64) -> String {
+    num(seconds * 1e3, 3)
+}
+
+fn opt4(x: Option<f64>) -> String {
+    match x {
+        Some(v) => num(v, 4),
+        None => "-".to_string(),
+    }
+}
+
+/// Per-artifact latency breakdown table (queue wait from `exec` spans,
+/// engine time from `done` spans, end-to-end from matched submit→done
+/// timestamps under one id).
+fn latency_breakdown(events: &[Event]) -> String {
+    // first pass: submit/done timestamps per id, for the e2e read
+    let mut submit_t: BTreeMap<u64, f64> = BTreeMap::new();
+    for ev in events {
+        let Event::Span(s) = ev else { continue };
+        if s.id != 0 && s.stage == "submit" {
+            submit_t.insert(s.id, s.t_s);
+        }
+    }
+    let mut per: BTreeMap<String, StageHists> = BTreeMap::new();
+    for ev in events {
+        let Event::Span(s) = ev else { continue };
+        if s.id == 0 {
+            continue;
+        }
+        let slot = per.entry(s.artifact.clone()).or_default();
+        match s.stage.as_str() {
+            "submit" => slot.spans += 1,
+            "exec" => {
+                if let Some(q) = s.queue_wait_s {
+                    slot.queue.record(q);
+                }
+            }
+            "done" => {
+                if let Some(x) = s.exec_s {
+                    slot.exec.record(x);
+                }
+                if let Some(t0) = submit_t.get(&s.id) {
+                    slot.e2e.record(s.t_s - t0);
+                }
+            }
+            _ => {}
+        }
+    }
+    if per.is_empty() {
+        return "no request spans in the journal\n".to_string();
+    }
+    let mut t = Table::new(&[
+        "artifact", "spans", "queue p50", "queue p99", "exec p50", "exec p99", "e2e p50",
+        "e2e p99", "e2e max",
+    ])
+    .with_title("Per-stage latency (ms)");
+    for (artifact, h) in &per {
+        t.row(&[
+            artifact.clone(),
+            h.spans.to_string(),
+            ms(h.queue.quantile(50.0)),
+            ms(h.queue.quantile(99.0)),
+            ms(h.exec.quantile(50.0)),
+            ms(h.exec.quantile(99.0)),
+            ms(h.e2e.quantile(50.0)),
+            ms(h.e2e.quantile(99.0)),
+            ms(h.e2e.max()),
+        ]);
+    }
+    t.render()
+}
+
+/// Supervisor decision audit: one row per decided cycle with the margin
+/// arithmetic spelled out, plus the swap phases that followed.
+fn switch_audit(events: &[Event]) -> String {
+    let mut t = Table::new(&[
+        "t_s", "cycle", "state", "drift", "before_mj", "after_mj", "amortized_mj",
+        "net_gain_mj", "margin_mj", "to", "verdict",
+    ])
+    .with_title("Switch-decision audit");
+    let mut cycles_without_decision = 0usize;
+    for ev in events {
+        let Event::Cycle(c) = ev else { continue };
+        if !c.decided {
+            cycles_without_decision += 1;
+            continue;
+        }
+        t.row(&[
+            num(c.t_s, 2),
+            c.cycle.to_string(),
+            c.state.clone(),
+            opt4(c.drift),
+            opt4(c.before_mj),
+            opt4(c.after_mj),
+            opt4(c.amortized_mj),
+            opt4(c.net_gain_mj),
+            opt4(c.margin_mj),
+            c.to.clone().unwrap_or_else(|| "-".to_string()),
+            if c.switched { "committed" } else { "rejected" }.to_string(),
+        ]);
+    }
+    let mut out = String::new();
+    if t.is_empty() {
+        out.push_str("no switch decisions in the journal\n");
+    } else {
+        out.push_str(&t.render());
+    }
+    if cycles_without_decision > 0 {
+        out.push_str(&format!(
+            "({cycles_without_decision} cycle(s) ended before a decision: observing/fitting)\n"
+        ));
+    }
+
+    let mut phases = Table::new(&["t_s", "phase", "to", "shard", "drain_rejected", "detail"])
+        .with_title("Swap phases");
+    for ev in events {
+        let Event::Swap(s) = ev else { continue };
+        phases.row(&[
+            num(s.t_s, 2),
+            s.phase.clone(),
+            s.to.clone(),
+            s.shard.map(|x| x.to_string()).unwrap_or_else(|| "-".to_string()),
+            s.drain_rejected
+                .map(|x| x.to_string())
+                .unwrap_or_else(|| "-".to_string()),
+            s.detail.clone().unwrap_or_else(|| "-".to_string()),
+        ]);
+    }
+    if !phases.is_empty() {
+        out.push('\n');
+        out.push_str(&phases.render());
+    }
+    out
+}
+
+/// Dist-driver worker lifecycle timeline.
+fn worker_timeline(events: &[Event]) -> String {
+    let mut t = Table::new(&["t_s", "kind", "shard", "attempt", "detail"])
+        .with_title("Worker lifecycle");
+    for ev in events {
+        let Event::Worker(w) = ev else { continue };
+        t.row(&[
+            num(w.t_s, 2),
+            w.kind.clone(),
+            w.shard.to_string(),
+            w.attempt.map(|a| a.to_string()).unwrap_or_else(|| "-".to_string()),
+            w.detail.clone().unwrap_or_else(|| "-".to_string()),
+        ]);
+    }
+    if t.is_empty() {
+        String::new()
+    } else {
+        t.render()
+    }
+}
+
+/// The full `elastic-gen obs` report over a decoded journal.
+pub fn render(events: &[Event]) -> String {
+    if events.is_empty() {
+        return "journal is empty\n".to_string();
+    }
+    let mut out = String::new();
+    let c = chains(events);
+    out.push_str(&format!(
+        "journal: {} event(s); span chains: {} id(s), {} complete, {} incomplete, \
+         {} reject(s), {} drain-reject(s)\n",
+        events.len(),
+        c.ids,
+        c.complete,
+        c.incomplete.len(),
+        c.rejects,
+        c.drain_rejects,
+    ));
+    if !c.incomplete.is_empty() {
+        let shown: Vec<String> =
+            c.incomplete.iter().take(8).map(|id| id.to_string()).collect();
+        out.push_str(&format!("incomplete chain ids: {}\n", shown.join(", ")));
+    }
+    out.push('\n');
+    out.push_str(&latency_breakdown(events));
+    out.push('\n');
+    out.push_str(&switch_audit(events));
+    let workers = worker_timeline(events);
+    if !workers.is_empty() {
+        out.push('\n');
+        out.push_str(&workers);
+    }
+    out
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::indexing_slicing)]
+mod tests {
+    use super::super::journal::{CycleEvent, SpanEvent, SwapEvent, WorkerEvent};
+    use super::*;
+
+    fn span(id: u64, stage: &str, t: f64) -> Event {
+        let mut s = SpanEvent::new(id, stage, "syn.0");
+        s.t_s = t;
+        if stage == "exec" {
+            s.queue_wait_s = Some(0.001);
+            s.batch = Some(2);
+        }
+        if stage == "done" {
+            s.exec_s = Some(0.002);
+            s.ok = Some(true);
+        }
+        Event::Span(s)
+    }
+
+    fn full_chain(id: u64, t0: f64) -> Vec<Event> {
+        vec![
+            span(id, "submit", t0),
+            span(id, "enqueue", t0 + 0.0001),
+            span(id, "exec", t0 + 0.001),
+            span(id, "done", t0 + 0.003),
+        ]
+    }
+
+    #[test]
+    fn chains_classify_complete_incomplete_and_rejects() {
+        let mut evs = full_chain(1, 0.1);
+        evs.extend(full_chain(2, 0.2));
+        evs.push(span(3, "submit", 0.3)); // truncated chain
+        evs.push(span(0, "reject", 0.4));
+        evs.push(span(0, "drain-reject", 0.5));
+        let c = chains(&evs);
+        assert_eq!(c.ids, 3);
+        assert_eq!(c.complete, 2);
+        assert_eq!(c.incomplete, vec![3]);
+        assert_eq!(c.rejects, 1);
+        assert_eq!(c.drain_rejects, 1);
+        assert!(!c.all_complete());
+    }
+
+    #[test]
+    fn render_covers_every_section() {
+        let mut evs = full_chain(1, 0.1);
+        let mut rejected = CycleEvent::new(3, "sweeping", "syn.0");
+        rejected.t_s = 1.0;
+        rejected.decided = true;
+        rejected.net_gain_mj = Some(-0.5);
+        rejected.margin_mj = Some(0.0);
+        rejected.to = Some("cand-b".into());
+        evs.push(Event::Cycle(rejected));
+        let mut committed = CycleEvent::new(4, "switched", "syn.0");
+        committed.t_s = 2.0;
+        committed.decided = true;
+        committed.switched = true;
+        committed.net_gain_mj = Some(1.5);
+        committed.to = Some("cand-b".into());
+        evs.push(Event::Cycle(committed));
+        let mut swap = SwapEvent::new("committed", "cand-b");
+        swap.t_s = 2.1;
+        swap.drain_rejected = Some(2);
+        evs.push(Event::Swap(swap));
+        let mut w = WorkerEvent::new("quarantine", 1);
+        w.t_s = 3.0;
+        w.detail = Some("replay disagreement".into());
+        evs.push(Event::Worker(w));
+
+        let text = render(&evs);
+        assert!(text.contains("1 id(s), 1 complete"), "{text}");
+        assert!(text.contains("Per-stage latency"), "{text}");
+        assert!(text.contains("rejected"), "{text}");
+        assert!(text.contains("committed"), "{text}");
+        assert!(text.contains("Swap phases"), "{text}");
+        assert!(text.contains("Worker lifecycle"), "{text}");
+        assert!(text.contains("quarantine"), "{text}");
+    }
+
+    #[test]
+    fn render_empty_journal_is_graceful() {
+        assert_eq!(render(&[]), "journal is empty\n");
+        // spans only — audit and worker sections degrade, no panic
+        let text = render(&full_chain(9, 0.0));
+        assert!(text.contains("no switch decisions"), "{text}");
+        assert!(!text.contains("Worker lifecycle"), "{text}");
+    }
+}

@@ -1,0 +1,409 @@
+//! Schema-tagged JSON codecs for the journal's event types — the JSONL
+//! journal is a wire format like the dist shard protocol, and it lives
+//! under the same statically-checked hygiene rules (schema tag on every
+//! record, full two-way field coverage, encode/decode key parity; see
+//! `analysis/wire.rs` — `src/obs/wire.rs` is wire-scoped by the
+//! classifier).
+//!
+//! Conventions copied from `generator/dist/wire.rs`: every object leads
+//! with its `schema` tag and every decoder checks it; `Option` fields
+//! are absent when `None` (and decode absent-or-null back to `None`);
+//! u64 trace ids cross as strings so an id at or above 2^53 cannot be
+//! silently rounded through f64.
+
+use super::journal::{CycleEvent, Event, SpanEvent, SwapEvent, WorkerEvent};
+use crate::util::json::Json;
+use anyhow::anyhow;
+
+pub const SPAN_SCHEMA: &str = "elastic-gen/obs-span/v1";
+pub const CYCLE_SCHEMA: &str = "elastic-gen/obs-cycle/v1";
+pub const SWAP_SCHEMA: &str = "elastic-gen/obs-swap/v1";
+pub const WORKER_SCHEMA: &str = "elastic-gen/obs-worker/v1";
+
+// -- field helpers (the dist/wire.rs idiom) ----------------------------------
+
+fn num(j: &Json, k: &str) -> anyhow::Result<f64> {
+    j.get(k)
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| anyhow!("missing or non-numeric field '{k}'"))
+}
+
+fn string<'a>(j: &'a Json, k: &str) -> anyhow::Result<&'a str> {
+    j.get(k)
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("missing or non-string field '{k}'"))
+}
+
+fn boolean(j: &Json, k: &str) -> anyhow::Result<bool> {
+    j.get(k)
+        .and_then(|v| v.as_bool())
+        .ok_or_else(|| anyhow!("missing or non-bool field '{k}'"))
+}
+
+/// u64 carried as a string (an f64 would round at or above 2^53).
+fn uint64(j: &Json, k: &str) -> anyhow::Result<u64> {
+    let text = string(j, k)?;
+    text.parse::<u64>().map_err(|_| anyhow!("bad u64 field '{k}': '{text}'"))
+}
+
+fn opt_num(j: &Json, k: &str) -> anyhow::Result<Option<f64>> {
+    match j.get(k) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => v
+            .as_f64()
+            .map(Some)
+            .ok_or_else(|| anyhow!("non-numeric optional field '{k}'")),
+    }
+}
+
+fn opt_uint(j: &Json, k: &str) -> anyhow::Result<Option<usize>> {
+    match opt_num(j, k)? {
+        None => Ok(None),
+        Some(x) => {
+            anyhow::ensure!(
+                x >= 0.0 && x.fract() == 0.0,
+                "optional field '{k}' is not a whole number: {x}"
+            );
+            Ok(Some(x as usize))
+        }
+    }
+}
+
+fn opt_u64(j: &Json, k: &str) -> anyhow::Result<Option<u64>> {
+    match opt_num(j, k)? {
+        None => Ok(None),
+        Some(x) => {
+            anyhow::ensure!(
+                x >= 0.0 && x.fract() == 0.0,
+                "optional field '{k}' is not a whole number: {x}"
+            );
+            Ok(Some(x as u64))
+        }
+    }
+}
+
+fn opt_bool(j: &Json, k: &str) -> anyhow::Result<Option<bool>> {
+    match j.get(k) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => v
+            .as_bool()
+            .map(Some)
+            .ok_or_else(|| anyhow!("non-bool optional field '{k}'")),
+    }
+}
+
+fn opt_string(j: &Json, k: &str) -> anyhow::Result<Option<String>> {
+    match j.get(k) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => v
+            .as_str()
+            .map(|s| Some(s.to_string()))
+            .ok_or_else(|| anyhow!("non-string optional field '{k}'")),
+    }
+}
+
+fn check_schema(j: &Json, want: &str) -> anyhow::Result<()> {
+    let got = string(j, "schema")?;
+    anyhow::ensure!(got == want, "schema mismatch: got '{got}', want '{want}'");
+    Ok(())
+}
+
+// -- span codec --------------------------------------------------------------
+
+impl SpanEvent {
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("schema", Json::Str(SPAN_SCHEMA.to_string())),
+            ("t_s", Json::Num(self.t_s)),
+            ("id", Json::Str(self.id.to_string())),
+            ("stage", Json::Str(self.stage.clone())),
+            ("artifact", Json::Str(self.artifact.clone())),
+        ];
+        if let Some(s) = self.shard {
+            pairs.push(("shard", Json::Num(s as f64)));
+        }
+        if let Some(q) = self.queue_wait_s {
+            pairs.push(("queue_wait_s", Json::Num(q)));
+        }
+        if let Some(x) = self.exec_s {
+            pairs.push(("exec_s", Json::Num(x)));
+        }
+        if let Some(b) = self.batch {
+            pairs.push(("batch", Json::Num(b as f64)));
+        }
+        if let Some(ok) = self.ok {
+            pairs.push(("ok", Json::Bool(ok)));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<SpanEvent> {
+        check_schema(j, SPAN_SCHEMA)?;
+        Ok(SpanEvent {
+            t_s: num(j, "t_s")?,
+            id: uint64(j, "id")?,
+            stage: string(j, "stage")?.to_string(),
+            artifact: string(j, "artifact")?.to_string(),
+            shard: opt_uint(j, "shard")?,
+            queue_wait_s: opt_num(j, "queue_wait_s")?,
+            exec_s: opt_num(j, "exec_s")?,
+            batch: opt_uint(j, "batch")?,
+            ok: opt_bool(j, "ok")?,
+        })
+    }
+}
+
+// -- cycle codec -------------------------------------------------------------
+
+impl CycleEvent {
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("schema", Json::Str(CYCLE_SCHEMA.to_string())),
+            ("t_s", Json::Num(self.t_s)),
+            ("cycle", Json::Str(self.cycle.to_string())),
+            ("state", Json::Str(self.state.clone())),
+            ("artifact", Json::Str(self.artifact.clone())),
+            ("decided", Json::Bool(self.decided)),
+            ("switched", Json::Bool(self.switched)),
+        ];
+        if let Some(d) = self.drift {
+            pairs.push(("drift", Json::Num(d)));
+        }
+        if let Some(f) = &self.family {
+            pairs.push(("family", Json::Str(f.clone())));
+        }
+        if let Some(s) = self.sweep_s {
+            pairs.push(("sweep_s", Json::Num(s)));
+        }
+        if let Some(t) = &self.to {
+            pairs.push(("to", Json::Str(t.clone())));
+        }
+        if let Some(x) = self.before_mj {
+            pairs.push(("before_mj", Json::Num(x)));
+        }
+        if let Some(x) = self.after_mj {
+            pairs.push(("after_mj", Json::Num(x)));
+        }
+        if let Some(x) = self.reconfig_mj {
+            pairs.push(("reconfig_mj", Json::Num(x)));
+        }
+        if let Some(x) = self.amortized_mj {
+            pairs.push(("amortized_mj", Json::Num(x)));
+        }
+        if let Some(x) = self.net_gain_mj {
+            pairs.push(("net_gain_mj", Json::Num(x)));
+        }
+        if let Some(x) = self.margin_mj {
+            pairs.push(("margin_mj", Json::Num(x)));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<CycleEvent> {
+        check_schema(j, CYCLE_SCHEMA)?;
+        Ok(CycleEvent {
+            t_s: num(j, "t_s")?,
+            cycle: uint64(j, "cycle")?,
+            state: string(j, "state")?.to_string(),
+            artifact: string(j, "artifact")?.to_string(),
+            drift: opt_num(j, "drift")?,
+            family: opt_string(j, "family")?,
+            sweep_s: opt_num(j, "sweep_s")?,
+            decided: boolean(j, "decided")?,
+            switched: boolean(j, "switched")?,
+            to: opt_string(j, "to")?,
+            before_mj: opt_num(j, "before_mj")?,
+            after_mj: opt_num(j, "after_mj")?,
+            reconfig_mj: opt_num(j, "reconfig_mj")?,
+            amortized_mj: opt_num(j, "amortized_mj")?,
+            net_gain_mj: opt_num(j, "net_gain_mj")?,
+            margin_mj: opt_num(j, "margin_mj")?,
+        })
+    }
+}
+
+// -- swap codec --------------------------------------------------------------
+
+impl SwapEvent {
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("schema", Json::Str(SWAP_SCHEMA.to_string())),
+            ("t_s", Json::Num(self.t_s)),
+            ("phase", Json::Str(self.phase.clone())),
+            ("to", Json::Str(self.to.clone())),
+        ];
+        if let Some(s) = self.shard {
+            pairs.push(("shard", Json::Num(s as f64)));
+        }
+        if let Some(d) = self.drain_rejected {
+            pairs.push(("drain_rejected", Json::Num(d as f64)));
+        }
+        if let Some(d) = &self.detail {
+            pairs.push(("detail", Json::Str(d.clone())));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<SwapEvent> {
+        check_schema(j, SWAP_SCHEMA)?;
+        Ok(SwapEvent {
+            t_s: num(j, "t_s")?,
+            phase: string(j, "phase")?.to_string(),
+            to: string(j, "to")?.to_string(),
+            shard: opt_uint(j, "shard")?,
+            drain_rejected: opt_u64(j, "drain_rejected")?,
+            detail: opt_string(j, "detail")?,
+        })
+    }
+}
+
+// -- worker codec ------------------------------------------------------------
+
+impl WorkerEvent {
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("schema", Json::Str(WORKER_SCHEMA.to_string())),
+            ("t_s", Json::Num(self.t_s)),
+            ("kind", Json::Str(self.kind.clone())),
+            ("shard", Json::Num(self.shard as f64)),
+        ];
+        if let Some(a) = self.attempt {
+            pairs.push(("attempt", Json::Num(a as f64)));
+        }
+        if let Some(d) = &self.detail {
+            pairs.push(("detail", Json::Str(d.clone())));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<WorkerEvent> {
+        check_schema(j, WORKER_SCHEMA)?;
+        let shard_f = num(j, "shard")?;
+        anyhow::ensure!(
+            shard_f >= 0.0 && shard_f.fract() == 0.0,
+            "field 'shard' is not a whole number: {shard_f}"
+        );
+        Ok(WorkerEvent {
+            t_s: num(j, "t_s")?,
+            kind: string(j, "kind")?.to_string(),
+            shard: shard_f as usize,
+            attempt: opt_uint(j, "attempt")?,
+            detail: opt_string(j, "detail")?,
+        })
+    }
+}
+
+// -- envelope ----------------------------------------------------------------
+
+/// Encode any event as its schema-tagged JSON object (one JSONL line
+/// when dumped).
+pub fn encode(ev: &Event) -> Json {
+    match ev {
+        Event::Span(e) => e.to_json(),
+        Event::Cycle(e) => e.to_json(),
+        Event::Swap(e) => e.to_json(),
+        Event::Worker(e) => e.to_json(),
+    }
+}
+
+/// Decode one journal record by its schema tag.
+pub fn decode(j: &Json) -> anyhow::Result<Event> {
+    let schema = j
+        .get("schema")
+        .and_then(|s| s.as_str())
+        .ok_or_else(|| anyhow!("journal record without a schema tag"))?;
+    match schema {
+        SPAN_SCHEMA => Ok(Event::Span(SpanEvent::from_json(j)?)),
+        CYCLE_SCHEMA => Ok(Event::Cycle(CycleEvent::from_json(j)?)),
+        SWAP_SCHEMA => Ok(Event::Swap(SwapEvent::from_json(j)?)),
+        WORKER_SCHEMA => Ok(Event::Worker(WorkerEvent::from_json(j)?)),
+        other => Err(anyhow!("unknown journal schema '{other}'")),
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::indexing_slicing)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn round_trip(ev: &Event) {
+        let line = encode(ev).dump();
+        let back = decode(&parse(&line).unwrap()).unwrap();
+        assert_eq!(*ev, back, "round trip changed the event: {line}");
+    }
+
+    #[test]
+    fn span_round_trips_minimal_and_full() {
+        let mut e = SpanEvent::new(1, "submit", "syn.0");
+        e.t_s = 0.25;
+        round_trip(&Event::Span(e));
+        let full = SpanEvent {
+            t_s: 1.5,
+            id: u64::MAX - 1,
+            stage: "done".into(),
+            artifact: "syn.1".into(),
+            shard: Some(3),
+            queue_wait_s: Some(0.001),
+            exec_s: Some(0.002),
+            batch: Some(4),
+            ok: Some(true),
+        };
+        round_trip(&Event::Span(full));
+    }
+
+    #[test]
+    fn cycle_round_trips_rejection_arithmetic() {
+        let mut e = CycleEvent::new(7, "sweeping", "syn.0");
+        e.t_s = 2.5;
+        e.drift = Some(0.75);
+        e.family = Some("poisson".into());
+        e.sweep_s = Some(0.125);
+        e.decided = true;
+        e.switched = false;
+        e.to = Some("cand-b".into());
+        e.before_mj = Some(1.25);
+        e.after_mj = Some(1.0);
+        e.reconfig_mj = Some(10.0);
+        e.amortized_mj = Some(0.5);
+        e.net_gain_mj = Some(-0.25);
+        e.margin_mj = Some(0.0);
+        round_trip(&Event::Cycle(e));
+        let mut bare = CycleEvent::new(0, "observing", "syn.0");
+        bare.t_s = 0.5;
+        round_trip(&Event::Cycle(bare));
+    }
+
+    #[test]
+    fn swap_and_worker_round_trip() {
+        let mut s = SwapEvent::new("committed", "cand-b");
+        s.t_s = 3.25;
+        s.shard = Some(1);
+        s.drain_rejected = Some(2);
+        s.detail = Some("drain ok".into());
+        round_trip(&Event::Swap(s));
+        let mut w = WorkerEvent::new("timeout", 5);
+        w.t_s = 4.5;
+        w.attempt = Some(2);
+        w.detail = Some("worker timed out after 300s".into());
+        round_trip(&Event::Worker(w));
+    }
+
+    #[test]
+    fn decode_rejects_bad_schema_and_missing_fields() {
+        assert!(decode(&parse("{\"x\":1}").unwrap()).is_err());
+        assert!(decode(&parse("{\"schema\":\"elastic-gen/obs-span/v9\"}").unwrap()).is_err());
+        // right tag, missing required field
+        let j = parse(&format!("{{\"schema\":\"{SPAN_SCHEMA}\",\"t_s\":1.0}}")).unwrap();
+        assert!(SpanEvent::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn u64_ids_cross_exactly() {
+        let mut e = SpanEvent::new(u64::MAX, "submit", "a");
+        e.t_s = 1.0;
+        let line = e.to_json().dump();
+        let back = SpanEvent::from_json(&parse(&line).unwrap()).unwrap();
+        assert_eq!(back.id, u64::MAX);
+    }
+}

@@ -29,19 +29,20 @@
 //! and never reads the wall clock, so the whole decision pipeline is
 //! deterministic under a fixed seed and hermetically testable.
 
-use crate::coordinator::{Coordinator, EngineSpec, SwitchInfo};
+use crate::coordinator::{Coordinator, DecisionRecord, EngineSpec, SwitchInfo};
 use crate::fpga::config_ctrl::ConfigController;
 use crate::generator::{
     calibrate_and_refine, calibrate_and_refine_dist, AppSpec, CalibrateOpts, Calibration,
     DistOpts, Estimate,
 };
+use crate::obs::{CycleEvent, Event, Journal};
 use crate::util::units::{Joules, Secs};
 use crate::workload::fit::{drift, fit_trace, Family, FitReport};
 use anyhow::Result;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Supervisor knobs.
 #[derive(Debug, Clone)]
@@ -66,6 +67,9 @@ pub struct AdaptConfig {
     /// current engine spec (the modeled accelerator changes, the serving
     /// backend stays).
     pub switch_to: Option<EngineSpec>,
+    /// Event journal the supervisor emits [`CycleEvent`]s into — one per
+    /// `run_cycle`/`probe`, rejected decisions included.
+    pub journal: Option<Arc<Journal>>,
 }
 
 impl AdaptConfig {
@@ -79,6 +83,7 @@ impl AdaptConfig {
             calibrate: CalibrateOpts::default(),
             dist: None,
             switch_to: None,
+            journal: None,
         }
     }
 }
@@ -152,11 +157,13 @@ pub struct AdaptOutcome {
 /// executes the drain-and-switch.
 pub struct Supervisor {
     cfg: AdaptConfig,
+    /// Monotonic cycle counter stamped into emitted [`CycleEvent`]s.
+    cycle: u64,
 }
 
 impl Supervisor {
     pub fn new(cfg: AdaptConfig) -> Supervisor {
-        Supervisor { cfg }
+        Supervisor { cfg, cycle: 0 }
     }
 
     pub fn config(&self) -> &AdaptConfig {
@@ -268,12 +275,17 @@ impl Supervisor {
     /// rebased onto the winner + fitted workload and the arrival ring is
     /// reset; on an aborted swap the old deployment keeps serving.
     pub fn run_cycle(&mut self, coord: &Coordinator, artifact: &str) -> Result<AdaptOutcome> {
+        self.cycle += 1;
         let trace = coord.metrics().arrival_trace(artifact);
+        let started = Instant::now();
         let mut outcome = self.evaluate(&trace);
+        let cycle_s = started.elapsed().as_secs_f64();
         let Some(decision) = &outcome.decision else {
+            self.note_cycle(coord, artifact, &outcome, cycle_s, false);
             return Ok(outcome);
         };
         if !decision.switch {
+            self.note_cycle(coord, artifact, &outcome, cycle_s, false);
             return Ok(outcome);
         }
 
@@ -302,7 +314,84 @@ impl Supervisor {
             // baseline so the next cycle retries
             outcome.state = AdaptState::Draining;
         }
+        let switched = outcome.state == AdaptState::Switched;
+        self.note_cycle(coord, artifact, &outcome, cycle_s, switched);
         Ok(outcome)
+    }
+
+    /// Force one decision cycle regardless of drift: drop the hysteresis
+    /// threshold for a single `evaluate` over the live arrival ring and
+    /// record the outcome — **without executing any switch**.  Right
+    /// after a committed switch the rebased baseline makes the sweep
+    /// winner's net gain ≈ `-amortized`, so the recorded decision is a
+    /// rejection: exactly the margin-gate audit trail the smoke run and
+    /// anti-flapping analysis need.
+    pub fn probe(&mut self, coord: &Coordinator, artifact: &str) -> AdaptOutcome {
+        self.cycle += 1;
+        let saved = self.cfg.drift_threshold;
+        // any finite drift exceeds -1.0, so a successful fit always sweeps
+        self.cfg.drift_threshold = -1.0;
+        let trace = coord.metrics().arrival_trace(artifact);
+        let started = Instant::now();
+        let outcome = self.evaluate(&trace);
+        let cycle_s = started.elapsed().as_secs_f64();
+        self.cfg.drift_threshold = saved;
+        self.note_cycle(coord, artifact, &outcome, cycle_s, false);
+        outcome
+    }
+
+    /// Record one cycle's outcome into the metrics decision log and — when
+    /// a journal is attached — as a [`CycleEvent`].  Called for *every*
+    /// cycle: rejected and absent decisions are data, not noise.
+    fn note_cycle(
+        &self,
+        coord: &Coordinator,
+        artifact: &str,
+        outcome: &AdaptOutcome,
+        cycle_s: f64,
+        switched: bool,
+    ) {
+        if let Some(d) = &outcome.decision {
+            coord.metrics().record_decision(DecisionRecord {
+                at_s: 0.0,
+                to: d.to.candidate.describe(),
+                before_mj: d.before.mj(),
+                after_mj: d.after.mj(),
+                reconfig_mj: d.reconfig.mj(),
+                amortized_mj: d.amortized.mj(),
+                net_gain_mj: d.net_gain.mj(),
+                margin_mj: self.cfg.margin.mj(),
+                drift: outcome.drift,
+                switched,
+            });
+        }
+        if let Some(j) = &self.cfg.journal {
+            let mut ev = CycleEvent::new(self.cycle, outcome.state.name(), artifact);
+            ev.drift = outcome.drift;
+            if outcome.fit.family != Family::Unknown {
+                ev.family = Some(outcome.fit.family.name().to_string());
+            }
+            // the sweep dominates the cycle wall-clock; Observing/Fitting
+            // cycles never swept, so their timing is uninteresting
+            if matches!(
+                outcome.state,
+                AdaptState::Sweeping | AdaptState::Draining | AdaptState::Switched
+            ) {
+                ev.sweep_s = Some(cycle_s);
+            }
+            ev.decided = outcome.decision.is_some();
+            ev.switched = switched;
+            if let Some(d) = &outcome.decision {
+                ev.to = Some(d.to.candidate.describe());
+                ev.before_mj = Some(d.before.mj());
+                ev.after_mj = Some(d.after.mj());
+                ev.reconfig_mj = Some(d.reconfig.mj());
+                ev.amortized_mj = Some(d.amortized.mj());
+                ev.net_gain_mj = Some(d.net_gain.mj());
+                ev.margin_mj = Some(self.cfg.margin.mj());
+            }
+            j.record(Event::Cycle(ev));
+        }
     }
 
     /// Run cycles in a background thread every `interval` until `stop`

@@ -1,0 +1,349 @@
+//! Integration: the structured observability layer (`obs`), exercised
+//! against a live coordinator rather than in isolation.
+//!
+//! Covers the contracts the unit tests cannot: span-chain completeness
+//! under genuinely concurrent multi-shard load (including a hot engine
+//! swap and admission-control rejects), ring boundedness while a real
+//! server is recording, and the JSONL wire round-trip over every event
+//! type — both constructed edge cases and a journal a live run streamed
+//! to disk.
+
+use elastic_gen::coordinator::{
+    Coordinator, CoordinatorConfig, EngineSpec, SubmitError, SwitchInfo,
+};
+use elastic_gen::obs::{
+    chains, render, CycleEvent, Event, Journal, SpanEvent, SwapEvent, WorkerEvent,
+    DEFAULT_RING_CAP,
+};
+use elastic_gen::runtime::SyntheticSpec;
+use elastic_gen::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn journal_config(shards: usize, journal: &Arc<Journal>) -> CoordinatorConfig {
+    CoordinatorConfig {
+        shards,
+        queue_cap: 1024,
+        batch_max: 8,
+        engine: EngineSpec::Synthetic(SyntheticSpec::uniform(8, 16, 4, 50_000)),
+        journal: Some(Arc::clone(journal)),
+        ..CoordinatorConfig::default()
+    }
+}
+
+fn span_events(journal: &Journal) -> Vec<SpanEvent> {
+    journal
+        .events()
+        .into_iter()
+        .filter_map(|e| match e {
+            Event::Span(s) => Some(s),
+            _ => None,
+        })
+        .collect()
+}
+
+/// Concurrent multi-shard load with a hot engine swap in the middle:
+/// every accepted request leaves a complete submit → enqueue → exec →
+/// done chain under its id, every drain bounce leaves a terminal id-0
+/// event, and the swap phases bracket it all — drain-start/engine-built
+/// per shard, exactly one committed carrying the drain-reject count.
+#[test]
+fn concurrent_load_with_swap_leaves_complete_chains() {
+    const PRODUCERS: usize = 4;
+    const PER_PRODUCER: usize = 80;
+    let journal = Arc::new(Journal::new(DEFAULT_RING_CAP));
+    let coord = Arc::new(Coordinator::start(journal_config(2, &journal)).unwrap());
+
+    let handles: Vec<_> = (0..PRODUCERS)
+        .map(|p| {
+            let coord = Arc::clone(&coord);
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(p as u64 + 1);
+                let mut ids = Vec::new();
+                let mut drain_rejects = 0usize;
+                for i in 0..PER_PRODUCER {
+                    let name = format!("syn.{}", (p + i) % 8);
+                    let input: Vec<f32> = (0..16).map(|_| rng.range(-1.0, 1.0) as f32).collect();
+                    loop {
+                        match coord.submit(&name, input.clone()) {
+                            Ok(rx) => {
+                                let resp = rx.recv().expect("accepted request was dropped");
+                                assert!(resp.output.is_ok(), "inference failed mid-swap");
+                                ids.push(resp.id);
+                                break;
+                            }
+                            Err(SubmitError::Draining { .. }) => {
+                                drain_rejects += 1;
+                                std::thread::sleep(Duration::from_millis(1));
+                            }
+                            Err(e) => panic!("unexpected submit error: {e}"),
+                        }
+                    }
+                }
+                (ids, drain_rejects)
+            })
+        })
+        .collect();
+
+    // hot-swap every shard's engine mid-stream
+    std::thread::sleep(Duration::from_millis(5));
+    let report = coord
+        .swap_engines(
+            EngineSpec::Synthetic(SyntheticSpec::uniform(8, 16, 4, 5_000)),
+            SwitchInfo::new("gen-a", "gen-b"),
+        )
+        .unwrap();
+    assert!(report.all_swapped(), "swap failed: {:?}", report.failed);
+
+    let mut served_ids = Vec::new();
+    let mut bounced = 0usize;
+    for h in handles {
+        let (ids, rejects) = h.join().unwrap();
+        served_ids.extend(ids);
+        bounced += rejects;
+    }
+    assert_eq!(served_ids.len(), PRODUCERS * PER_PRODUCER);
+
+    // chain completeness: one complete chain per accepted id, a terminal
+    // id-0 event per bounce, nothing else
+    let events = journal.events();
+    let c = chains(&events);
+    assert_eq!(c.ids, served_ids.len(), "one chain per served request");
+    assert_eq!(c.complete, served_ids.len());
+    assert!(c.all_complete(), "incomplete chains: {:?}", c.incomplete);
+    assert_eq!(c.rejects, 0, "blocking submits never see QueueFull");
+    assert_eq!(c.drain_rejects, bounced, "every bounce leaves its event");
+
+    // the journal's ids are exactly the ids the producers were served
+    let mut span_ids: Vec<u64> = span_events(&journal)
+        .iter()
+        .filter(|s| s.stage == "submit")
+        .map(|s| s.id)
+        .collect();
+    span_ids.sort_unstable();
+    served_ids.sort_unstable();
+    assert_eq!(span_ids, served_ids);
+
+    // exec spans carry placement + batch context, done spans the verdict
+    for s in span_events(&journal) {
+        match s.stage.as_str() {
+            "exec" => {
+                assert!(s.shard.is_some() && s.queue_wait_s.is_some());
+                assert!(s.batch.expect("batch stamped on exec") >= 1);
+            }
+            "done" => {
+                assert!(s.exec_s.expect("exec_s stamped on done") >= 0.0);
+                assert_eq!(s.ok, Some(true));
+            }
+            _ => {}
+        }
+    }
+
+    // swap phases: drain-start + engine-built per shard, one committed
+    // carrying the same drain-reject count the metrics saw
+    let swaps: Vec<SwapEvent> = events
+        .iter()
+        .filter_map(|e| match e {
+            Event::Swap(s) => Some(s.clone()),
+            _ => None,
+        })
+        .collect();
+    let phase_count = |p: &str| swaps.iter().filter(|s| s.phase == p).count();
+    assert_eq!(phase_count("drain-start"), 2);
+    assert_eq!(phase_count("engine-built"), 2);
+    assert_eq!(phase_count("aborted"), 0);
+    let committed: Vec<&SwapEvent> = swaps.iter().filter(|s| s.phase == "committed").collect();
+    assert_eq!(committed.len(), 1);
+    assert_eq!(committed[0].to, "gen-b");
+    assert_eq!(committed[0].drain_rejected, Some(report.drain_rejected));
+    assert_eq!(
+        coord.metrics().snapshot().total_drain_rejected(),
+        bounced as u64
+    );
+
+    // the report renderer digests the whole journal without complaint
+    let text = render(&events);
+    assert!(text.contains("0 incomplete"), "{text}");
+    assert!(text.contains("Swap phases"), "{text}");
+}
+
+/// Admission-control rejects are terminal id-0 events: a full queue
+/// leaves exactly one `reject` span and no orphaned chain fragments —
+/// the bounced request never earned an id.
+#[test]
+fn queue_full_rejects_are_terminal_events_not_orphans() {
+    let journal = Arc::new(Journal::new(DEFAULT_RING_CAP));
+    let config = CoordinatorConfig {
+        shards: 1,
+        queue_cap: 1,
+        batch_max: 2,
+        engine: EngineSpec::Synthetic(SyntheticSpec::uniform(2, 16, 4, 200_000)),
+        journal: Some(Arc::clone(&journal)),
+        ..CoordinatorConfig::default()
+    };
+    let coord = Coordinator::start(config).unwrap();
+
+    let mut accepted = Vec::new();
+    let mut rejected = 0usize;
+    for _ in 0..2_000 {
+        match coord.try_submit("syn.0", vec![0.5; 16]) {
+            Ok(rx) => accepted.push(rx),
+            Err(SubmitError::QueueFull { shard, capacity }) => {
+                assert_eq!((shard, capacity), (0, 1));
+                rejected += 1;
+            }
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+        if rejected >= 16 && accepted.len() >= 16 {
+            break;
+        }
+    }
+    assert!(rejected >= 16, "tight loop on a cap-1 queue must overflow");
+    for rx in accepted.drain(..) {
+        assert!(rx.recv().expect("accepted request dropped").output.is_ok());
+    }
+
+    let events = journal.events();
+    let c = chains(&events);
+    assert_eq!(c.rejects, rejected, "one terminal event per overflow");
+    assert_eq!(c.drain_rejects, 0);
+    assert!(c.all_complete(), "incomplete chains: {:?}", c.incomplete);
+    // rejects never leak a chain stage: every non-terminal span id is
+    // non-zero, every reject id is zero
+    for s in span_events(&journal) {
+        match s.stage.as_str() {
+            "reject" | "drain-reject" => assert_eq!(s.id, 0),
+            _ => assert_ne!(s.id, 0),
+        }
+    }
+}
+
+/// The ring stays bounded while a live server records through it: `len`
+/// never exceeds `cap`, and eviction accounting is exact (a sequential
+/// run emits exactly four spans per request, nothing else).
+#[test]
+fn ring_stays_bounded_under_a_live_server() {
+    let journal = Arc::new(Journal::new(64));
+    let config = CoordinatorConfig {
+        shards: 1,
+        engine: EngineSpec::Synthetic(SyntheticSpec::uniform(2, 16, 4, 1_000)),
+        journal: Some(Arc::clone(&journal)),
+        ..CoordinatorConfig::default()
+    };
+    let coord = Coordinator::start(config).unwrap();
+    for _ in 0..100 {
+        assert!(coord.infer("syn.0", vec![0.5; 16]).unwrap().output.is_ok());
+    }
+    assert_eq!(journal.cap(), 64);
+    assert_eq!(journal.len(), 64, "ring holds exactly cap once wrapped");
+    assert_eq!(journal.recorded(), 400, "4 spans per served request");
+    assert_eq!(journal.evicted(), 400 - 64);
+    assert_eq!(journal.events().len(), 64);
+}
+
+/// `--obs-log`: the JSONL file keeps what the ring evicts.  A live run
+/// through a tiny ring still leaves a complete, decodable journal on
+/// disk — every chain intact, timestamps non-decreasing.
+#[test]
+fn jsonl_writer_preserves_full_chains_past_eviction() {
+    let dir = std::env::temp_dir().join(format!("elastic-obs-it-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("journal.jsonl");
+    let journal = Arc::new(Journal::with_writer(8, &path).unwrap());
+    let config = CoordinatorConfig {
+        shards: 1,
+        engine: EngineSpec::Synthetic(SyntheticSpec::uniform(2, 16, 4, 1_000)),
+        journal: Some(Arc::clone(&journal)),
+        ..CoordinatorConfig::default()
+    };
+    let coord = Coordinator::start(config).unwrap();
+    for _ in 0..50 {
+        assert!(coord.infer("syn.0", vec![0.5; 16]).unwrap().output.is_ok());
+    }
+    journal.flush().unwrap();
+    assert_eq!(journal.len(), 8, "ring wrapped many times over");
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut decoded = Vec::new();
+    for line in text.lines().filter(|l| !l.trim().is_empty()) {
+        let j = elastic_gen::util::json::parse(line).unwrap();
+        decoded.push(elastic_gen::obs::wire::decode(&j).unwrap());
+    }
+    assert_eq!(decoded.len(), 200, "the file keeps every recorded event");
+    let c = chains(&decoded);
+    assert_eq!((c.ids, c.complete), (50, 50));
+    assert!(c.all_complete());
+    for w in decoded.windows(2) {
+        assert!(w[1].t_s() >= w[0].t_s(), "journal order is time order");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Wire round-trip over every event type: fully-populated events —
+/// including a trace id past 2^53, where an f64 coding would silently
+/// round — and minimal all-`None` events both survive encode → dump →
+/// parse → decode bit-exactly.
+#[test]
+fn wire_roundtrip_covers_every_event_type() {
+    let mut span = SpanEvent::new(u64::MAX - 3, "exec", "syn.1");
+    span.t_s = 1.25;
+    span.shard = Some(1);
+    span.queue_wait_s = Some(0.0015);
+    span.exec_s = Some(0.002);
+    span.batch = Some(3);
+    span.ok = Some(false);
+
+    let mut cycle = CycleEvent::new(7, "sweeping", "syn.0");
+    cycle.t_s = 2.5;
+    cycle.drift = Some(49.9);
+    cycle.family = Some("poisson".into());
+    cycle.sweep_s = Some(0.75);
+    cycle.decided = true;
+    cycle.switched = false;
+    cycle.to = Some("xc7s6 clock-gate pe4".into());
+    cycle.before_mj = Some(1.5);
+    cycle.after_mj = Some(0.5);
+    cycle.reconfig_mj = Some(120.0);
+    cycle.amortized_mj = Some(0.25);
+    cycle.net_gain_mj = Some(0.75);
+    cycle.margin_mj = Some(0.75);
+
+    let mut swap = SwapEvent::new("committed", "xc7s6 clock-gate pe4");
+    swap.t_s = 3.0;
+    swap.drain_rejected = Some(1_234_567);
+    swap.detail = Some("drain window 2ms".into());
+
+    let mut worker = WorkerEvent::new("timeout", 2);
+    worker.t_s = 4.0;
+    worker.attempt = Some(2);
+    worker.detail = Some("worker timed out after 30s".into());
+
+    let full = vec![
+        Event::Span(span),
+        Event::Cycle(cycle),
+        Event::Swap(swap),
+        Event::Worker(worker),
+    ];
+    let minimal = vec![
+        Event::Span(SpanEvent::new(0, "reject", "syn.0")),
+        Event::Cycle(CycleEvent::new(1, "observing", "syn.0")),
+        Event::Swap(SwapEvent::new("drain-start", "cand")),
+        Event::Worker(WorkerEvent::new("spawn", 0)),
+    ];
+    for ev in full.iter().chain(&minimal) {
+        let line = elastic_gen::obs::wire::encode(ev).dump();
+        let parsed = elastic_gen::util::json::parse(&line).unwrap();
+        let back = elastic_gen::obs::wire::decode(&parsed).unwrap();
+        assert_eq!(&back, ev, "round-trip drift on {}", ev.kind());
+    }
+
+    // a wrong schema tag is a decode error, not a mangled event
+    let mut tagged = elastic_gen::obs::wire::encode(&minimal[0]);
+    if let elastic_gen::util::json::Json::Obj(m) = &mut tagged {
+        m.insert(
+            "schema".to_string(),
+            elastic_gen::util::json::Json::Str("elastic-gen/obs-span/v9".into()),
+        );
+    }
+    assert!(elastic_gen::obs::wire::decode(&tagged).is_err());
+}
