@@ -1,0 +1,1161 @@
+//! Pratt expression parser over the lexer's token stream.
+//!
+//! Recovers binary-operator trees — with byte spans and anchor lines —
+//! from fn bodies, so the dimensional-analysis pass (`analysis/units`)
+//! can propagate units bottom-up through the energy arithmetic.
+//!
+//! The parser is deliberately **total**: any token sequence — macro
+//! soup, match patterns, malformed generics — parses into *some* tree,
+//! and every loop either consumes a token or returns.  Constructs the
+//! grammar does not model become [`ExprKind::Other`] nodes whose
+//! children are still parsed (and therefore still unit-checked); the
+//! compiler owns syntax errors, so this parser only has to be right
+//! about the expressions it claims to understand and honest (`Other`,
+//! no unit) about the rest.  Multi-character operators arrive from the
+//! lexer as adjacent single-char puncts (`>` `=` back to back) and are
+//! glued by byte adjacency before precedence climbing.
+
+use super::lexer::{Tok, TokKind};
+
+/// Binary operators with Rust precedence.  Bit/shift/range operators
+/// are parsed (so their operands are still visited) but carry no unit
+/// semantics; compound bit-assignments are folded onto their bit op.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Rem,
+    Lt,
+    Gt,
+    Le,
+    Ge,
+    Eq,
+    Ne,
+    And,
+    Or,
+    BitAnd,
+    BitOr,
+    BitXor,
+    Shl,
+    Shr,
+    Range,
+    Assign,
+    AddAssign,
+    SubAssign,
+    MulAssign,
+    DivAssign,
+    RemAssign,
+}
+
+impl BinOp {
+    pub fn symbol(self) -> &'static str {
+        match self {
+            BinOp::Add => "+",
+            BinOp::Sub => "-",
+            BinOp::Mul => "*",
+            BinOp::Div => "/",
+            BinOp::Rem => "%",
+            BinOp::Lt => "<",
+            BinOp::Gt => ">",
+            BinOp::Le => "<=",
+            BinOp::Ge => ">=",
+            BinOp::Eq => "==",
+            BinOp::Ne => "!=",
+            BinOp::And => "&&",
+            BinOp::Or => "||",
+            BinOp::BitAnd => "&",
+            BinOp::BitOr => "|",
+            BinOp::BitXor => "^",
+            BinOp::Shl => "<<",
+            BinOp::Shr => ">>",
+            BinOp::Range => "..",
+            BinOp::Assign => "=",
+            BinOp::AddAssign => "+=",
+            BinOp::SubAssign => "-=",
+            BinOp::MulAssign => "*=",
+            BinOp::DivAssign => "/=",
+            BinOp::RemAssign => "%=",
+        }
+    }
+
+    /// The add/sub/compare/assign family: both operands must share a
+    /// dimension *and* scale (`x_mj + y_j` is the bug class).
+    pub fn requires_same_unit(self) -> bool {
+        matches!(
+            self,
+            BinOp::Add
+                | BinOp::Sub
+                | BinOp::Rem
+                | BinOp::Lt
+                | BinOp::Gt
+                | BinOp::Le
+                | BinOp::Ge
+                | BinOp::Eq
+                | BinOp::Ne
+                | BinOp::Assign
+                | BinOp::AddAssign
+                | BinOp::SubAssign
+                | BinOp::RemAssign
+        )
+    }
+
+    /// Comparisons yield a bool, not a quantity.
+    pub fn is_comparison(self) -> bool {
+        matches!(
+            self,
+            BinOp::Lt | BinOp::Gt | BinOp::Le | BinOp::Ge | BinOp::Eq | BinOp::Ne
+        )
+    }
+}
+
+#[derive(Debug, Clone)]
+pub enum ExprKind {
+    /// Numeric literal; `None` when the lexeme does not parse (hex with
+    /// odd suffixes, split exponents) — still a known-dimensionless atom.
+    Num(Option<f64>),
+    /// String literal content (wire keys live here).
+    Str(String),
+    /// `a::b::c` path, single segment for a plain identifier.
+    Path(Vec<String>),
+    Unary {
+        op: char,
+        rhs: Box<Expr>,
+    },
+    Binary {
+        op: BinOp,
+        lhs: Box<Expr>,
+        rhs: Box<Expr>,
+    },
+    /// `x as T` — the unit passes through the cast.
+    Cast(Box<Expr>),
+    Call {
+        path: Vec<String>,
+        args: Vec<Expr>,
+    },
+    Method {
+        recv: Box<Expr>,
+        name: String,
+        args: Vec<Expr>,
+    },
+    Field {
+        recv: Box<Expr>,
+        name: String,
+    },
+    Index {
+        recv: Box<Expr>,
+        args: Vec<Expr>,
+    },
+    /// `(a, b, …)` — a single parenthesised expression is returned
+    /// directly (span widened over the parens), so `Tuple` is ≠ 1 long.
+    Tuple(Vec<Expr>),
+    StructLit {
+        path: Vec<String>,
+        /// `(name, value)`; shorthand fields carry `None`, the
+        /// functional-update `..base` tail is stored under the name `..`.
+        fields: Vec<(String, Option<Expr>)>,
+    },
+    Block(Vec<Expr>),
+    /// `let <ident>[: <ty>] = <init>` — the binding the units pass
+    /// checks and records.  Pattern lets degrade to `Other`.
+    Let {
+        name: String,
+        /// First identifier of the ascribed type, when written.
+        ty: Option<String>,
+        init: Option<Box<Expr>>,
+    },
+    /// Anything else (control flow, patterns, macros, closures): the
+    /// children are parsed and visited, the node itself has no unit.
+    Other(Vec<Expr>),
+}
+
+#[derive(Debug, Clone)]
+pub struct Expr {
+    pub kind: ExprKind,
+    /// Byte span over the source, delimiters included.
+    pub span: (usize, usize),
+    /// Anchor line for findings: the operator's line for `Binary`, the
+    /// first token's line otherwise.
+    pub line: u32,
+}
+
+impl Expr {
+    fn new(kind: ExprKind, span: (usize, usize), line: u32) -> Expr {
+        Expr { kind, span, line }
+    }
+
+    /// Immediate children, for generic traversal.
+    pub fn children(&self) -> Vec<&Expr> {
+        match &self.kind {
+            ExprKind::Num(_) | ExprKind::Str(_) | ExprKind::Path(_) => Vec::new(),
+            ExprKind::Unary { rhs, .. } => vec![rhs],
+            ExprKind::Binary { lhs, rhs, .. } => vec![lhs, rhs],
+            ExprKind::Cast(e) => vec![e],
+            ExprKind::Call { args, .. } => args.iter().collect(),
+            ExprKind::Method { recv, args, .. } => {
+                let mut v: Vec<&Expr> = vec![recv];
+                v.extend(args.iter());
+                v
+            }
+            ExprKind::Field { recv, .. } => vec![recv],
+            ExprKind::Index { recv, args } => {
+                let mut v: Vec<&Expr> = vec![recv];
+                v.extend(args.iter());
+                v
+            }
+            ExprKind::Tuple(xs) | ExprKind::Block(xs) | ExprKind::Other(xs) => xs.iter().collect(),
+            ExprKind::StructLit { fields, .. } => {
+                fields.iter().filter_map(|(_, e)| e.as_ref()).collect()
+            }
+            ExprKind::Let { init, .. } => init.iter().map(|b| b.as_ref()).collect(),
+        }
+    }
+}
+
+/// Parse the token range `code[lo..hi)` as a statement sequence.
+pub fn parse_stmts(code: &[Tok], lo: usize, hi: usize) -> Vec<Expr> {
+    let hi = hi.min(code.len());
+    let mut p = P { t: code, i: lo.min(hi), hi };
+    p.stmts()
+}
+
+/// Parse a whole token slice (fixtures, property tests).
+pub fn parse_all(code: &[Tok]) -> Vec<Expr> {
+    parse_stmts(code, 0, code.len())
+}
+
+/// Fold integer/float arithmetic (`+ - *` and non-zero `/`) — the
+/// property-test oracle target.  `None` on any non-arithmetic node.
+pub fn eval(e: &Expr) -> Option<f64> {
+    match &e.kind {
+        ExprKind::Num(v) => *v,
+        ExprKind::Unary { op: '-', rhs } => eval(rhs).map(|v| -v),
+        ExprKind::Binary { op, lhs, rhs } => {
+            let a = eval(lhs)?;
+            let b = eval(rhs)?;
+            match op {
+                BinOp::Add => Some(a + b),
+                BinOp::Sub => Some(a - b),
+                BinOp::Mul => Some(a * b),
+                BinOp::Div if b != 0.0 => Some(a / b),
+                _ => None,
+            }
+        }
+        _ => None,
+    }
+}
+
+fn parse_num(text: &str) -> Option<f64> {
+    let t = text.replace('_', "");
+    for suf in [
+        "f64", "f32", "usize", "isize", "u128", "i128", "u64", "i64", "u32", "i32", "u16", "i16",
+        "u8", "i8",
+    ] {
+        if let Some(p) = t.strip_suffix(suf) {
+            return p.parse().ok();
+        }
+    }
+    if let Some(h) = t.strip_prefix("0x") {
+        return u64::from_str_radix(h, 16).ok().map(|v| v as f64);
+    }
+    if let Some(o) = t.strip_prefix("0o") {
+        return u64::from_str_radix(o, 8).ok().map(|v| v as f64);
+    }
+    if let Some(b) = t.strip_prefix("0b") {
+        return u64::from_str_radix(b, 2).ok().map(|v| v as f64);
+    }
+    t.parse().ok()
+}
+
+fn bp(op: BinOp) -> (u8, u8) {
+    match op {
+        BinOp::Mul | BinOp::Div | BinOp::Rem => (80, 81),
+        BinOp::Add | BinOp::Sub => (70, 71),
+        BinOp::Shl | BinOp::Shr => (60, 61),
+        BinOp::BitAnd => (56, 57),
+        BinOp::BitXor => (54, 55),
+        BinOp::BitOr => (52, 53),
+        BinOp::Lt | BinOp::Gt | BinOp::Le | BinOp::Ge | BinOp::Eq | BinOp::Ne => (40, 41),
+        BinOp::And => (30, 31),
+        BinOp::Or => (25, 26),
+        BinOp::Range => (20, 21),
+        BinOp::Assign
+        | BinOp::AddAssign
+        | BinOp::SubAssign
+        | BinOp::MulAssign
+        | BinOp::DivAssign
+        | BinOp::RemAssign => (10, 9),
+    }
+}
+
+/// Glued operator table, longest first.  `None` marks `->` / `=>`,
+/// which terminate the expression rather than continuing it.
+const GLUED_OPS: &[(&str, Option<BinOp>)] = &[
+    ("..=", Some(BinOp::Range)),
+    ("<<=", Some(BinOp::Shl)),
+    (">>=", Some(BinOp::Shr)),
+    ("->", None),
+    ("=>", None),
+    ("==", Some(BinOp::Eq)),
+    ("!=", Some(BinOp::Ne)),
+    ("<=", Some(BinOp::Le)),
+    (">=", Some(BinOp::Ge)),
+    ("&&", Some(BinOp::And)),
+    ("||", Some(BinOp::Or)),
+    ("<<", Some(BinOp::Shl)),
+    (">>", Some(BinOp::Shr)),
+    ("+=", Some(BinOp::AddAssign)),
+    ("-=", Some(BinOp::SubAssign)),
+    ("*=", Some(BinOp::MulAssign)),
+    ("/=", Some(BinOp::DivAssign)),
+    ("%=", Some(BinOp::RemAssign)),
+    ("&=", Some(BinOp::BitAnd)),
+    ("|=", Some(BinOp::BitOr)),
+    ("^=", Some(BinOp::BitXor)),
+    ("..", Some(BinOp::Range)),
+    ("+", Some(BinOp::Add)),
+    ("-", Some(BinOp::Sub)),
+    ("*", Some(BinOp::Mul)),
+    ("/", Some(BinOp::Div)),
+    ("%", Some(BinOp::Rem)),
+    ("<", Some(BinOp::Lt)),
+    (">", Some(BinOp::Gt)),
+    ("=", Some(BinOp::Assign)),
+    ("&", Some(BinOp::BitAnd)),
+    ("|", Some(BinOp::BitOr)),
+    ("^", Some(BinOp::BitXor)),
+];
+
+struct P<'a> {
+    t: &'a [Tok],
+    i: usize,
+    hi: usize,
+}
+
+impl<'a> P<'a> {
+    fn cur(&self) -> Option<&'a Tok> {
+        if self.i < self.hi {
+            self.t.get(self.i)
+        } else {
+            None
+        }
+    }
+
+    fn at(&self, k: usize) -> Option<&'a Tok> {
+        if k < self.hi {
+            self.t.get(k)
+        } else {
+            None
+        }
+    }
+
+    fn at_punct(&self, c: char) -> bool {
+        self.cur().is_some_and(|t| t.is_punct(c))
+    }
+
+    /// Up to three adjacent punct chars starting at the cursor.
+    fn glued(&self) -> String {
+        let mut s = String::new();
+        let mut prev_end = 0usize;
+        let mut k = self.i;
+        while k < self.hi && k < self.i + 3 {
+            let Some(t) = self.at(k) else { break };
+            if t.kind != TokKind::Punct || (k > self.i && t.start != prev_end) {
+                break;
+            }
+            s.push_str(&t.text);
+            prev_end = t.end;
+            k += 1;
+        }
+        s
+    }
+
+    /// `(op, token_count)` if the cursor sits on an infix operator;
+    /// `->` / `=>` and non-operator puncts return `None`.
+    fn infix_op(&self) -> Option<(BinOp, usize)> {
+        let s = self.glued();
+        if s.is_empty() {
+            return None;
+        }
+        for &(pat, op) in GLUED_OPS {
+            if s.starts_with(pat) {
+                return op.map(|o| (o, pat.len()));
+            }
+        }
+        None
+    }
+
+    /// Cursor sits on a glued `::`.
+    fn at_path_sep(&self) -> bool {
+        self.glued().starts_with("::")
+    }
+
+    /// Token index of the closer matching `self.t[open]`, counting only
+    /// this delimiter pair; `hi` when unbalanced.
+    fn matching(&self, open: usize, oc: char, cc: char) -> usize {
+        let mut depth = 0i32;
+        let mut k = open;
+        while k < self.hi {
+            let Some(t) = self.at(k) else { break };
+            if t.is_punct(oc) {
+                depth += 1;
+            } else if t.is_punct(cc) {
+                depth -= 1;
+                if depth == 0 {
+                    return k;
+                }
+            }
+            k += 1;
+        }
+        self.hi
+    }
+
+    fn span_to(&self, start: usize, last_tok: usize) -> (usize, usize) {
+        let end = self
+            .t
+            .get(last_tok.min(self.hi.saturating_sub(1)))
+            .map_or(start, |t| t.end);
+        (start, end.max(start))
+    }
+
+    /// Skip past a `<...>` generic-argument list starting at `<`; bails
+    /// at `;` / `{` so a stray comparison cannot swallow the file.
+    fn skip_angles(&mut self) {
+        let mut depth = 0i32;
+        while let Some(t) = self.cur() {
+            if t.is_punct('<') {
+                depth += 1;
+            } else if t.is_punct('>') {
+                let arrow = self.i >= 1 && self.t.get(self.i - 1).is_some_and(|p| p.is_punct('-'));
+                if !arrow {
+                    depth -= 1;
+                    if depth == 0 {
+                        self.i += 1;
+                        return;
+                    }
+                }
+            } else if t.is_punct('{') || t.is_punct(';') {
+                return;
+            }
+            self.i += 1;
+        }
+    }
+
+    /// Statement sequence until the range ends: expressions separated by
+    /// `;` / `,` / stray closers; anything unparseable is skipped one
+    /// token at a time.
+    fn stmts(&mut self) -> Vec<Expr> {
+        let mut out = Vec::new();
+        while self.i < self.hi {
+            let before = self.i;
+            if let Some(e) = self.expr_bp(0, false) {
+                out.push(e);
+            }
+            if self.i == before {
+                self.i += 1;
+            }
+        }
+        out
+    }
+
+    /// Comma-separated expression list inside a delimited region.
+    fn list(&mut self) -> Vec<Expr> {
+        self.stmts()
+    }
+
+    fn expr_bp(&mut self, min_bp: u8, no_struct: bool) -> Option<Expr> {
+        let mut lhs = self.atom(no_struct)?;
+        loop {
+            if self.i >= self.hi {
+                break;
+            }
+            // postfix: field / method / call / index / try / cast
+            if self.at_punct('.') && !self.glued().starts_with("..") {
+                let Some(next) = self.at(self.i + 1) else {
+                    self.i += 1;
+                    break;
+                };
+                if next.kind == TokKind::Ident && next.text != "await" {
+                    let name = next.text.clone();
+                    self.i += 2;
+                    if self.at_path_sep() {
+                        // turbofish: `.collect::<Vec<_>>()`
+                        self.i += 2;
+                        if self.at_punct('<') {
+                            self.skip_angles();
+                        }
+                    }
+                    if self.at_punct('(') {
+                        let close = self.matching(self.i, '(', ')');
+                        let args = self.sub(self.i + 1, close);
+                        let span = self.span_to(lhs.span.0, close);
+                        self.i = (close + 1).min(self.hi);
+                        let line = lhs.line;
+                        lhs = Expr::new(
+                            ExprKind::Method { recv: Box::new(lhs), name, args },
+                            span,
+                            line,
+                        );
+                    } else {
+                        let span = (lhs.span.0, next.end);
+                        let line = lhs.line;
+                        lhs = Expr::new(ExprKind::Field { recv: Box::new(lhs), name }, span, line);
+                    }
+                    continue;
+                }
+                // `.await` / `.0` tuple index: unit-opaque passthrough node
+                let span = (lhs.span.0, next.end);
+                let line = lhs.line;
+                self.i += 2;
+                lhs = Expr::new(ExprKind::Other(vec![lhs]), span, line);
+                continue;
+            }
+            if self.at_punct('?') {
+                if let Some(t) = self.cur() {
+                    lhs.span.1 = lhs.span.1.max(t.end);
+                }
+                self.i += 1;
+                continue;
+            }
+            if self.at_punct('(') {
+                let close = self.matching(self.i, '(', ')');
+                let args = self.sub(self.i + 1, close);
+                let span = self.span_to(lhs.span.0, close);
+                self.i = (close + 1).min(self.hi);
+                let line = lhs.line;
+                lhs = match lhs.kind {
+                    ExprKind::Path(path) => Expr::new(ExprKind::Call { path, args }, span, line),
+                    _ => {
+                        let mut kids = vec![lhs];
+                        kids.extend(args);
+                        Expr::new(ExprKind::Other(kids), span, line)
+                    }
+                };
+                continue;
+            }
+            if self.at_punct('[') {
+                let close = self.matching(self.i, '[', ']');
+                let args = self.sub(self.i + 1, close);
+                let span = self.span_to(lhs.span.0, close);
+                self.i = (close + 1).min(self.hi);
+                let line = lhs.line;
+                lhs = Expr::new(ExprKind::Index { recv: Box::new(lhs), args }, span, line);
+                continue;
+            }
+            if self.cur().is_some_and(|t| t.is_ident("as")) {
+                self.i += 1;
+                let last = self.skip_type();
+                let span = self.span_to(lhs.span.0, last);
+                let line = lhs.line;
+                lhs = Expr::new(ExprKind::Cast(Box::new(lhs)), span, line);
+                continue;
+            }
+            // struct literal after a path atom
+            if self.at_punct('{') && !no_struct {
+                if let ExprKind::Path(path) = &lhs.kind {
+                    let upper = path
+                        .last()
+                        .and_then(|s| s.chars().next())
+                        .is_some_and(char::is_uppercase);
+                    if upper {
+                        let path = path.clone();
+                        let close = self.matching(self.i, '{', '}');
+                        let fields = self.struct_fields(self.i + 1, close);
+                        let span = self.span_to(lhs.span.0, close);
+                        self.i = (close + 1).min(self.hi);
+                        let line = lhs.line;
+                        lhs = Expr::new(ExprKind::StructLit { path, fields }, span, line);
+                        continue;
+                    }
+                }
+                break;
+            }
+            // macro invocation: `path!(...)` / `path![...]` / `path! {...}`
+            if self.at_punct('!') && matches!(lhs.kind, ExprKind::Path(_)) {
+                let delim = self.at(self.i + 1).map(|t| t.text.clone());
+                let (oc, cc) = match delim.as_deref() {
+                    Some("(") => ('(', ')'),
+                    Some("[") => ('[', ']'),
+                    Some("{") => ('{', '}'),
+                    _ => break, // `a != b` and friends: not a macro
+                };
+                let close = self.matching(self.i + 1, oc, cc);
+                let kids = self.sub(self.i + 2, close);
+                let span = self.span_to(lhs.span.0, close);
+                self.i = (close + 1).min(self.hi);
+                let line = lhs.line;
+                lhs = Expr::new(ExprKind::Other(kids), span, line);
+                continue;
+            }
+
+            let Some((op, ntoks)) = self.infix_op() else { break };
+            let (lbp, rbp) = bp(op);
+            if lbp < min_bp {
+                break;
+            }
+            let op_line = self.cur().map_or(lhs.line, |t| t.line);
+            self.i += ntoks;
+            let Some(rhs) = self.expr_bp(rbp, no_struct) else { break };
+            let span = (lhs.span.0, rhs.span.1.max(lhs.span.1));
+            lhs = Expr::new(
+                ExprKind::Binary { op, lhs: Box::new(lhs), rhs: Box::new(rhs) },
+                span,
+                op_line,
+            );
+        }
+        Some(lhs)
+    }
+
+    /// Parse `code[lo..close)` with a fresh sub-parser (delimited region).
+    fn sub(&self, lo: usize, close: usize) -> Vec<Expr> {
+        let hi = close.min(self.hi);
+        let mut p = P { t: self.t, i: lo.min(hi), hi };
+        p.list()
+    }
+
+    /// Skip a type after `as` / in ascriptions; returns the last token
+    /// index consumed (for spans).
+    fn skip_type(&mut self) -> usize {
+        let mut last = self.i.saturating_sub(1);
+        while self.at_punct('&') || self.at_punct('*') {
+            last = self.i;
+            self.i += 1;
+        }
+        loop {
+            match self.cur() {
+                Some(t) if t.kind == TokKind::Ident && !KW_STMT.contains(&t.text.as_str()) => {
+                    last = self.i;
+                    self.i += 1;
+                }
+                _ => break,
+            }
+            if self.at_path_sep() {
+                self.i += 2;
+                continue;
+            }
+            if self.at_punct('<') {
+                self.skip_angles();
+                last = self.i.saturating_sub(1);
+                if self.at_path_sep() {
+                    self.i += 2;
+                    continue;
+                }
+            }
+            break;
+        }
+        last
+    }
+
+    fn struct_fields(&self, lo: usize, close: usize) -> Vec<(String, Option<Expr>)> {
+        let hi = close.min(self.hi);
+        let mut p = P { t: self.t, i: lo.min(hi), hi };
+        let mut out = Vec::new();
+        while p.i < p.hi {
+            if p.at_punct(',') {
+                p.i += 1;
+                continue;
+            }
+            if p.glued().starts_with("..") {
+                p.i += 2;
+                let rest = p.expr_bp(0, false);
+                out.push(("..".to_string(), rest));
+                continue;
+            }
+            let Some(t) = p.cur() else { break };
+            if t.kind == TokKind::Ident && !KW_STMT.contains(&t.text.as_str()) {
+                let name = t.text.clone();
+                p.i += 1;
+                if p.at_punct(':') && !p.at_path_sep() {
+                    p.i += 1;
+                    let val = p.expr_bp(0, false);
+                    out.push((name, val));
+                } else {
+                    out.push((name, None));
+                }
+            } else {
+                p.i += 1;
+            }
+        }
+        out
+    }
+
+    fn atom(&mut self, no_struct: bool) -> Option<Expr> {
+        let t = self.cur()?;
+        let (start, line) = (t.start, t.line);
+        match t.kind {
+            TokKind::Num => {
+                self.i += 1;
+                Some(Expr::new(ExprKind::Num(parse_num(&t.text)), (t.start, t.end), line))
+            }
+            TokKind::Str => {
+                self.i += 1;
+                Some(Expr::new(ExprKind::Str(t.text.clone()), (t.start, t.end), line))
+            }
+            TokKind::Char | TokKind::Lifetime => {
+                self.i += 1;
+                Some(Expr::new(ExprKind::Other(Vec::new()), (t.start, t.end), line))
+            }
+            TokKind::Comment => {
+                // code_tokens strips comments; raw streams skip them
+                self.i += 1;
+                None
+            }
+            TokKind::Punct => self.punct_atom(t, start, line, no_struct),
+            TokKind::Ident => self.ident_atom(t, start, line, no_struct),
+        }
+    }
+
+    fn punct_atom(&mut self, t: &Tok, start: usize, line: u32, no_struct: bool) -> Option<Expr> {
+        let c = t.text.chars().next().unwrap_or('\0');
+        match c {
+            '-' | '!' | '*' | '&' => {
+                self.i += 1;
+                // `&&x` (double reference) and `&mut x`
+                if c == '&' && self.at_punct('&') {
+                    self.i += 1;
+                }
+                if c == '&' && self.cur().is_some_and(|t| t.is_ident("mut")) {
+                    self.i += 1;
+                }
+                let rhs = self.expr_bp(85, no_struct);
+                match rhs {
+                    Some(r) => {
+                        let span = (start, r.span.1.max(t.end));
+                        Some(Expr::new(ExprKind::Unary { op: c, rhs: Box::new(r) }, span, line))
+                    }
+                    None => Some(Expr::new(ExprKind::Other(Vec::new()), (start, t.end), line)),
+                }
+            }
+            '(' => {
+                let close = self.matching(self.i, '(', ')');
+                let mut kids = self.sub(self.i + 1, close);
+                let span = self.span_to(start, close);
+                self.i = (close + 1).min(self.hi);
+                if kids.len() == 1 {
+                    let mut inner = kids.remove(0);
+                    // widen over the parens; children stay nested
+                    inner.span = (span.0.min(inner.span.0), span.1.max(inner.span.1));
+                    Some(inner)
+                } else {
+                    Some(Expr::new(ExprKind::Tuple(kids), span, line))
+                }
+            }
+            '[' => {
+                let close = self.matching(self.i, '[', ']');
+                let kids = self.sub(self.i + 1, close);
+                let span = self.span_to(start, close);
+                self.i = (close + 1).min(self.hi);
+                Some(Expr::new(ExprKind::Other(kids), span, line))
+            }
+            '{' => Some(self.block(line)),
+            '|' => {
+                // closure: skip params to the matching `|`, parse the body
+                self.i += 1;
+                if self.at_punct('|') {
+                    self.i += 1; // `||` zero-param closure
+                } else {
+                    while self.i < self.hi && !self.at_punct('|') {
+                        self.i += 1;
+                    }
+                    if self.at_punct('|') {
+                        self.i += 1;
+                    }
+                }
+                if self.glued().starts_with("->") {
+                    self.i += 2;
+                    self.skip_type();
+                }
+                let body = self.expr_bp(0, no_struct);
+                let (span, kids) = match body {
+                    Some(b) => ((start, b.span.1), vec![b]),
+                    None => ((start, t.end), Vec::new()),
+                };
+                Some(Expr::new(ExprKind::Other(kids), span, line))
+            }
+            '#' => {
+                // attribute: skip `#[...]` / `#![...]`, then retry
+                self.i += 1;
+                if self.at_punct('!') {
+                    self.i += 1;
+                }
+                if self.at_punct('[') {
+                    let close = self.matching(self.i, '[', ']');
+                    self.i = (close + 1).min(self.hi);
+                    self.atom(no_struct)
+                } else {
+                    Some(Expr::new(ExprKind::Other(Vec::new()), (start, t.end), line))
+                }
+            }
+            '.' if self.glued().starts_with("..") => {
+                // prefix range `..x` / `..=x`
+                self.i += if self.glued().starts_with("..=") { 3 } else { 2 };
+                let rest = self.expr_bp(21, no_struct);
+                let (span, kids) = match rest {
+                    Some(r) => ((start, r.span.1), vec![r]),
+                    None => ((start, t.end), Vec::new()),
+                };
+                Some(Expr::new(ExprKind::Other(kids), span, line))
+            }
+            _ => None, // `;` `,` `)` `]` `}` `:` … — caller advances
+        }
+    }
+
+    fn ident_atom(&mut self, t: &Tok, start: usize, line: u32, no_struct: bool) -> Option<Expr> {
+        match t.text.as_str() {
+            "if" | "while" => self.cond_block(start, line, no_struct, t.text == "if"),
+            "for" => {
+                self.i += 1;
+                // skip the pattern to `in`, bounded by the body opener
+                while self.i < self.hi {
+                    let Some(c) = self.cur() else { break };
+                    if c.is_ident("in") || c.is_punct('{') || c.is_punct(';') {
+                        break;
+                    }
+                    self.i += 1;
+                }
+                let mut kids = Vec::new();
+                if self.cur().is_some_and(|c| c.is_ident("in")) {
+                    self.i += 1;
+                    if let Some(iter) = self.expr_bp(0, true) {
+                        kids.push(iter);
+                    }
+                }
+                if self.at_punct('{') {
+                    kids.push(self.block(line));
+                }
+                let end = kids.last().map_or(t.end, |k| k.span.1);
+                Some(Expr::new(ExprKind::Other(kids), (start, end), line))
+            }
+            "loop" => {
+                self.i += 1;
+                let kids = if self.at_punct('{') { vec![self.block(line)] } else { Vec::new() };
+                let end = kids.last().map_or(t.end, |k| k.span.1);
+                Some(Expr::new(ExprKind::Other(kids), (start, end), line))
+            }
+            "match" => {
+                self.i += 1;
+                let mut kids = Vec::new();
+                if let Some(scrut) = self.expr_bp(0, true) {
+                    kids.push(scrut);
+                }
+                if self.at_punct('{') {
+                    // arms parse as generic statements: patterns become
+                    // harmless unit-less exprs, `=>` terminates them
+                    kids.push(self.block(line));
+                }
+                let end = kids.last().map_or(t.end, |k| k.span.1);
+                Some(Expr::new(ExprKind::Other(kids), (start, end), line))
+            }
+            "let" => self.let_stmt(start, line),
+            "return" | "break" => {
+                self.i += 1;
+                let kids: Vec<Expr> = self.expr_bp(0, no_struct).into_iter().collect();
+                let end = kids.last().map_or(t.end, |k| k.span.1);
+                Some(Expr::new(ExprKind::Other(kids), (start, end), line))
+            }
+            "continue" | "true" | "false" => {
+                self.i += 1;
+                Some(Expr::new(ExprKind::Other(Vec::new()), (start, t.end), line))
+            }
+            "move" | "unsafe" | "async" => {
+                self.i += 1;
+                self.atom(no_struct)
+            }
+            s if KW_STMT.contains(&s) => {
+                // item keywords inside bodies (`fn`, `const`, `use`, …):
+                // consume the keyword, let the statement loop resume
+                self.i += 1;
+                Some(Expr::new(ExprKind::Other(Vec::new()), (start, t.end), line))
+            }
+            _ => {
+                // path: `a::b::c` with turbofish skipping
+                let mut segs = vec![t.text.clone()];
+                let mut end = t.end;
+                self.i += 1;
+                while self.at_path_sep() {
+                    self.i += 2;
+                    if self.at_punct('<') {
+                        self.skip_angles();
+                        continue;
+                    }
+                    match self.cur() {
+                        Some(n) if n.kind == TokKind::Ident => {
+                            segs.push(n.text.clone());
+                            end = n.end;
+                            self.i += 1;
+                        }
+                        _ => break,
+                    }
+                }
+                Some(Expr::new(ExprKind::Path(segs), (start, end), line))
+            }
+        }
+    }
+
+    /// `if cond { … } else …` / `while cond { … }`.
+    fn cond_block(&mut self, start: usize, line: u32, ns: bool, has_else: bool) -> Option<Expr> {
+        self.i += 1;
+        let mut kids = Vec::new();
+        if let Some(cond) = self.expr_bp(0, true) {
+            kids.push(cond);
+        }
+        if self.at_punct('{') {
+            kids.push(self.block(line));
+        }
+        if has_else && self.cur().is_some_and(|c| c.is_ident("else")) {
+            self.i += 1;
+            if let Some(e) = self.atom(ns) {
+                kids.push(e);
+            }
+        }
+        let end = kids.last().map_or(start, |k| k.span.1);
+        Some(Expr::new(ExprKind::Other(kids), (start, end.max(start)), line))
+    }
+
+    /// Block at the cursor's `{`.
+    fn block(&mut self, line: u32) -> Expr {
+        let open = self.i;
+        let start = self.t.get(open).map_or(0, |t| t.start);
+        let close = self.matching(open, '{', '}');
+        let kids = self.sub(open + 1, close);
+        let span = self.span_to(start, close);
+        self.i = (close + 1).min(self.hi);
+        Expr::new(ExprKind::Block(kids), span, line)
+    }
+
+    /// `let <ident>[: ty] = init` — or a pattern let, degraded to Other.
+    fn let_stmt(&mut self, start: usize, line: u32) -> Option<Expr> {
+        self.i += 1;
+        if self.cur().is_some_and(|t| t.is_ident("mut")) {
+            self.i += 1;
+        }
+        let simple = match (self.cur(), self.at(self.i + 1)) {
+            (Some(n), Some(after))
+                if n.kind == TokKind::Ident
+                    && !KW_STMT.contains(&n.text.as_str())
+                    && (after.is_punct('=') || (after.is_punct(':') && !{
+                        // `::` would make this a path pattern
+                        self.t
+                            .get(self.i + 2)
+                            .is_some_and(|c| c.is_punct(':') && c.start == after.end)
+                    })) =>
+            {
+                Some((n.text.clone(), after.is_punct(':')))
+            }
+            _ => None,
+        };
+        if let Some((name, has_ty)) = simple {
+            self.i += 1;
+            let mut ty = None;
+            if has_ty {
+                self.i += 1; // `:`
+                // first identifier of the ascribed type
+                if let Some(tt) = self.cur() {
+                    if tt.kind == TokKind::Ident {
+                        ty = Some(tt.text.clone());
+                    }
+                }
+                // skip to `=` / `;` at this statement level
+                while self.i < self.hi {
+                    let Some(c) = self.cur() else { break };
+                    if c.is_punct('=') || c.is_punct(';') || c.is_punct('{') {
+                        break;
+                    }
+                    self.i += 1;
+                }
+            }
+            let mut init = None;
+            let mut end = start;
+            if self.at_punct('=') && self.infix_op() == Some((BinOp::Assign, 1)) {
+                self.i += 1;
+                if let Some(e) = self.expr_bp(0, false) {
+                    end = e.span.1;
+                    init = Some(Box::new(e));
+                }
+            }
+            return Some(Expr::new(
+                ExprKind::Let { name, ty, init },
+                (start, end.max(start)),
+                line,
+            ));
+        }
+        // pattern let: parse the pattern and the initializer generically
+        let mut kids = Vec::new();
+        if let Some(pat) = self.expr_bp(11, false) {
+            kids.push(pat);
+        }
+        if self.at_punct('=') && self.infix_op() == Some((BinOp::Assign, 1)) {
+            self.i += 1;
+            if let Some(e) = self.expr_bp(0, false) {
+                kids.push(e);
+            }
+        }
+        let end = kids.last().map_or(start, |k| k.span.1);
+        Some(Expr::new(ExprKind::Other(kids), (start, end.max(start)), line))
+    }
+}
+
+/// Item/binding keywords that never start a value expression.
+const KW_STMT: &[&str] = &[
+    "as", "box", "const", "crate", "dyn", "else", "enum", "extern", "fn", "impl", "in", "mod",
+    "mut", "pub", "ref", "static", "struct", "super", "trait", "type", "use", "where", "yield",
+];
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::indexing_slicing)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::{code_tokens, tokenize};
+
+    fn parse1(src: &str) -> Expr {
+        let toks = tokenize(src);
+        let code = code_tokens(&toks);
+        let mut all = parse_all(&code);
+        assert!(!all.is_empty(), "no expr parsed from {src:?}");
+        all.remove(0)
+    }
+
+    #[test]
+    fn precedence_mul_binds_tighter_than_add() {
+        let e = parse1("1 + 2 * 3");
+        assert_eq!(eval(&e), Some(7.0));
+        let e = parse1("(1 + 2) * 3");
+        assert_eq!(eval(&e), Some(9.0));
+        let e = parse1("2 * 3 - 10 / 5");
+        assert_eq!(eval(&e), Some(4.0));
+        let e = parse1("-4 + 6");
+        assert_eq!(eval(&e), Some(2.0));
+    }
+
+    #[test]
+    fn glued_operators_resolve_longest_first() {
+        let e = parse1("a <= b");
+        match &e.kind {
+            ExprKind::Binary { op, .. } => assert_eq!(*op, BinOp::Le),
+            k => panic!("{k:?}"),
+        }
+        let e = parse1("a += b");
+        match &e.kind {
+            ExprKind::Binary { op, .. } => assert_eq!(*op, BinOp::AddAssign),
+            k => panic!("{k:?}"),
+        }
+        // `a != b` must not parse as a macro invocation
+        let e = parse1("a != (b)");
+        match &e.kind {
+            ExprKind::Binary { op, .. } => assert_eq!(*op, BinOp::Ne),
+            k => panic!("{k:?}"),
+        }
+    }
+
+    #[test]
+    fn method_chain_and_fields() {
+        let e = parse1("self.cfg.margin.mj()");
+        match &e.kind {
+            ExprKind::Method { recv, name, args } => {
+                assert_eq!(name, "mj");
+                assert!(args.is_empty());
+                match &recv.kind {
+                    ExprKind::Field { name, .. } => assert_eq!(name, "margin"),
+                    k => panic!("{k:?}"),
+                }
+            }
+            k => panic!("{k:?}"),
+        }
+    }
+
+    #[test]
+    fn call_paths_and_turbofish() {
+        let e = parse1("Secs::from_ms(40.0)");
+        match &e.kind {
+            ExprKind::Call { path, args } => {
+                assert_eq!(path, &["Secs", "from_ms"]);
+                assert_eq!(args.len(), 1);
+            }
+            k => panic!("{k:?}"),
+        }
+        let e = parse1("xs.iter().collect::<Vec<_>>()");
+        match &e.kind {
+            ExprKind::Method { name, .. } => assert_eq!(name, "collect"),
+            k => panic!("{k:?}"),
+        }
+    }
+
+    #[test]
+    fn struct_literal_fields_parse() {
+        let e = parse1("Rec { before_mj: d.before.mj(), drift, ..base }");
+        match &e.kind {
+            ExprKind::StructLit { path, fields } => {
+                assert_eq!(path, &["Rec"]);
+                assert_eq!(fields.len(), 3);
+                assert_eq!(fields[0].0, "before_mj");
+                assert!(fields[0].1.is_some());
+                assert_eq!(fields[1].0, "drift");
+                assert!(fields[1].1.is_none());
+                assert_eq!(fields[2].0, "..");
+            }
+            k => panic!("{k:?}"),
+        }
+    }
+
+    #[test]
+    fn let_binding_with_type_and_init() {
+        let e = parse1("let t: Secs = gap.max(Secs(1e-12));");
+        match &e.kind {
+            ExprKind::Let { name, ty, init } => {
+                assert_eq!(name, "t");
+                assert_eq!(ty.as_deref(), Some("Secs"));
+                assert!(init.is_some());
+            }
+            k => panic!("{k:?}"),
+        }
+    }
+
+    #[test]
+    fn control_flow_children_are_visited() {
+        let src = "if a_ms > b_s { x } else { y }";
+        let e = parse1(src);
+        let ExprKind::Other(kids) = &e.kind else {
+            panic!("{:?}", e.kind)
+        };
+        assert!(matches!(kids[0].kind, ExprKind::Binary { op: BinOp::Gt, .. }));
+    }
+
+    fn assert_nested(e: &Expr, src_len: usize) {
+        assert!(e.span.0 <= e.span.1 && e.span.1 <= src_len, "{:?}", e.span);
+        for c in e.children() {
+            assert!(
+                c.span.0 >= e.span.0 && c.span.1 <= e.span.1,
+                "child {:?} escapes parent {:?}",
+                c.span,
+                e.span
+            );
+            assert_nested(c, src_len);
+        }
+    }
+
+    #[test]
+    fn spans_are_in_bounds_and_nested() {
+        let src = "fn f() { let x_mj = (a + b.c()) * d[2]; vec![x_mj, 1.0] }";
+        let toks = tokenize(src);
+        let code = code_tokens(&toks);
+        for e in parse_all(&code) {
+            assert_nested(&e, src.len());
+        }
+    }
+
+    #[test]
+    fn parse_is_total_on_junk() {
+        for src in [
+            "} ) ] ;;; ..= => -> :::: <<>>",
+            "let let let = = =",
+            "a.b.(((",
+            "match { { { |",
+            "#[x] #![y] 'a 'b \"unterminated",
+        ] {
+            let toks = tokenize(src);
+            let code = code_tokens(&toks);
+            let _ = parse_all(&code); // totality: must not panic or hang
+        }
+    }
+}

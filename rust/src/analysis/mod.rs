@@ -16,7 +16,13 @@
 //!   call graph propagates may-panic facts to serving entries
 //!   (`panic-reach`), and lexical lock live-ranges catch inconsistent
 //!   nesting (`lock-order`) and blocking calls under a held guard
-//!   (`lock-blocking`).
+//!   (`lock-blocking`);
+//! * **dimensional** (`expr`/`units`) — units inferred from declared
+//!   newtype fields, boundary calls, and the `_mj`/`_ms` suffix
+//!   convention propagate bottom-up through expression trees in parity
+//!   + serving scope: `unit-mixed-add`, `unit-scale-mismatch`, and
+//!   `unit-wire-suffix` catch the mJ-vs-J / ms-vs-s arithmetic slips
+//!   the compiler cannot see on bare `f64`s.
 //!
 //! A finding is suppressed only by an inline pragma carrying a written
 //! reason: `// lint: allow(<rule>) — <reason>`.  The pass walks
@@ -27,10 +33,12 @@
 
 pub mod callgraph;
 pub mod classify;
+pub mod expr;
 pub mod lexer;
 pub mod lock;
 pub mod rules;
 pub mod symbols;
+pub mod units;
 pub mod wire;
 
 use anyhow::{anyhow, Context, Result};
@@ -59,6 +67,8 @@ pub struct LintOutcome {
     pub allow_count: usize,
     /// Call-graph statistics from the interprocedural pass.
     pub graph: callgraph::GraphSummary,
+    /// Dimensional-analysis statistics from the units pass.
+    pub units: units::UnitsSummary,
 }
 
 impl LintOutcome {
@@ -87,6 +97,7 @@ pub fn lint_files(files: &[SourceFile]) -> LintOutcome {
 
     let mut prepared: Vec<Prepared> = Vec::with_capacity(files.len());
     let mut structs: BTreeMap<String, wire::StructDef> = BTreeMap::new();
+    let mut unit_table = units::UnitTable::default();
     for f in files {
         let toks = lexer::tokenize(&f.text);
         let code = lexer::code_tokens(&toks);
@@ -96,6 +107,7 @@ pub fn lint_files(files: &[SourceFile]) -> LintOutcome {
             for s in wire::collect_structs(&f.rel, &code, &pragmas.aliases) {
                 structs.entry(s.name.clone()).or_insert(s);
             }
+            units::harvest(&code, &mut unit_table);
         }
         prepared.push(Prepared {
             rel: f.rel.clone(),
@@ -107,10 +119,20 @@ pub fn lint_files(files: &[SourceFile]) -> LintOutcome {
 
     let mut findings: Vec<Finding> = Vec::new();
     let mut allow_count = 0usize;
+    let mut unit_stats = units::UnitsSummary::default();
     for p in &prepared {
         let mut file_findings = rules::run_code_rules(&p.rel, &p.code, p.scope);
         if p.scope.wire {
             file_findings.extend(wire::check_wire_file(&p.rel, &p.code, &structs));
+        }
+        if p.scope.src && (p.scope.parity || p.scope.serving) {
+            file_findings.extend(units::check_file(
+                &p.rel,
+                &p.code,
+                &unit_table,
+                p.scope.wire,
+                &mut unit_stats,
+            ));
         }
         rules::apply_suppressions(&mut file_findings, &p.pragmas.allows);
         file_findings.extend(p.pragmas.meta.iter().cloned());
@@ -137,11 +159,16 @@ pub fn lint_files(files: &[SourceFile]) -> LintOutcome {
         ka.cmp(&(b.file.as_str(), b.line, b.rule.as_str()))
     });
 
+    let mut units = unit_stats;
+    units.fields_typed = unit_table.fields_typed();
+    units.fns_typed = unit_table.fns_typed();
+
     LintOutcome {
         findings,
         files_scanned: prepared.len(),
         allow_count,
         graph,
+        units,
     }
 }
 
@@ -237,6 +264,21 @@ pub fn report_json(o: &LintOutcome) -> Json {
             ),
         ),
         ("graph", graph_json(&o.graph)),
+        ("units", units_json(&o.units)),
+    ])
+}
+
+/// The `units` report section: dimensional-analysis pass statistics.
+pub fn units_json(u: &units::UnitsSummary) -> Json {
+    Json::obj(vec![
+        ("files_checked", Json::Num(u.files_checked as f64)),
+        ("fns_checked", Json::Num(u.fns_checked as f64)),
+        ("exprs", Json::Num(u.exprs as f64)),
+        ("resolved", Json::Num(u.resolved as f64)),
+        ("checks", Json::Num(u.checks as f64)),
+        ("findings", Json::Num(u.findings as f64)),
+        ("fields_typed", Json::Num(u.fields_typed as f64)),
+        ("fns_typed", Json::Num(u.fns_typed as f64)),
     ])
 }
 
@@ -366,6 +408,47 @@ mod tests {
             g.get("panic_frontier").and_then(|a| a.as_arr()).map(Vec::len),
             Some(1)
         );
+    }
+
+    #[test]
+    fn units_pass_runs_in_scope_and_reports() {
+        // declared type harvested from one file, misused in another
+        let types = file("src/util/cfg.rs", "pub struct Cfg { pub margin: Joules }");
+        let user = file(
+            "src/runtime/x.rs",
+            "fn f(c: &Cfg, x_mj: f64) -> f64 { x_mj + c.margin.value() }",
+        );
+        let out = lint_files(&[types, user.clone()]);
+        let hits: Vec<&Finding> = out
+            .findings
+            .iter()
+            .filter(|f| f.rule == rules::UNIT_SCALE_MISMATCH)
+            .collect();
+        assert_eq!(hits.len(), 1, "{:?}", out.findings);
+        assert_eq!(out.units.files_checked, 1); // util/ is harvested, not checked
+        assert_eq!(out.units.fields_typed, 1);
+        assert_eq!(out.units.findings, 1);
+        let j = report_json(&out);
+        let u = j.get("units").unwrap();
+        assert_eq!(u.get("findings").and_then(|n| n.as_usize()), Some(1));
+        assert_eq!(u.get("fields_typed").and_then(|n| n.as_usize()), Some(1));
+
+        // out of scope (neither parity nor serving): same code, no pass
+        let elsewhere = file(
+            "src/util/x.rs",
+            "fn f(a_mj: f64, b_s: f64) -> f64 { a_mj + b_s }",
+        );
+        let out = lint_files(&[elsewhere]);
+        assert_eq!(out.units.files_checked, 0);
+        assert_eq!(out.unsuppressed_count(), 0);
+        // suppression pragmas apply to unit findings like any rule
+        let with_pragma = file(
+            "src/runtime/y.rs",
+            "fn g(a_mj: f64, b_s: f64) -> f64 {\n    \
+             // lint: allow(unit-mixed-add) — fixture\n    a_mj + b_s\n}",
+        );
+        let out = lint_files(&[user, with_pragma]);
+        assert_eq!(out.suppressed_count(), 1, "{:?}", out.findings);
     }
 
     #[test]

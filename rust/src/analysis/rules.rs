@@ -46,6 +46,9 @@ pub const PANIC_REACH: &str = "panic-reach";
 pub const OBS_PRINT: &str = "obs-print";
 pub const LOCK_ORDER: &str = "lock-order";
 pub const LOCK_BLOCKING: &str = "lock-blocking";
+pub const UNIT_MIXED_ADD: &str = "unit-mixed-add";
+pub const UNIT_SCALE_MISMATCH: &str = "unit-scale-mismatch";
+pub const UNIT_WIRE_SUFFIX: &str = "unit-wire-suffix";
 pub const PRAGMA_MISSING_REASON: &str = "pragma-missing-reason";
 pub const PRAGMA_UNKNOWN_RULE: &str = "pragma-unknown-rule";
 
@@ -67,6 +70,9 @@ pub const KNOWN_RULES: &[&str] = &[
     OBS_PRINT,
     LOCK_ORDER,
     LOCK_BLOCKING,
+    UNIT_MIXED_ADD,
+    UNIT_SCALE_MISMATCH,
+    UNIT_WIRE_SUFFIX,
     PRAGMA_MISSING_REASON,
     PRAGMA_UNKNOWN_RULE,
 ];

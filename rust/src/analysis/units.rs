@@ -1,0 +1,1053 @@
+//! Dimensional analysis over the energy arithmetic.
+//!
+//! A unit algebra over the base dimensions **time**, **power**, and
+//! **item count** (frequency is time⁻¹, energy is power·time) with
+//! decimal SI-scale tracking, so `J = W·s` holds and `mJ ≠ J`.  Units
+//! are inferred from three sources, in decreasing order of trust:
+//!
+//! 1. **declared types** — struct fields and fn return types naming a
+//!    `util::units` newtype (`Secs`, `Joules`, `Watts`, `Hertz`),
+//!    harvested crate-wide into a [`UnitTable`];
+//! 2. **newtype boundary calls** — `Secs::from_ms(x)` types its
+//!    argument as ms and its result as base seconds, `.mj()` produces
+//!    an mJ number, `.value()` passes the receiver's unit through;
+//! 3. **the suffix convention** — `gap_ms`, `energy_mj`, `rate_hz`,
+//!    `mj_per_item` on identifiers, fields, fn names, and wire keys.
+//!
+//! Units propagate bottom-up through the expression trees
+//! (`analysis::expr`) of every fn body in parity + serving scope.
+//! Three rules fire:
+//!
+//! * `unit-mixed-add` — add/sub/compare/assign of incompatible
+//!   dimensions (`gap_ms + power_mw`);
+//! * `unit-scale-mismatch` — same dimension, different SI scale
+//!   (`total_mj + x_j`, `t_ms < deadline_s`);
+//! * `unit-wire-suffix` — in wire-codec files, a key's unit suffix
+//!   must match the encoded expression's inferred unit.
+//!
+//! Conservatism is the contract (like the call graph's unresolved
+//! calls): an unknown unit stays unknown and makes **no** findings, a
+//! mismatch never propagates a unit (no cascades), and a dimensionless
+//! result (`s/s`, counts) drops out of checking entirely.
+
+use super::expr::{self, BinOp, Expr, ExprKind};
+use super::lexer::{Tok, TokKind};
+use super::rules::{Finding, UNIT_MIXED_ADD, UNIT_SCALE_MISMATCH, UNIT_WIRE_SUFFIX};
+use std::collections::BTreeMap;
+
+/// Dimension vector: exponents of time, power, item count.
+/// `Hz = time⁻¹`, `J = power·time`, `J/item = power·time·item⁻¹`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Dim {
+    pub time: i8,
+    pub power: i8,
+    pub item: i8,
+}
+
+impl Dim {
+    pub const fn is_zero(self) -> bool {
+        self.time == 0 && self.power == 0 && self.item == 0
+    }
+}
+
+/// A dimension plus a decimal scale exponent relative to the SI base
+/// (`ms` is time at scale −3, `MHz` is time⁻¹ at scale +6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Unit {
+    pub dim: Dim,
+    pub scale: i16,
+}
+
+const fn unit(time: i8, power: i8, item: i8, scale: i16) -> Unit {
+    Unit {
+        dim: Dim { time, power, item },
+        scale,
+    }
+}
+
+pub const SECS: Unit = unit(1, 0, 0, 0);
+pub const JOULES: Unit = unit(1, 1, 0, 0);
+pub const WATTS: Unit = unit(0, 1, 0, 0);
+pub const HERTZ: Unit = unit(-1, 0, 0, 0);
+
+impl Unit {
+    pub fn mul(self, o: Unit) -> Unit {
+        Unit {
+            dim: Dim {
+                time: self.dim.time + o.dim.time,
+                power: self.dim.power + o.dim.power,
+                item: self.dim.item + o.dim.item,
+            },
+            scale: self.scale + o.scale,
+        }
+    }
+
+    pub fn div(self, o: Unit) -> Unit {
+        Unit {
+            dim: Dim {
+                time: self.dim.time - o.dim.time,
+                power: self.dim.power - o.dim.power,
+                item: self.dim.item - o.dim.item,
+            },
+            scale: self.scale - o.scale,
+        }
+    }
+
+    fn at_scale(self, scale: i16) -> Unit {
+        Unit { dim: self.dim, scale }
+    }
+
+    /// Human form for findings: `mJ`, `ms`, `MHz`, `mJ/item`, or a
+    /// generic `s^a·W^b` composite.
+    pub fn render(self) -> String {
+        let base = base_symbol(self.dim);
+        match self.scale {
+            -9 => format!("n{base}"),
+            -6 => format!("u{base}"),
+            -3 => format!("m{base}"),
+            0 => base,
+            3 => format!("k{base}"),
+            6 => format!("M{base}"),
+            9 => format!("G{base}"),
+            s => format!("10^{s}·{base}"),
+        }
+    }
+}
+
+fn base_symbol(d: Dim) -> String {
+    match (d.time, d.power, d.item) {
+        (1, 0, 0) => "s".to_string(),
+        (-1, 0, 0) => "Hz".to_string(),
+        (0, 1, 0) => "W".to_string(),
+        (1, 1, 0) => "J".to_string(),
+        (1, 1, -1) => "J/item".to_string(),
+        (1, 0, -1) => "s/item".to_string(),
+        (0, 1, -1) => "W/item".to_string(),
+        _ => {
+            let mut parts: Vec<String> = Vec::new();
+            for (sym, e) in [("s", d.time), ("W", d.power), ("item", d.item)] {
+                if e == 1 {
+                    parts.push(sym.to_string());
+                } else if e != 0 {
+                    parts.push(format!("{sym}^{e}"));
+                }
+            }
+            if parts.is_empty() {
+                "1".to_string()
+            } else {
+                parts.join("·")
+            }
+        }
+    }
+}
+
+/// Unit suffix segment → unit (the `_ms` / `_mj` / `_mhz` convention).
+fn suffix_unit(seg: &str) -> Option<Unit> {
+    match seg {
+        "s" | "sec" | "secs" => Some(SECS),
+        "ms" => Some(SECS.at_scale(-3)),
+        "us" => Some(SECS.at_scale(-6)),
+        "ns" => Some(SECS.at_scale(-9)),
+        "j" => Some(JOULES),
+        "mj" => Some(JOULES.at_scale(-3)),
+        "uj" => Some(JOULES.at_scale(-6)),
+        "w" => Some(WATTS),
+        "mw" => Some(WATTS.at_scale(-3)),
+        "hz" => Some(HERTZ),
+        "khz" => Some(HERTZ.at_scale(3)),
+        "mhz" => Some(HERTZ.at_scale(6)),
+        "ghz" => Some(HERTZ.at_scale(9)),
+        _ => None,
+    }
+}
+
+/// Per-item denominators the `_per_<x>` convention uses.
+fn is_item_segment(seg: &str) -> bool {
+    matches!(
+        seg,
+        "item" | "items" | "req" | "reqs" | "request" | "requests" | "op" | "ops" | "byte"
+            | "bytes" | "sample" | "samples"
+    )
+}
+
+/// Infer a unit from an identifier's suffix convention: the name must
+/// have ≥ 2 `_`-separated segments (so a bare local `s` or `ms` is not
+/// a unit), its first group must *end* in a unit suffix, and every
+/// `per`-separated denominator group must be a single item word or unit
+/// suffix.  `gap_ms` → ms, `energy_mj` → mJ, `mj_per_item` → mJ/item,
+/// `rate_hz` → Hz; anything else → unknown.
+pub fn unit_of_name(name: &str) -> Option<Unit> {
+    let lower = name.to_ascii_lowercase();
+    let segs: Vec<&str> = lower.split('_').filter(|s| !s.is_empty()).collect();
+    if segs.len() < 2 {
+        return None;
+    }
+    let mut groups: Vec<Vec<&str>> = vec![Vec::new()];
+    for s in &segs {
+        if *s == "per" {
+            groups.push(Vec::new());
+        } else if let Some(g) = groups.last_mut() {
+            g.push(s);
+        }
+    }
+    let mut it = groups.iter();
+    let num = it.next()?;
+    let mut u = suffix_unit(num.last()?)?;
+    for den in it {
+        let [seg] = den.as_slice() else { return None };
+        if is_item_segment(seg) {
+            u.dim.item -= 1;
+        } else {
+            u = u.div(suffix_unit(seg)?);
+        }
+    }
+    if u.dim.is_zero() {
+        None
+    } else {
+        Some(u)
+    }
+}
+
+/// Declared type → unit, for the `util::units` newtypes (plus
+/// `Duration`, whose only f64 boundary is `as_secs_f64`).
+pub fn type_unit(ty: &str) -> Option<Unit> {
+    match ty {
+        "Secs" => Some(SECS),
+        "Joules" => Some(JOULES),
+        "Watts" => Some(WATTS),
+        "Hertz" => Some(HERTZ),
+        "Duration" => Some(SECS),
+        _ => None,
+    }
+}
+
+/// Crate-wide declared-type units: struct field names and fn names that
+/// are declared with a unit newtype.  A name declared with *different*
+/// unit types in different places is poisoned (`Some(None)` at lookup:
+/// ambiguous, blocks the suffix fallback too).
+#[derive(Debug, Default)]
+pub struct UnitTable {
+    pub fields: BTreeMap<String, Option<Unit>>,
+    pub fns: BTreeMap<String, Option<Unit>>,
+}
+
+impl UnitTable {
+    pub fn fields_typed(&self) -> usize {
+        self.fields.values().filter(|u| u.is_some()).count()
+    }
+
+    pub fn fns_typed(&self) -> usize {
+        self.fns.values().filter(|u| u.is_some()).count()
+    }
+}
+
+fn record(map: &mut BTreeMap<String, Option<Unit>>, name: &str, u: Unit) {
+    match map.get(name) {
+        None => {
+            map.insert(name.to_string(), Some(u));
+        }
+        Some(Some(prev)) if *prev != u => {
+            map.insert(name.to_string(), None); // conflicting declarations
+        }
+        _ => {}
+    }
+}
+
+/// Aggregate statistics for the `units` report section / `--units`.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct UnitsSummary {
+    /// Files the inference pass ran over (parity + serving src).
+    pub files_checked: usize,
+    pub fns_checked: usize,
+    /// Expression nodes visited / nodes that resolved to a unit.
+    pub exprs: usize,
+    pub resolved: usize,
+    /// Same-unit checks where both sides were known.
+    pub checks: usize,
+    pub findings: usize,
+    /// Declared-type harvest sizes (crate-wide).
+    pub fields_typed: usize,
+    pub fns_typed: usize,
+}
+
+// ---------------------------------------------------------------------
+// declaration harvest
+// ---------------------------------------------------------------------
+
+fn adjacent(code: &[Tok], a: usize) -> bool {
+    match (code.get(a), code.get(a + 1)) {
+        (Some(x), Some(y)) => x.end == y.start,
+        _ => false,
+    }
+}
+
+fn at_glued(code: &[Tok], k: usize, a: char, b: char) -> bool {
+    code.get(k).is_some_and(|t| t.is_punct(a))
+        && code.get(k + 1).is_some_and(|t| t.is_punct(b))
+        && adjacent(code, k)
+}
+
+/// Index of the closer matching `code[open]`, or `hi` when unbalanced.
+fn matching(code: &[Tok], open: usize, hi: usize, oc: char, cc: char) -> usize {
+    let mut depth = 0i32;
+    let mut k = open;
+    while k < hi {
+        let Some(t) = code.get(k) else { break };
+        if t.is_punct(oc) {
+            depth += 1;
+        } else if t.is_punct(cc) {
+            depth -= 1;
+            if depth == 0 {
+                return k;
+            }
+        }
+        k += 1;
+    }
+    hi
+}
+
+/// Skip a `<...>` generic list starting at `code[k] == '<'`; returns the
+/// index past the matching `>`.  Bails at `{` / `;` / `(`.
+fn skip_angles(code: &[Tok], mut k: usize, hi: usize) -> usize {
+    let mut depth = 0i32;
+    while k < hi {
+        let Some(t) = code.get(k) else { break };
+        if t.is_punct('<') {
+            depth += 1;
+        } else if t.is_punct('>') {
+            let arrow = k >= 1 && code.get(k - 1).is_some_and(|p| p.is_punct('-'));
+            if !arrow {
+                depth -= 1;
+                if depth == 0 {
+                    return k + 1;
+                }
+            }
+        } else if t.is_punct('{') || t.is_punct(';') || t.is_punct('(') {
+            return k;
+        }
+        k += 1;
+    }
+    hi
+}
+
+/// One `fn` item found in the token stream.
+struct FnItem {
+    /// Token range of the parameter list (inside the parens).
+    params: (usize, usize),
+    /// First identifier of the return type, when declared.
+    ret: Option<String>,
+    /// Token range of the body (inside the braces); `None` for trait
+    /// method declarations.
+    body: Option<(usize, usize)>,
+    name: String,
+}
+
+fn scan_fns(code: &[Tok]) -> Vec<FnItem> {
+    let mut out = Vec::new();
+    let n = code.len();
+    let mut i = 0usize;
+    while i < n {
+        if !code.get(i).is_some_and(|t| t.is_ident("fn")) {
+            i += 1;
+            continue;
+        }
+        let Some(name_tok) = code.get(i + 1) else { break };
+        if name_tok.kind != TokKind::Ident {
+            i += 2;
+            continue;
+        }
+        let name = name_tok.text.clone();
+        let mut j = i + 2;
+        if code.get(j).is_some_and(|t| t.is_punct('<')) {
+            j = skip_angles(code, j, n);
+        }
+        if !code.get(j).is_some_and(|t| t.is_punct('(')) {
+            i = j.max(i + 1);
+            continue;
+        }
+        let close_p = matching(code, j, n, '(', ')');
+        // return type: `-> First...` right after the params
+        let mut ret = None;
+        let mut k = close_p + 1;
+        if at_glued(code, k, '-', '>') {
+            let mut m = k + 2;
+            while m < n {
+                match code.get(m) {
+                    Some(t) if t.kind == TokKind::Ident && t.text != "dyn" && t.text != "impl" => {
+                        ret = Some(t.text.clone());
+                        break;
+                    }
+                    Some(t)
+                        if t.is_punct('&')
+                            || t.is_punct('(')
+                            || t.kind == TokKind::Lifetime
+                            || t.is_ident("dyn")
+                            || t.is_ident("impl")
+                            || t.is_ident("mut") =>
+                    {
+                        m += 1;
+                    }
+                    _ => break,
+                }
+            }
+        }
+        // body: first `{` before a `;` (where-clauses pass through)
+        let mut body = None;
+        while k < n {
+            let Some(t) = code.get(k) else { break };
+            if t.is_punct(';') {
+                break;
+            }
+            if t.is_punct('{') {
+                let close_b = matching(code, k, n, '{', '}');
+                body = Some((k + 1, close_b));
+                break;
+            }
+            k += 1;
+        }
+        let next = match body {
+            Some((_, close_b)) => close_b, // skip the body; nested fns are
+            // visited by the outer parse
+            None => k,
+        };
+        out.push(FnItem {
+            params: (j + 1, close_p),
+            ret,
+            body,
+            name,
+        });
+        i = next.max(i + 1);
+    }
+    out
+}
+
+/// Harvest declared-type units from one file's code tokens into the
+/// crate-wide table: struct fields (`margin: Joules`) and fn return
+/// types (`fn gap(&self) -> Secs`).  Runs over **all** src files.
+pub fn harvest(code: &[Tok], table: &mut UnitTable) {
+    // struct fields
+    let n = code.len();
+    let mut i = 0usize;
+    while i < n {
+        if code.get(i).is_some_and(|t| t.is_ident("struct")) {
+            let mut j = i + 2; // past `struct Name`
+            if code.get(j).is_some_and(|t| t.is_punct('<')) {
+                j = skip_angles(code, j, n);
+            }
+            if code.get(j).is_some_and(|t| t.is_punct('{')) {
+                let close = matching(code, j, n, '{', '}');
+                harvest_fields(code, j + 1, close, table);
+                i = close;
+            }
+        }
+        i += 1;
+    }
+    // fn return types
+    for f in scan_fns(code) {
+        if let Some(u) = f.ret.as_deref().and_then(type_unit) {
+            record(&mut table.fns, &f.name, u);
+        }
+    }
+}
+
+fn harvest_fields(code: &[Tok], lo: usize, close: usize, table: &mut UnitTable) {
+    let mut depth = 0i32;
+    let mut k = lo;
+    while k < close {
+        let Some(t) = code.get(k) else { break };
+        if t.is_punct('(') || t.is_punct('[') || t.is_punct('{') || t.is_punct('<') {
+            depth += 1;
+        } else if t.is_punct(')') || t.is_punct(']') || t.is_punct('}') || t.is_punct('>') {
+            depth -= 1;
+        } else if depth == 0
+            && t.kind == TokKind::Ident
+            && code.get(k + 1).is_some_and(|c| c.is_punct(':'))
+            && !at_glued(code, k + 1, ':', ':')
+        {
+            let name = t.text.clone();
+            // first identifier of the type
+            let mut m = k + 2;
+            while m < close {
+                match code.get(m) {
+                    Some(tt) if tt.kind == TokKind::Ident => {
+                        if let Some(u) = type_unit(&tt.text) {
+                            record(&mut table.fields, &name, u);
+                        }
+                        break;
+                    }
+                    Some(tt) if tt.is_punct(',') => break,
+                    Some(_) => m += 1,
+                    None => break,
+                }
+            }
+            k = m;
+        }
+        k += 1;
+    }
+}
+
+// ---------------------------------------------------------------------
+// inference
+// ---------------------------------------------------------------------
+
+struct Cx<'a> {
+    file: &'a str,
+    wire: bool,
+    table: &'a UnitTable,
+    env: BTreeMap<String, Option<Unit>>,
+    findings: Vec<Finding>,
+    stats: UnitsSummary,
+}
+
+impl Cx<'_> {
+    fn push(&mut self, rule: &str, line: u32, message: String) {
+        self.findings.push(Finding {
+            rule: rule.to_string(),
+            file: self.file.to_string(),
+            line,
+            message,
+            suppressed: false,
+            reason: None,
+        });
+    }
+
+    /// The same-unit check: both sides known, dimensions then scales.
+    fn check(&mut self, line: u32, what: &str, a: Unit, b: Unit) {
+        self.stats.checks += 1;
+        if a.dim != b.dim {
+            self.push(
+                UNIT_MIXED_ADD,
+                line,
+                format!(
+                    "{what} combines {} with {} — incompatible dimensions",
+                    a.render(),
+                    b.render()
+                ),
+            );
+        } else if a.scale != b.scale {
+            let d = (a.scale - b.scale).abs();
+            self.push(
+                UNIT_SCALE_MISMATCH,
+                line,
+                format!(
+                    "{what} combines {} with {} — same dimension, scales differ by 10^{d}",
+                    a.render(),
+                    b.render()
+                ),
+            );
+        }
+    }
+}
+
+fn field_unit(name: &str, cx: &Cx) -> Option<Unit> {
+    match cx.table.fields.get(name) {
+        Some(Some(u)) => Some(*u),
+        Some(None) => None, // poisoned: conflicting declared types
+        None => unit_of_name(name),
+    }
+}
+
+fn fn_unit(name: &str, cx: &Cx) -> Option<Unit> {
+    match cx.table.fns.get(name) {
+        Some(Some(u)) => Some(*u),
+        Some(None) => None,
+        None => unit_of_name(name),
+    }
+}
+
+/// `Type::from_ms`-style boundary constructors: expected argument unit.
+fn boundary_arg(base: Unit, ctor: &str) -> Option<Unit> {
+    let scaled = |s| Some(base.at_scale(s));
+    match ctor {
+        "from_ms" | "from_millis" | "from_mj" | "from_mw" => scaled(-3),
+        "from_us" | "from_micros" | "from_uj" => scaled(-6),
+        "from_nanos" => scaled(-9),
+        "from_secs" | "from_secs_f64" => scaled(0),
+        "from_mhz" => scaled(6),
+        _ => None,
+    }
+}
+
+fn call_unit(path: &[String], args: &[(Option<Unit>, u32)], cx: &mut Cx) -> Option<Unit> {
+    let last = path.last()?;
+    if path.len() == 2 && path.first().is_some_and(|p| p == "Json") && last == "Num" {
+        // Json::Num(x): the wire-value wrapper passes the unit through
+        return args.first().and_then(|(u, _)| *u);
+    }
+    if let Some(base) = type_unit(last) {
+        // newtype constructor `Secs(x)`: x is a base-scale number
+        if let Some((Some(a), aline)) = args.first() {
+            cx.check(*aline, &format!("`{last}(..)` argument"), base, *a);
+        }
+        return Some(base);
+    }
+    if path.len() >= 2 {
+        if let Some(base) = path.get(path.len() - 2).and_then(|t| type_unit(t)) {
+            if let Some(expected) = boundary_arg(base, last) {
+                if let Some((Some(a), aline)) = args.first() {
+                    cx.check(*aline, &format!("`{last}(..)` argument"), expected, *a);
+                }
+                return Some(base); // newtypes normalize to base scale
+            }
+        }
+    }
+    fn_unit(last, cx)
+}
+
+fn method_unit(
+    recv_u: Option<Unit>,
+    name: &str,
+    args: &[(Option<Unit>, u32)],
+    cx: &mut Cx,
+) -> Option<Unit> {
+    match name {
+        // value extraction / unit-preserving combinators
+        "value" | "abs" | "clone" | "to_owned" | "copied" | "cloned" => recv_u,
+        "max" | "min" | "clamp" => {
+            if let Some(r) = recv_u {
+                for (a, aline) in args {
+                    if let Some(a) = a {
+                        cx.check(*aline, &format!("`.{name}(..)` argument"), r, *a);
+                    }
+                }
+            }
+            recv_u
+        }
+        // newtype boundary extractors: the result is a number *in* that
+        // scaled unit
+        "mj" => Some(JOULES.at_scale(-3)),
+        "uj" => Some(JOULES.at_scale(-6)),
+        "ms" => Some(SECS.at_scale(-3)),
+        "us" => Some(SECS.at_scale(-6)),
+        "mw" => Some(WATTS.at_scale(-3)),
+        "mhz" => Some(HERTZ.at_scale(6)),
+        // std::time boundaries
+        "as_secs_f64" | "as_secs" | "elapsed" => Some(SECS),
+        "as_millis" => Some(SECS.at_scale(-3)),
+        "as_micros" => Some(SECS.at_scale(-6)),
+        "as_nanos" => Some(SECS.at_scale(-9)),
+        _ => fn_unit(name, cx),
+    }
+}
+
+fn path_unit(segs: &[String], cx: &Cx) -> Option<Unit> {
+    match segs {
+        [name] => {
+            if let Some(u) = cx.env.get(name) {
+                return *u;
+            }
+            if name == "self" || name == "Self" {
+                return None;
+            }
+            unit_of_name(name)
+        }
+        [ty, _assoc] if type_unit(ty).is_some() => type_unit(ty), // Secs::ZERO
+        _ => segs.last().and_then(|s| unit_of_name(s)),
+    }
+}
+
+fn wire_key_like(key: &str) -> bool {
+    !key.is_empty()
+        && key
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+fn infer(e: &Expr, cx: &mut Cx) -> Option<Unit> {
+    cx.stats.exprs += 1;
+    let u = infer_inner(e, cx);
+    if u.is_some() {
+        cx.stats.resolved += 1;
+    }
+    u
+}
+
+fn infer_inner(e: &Expr, cx: &mut Cx) -> Option<Unit> {
+    match &e.kind {
+        ExprKind::Num(_) | ExprKind::Str(_) => None,
+        ExprKind::Path(segs) => path_unit(segs, cx),
+        ExprKind::Unary { rhs, .. } => infer(rhs, cx),
+        ExprKind::Cast(inner) => infer(inner, cx),
+        ExprKind::Binary { op, lhs, rhs } => {
+            let a = infer(lhs, cx);
+            let b = infer(rhs, cx);
+            if op.requires_same_unit() {
+                if let (Some(a), Some(b)) = (a, b) {
+                    cx.check(e.line, &format!("`{}`", op.symbol()), a, b);
+                    if !op.is_comparison() && !matches!(op, BinOp::Assign) && a == b {
+                        return Some(a);
+                    }
+                }
+                return None;
+            }
+            match op {
+                BinOp::Mul => {
+                    let u = a?.mul(b?);
+                    if u.dim.is_zero() {
+                        None
+                    } else {
+                        Some(u)
+                    }
+                }
+                BinOp::Div => {
+                    let u = a?.div(b?);
+                    if u.dim.is_zero() {
+                        None
+                    } else {
+                        Some(u)
+                    }
+                }
+                _ => None,
+            }
+        }
+        ExprKind::Call { path, args } => {
+            let au: Vec<(Option<Unit>, u32)> =
+                args.iter().map(|a| (infer(a, cx), a.line)).collect();
+            call_unit(path, &au, cx)
+        }
+        ExprKind::Method { recv, name, args } => {
+            let r = infer(recv, cx);
+            let au: Vec<(Option<Unit>, u32)> =
+                args.iter().map(|a| (infer(a, cx), a.line)).collect();
+            method_unit(r, name, &au, cx)
+        }
+        ExprKind::Field { recv, name } => {
+            infer(recv, cx);
+            field_unit(name, cx)
+        }
+        ExprKind::Index { recv, args } => {
+            let r = infer(recv, cx);
+            for a in args {
+                infer(a, cx);
+            }
+            r // an element of a suffixed collection carries the suffix
+        }
+        ExprKind::Tuple(kids) => {
+            let units: Vec<Option<Unit>> = kids.iter().map(|k| infer(k, cx)).collect();
+            if cx.wire && kids.len() == 2 {
+                if let Some(ExprKind::Str(key)) = kids.first().map(|k| &k.kind) {
+                    if wire_key_like(key) {
+                        if let (Some(exp), Some(Some(got))) =
+                            (unit_of_name(key), units.get(1).copied())
+                        {
+                            cx.stats.checks += 1;
+                            if exp != got {
+                                cx.push(
+                                    UNIT_WIRE_SUFFIX,
+                                    e.line,
+                                    format!(
+                                        "wire key \"{key}\" implies {} but the encoded value is {}",
+                                        exp.render(),
+                                        got.render()
+                                    ),
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+            None
+        }
+        ExprKind::StructLit { fields, .. } => {
+            for (name, val) in fields {
+                let Some(val) = val else { continue }; // shorthand: same name
+                let vu = infer(val, cx);
+                if name == ".." {
+                    continue;
+                }
+                if let (Some(fu), Some(vu)) = (field_unit(name, cx), vu) {
+                    cx.check(val.line, &format!("field `{name}`"), fu, vu);
+                }
+            }
+            None
+        }
+        ExprKind::Let { name, ty, init } => {
+            let declared = ty.as_deref().and_then(type_unit);
+            let target = declared.or_else(|| unit_of_name(name));
+            let iu = init.as_ref().and_then(|i| infer(i, cx));
+            if let (Some(t), Some(got), Some(i)) = (target, iu, init.as_ref()) {
+                cx.check(i.line, &format!("binding `{name}`"), t, got);
+            }
+            cx.env.insert(name.clone(), target.or(iu));
+            None
+        }
+        ExprKind::Block(kids) => {
+            let mut last = None;
+            for k in kids {
+                last = infer(k, cx);
+            }
+            last // a block's unit is its tail expression's
+        }
+        ExprKind::Other(kids) => {
+            for k in kids {
+                infer(k, cx);
+            }
+            None
+        }
+    }
+}
+
+/// Bind fn parameters (`name: Type`) into the environment: declared
+/// newtype unit first, suffix convention second.
+fn bind_params(code: &[Tok], lo: usize, hi: usize, cx: &mut Cx) {
+    let mut depth = 0i32;
+    let mut k = lo;
+    let mut last_ident: Option<String> = None;
+    while k < hi {
+        let Some(t) = code.get(k) else { break };
+        if t.is_punct('(') || t.is_punct('[') || t.is_punct('{') || t.is_punct('<') {
+            depth += 1;
+        } else if t.is_punct(')') || t.is_punct(']') || t.is_punct('}') || t.is_punct('>') {
+            depth -= 1;
+        } else if depth == 0 {
+            if t.kind == TokKind::Ident && t.text != "mut" && t.text != "self" {
+                if last_ident.is_none() {
+                    last_ident = Some(t.text.clone());
+                }
+            } else if t.is_punct(':')
+                && !at_glued(code, k, ':', ':')
+                && !code.get(k.wrapping_sub(1)).is_some_and(|p| p.is_punct(':'))
+            {
+                if let Some(name) = last_ident.take() {
+                    // first identifier of the type
+                    let mut m = k + 1;
+                    let mut ty = None;
+                    while m < hi {
+                        match code.get(m) {
+                            Some(tt) if tt.kind == TokKind::Ident => {
+                                ty = Some(tt.text.clone());
+                                break;
+                            }
+                            Some(tt)
+                                if tt.is_punct('&')
+                                    || tt.kind == TokKind::Lifetime
+                                    || tt.is_ident("mut")
+                                    || tt.is_ident("dyn")
+                                    || tt.is_ident("impl") =>
+                            {
+                                m += 1;
+                            }
+                            _ => break,
+                        }
+                    }
+                    let u = ty
+                        .as_deref()
+                        .and_then(type_unit)
+                        .or_else(|| unit_of_name(&name));
+                    cx.env.insert(name, u);
+                }
+            } else if t.is_punct(',') {
+                last_ident = None;
+            }
+        }
+        k += 1;
+    }
+}
+
+/// Run the dimensional pass over one file's fn bodies.  The caller
+/// gates on scope (parity + serving src files) and applies suppression
+/// pragmas afterwards like any other per-file rule.
+pub fn check_file(
+    rel: &str,
+    code: &[Tok],
+    table: &UnitTable,
+    wire: bool,
+    stats: &mut UnitsSummary,
+) -> Vec<Finding> {
+    let mut cx = Cx {
+        file: rel,
+        wire,
+        table,
+        env: BTreeMap::new(),
+        findings: Vec::new(),
+        stats: UnitsSummary::default(),
+    };
+    for f in scan_fns(code) {
+        let Some((blo, bhi)) = f.body else { continue };
+        cx.env.clear();
+        cx.stats.fns_checked += 1;
+        bind_params(code, f.params.0, f.params.1, &mut cx);
+        for e in expr::parse_stmts(code, blo, bhi) {
+            infer(&e, &mut cx);
+        }
+    }
+    cx.stats.files_checked = 1;
+    cx.stats.findings = cx.findings.len();
+    stats.files_checked += cx.stats.files_checked;
+    stats.fns_checked += cx.stats.fns_checked;
+    stats.exprs += cx.stats.exprs;
+    stats.resolved += cx.stats.resolved;
+    stats.checks += cx.stats.checks;
+    stats.findings += cx.stats.findings;
+    cx.findings
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::indexing_slicing)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::{code_tokens, tokenize};
+
+    fn run(src: &str) -> Vec<Finding> {
+        run_wire(src, false)
+    }
+
+    fn run_wire(src: &str, wire: bool) -> Vec<Finding> {
+        let toks = tokenize(src);
+        let code = code_tokens(&toks);
+        let mut table = UnitTable::default();
+        harvest(&code, &mut table);
+        let mut stats = UnitsSummary::default();
+        check_file("src/runtime/x.rs", &code, &table, wire, &mut stats)
+    }
+
+    #[test]
+    fn suffix_inference() {
+        assert_eq!(unit_of_name("gap_ms"), Some(SECS.at_scale(-3)));
+        assert_eq!(unit_of_name("energy_mj"), Some(JOULES.at_scale(-3)));
+        assert_eq!(unit_of_name("rate_hz"), Some(HERTZ));
+        assert_eq!(unit_of_name("clock_mhz"), Some(HERTZ.at_scale(6)));
+        let per_item = unit_of_name("mj_per_item").unwrap();
+        assert_eq!(per_item.dim, Dim { time: 1, power: 1, item: -1 });
+        assert_eq!(per_item.scale, -3);
+        // too short / no suffix / dimensionless stay unknown
+        assert_eq!(unit_of_name("ms"), None);
+        assert_eq!(unit_of_name("count"), None);
+        assert_eq!(unit_of_name("total_count"), None);
+        assert_eq!(unit_of_name("s_per_s"), None);
+    }
+
+    #[test]
+    fn algebra_watts_times_secs_is_joules() {
+        // W·s = J at matching scales: no findings
+        assert!(run("fn f(e_j: f64, p_w: f64, t_s: f64) -> f64 { e_j + p_w * t_s }").is_empty());
+        // mW·s = mJ, added to J: scale mismatch
+        let f = run("fn f(e_j: f64, p_mw: f64, t_s: f64) -> f64 { e_j + p_mw * t_s }");
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, UNIT_SCALE_MISMATCH);
+        assert!(f[0].message.contains("mJ"), "{}", f[0].message);
+        // s · Hz is dimensionless: comparing it to anything is unchecked
+        assert!(run("fn f(t_s: f64, r_hz: f64, n: f64) -> bool { t_s * r_hz > n }").is_empty());
+    }
+
+    #[test]
+    fn mixed_add_fires_with_line() {
+        let f = run("fn f(gap_ms: f64, power_mw: f64) -> f64 {\n    gap_ms + power_mw\n}");
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, UNIT_MIXED_ADD);
+        assert_eq!(f[0].line, 2);
+    }
+
+    #[test]
+    fn scale_mismatch_on_compare_and_assign() {
+        let f = run("fn f(t_ms: f64, deadline_s: f64) -> bool { t_ms < deadline_s }");
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, UNIT_SCALE_MISMATCH);
+        let f = run("fn f(mut t_s: f64, d_ms: f64) { t_s += d_ms; }");
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, UNIT_SCALE_MISMATCH);
+    }
+
+    #[test]
+    fn boundary_calls_type_both_sides() {
+        // from_ms argument must be an ms number
+        let f = run("fn f(gap_s: f64) { let g = Secs::from_ms(gap_s); }");
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, UNIT_SCALE_MISMATCH);
+        // .value() of a declared Joules field is base J; .mj() is mJ
+        let src = "struct C { margin: Joules }\n\
+                   impl C { fn f(&self, x_mj: f64) -> f64 { x_mj + self.margin.value() } }";
+        let f = run(src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, UNIT_SCALE_MISMATCH);
+        let src = "struct C { margin: Joules }\n\
+                   impl C { fn f(&self, x_mj: f64) -> f64 { x_mj + self.margin.mj() } }";
+        assert!(run(src).is_empty());
+    }
+
+    #[test]
+    fn declared_types_beat_suffixes_and_conflicts_poison() {
+        // declared Secs wins over a (wrong) _ms suffix: comparing to
+        // base seconds is clean
+        let src = "struct C { gap_ms: Secs }\n\
+                   fn f(c: &C, t_s: f64) -> bool { c.gap_ms.value() > t_s }";
+        assert!(run(src).is_empty());
+        // conflicting declarations poison the name entirely
+        let src = "struct A { gap: Secs }\nstruct B { gap: Joules }\n\
+                   fn f(a: &A, t_s: f64) -> f64 { a.gap.value() + t_s }";
+        assert!(run(src).is_empty());
+    }
+
+    #[test]
+    fn let_bindings_check_and_propagate() {
+        let f = run("fn f(t: Secs) { let gap_ms = t.value(); }");
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, UNIT_SCALE_MISMATCH);
+        // propagation: bound unit flows into later expressions
+        let f = run("fn f(t: Secs, e_mj: f64) { let gap = t.ms(); let x = e_mj + gap; }");
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, UNIT_MIXED_ADD);
+    }
+
+    #[test]
+    fn struct_literal_fields_are_checked() {
+        let src = "fn f(d: Joules) -> Rec { Rec { before_mj: d.value(), n: 3 } }";
+        let f = run(src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, UNIT_SCALE_MISMATCH);
+        assert!(f[0].message.contains("before_mj"), "{}", f[0].message);
+    }
+
+    #[test]
+    fn wire_suffix_checks_key_against_value() {
+        let src = "struct R { gap: Secs }\n\
+                   impl R { fn to_json(&self) -> Json {\n\
+                   Json::obj(vec![(\"gap_ms\", Json::Num(self.gap.value()))])\n} }";
+        let f = run_wire(src, true);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, UNIT_WIRE_SUFFIX);
+        assert_eq!(f[0].line, 3);
+        assert!(f[0].message.contains("gap_ms"), "{}", f[0].message);
+        // matching suffix is clean; non-wire files never run the check
+        let ok = src.replace("gap_ms", "gap_s");
+        assert!(run_wire(&ok, true).is_empty());
+        assert!(run_wire(src, false).is_empty());
+    }
+
+    #[test]
+    fn unknowns_make_no_findings() {
+        // untyped names, literals, dimensionless ratios: all silent
+        let src = "fn f(a: f64, b: f64, items: f64, t_s: f64, u_s: f64) -> f64 {\n\
+                   let r = t_s / u_s; a + b * r + items + 1.0\n}";
+        assert!(run(src).is_empty());
+        // a mismatch does not cascade into downstream findings
+        let f = run("fn f(a_mj: f64, b_j: f64, c_mj: f64) -> f64 { (a_mj + b_j) + c_mj }");
+        assert_eq!(f.len(), 1, "{f:?}");
+    }
+
+    #[test]
+    fn duration_boundaries() {
+        assert!(run(
+            "fn f(t_s: f64) -> f64 { t_s + started.elapsed().as_secs_f64() }"
+        )
+        .is_empty());
+        let f = run("fn f(t_s: f64) -> bool { t_s > d.as_millis() }");
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, UNIT_SCALE_MISMATCH);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let toks = tokenize("fn f(t_ms: f64, u_ms: f64) -> f64 { t_ms + u_ms }");
+        let code = code_tokens(&toks);
+        let table = UnitTable::default();
+        let mut stats = UnitsSummary::default();
+        let f = check_file("src/runtime/x.rs", &code, &table, false, &mut stats);
+        assert!(f.is_empty());
+        assert_eq!(stats.files_checked, 1);
+        assert_eq!(stats.fns_checked, 1);
+        assert_eq!(stats.checks, 1);
+        assert!(stats.resolved >= 2);
+        assert!(stats.exprs >= 3);
+    }
+}

@@ -131,10 +131,11 @@ fn print_usage() {
                      worker timeline)\n\
            verify    [--artifact <name>]\n\
            lint      [--root <crate-dir>] [--json <report-path>] [--graph]\n\
-                     [--max-suppressions N]  (repo-invariant static\n\
+                     [--units] [--max-suppressions N]  (repo-invariant static\n\
                      analysis: determinism / panic-surface / wire-hygiene /\n\
-                     call-graph panic-reach + lock discipline; exit 0 clean,\n\
-                     1 on findings, 2 on usage or I/O error)\n\
+                     call-graph panic-reach + lock discipline + dimensional\n\
+                     unit consistency; exit 0 clean, 1 on findings, 2 on\n\
+                     usage or I/O error)\n\
            devices"
     );
 }
@@ -192,6 +193,17 @@ fn cmd_lint(args: &Args) -> i32 {
         for (a, b, n) in &g.lock_order {
             println!("graph:   lock order {a} -> {b} ({n} site(s))");
         }
+    }
+    if args.has_flag("units") {
+        let u = &out.units;
+        println!(
+            "units: {} file(s) checked, {} fn(s), {} expr node(s) ({} resolved to a unit)",
+            u.files_checked, u.fns_checked, u.exprs, u.resolved
+        );
+        println!(
+            "units: {} same-unit check(s), {} finding(s); declared types: {} field(s), {} fn(s)",
+            u.checks, u.findings, u.fields_typed, u.fns_typed
+        );
     }
     if let Some(path) = args.get("json") {
         let report = elastic_gen::analysis::report_json(&out);

@@ -255,7 +255,7 @@ impl Supervisor {
         let cc = ConfigController::raw(winner.candidate.device);
         let reconfig =
             cc.cold_start_energy() + self.cfg.deployed.cost.idle_power * cc.cold_start_time();
-        let items = (self.cfg.amortize_horizon.value() / gap.value().max(1e-12)).max(1.0);
+        let items = (self.cfg.amortize_horizon / gap.max(Secs(1e-12))).max(1.0);
         let amortized = reconfig / items;
         let net_gain = (before - after) - amortized;
         SwitchDecision {
@@ -265,7 +265,7 @@ impl Supervisor {
             reconfig,
             amortized,
             net_gain,
-            switch: net_gain.value() > self.cfg.margin.value(),
+            switch: net_gain > self.cfg.margin,
         }
     }
 
@@ -279,13 +279,13 @@ impl Supervisor {
         let trace = coord.metrics().arrival_trace(artifact);
         let started = Instant::now();
         let mut outcome = self.evaluate(&trace);
-        let cycle_s = started.elapsed().as_secs_f64();
+        let cycle = Secs(started.elapsed().as_secs_f64());
         let Some(decision) = &outcome.decision else {
-            self.note_cycle(coord, artifact, &outcome, cycle_s, false);
+            self.note_cycle(coord, artifact, &outcome, cycle, false);
             return Ok(outcome);
         };
         if !decision.switch {
-            self.note_cycle(coord, artifact, &outcome, cycle_s, false);
+            self.note_cycle(coord, artifact, &outcome, cycle, false);
             return Ok(outcome);
         }
 
@@ -315,7 +315,7 @@ impl Supervisor {
             outcome.state = AdaptState::Draining;
         }
         let switched = outcome.state == AdaptState::Switched;
-        self.note_cycle(coord, artifact, &outcome, cycle_s, switched);
+        self.note_cycle(coord, artifact, &outcome, cycle, switched);
         Ok(outcome)
     }
 
@@ -334,9 +334,9 @@ impl Supervisor {
         let trace = coord.metrics().arrival_trace(artifact);
         let started = Instant::now();
         let outcome = self.evaluate(&trace);
-        let cycle_s = started.elapsed().as_secs_f64();
+        let cycle = Secs(started.elapsed().as_secs_f64());
         self.cfg.drift_threshold = saved;
-        self.note_cycle(coord, artifact, &outcome, cycle_s, false);
+        self.note_cycle(coord, artifact, &outcome, cycle, false);
         outcome
     }
 
@@ -348,7 +348,7 @@ impl Supervisor {
         coord: &Coordinator,
         artifact: &str,
         outcome: &AdaptOutcome,
-        cycle_s: f64,
+        cycle: Secs,
         switched: bool,
     ) {
         if let Some(d) = &outcome.decision {
@@ -377,7 +377,7 @@ impl Supervisor {
                 outcome.state,
                 AdaptState::Sweeping | AdaptState::Draining | AdaptState::Switched
             ) {
-                ev.sweep_s = Some(cycle_s);
+                ev.sweep_s = Some(cycle.value());
             }
             ev.decided = outcome.decision.is_some();
             ev.switched = switched;

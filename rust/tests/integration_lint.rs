@@ -111,6 +111,84 @@ fn seeded_violations_trip_every_rule_family() {
     assert!(rules.contains(&"obs-print"), "{rules:?}");
 }
 
+/// The dimensional pass: each units rule fires on a seeded fixture with
+/// the expected file, line, and rendered units in the message.
+#[test]
+fn seeded_unit_violations_fire_every_units_rule() {
+    // dimension clash in a parity module: energy added to power
+    let mixed = fixture(
+        "src/sim/seeded_units.rs",
+        "fn total(e_mj: f64, p_w: f64) -> f64 {\n    e_mj + p_w\n}\n",
+    );
+    // scale clash in a serving module: seconds compared to milliseconds
+    let scale = fixture(
+        "src/runtime/seeded_units.rs",
+        "fn late(deadline_ms: f64, waited_s: f64) -> bool {\n    waited_s > deadline_ms\n}\n",
+    );
+    // wire key suffix vs the encoded field's unit, resolved through the
+    // struct-field type harvest (`before: Joules` renders as J, not mJ)
+    let wire = fixture(
+        "src/obs/seeded_wire.rs",
+        "pub struct Rec { pub before: Joules }\n\
+         impl Rec {\n\
+             fn to_json(&self) -> Vec<(&'static str, Json)> {\n\
+                 vec![(\"before_mj\", Json::Num(self.before.value()))]\n\
+             }\n\
+         }\n",
+    );
+    let out = lint_files(&[mixed, scale, wire]);
+    let findings: Vec<_> = out.unsuppressed().collect();
+
+    let ma = findings
+        .iter()
+        .find(|f| f.rule == "unit-mixed-add")
+        .unwrap_or_else(|| panic!("unit-mixed-add must fire: {findings:?}"));
+    assert_eq!(ma.file, "src/sim/seeded_units.rs");
+    assert_eq!(ma.line, 2, "{}", ma.message);
+    assert!(ma.message.contains("mJ") && ma.message.contains("W"), "{}", ma.message);
+
+    let sc = findings
+        .iter()
+        .find(|f| f.rule == "unit-scale-mismatch")
+        .unwrap_or_else(|| panic!("unit-scale-mismatch must fire: {findings:?}"));
+    assert_eq!(sc.file, "src/runtime/seeded_units.rs");
+    assert_eq!(sc.line, 2, "{}", sc.message);
+    assert!(sc.message.contains("10^3"), "{}", sc.message);
+
+    let ws = findings
+        .iter()
+        .find(|f| f.rule == "unit-wire-suffix")
+        .unwrap_or_else(|| panic!("unit-wire-suffix must fire: {findings:?}"));
+    assert_eq!(ws.file, "src/obs/seeded_wire.rs");
+    assert_eq!(ws.line, 4, "{}", ws.message);
+    assert!(
+        ws.message.contains("before_mj") && ws.message.contains("mJ"),
+        "{}",
+        ws.message
+    );
+
+    // the summary counted all three files and the resolutions behind them
+    assert_eq!(out.units.files_checked, 3, "{:?}", out.units);
+    assert!(out.units.checks >= 3, "{:?}", out.units);
+    assert!(out.units.findings >= 3, "{:?}", out.units);
+}
+
+/// Conservatism contract: names without a unit suffix or declared type
+/// stay unknown and produce no findings, in or out of scope.
+#[test]
+fn units_pass_stays_silent_on_unknown_units() {
+    let f = fixture(
+        "src/sim/seeded_unknowns.rs",
+        "fn mix(total: f64, count: f64, ratio: f64) -> f64 {\n    total + count * ratio\n}\n",
+    );
+    let out = lint_files(&[f]);
+    assert!(
+        out.unsuppressed().all(|f| !f.rule.starts_with("unit-")),
+        "{:?}",
+        out.findings
+    );
+}
+
 /// panic-reach: a serving entry calling across files into a helper that
 /// unwraps reports the whole chain, not just the local call site.
 #[test]
@@ -306,6 +384,72 @@ fn lint_cli_gates_and_reports() {
         "an exceeded suppression cap must exit 1; stderr:\n{}",
         String::from_utf8_lossy(&capped_run.stderr)
     );
+
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+/// End-to-end `--units` through the binary: a seeded unit clash exits 1
+/// with the finding and the stats lines on stdout, the JSON report grows
+/// a `units` section, and a clean tree stays exit 0 with the pass on.
+#[test]
+fn lint_cli_units_pass_gates_and_reports() {
+    let base =
+        std::env::temp_dir().join(format!("elastic-gen-lint-units-{}", std::process::id()));
+    let dirty = base.join("dirty");
+    let clean = base.join("clean");
+    std::fs::create_dir_all(dirty.join("src/sim")).expect("mkdir");
+    std::fs::create_dir_all(clean.join("src/sim")).expect("mkdir");
+    std::fs::write(
+        dirty.join("src/sim/bad_units.rs"),
+        "fn total(e_mj: f64, p_w: f64) -> f64 {\n    e_mj + p_w\n}\n",
+    )
+    .expect("write fixture");
+    std::fs::write(
+        clean.join("src/sim/ok_units.rs"),
+        "fn total(a_mj: f64, b_mj: f64) -> f64 {\n    a_mj + b_mj\n}\n",
+    )
+    .expect("write fixture");
+
+    let exe = env!("CARGO_BIN_EXE_elastic-gen");
+    let report = base.join("units-report.json");
+    let dirty_run = Command::new(exe)
+        .args(["lint", "--units", "--root"])
+        .arg(&dirty)
+        .arg("--json")
+        .arg(&report)
+        .output()
+        .expect("run lint on dirty tree");
+    assert_eq!(
+        dirty_run.status.code(),
+        Some(1),
+        "a unit finding must exit 1; stdout:\n{}",
+        String::from_utf8_lossy(&dirty_run.stdout)
+    );
+    let stdout = String::from_utf8_lossy(&dirty_run.stdout);
+    assert!(stdout.contains("unit-mixed-add"), "{stdout}");
+    assert!(stdout.contains("units:"), "{stdout}");
+
+    let text = std::fs::read_to_string(&report).expect("json report written");
+    let j = elastic_gen::util::json::parse(&text).expect("report parses");
+    let u = j.get("units").expect("report carries the units section");
+    assert_eq!(u.get("files_checked").and_then(|n| n.as_usize()), Some(1), "{text}");
+    assert_eq!(u.get("findings").and_then(|n| n.as_usize()), Some(1), "{text}");
+    assert!(u.get("resolved").and_then(|n| n.as_usize()).unwrap_or(0) >= 2, "{text}");
+
+    let clean_run = Command::new(exe)
+        .args(["lint", "--units", "--root"])
+        .arg(&clean)
+        .output()
+        .expect("run lint on clean tree");
+    assert_eq!(
+        clean_run.status.code(),
+        Some(0),
+        "a unit-clean tree must exit 0; stdout:\n{}stderr:\n{}",
+        String::from_utf8_lossy(&clean_run.stdout),
+        String::from_utf8_lossy(&clean_run.stderr)
+    );
+    let clean_out = String::from_utf8_lossy(&clean_run.stdout);
+    assert!(clean_out.contains("units:"), "{clean_out}");
 
     let _ = std::fs::remove_dir_all(&base);
 }

@@ -309,6 +309,232 @@ impl Strategy for CharSoup {
     }
 }
 
+/// Token-soup source strings flavoured like expression code: identifier /
+/// number / operator fragments joined with occasional separators, so the
+/// parser sees deep operator chains, unbalanced delimiters, and stray
+/// keywords rather than only lexer hazards.  Shrinks by dropping fragments.
+struct ExprSoup {
+    max_frags: usize,
+}
+
+const FRAGS: &[&str] = &[
+    "x", "energy_mj", "t_s", "self", "Secs", "from_ms", "0", "1.5", "42", "+", "-", "*", "/",
+    "%", "==", "!=", "<=", ">=", "&&", "||", "<<", ">>", "+=", "..", "..=", "->", "=>", "(",
+    ")", "{", "}", "[", "]", ",", ";", ":", "::", ".", "!", "&", "|", "?", "let", "if", "else",
+    "match", "for", "in", "while", "return", "fn", "struct", "as", "mut", "#",
+];
+
+impl Strategy for ExprSoup {
+    type Value = String;
+
+    fn generate(&self, rng: &mut Rng) -> String {
+        let n = rng.int_range(0, self.max_frags as i64) as usize;
+        let mut out = String::new();
+        for _ in 0..n {
+            out.push_str(FRAGS[rng.int_range(0, FRAGS.len() as i64 - 1) as usize]);
+            if rng.chance(0.6) {
+                out.push(' ');
+            }
+        }
+        out
+    }
+
+    fn shrink(&self, v: &String) -> Vec<String> {
+        if v.is_empty() {
+            return vec![];
+        }
+        let chars: Vec<char> = v.chars().collect();
+        vec![chars[..chars.len() / 2].iter().collect(), chars[1..].iter().collect()]
+    }
+}
+
+/// Recursive span-nesting check: every child's span sits inside its
+/// parent's, and every span is within the source bounds.
+fn spans_nested(e: &elastic_gen::analysis::expr::Expr, len: usize) -> bool {
+    let (lo, hi) = e.span;
+    if lo > hi || hi > len {
+        return false;
+    }
+    e.children().iter().all(|c| c.span.0 >= lo && c.span.1 <= hi && spans_nested(c, len))
+}
+
+#[test]
+fn prop_expr_parse_total_and_spans_nested() {
+    use elastic_gen::analysis::expr::parse_all;
+    use elastic_gen::analysis::lexer::{code_tokens, tokenize};
+    check(
+        "expression parser is total over token soup; spans are in-bounds and nested",
+        400,
+        ExprSoup { max_frags: 48 },
+        |src| {
+            // calling at all asserts totality — a panic fails the property
+            let toks = tokenize(src);
+            let code = code_tokens(&toks);
+            parse_all(&code).iter().all(|e| spans_nested(e, src.len()))
+        },
+    );
+}
+
+#[test]
+fn prop_expr_parse_total_on_char_soup() {
+    use elastic_gen::analysis::expr::parse_all;
+    use elastic_gen::analysis::lexer::{code_tokens, tokenize};
+    check(
+        "expression parser is total over raw character soup",
+        300,
+        CharSoup { max_len: 64 },
+        |src| {
+            let toks = tokenize(src);
+            let code = code_tokens(&toks);
+            parse_all(&code).iter().all(|e| spans_nested(e, src.len()))
+        },
+    );
+}
+
+/// Reference arithmetic tree: the generator owns precedence-free structure,
+/// the renderer emits minimal parentheses from the same binding powers the
+/// parser uses, and both sides evaluate independently.
+#[derive(Debug, Clone)]
+enum Arith {
+    Num(i64),
+    Neg(Box<Arith>),
+    Bin(char, Box<Arith>, Box<Arith>),
+}
+
+impl Arith {
+    fn eval(&self) -> Option<f64> {
+        match self {
+            Arith::Num(n) => Some(*n as f64),
+            Arith::Neg(x) => Some(-x.eval()?),
+            Arith::Bin(op, a, b) => {
+                let (a, b) = (a.eval()?, b.eval()?);
+                match op {
+                    '+' => Some(a + b),
+                    '-' => Some(a - b),
+                    '*' => Some(a * b),
+                    _ => {
+                        if b == 0.0 {
+                            None
+                        } else {
+                            Some(a / b)
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn prec(op: char) -> (u8, u8) {
+        match op {
+            '*' | '/' => (80, 81),
+            _ => (70, 71),
+        }
+    }
+
+    /// Minimal-parentheses rendering: a subexpression is wrapped only when
+    /// its operator binds looser than the context requires, so the parse
+    /// must reconstruct associativity and precedence by itself.
+    fn render(&self, min_bp: u8, out: &mut String) {
+        match self {
+            Arith::Num(n) => out.push_str(&n.to_string()),
+            Arith::Neg(x) => {
+                out.push('-');
+                // unary binds tighter than any binary op: atom or parens
+                match **x {
+                    Arith::Num(_) => x.render(0, out),
+                    _ => {
+                        out.push('(');
+                        x.render(0, out);
+                        out.push(')');
+                    }
+                }
+            }
+            Arith::Bin(op, a, b) => {
+                let (lbp, rbp) = Arith::prec(*op);
+                let wrap = lbp < min_bp;
+                if wrap {
+                    out.push('(');
+                }
+                a.render(lbp, out);
+                out.push(' ');
+                out.push(*op);
+                out.push(' ');
+                b.render(rbp, out);
+                if wrap {
+                    out.push(')');
+                }
+            }
+        }
+    }
+}
+
+struct ArithTree {
+    max_depth: usize,
+}
+
+impl ArithTree {
+    fn gen_node(&self, rng: &mut Rng, depth: usize) -> Arith {
+        if depth == 0 || rng.chance(0.3) {
+            let n = rng.int_range(0, 9);
+            return if rng.chance(0.15) {
+                Arith::Neg(Box::new(Arith::Num(n)))
+            } else {
+                Arith::Num(n)
+            };
+        }
+        let op = ['+', '-', '*', '/'][rng.int_range(0, 3) as usize];
+        Arith::Bin(
+            op,
+            Box::new(self.gen_node(rng, depth - 1)),
+            Box::new(self.gen_node(rng, depth - 1)),
+        )
+    }
+}
+
+impl Strategy for ArithTree {
+    type Value = Arith;
+
+    fn generate(&self, rng: &mut Rng) -> Arith {
+        self.gen_node(rng, self.max_depth)
+    }
+
+    fn shrink(&self, v: &Arith) -> Vec<Arith> {
+        match v {
+            Arith::Num(0) => vec![],
+            Arith::Num(_) => vec![Arith::Num(0)],
+            Arith::Neg(x) => vec![(**x).clone()],
+            Arith::Bin(_, a, b) => vec![(**a).clone(), (**b).clone()],
+        }
+    }
+}
+
+#[test]
+fn prop_expr_precedence_roundtrips_against_reference() {
+    use elastic_gen::analysis::expr::{eval, parse_all};
+    use elastic_gen::analysis::lexer::{code_tokens, tokenize};
+    check(
+        "minimal-parens rendering parses back to the reference value",
+        500,
+        ArithTree { max_depth: 4 },
+        |tree| {
+            let mut src = String::new();
+            tree.render(0, &mut src);
+            let toks = tokenize(&src);
+            let code = code_tokens(&toks);
+            let parsed = parse_all(&code);
+            if parsed.len() != 1 {
+                return false;
+            }
+            match (tree.eval(), parsed.first().and_then(eval)) {
+                // integer trees stay exact in f64 at this depth
+                (Some(a), Some(b)) => (a - b).abs() < 1e-9,
+                (None, None) => true,
+                _ => false,
+            }
+        },
+    );
+}
+
 #[test]
 fn prop_lexer_total_and_spans_tile_the_input() {
     use elastic_gen::analysis::lexer::tokenize;
